@@ -1,0 +1,83 @@
+//! Latency sweep: single-sentence decode latency and invocation counts
+//! across block sizes k and acceptance criteria — the Figure 4 companion
+//! that shows where wall-clock gains peak even as iteration gains grow.
+//!
+//! ```sh
+//! cargo run --release --example latency_sweep -- [n_sentences]
+//! ```
+
+use anyhow::Result;
+use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
+use blockdecode::harness::common::Table;
+use blockdecode::harness::Ctx;
+use blockdecode::util::stats::summarize;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    blockdecode::util::logging::init();
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    let ctx = Ctx::load("artifacts")?;
+    let ds = ctx.dataset("mt_dev.json")?;
+    let n = n.min(ds.len());
+
+    // greedy baseline on the base model
+    let base = ctx.model("mt_base")?;
+    let mut glat = Vec::new();
+    let mut ginv = 0usize;
+    for row in &ds.rows[..n] {
+        let t0 = Instant::now();
+        let r = decoding::greedy_decode(&base, std::slice::from_ref(&row.src), None)?;
+        glat.push(t0.elapsed().as_secs_f64() * 1000.0);
+        ginv += r[0].stats.invocations;
+    }
+    let gsum = summarize(&glat);
+    println!(
+        "greedy baseline: {} sentences, {} invocations, p50 {:.1}ms\n",
+        n, ginv, gsum.p50
+    );
+
+    let mut table = Table::new(&[
+        "setting", "mean k̂", "invocations", "p50 ms", "p90 ms", "speedup(p50)",
+    ]);
+    let settings: Vec<(String, String, Criterion)> = ["mt_k8_both"]
+        .iter()
+        .flat_map(|v| {
+            [
+                (format!("{v} exact"), v.to_string(), Criterion::Exact),
+                (format!("{v} top-2"), v.to_string(), Criterion::TopK(2)),
+                (format!("{v} top-3"), v.to_string(), Criterion::TopK(3)),
+            ]
+        })
+        .collect();
+
+    for (label, variant, crit) in settings {
+        if !ctx.has_variant(&variant) {
+            continue;
+        }
+        let model = ctx.model(&variant)?;
+        let cfg = BlockwiseConfig { criterion: crit, ..Default::default() };
+        let mut lat = Vec::new();
+        let mut inv = 0usize;
+        let mut blocks = (0usize, 0usize);
+        for row in &ds.rows[..n] {
+            let t0 = Instant::now();
+            let r = decoding::blockwise_decode(&model, std::slice::from_ref(&row.src), &cfg)?;
+            lat.push(t0.elapsed().as_secs_f64() * 1000.0);
+            inv += r[0].stats.invocations;
+            blocks.0 += r[0].stats.accepted_blocks.iter().sum::<usize>();
+            blocks.1 += r[0].stats.accepted_blocks.len();
+        }
+        let s = summarize(&lat);
+        table.row(vec![
+            label,
+            format!("{:.2}", blocks.0 as f64 / blocks.1.max(1) as f64),
+            inv.to_string(),
+            format!("{:.1}", s.p50),
+            format!("{:.1}", s.p90),
+            format!("{:.2}x", gsum.p50 / s.p50),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

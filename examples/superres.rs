@@ -1,0 +1,73 @@
+//! Image super-resolution end-to-end: decode dev images with the
+//! fine-tuned blockwise model under the §5.2 distance criterion (ε = 2),
+//! compare iteration counts against greedy decoding, and render the
+//! low-res input / greedy decode / blockwise decode as ASCII art
+//! (the paper's §7.4 image triples, terminal edition).
+//!
+//! ```sh
+//! cargo run --release --example superres -- [n_images]
+//! ```
+
+use anyhow::Result;
+use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
+use blockdecode::eval::image::to_intensities;
+use blockdecode::eval::psnr;
+use blockdecode::harness::Ctx;
+use blockdecode::tokenizer::render_ascii;
+
+const SIDE: usize = 16;
+const LO: usize = 4;
+
+fn main() -> Result<()> {
+    blockdecode::util::logging::init();
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let ctx = Ctx::load("artifacts")?;
+    let model = ctx.model("sr_k8_ft")?;
+    let base = ctx.model("sr_base")?;
+    let ds = ctx.dataset("sr_dev.json")?;
+    let n = n.min(ds.len());
+
+    for row in &ds.rows[..n] {
+        let src = std::slice::from_ref(&row.src);
+        let greedy = &decoding::greedy_decode(&base, src, None)?[0];
+        let cfg = BlockwiseConfig { criterion: Criterion::Distance(2), ..Default::default() };
+        let block = &decoding::blockwise_decode(&model, src, &cfg)?[0];
+
+        let truth = to_intensities(&row.reference, SIDE * SIDE);
+        let g_img = to_intensities(&greedy.tokens, SIDE * SIDE);
+        let b_img = to_intensities(&block.tokens, SIDE * SIDE);
+
+        println!("input (4x4, upscaled view):");
+        println!("{}", render_ascii(&row.src[..LO * LO].to_vec(), LO));
+        println!(
+            "greedy decode ({} invocations, psnr {:.1} dB):",
+            greedy.stats.invocations,
+            psnr(&truth, &g_img)
+        );
+        println!("{}", render_ascii(&block_tokens_to_ascii(&greedy.tokens), SIDE));
+        println!(
+            "blockwise ε=2 decode ({} invocations, mean block {:.2}, psnr {:.1} dB):",
+            block.stats.invocations,
+            block.stats.mean_block(),
+            psnr(&truth, &b_img)
+        );
+        println!("{}", render_ascii(&block_tokens_to_ascii(&block.tokens), SIDE));
+        println!(
+            "iteration reduction: {:.1}x\n",
+            greedy.stats.invocations as f64 / block.stats.invocations as f64
+        );
+    }
+    Ok(())
+}
+
+fn block_tokens_to_ascii(tokens: &[i32]) -> Vec<i32> {
+    // keep intensity tokens only, pad to a full raster
+    let mut v: Vec<i32> = tokens
+        .iter()
+        .copied()
+        .filter(|&t| blockdecode::tokenizer::is_intensity(t))
+        .collect();
+    v.resize(SIDE * SIDE, blockdecode::tokenizer::intensity_to_token(0));
+    v
+}

@@ -1,0 +1,136 @@
+//! End-to-end serving driver (the DESIGN.md validation workload):
+//!
+//! 1. starts the TCP server + continuous-batching engine on a blockwise
+//!    model,
+//! 2. replays a Poisson request stream of dev-set sentences through real
+//!    client connections,
+//! 3. reports latency percentiles, throughput, batch fill, and the mean
+//!    accepted block size — then repeats the same workload against the
+//!    greedy baseline (k=1 base model) for the speedup comparison.
+//!
+//! ```sh
+//! cargo run --release --example translate_service -- [n_requests] [rate]
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use blockdecode::batching::RequestQueue;
+use blockdecode::harness::Ctx;
+use blockdecode::metrics::Metrics;
+use blockdecode::scheduler::{Engine, EngineConfig};
+use blockdecode::server::{Client, Server};
+use blockdecode::util::stats::summarize;
+use blockdecode::workload::{Arrival, Dataset, RequestStream};
+
+fn main() -> Result<()> {
+    blockdecode::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40.0);
+
+    let stream = {
+        let ctx = Ctx::load("artifacts")?;
+        let ds = Dataset::load(&ctx.manifest.data_file("mt_dev.json"))?;
+        RequestStream::generate(&ds, n, Arrival::Poisson { rate }, 7)
+    };
+
+    println!("== blockwise serving (mt_k8_both, exact acceptance) ==");
+    let block = run_service("mt_k8_both", &stream)?;
+    println!("{block}");
+
+    println!("\n== greedy baseline serving (mt_base) ==");
+    let greedy = run_service("mt_base", &stream)?;
+    println!("{greedy}");
+
+    Ok(())
+}
+
+/// Serve the stream against one variant; returns the metrics report.
+fn run_service(variant: &str, stream: &RequestStream) -> Result<String> {
+    let queue = Arc::new(RequestQueue::new());
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let server = Server::bind("127.0.0.1:0", queue.clone(), stop.clone())?;
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+
+    // client load generator: one connection per lane, replaying arrivals
+    let items = stream.items.clone();
+    let stop_load = stop.clone();
+    let load = std::thread::spawn(move || -> Result<(usize, Vec<f64>)> {
+        const LANES: usize = 8;
+        let mut lanes: Vec<std::thread::JoinHandle<Result<(usize, Vec<f64>)>>> = vec![];
+        let items = Arc::new(items);
+        let t0 = Instant::now();
+        for lane in 0..LANES {
+            let items = items.clone();
+            let addr = addr.clone();
+            lanes.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr)?;
+                let mut lat = Vec::new();
+                let mut done = 0usize;
+                for (i, (at, src)) in items.iter().enumerate() {
+                    if i % LANES != lane {
+                        continue;
+                    }
+                    // honor the arrival schedule
+                    loop {
+                        let now = t0.elapsed();
+                        if now >= *at {
+                            break;
+                        }
+                        std::thread::sleep((*at - now).min(std::time::Duration::from_millis(5)));
+                    }
+                    let sent = Instant::now();
+                    let r = client.decode(src, None)?;
+                    lat.push(sent.elapsed().as_secs_f64() * 1000.0);
+                    assert!(!r.tokens.is_empty());
+                    done += 1;
+                }
+                Ok((done, lat))
+            }));
+        }
+        let mut all = Vec::new();
+        let mut done = 0usize;
+        for l in lanes {
+            let (d, lat) = l.join().unwrap()?;
+            done += d;
+            all.extend(lat);
+        }
+        stop_load.store(true, Ordering::Relaxed);
+        Ok((done, all))
+    });
+
+    // engine on this thread (owns PJRT)
+    let ctx = Ctx::load("artifacts")?;
+    let model = ctx.model(variant)?;
+    let mut engine = Engine::new(
+        model,
+        EngineConfig::default(),
+        queue.clone(),
+        metrics.clone(),
+        stop.clone(),
+    );
+    let t0 = Instant::now();
+    engine.run()?;
+    let (done, lat) = load.join().unwrap()?;
+    let _ = srv.join();
+
+    let s = summarize(&lat);
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(format!(
+        "{}\nclient view: {} ok, p50={:.1}ms p90={:.1}ms p99={:.1}ms, {:.1} req/s end-to-end",
+        metrics.report(t0 - std::time::Duration::from_millis(0)).render(),
+        done,
+        s.p50,
+        s.p90,
+        s.p99,
+        done as f64 / wall
+    ))
+}

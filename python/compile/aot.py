@@ -1,0 +1,410 @@
+"""AOT compile path: train (with checkpoint caching) and export HLO text.
+
+This is the only place python touches the artifacts the Rust serving stack
+consumes. Interchange rules (see /opt/xla-example/README.md):
+
+* **HLO text**, not serialized HloModuleProto — jax >= 0.5 emits 64-bit
+  instruction ids that xla_extension 0.5.1 rejects; the text parser
+  reassigns ids and round-trips cleanly.
+* lowered via stablehlo -> XlaComputation with `return_tuple=True`; the
+  rust side unwraps the result tuple.
+* Pallas kernels are lowered with `interpret=True` (plain HLO ops) because
+  real TPU lowering emits Mosaic custom-calls the CPU PJRT client cannot
+  execute.
+
+Model **weights are runtime inputs**, not baked constants: rust uploads
+them once as device buffers at model-load time (`execute_b`), so one HLO
+file serves every trained variant with the same (task, k, batch) signature
+— the same load-weights/compile-graph split a production server uses.
+
+Artifacts layout (all under --out, default ../artifacts):
+  manifest.json             variants, entry points, param orders, shapes
+  data/{mt_dev,mt_test,sr_dev,vocab}.json
+  ckpt/<variant>.npz        training checkpoints (cache; python-side only)
+  weights/<variant>.bin     flat tensor bundle for rust (header + raw f32)
+  hlo/<entry>.hlo.txt       lowered entry points
+
+Usage: python -m compile.aot --out ../artifacts [--set min|full] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import train as T
+
+TOPT = 8          # top-t entries exported per (position, head)
+BUCKETS = [1, 8]  # batch-size buckets
+
+
+# --------------------------------------------------------------------------
+# HLO text lowering
+# --------------------------------------------------------------------------
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def export_fn(fn, example_args, path: str) -> None:
+    # keep_unused: every entry point takes the FULL weight bundle in the
+    # same positional order, even tensors its graph never touches (e.g.
+    # decoder weights in `encode`). The rust runtime then feeds one buffer
+    # list everywhere instead of maintaining per-entry parameter maps.
+    lowered = jax.jit(fn, keep_unused=True).lower(*_specs(example_args))
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# --------------------------------------------------------------------------
+# Weight bundles (rust/src/runtime/weights.rs mirrors this format)
+# --------------------------------------------------------------------------
+def write_weights(path: str, params: M.Params) -> list:
+    """Flat tensor bundle: u32 header-len, JSON header, raw data.
+
+    Header: [{"name","dtype","shape","offset","nbytes"}...] in the exact
+    positional order the lowered HLO expects its parameter arguments.
+    """
+    flat = T._flatten(params)  # sorted-key order == jax flatten order
+    entries, blobs, off = [], [], 0
+    for name, arr in flat.items():
+        arr = np.ascontiguousarray(arr)
+        assert arr.dtype in (np.float32, np.int32), (name, arr.dtype)
+        entries.append(
+            {
+                "name": name,
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "offset": off,
+                "nbytes": arr.nbytes,
+            }
+        )
+        blobs.append(arr.tobytes())
+        off += arr.nbytes
+    header = json.dumps(entries).encode()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+    return entries
+
+
+# --------------------------------------------------------------------------
+# Entry-point definitions
+# --------------------------------------------------------------------------
+def make_encode_fn(cfg: M.ModelConfig):
+    def fn(params, src):
+        return (M.encode(params, cfg, src, use_pallas=True),)
+    return fn
+
+
+def manual_topk(logits: jnp.ndarray, t: int):
+    """Top-t via argsort. `jax.lax.top_k` lowers to the `topk(..., largest)`
+    HLO instruction that xla_extension 0.5.1's text parser rejects; argsort
+    lowers to the ancient `sort` op, which round-trips fine."""
+    idx = jnp.argsort(-logits, axis=-1)[..., :t]
+    vals = jnp.take_along_axis(logits, idx, axis=-1)
+    return vals, idx
+
+
+def make_decode_fn(cfg: M.ModelConfig):
+    def fn(params, memory, src, tgt_in):
+        logits = M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True)
+        topv, topi = manual_topk(logits, TOPT)     # [B,T,K,TOPT]
+        return topv, topi.astype(jnp.int32)
+    return fn
+
+
+def make_logits_fn(cfg: M.ModelConfig):
+    def fn(params, memory, src, tgt_in):
+        return (M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True),)
+    return fn
+
+
+def make_nat_fn(cfg: M.ModelConfig):
+    def fn(params, src, canvas):
+        logits, len_logits = M.nat_forward(params, cfg, src, canvas)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        length = jnp.argmax(len_logits, axis=-1).astype(jnp.int32)
+        return toks, length
+    return fn
+
+
+def _example_io(cfg: M.ModelConfig, b: int):
+    src = jnp.zeros((b, cfg.max_src), jnp.int32)
+    tgt = jnp.zeros((b, cfg.max_tgt), jnp.int32)
+    mem = jnp.zeros((b, cfg.max_src, cfg.d_model), jnp.float32)
+    return src, tgt, mem
+
+
+# --------------------------------------------------------------------------
+# Training plan
+# --------------------------------------------------------------------------
+def plan(set_name: str) -> dict:
+    """Which variants to train/export. Values: (task, k, variant)."""
+    variants = {"mt_base": ("mt", 1, "base"), "sr_base": ("sr", 1, "base")}
+    if set_name == "min":
+        variants["mt_k8_both"] = ("mt", 8, "both")
+        variants["sr_k8_ft"] = ("sr", 8, "ft")
+        return variants
+    variants["mt_k1_distill"] = ("mt", 1, "distill_full")
+    # priority order: MT grid (Tables 1/4) before SR (Tables 2/3) before the
+    # NAT comparators, so a partially-built sweep is still useful (the
+    # manifest is written incrementally after every variant)
+    for k in T.MT_KS:
+        for v in T.MT_VARIANTS:
+            variants[f"mt_k{k}_{v}"] = ("mt", k, v)
+    for k in T.MT_KS:
+        for v in ["regular", "ft"]:
+            variants[f"sr_k{k}_{v}"] = ("sr", k, v)
+    variants["mt_nat"] = ("mt", 1, "nat")
+    variants["mt_refine"] = ("mt", 1, "refine")
+    return variants
+
+
+# steps tuned for a single CPU core; see EXPERIMENTS.md for the loss curves
+MT_BASE_STEPS = 2500
+MT_VAR_STEPS = 350
+SR_BASE_STEPS = 900
+SR_VAR_STEPS = 200
+MT_BATCH = 32
+MT_VAR_BATCH = 16
+SR_BATCH = 8
+SR_VAR_BATCH = 4
+MT_TRAIN_N = 4096
+SR_TRAIN_N = 768
+
+
+class Builder:
+    def __init__(self, out: str, force: bool = False):
+        self.out = out
+        self.force = force
+        self.vocab = D.build_mt_vocab()
+        self._mt_data = None
+        self._sr_data = None
+        self._distill = None
+        self.manifest = {"tasks": {}, "variants": {}, "entries": {}, "topt": TOPT}
+
+    # ---- data ----
+    def mt_data(self):
+        if self._mt_data is None:
+            self._mt_data = D.gen_mt_dataset(self.vocab, MT_TRAIN_N, seed=100)
+        return self._mt_data
+
+    def sr_data(self):
+        if self._sr_data is None:
+            self._sr_data = D.gen_sr_dataset(SR_TRAIN_N, seed=200)
+        return self._sr_data
+
+    def ckpt(self, name: str) -> str:
+        return os.path.join(self.out, "ckpt", f"{name}.npz")
+
+    def have(self, name: str) -> bool:
+        return (not self.force) and os.path.exists(self.ckpt(name))
+
+    # ---- base models ----
+    def base_params(self, task: str):
+        cfg = T.mt_config(self.vocab.size) if task == "mt" else T.sr_config()
+        name = f"{task}_base"
+        p = M.init_params(cfg, seed=0)
+        if self.have(name):
+            return cfg, T.load_ckpt(self.ckpt(name), p)
+        src, tgt = self.mt_data() if task == "mt" else self.sr_data()
+        steps = MT_BASE_STEPS if task == "mt" else SR_BASE_STEPS
+        batch = MT_BATCH if task == "mt" else SR_BATCH
+        print(f"== training {name} ({steps} steps)", flush=True)
+        p = T.train(cfg, p, src, tgt, steps=steps, batch=batch, seed=1, tag=name)
+        T.save_ckpt(self.ckpt(name), p)
+        return cfg, p
+
+    def distilled_targets(self):
+        """Teacher beam-4 decodes of the MT training sources (cached)."""
+        path = os.path.join(self.out, "ckpt", "mt_distill_targets.npz")
+        if (not self.force) and os.path.exists(path):
+            return np.load(path)["tgt"]
+        cfg, p = self.base_params("mt")
+        src, _ = self.mt_data()
+        print("== generating distilled targets (beam 4)", flush=True)
+        tgt = T.distill_targets(p, cfg, src)
+        np.savez(path, tgt=tgt)
+        return tgt
+
+    # ---- variants ----
+    def build_variant(self, name: str, task: str, k: int, variant: str):
+        cfg1, base = self.base_params(task)
+        cfg = cfg1.with_k(k)
+        if variant == "base":
+            params = base
+        elif self.have(name):
+            params = T.load_ckpt(self.ckpt(name), M.init_params(cfg, 0)
+                                 if variant not in ("nat", "refine")
+                                 else M.init_nat_params(cfg, 0))
+        elif variant in ("nat", "refine"):
+            params = self._train_nat(name, cfg, variant)
+        else:
+            src, tgt_gold = self.mt_data() if task == "mt" else self.sr_data()
+            tgt_distill = self.distilled_targets() if (task == "mt" and variant in ("distill", "both", "distill_full")) else None
+            steps = MT_VAR_STEPS if task == "mt" else SR_VAR_STEPS
+            batch = MT_VAR_BATCH if task == "mt" else SR_VAR_BATCH
+            print(f"== training {name} ({steps} steps)", flush=True)
+            if variant == "distill_full":
+                # paper's k=1-on-distilled-data row: full training on distilled
+                p0 = M.reinit_heads(base, cfg, seed=3)
+                params = T.train(cfg, p0, src, tgt_distill, steps=steps, batch=batch,
+                                 trainable=T.all_trainable, seed=3, tag=name,
+                                 lr_scale=T.FT_LR_SCALE)
+            else:
+                _, params = T.train_variant(
+                    base, cfg1, k, variant, src, tgt_gold, tgt_distill,
+                    steps=steps, batch=batch, seed=4,
+                )
+            T.save_ckpt(self.ckpt(name), params)
+        return cfg, params
+
+    def _train_nat(self, name: str, cfg: M.ModelConfig, variant: str):
+        """Simplified NAT / iterative-refinement comparators (Table 4)."""
+        src, _ = self.mt_data()
+        tgt = self.distilled_targets()
+        params = M.init_nat_params(cfg, seed=11)
+        mask_fn = T.all_trainable
+        key = jax.random.PRNGKey(5)
+        rng = np.random.default_rng(6)
+        opt = T.Adam(params, mask_fn)
+        mask = opt.mask_tree(params)
+        refine = variant == "refine"
+
+        @jax.jit
+        def step(params, m, v, t, s_b, t_b, key, lr):
+            def loss_fn(p):
+                return M.nat_loss(p, cfg, s_b, t_b, noise_key=key if refine else None)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            m = jax.tree_util.tree_map(lambda mm, g: 0.9 * mm + 0.1 * g, m, grads)
+            v = jax.tree_util.tree_map(lambda vv, g: 0.98 * vv + 0.02 * g * g, v, grads)
+            mh = jax.tree_util.tree_map(lambda mm: mm / (1 - 0.9 ** t), m)
+            vh = jax.tree_util.tree_map(lambda vv: vv / (1 - 0.98 ** t), v)
+            params = jax.tree_util.tree_map(
+                lambda p, mm, vv, msk: p - msk * lr * mm / (jnp.sqrt(vv) + 1e-9),
+                params, mh, vh, mask)
+            return params, m, v, loss
+
+        m, v = opt.m, opt.v
+        steps = MT_VAR_STEPS + 250  # NAT needs extra steps to be non-trivial
+        print(f"== training {name} ({steps} steps)", flush=True)
+        for t in range(1, steps + 1):
+            idx = rng.integers(0, src.shape[0], MT_BATCH)
+            key, sub = jax.random.split(key)
+            lr = T.lr_schedule(t, cfg.d_model)
+            params, m, v, loss = step(
+                params, m, v, jnp.asarray(t, jnp.float32),
+                jnp.asarray(src[idx]), jnp.asarray(tgt[idx]), sub,
+                jnp.asarray(lr, jnp.float32))
+            if t % 300 == 0 or t == steps:
+                print(f"  [{name}] step {t}/{steps} loss={float(loss):.4f}", flush=True)
+        T.save_ckpt(self.ckpt(name), params)
+        return params
+
+    # ---- export ----
+    def export_variant(self, name: str, task: str, k: int, variant: str):
+        cfg, params = self.build_variant(name, task, k, variant)
+        wpath = os.path.join(self.out, "weights", f"{name}.bin")
+        entries = write_weights(wpath, params)
+        is_nat = variant in ("nat", "refine")
+        sig = f"{task}_nat" if is_nat else f"{task}_k{k}"
+        entry_names = {}
+        for b in BUCKETS:
+            src, tgt, mem = _example_io(cfg, b)
+            if is_nat:
+                e = f"{sig}_b{b}_nat"
+                if e not in self.manifest["entries"]:
+                    path = os.path.join(self.out, "hlo", f"{e}.hlo.txt")
+                    if self.force or not os.path.exists(path):
+                        print(f"  export {e}", flush=True)
+                        export_fn(make_nat_fn(cfg), (params, src, tgt), path)
+                    self.manifest["entries"][e] = {"file": f"hlo/{e}.hlo.txt", "batch": b}
+                entry_names[f"nat_b{b}"] = e
+            else:
+                for kind, mk, args in (
+                    ("encode", make_encode_fn(cfg), (params, src)),
+                    ("decode", make_decode_fn(cfg), (params, mem, src, tgt)),
+                ):
+                    e = f"{sig}_b{b}_{kind}"
+                    if e not in self.manifest["entries"]:
+                        path = os.path.join(self.out, "hlo", f"{e}.hlo.txt")
+                        if self.force or not os.path.exists(path):
+                            print(f"  export {e}", flush=True)
+                            export_fn(mk, args, path)
+                        self.manifest["entries"][e] = {"file": f"hlo/{e}.hlo.txt", "batch": b}
+                    entry_names[f"{kind}_b{b}"] = e
+        self.manifest["variants"][name] = {
+            "task": task,
+            "k": k,
+            "variant": variant,
+            "weights": f"weights/{name}.bin",
+            "params": entries and [
+                {k2: e[k2] for k2 in ("name", "dtype", "shape")} for e in entries
+            ],
+            "entries": entry_names,
+            "config": {
+                "vocab": cfg.vocab, "max_src": cfg.max_src, "max_tgt": cfg.max_tgt,
+                "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            },
+        }
+
+    def run(self, set_name: str):
+        os.makedirs(os.path.join(self.out, "data"), exist_ok=True)
+        D.emit_datasets(os.path.join(self.out, "data"))
+        self.manifest["tasks"] = {
+            "mt": {"max_src": D.MT_MAX_SRC, "max_tgt": D.MT_MAX_TGT,
+                   "vocab": self.vocab.size},
+            "sr": {"max_src": D.SR_LO * D.SR_LO + 1, "max_tgt": D.SR_HI * D.SR_HI + 2,
+                   "vocab": D.SR_VOCAB, "hi": D.SR_HI, "lo": D.SR_LO},
+        }
+        self.manifest["buckets"] = BUCKETS
+        for name, (task, k, variant) in plan(set_name).items():
+            print(f"=== variant {name}", flush=True)
+            self.export_variant(name, task, k, variant)
+            # incremental write: a partially-built sweep is immediately
+            # usable by the rust harnesses
+            with open(os.path.join(self.out, "manifest.json"), "w") as f:
+                json.dump(self.manifest, f, indent=1)
+        print("manifest written", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default=os.environ.get("ARTIFACT_SET", "min"),
+                    choices=["min", "full"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+    Builder(args.out, force=args.force).run(args.set)
+    print(f"artifacts done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

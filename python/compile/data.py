@@ -1,0 +1,338 @@
+"""Synthetic workloads standing in for the paper's datasets.
+
+Two tasks, matching the paper's evaluation:
+
+* **Machine translation** (paper: WMT'14 En-De). A stochastic-grammar
+  translation task: source sentences are generated from a small phrase
+  grammar; the "translation" applies a deterministic lexical mapping plus
+  clause reordering (SVO -> SOV), with *stochastic lexical choice* for a
+  subset of words (synonyms sampled per sentence). The stochasticity is the
+  point: it gives the conditional distribution genuine ambiguity so that
+  BLEU < 100, greedy != references, and sequence-level distillation has the
+  same mode-breaking effect the paper relies on.
+
+* **Image super-resolution** (paper: CelebA 8x8 -> 32x32 RGB). Procedural
+  face-like grayscale images: background gradient + elliptical "face" with
+  eyes/mouth + pixel noise, 16x16 output tokens (intensities 0..255 in
+  raster order) conditioned on a 4x4 mean-pooled input. Preserves the
+  ordinal-intensity vocabulary that the paper's distance-based acceptance
+  criterion (Section 5.2) exploits.
+
+All randomness is driven by explicit numpy Generators so datasets are
+reproducible and identical between the python (training) and rust (eval)
+sides — rust consumes the JSON emitted by `emit_datasets`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Shared token-id conventions (mirrored in rust/src/tokenizer).
+# --------------------------------------------------------------------------
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+NUM_SPECIALS = 3
+
+# ----- MT grammar sizes ----------------------------------------------------
+N_NOUNS = 20
+N_VERBS = 14
+N_ADJS = 10
+N_ADVS = 6
+N_CONJ = 2
+# target-side particles inserted by the "translation"
+N_PARTICLES = 2
+
+# fraction of target lexicon entries that have a synonym, and the
+# probability of the primary form being chosen
+SYNONYM_FRACTION = 0.35
+SYNONYM_PRIMARY_P = 0.7
+
+MT_MAX_SRC = 20   # source length cap (tokens, incl. EOS)
+MT_MAX_TGT = 28   # target length cap (tokens, incl. EOS)
+
+# ----- SR image sizes ------------------------------------------------------
+SR_HI = 16        # high-res side -> 256 output tokens
+SR_LO = 4         # low-res side  -> 16 input tokens
+SR_VOCAB = NUM_SPECIALS + 256   # intensities offset by specials
+
+
+def intensity_to_token(v: np.ndarray) -> np.ndarray:
+    """Map 0..255 intensity to vocab id."""
+    return v.astype(np.int32) + NUM_SPECIALS
+
+
+def token_to_intensity(t: np.ndarray) -> np.ndarray:
+    return np.clip(t - NUM_SPECIALS, 0, 255)
+
+
+# --------------------------------------------------------------------------
+# MT vocabulary
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class MtVocab:
+    """Token inventory for the synthetic translation task.
+
+    Source words and target words live in one shared id space (like a
+    joint BPE vocabulary). `tgt_map[src_word]` is the list of
+    (target_word, prob) lexical choices.
+    """
+
+    words: List[str]
+    src_nouns: List[int]
+    src_verbs: List[int]
+    src_adjs: List[int]
+    src_advs: List[int]
+    src_conjs: List[int]
+    particles: List[int]
+    tgt_map: Dict[int, List[Tuple[int, float]]]
+
+    @property
+    def size(self) -> int:
+        return len(self.words)
+
+    def to_json(self) -> dict:
+        return {
+            "words": self.words,
+            "specials": {"pad": PAD_ID, "bos": BOS_ID, "eos": EOS_ID},
+        }
+
+
+def build_mt_vocab(seed: int = 1234) -> MtVocab:
+    """Deterministically construct the grammar vocabulary."""
+    rng = np.random.default_rng(seed)
+    words = ["<pad>", "<bos>", "<eos>"]
+
+    def add(prefix: str, n: int) -> List[int]:
+        ids = []
+        for i in range(n):
+            ids.append(len(words))
+            words.append(f"{prefix}{i}")
+        return ids
+
+    src_nouns = add("noun", N_NOUNS)
+    src_verbs = add("verb", N_VERBS)
+    src_adjs = add("adj", N_ADJS)
+    src_advs = add("adv", N_ADVS)
+    src_conjs = add("and", N_CONJ)
+    # target-side forms: one primary per source word, synonyms for a subset
+    tgt_map: Dict[int, List[Tuple[int, float]]] = {}
+    for cat, ids in (
+        ("Noun", src_nouns),
+        ("Verb", src_verbs),
+        ("Adj", src_adjs),
+        ("Adv", src_advs),
+        ("Und", src_conjs),
+    ):
+        for w in ids:
+            primary = len(words)
+            words.append(f"{cat}{w}")
+            if rng.random() < SYNONYM_FRACTION:
+                alt = len(words)
+                words.append(f"{cat}{w}b")
+                tgt_map[w] = [(primary, SYNONYM_PRIMARY_P), (alt, 1.0 - SYNONYM_PRIMARY_P)]
+            else:
+                tgt_map[w] = [(primary, 1.0)]
+    particles = add("prt", N_PARTICLES)
+    return MtVocab(
+        words=words,
+        src_nouns=src_nouns,
+        src_verbs=src_verbs,
+        src_adjs=src_adjs,
+        src_advs=src_advs,
+        src_conjs=src_conjs,
+        particles=particles,
+        tgt_map=tgt_map,
+    )
+
+
+# --------------------------------------------------------------------------
+# MT sentence generation
+# --------------------------------------------------------------------------
+def _gen_clause(v: MtVocab, rng: np.random.Generator) -> List[int]:
+    """One SVO clause with optional adjectives/adverb."""
+    c = [rng.choice(v.src_nouns)]
+    if rng.random() < 0.45:
+        c.append(rng.choice(v.src_adjs))
+    c.append(rng.choice(v.src_verbs))
+    c.append(rng.choice(v.src_nouns))
+    if rng.random() < 0.35:
+        c.append(rng.choice(v.src_adjs))
+    if rng.random() < 0.4:
+        c.append(rng.choice(v.src_advs))
+    return [int(x) for x in c]
+
+
+def _split_clauses(v: MtVocab, src: List[int]) -> List[List[int]]:
+    out, cur = [], []
+    for t in src:
+        if t in v.src_conjs:
+            out.append(cur)
+            cur = [t]
+        else:
+            cur.append(t)
+    out.append(cur)
+    return out
+
+
+def _translate_clause(v: MtVocab, clause: List[int], rng: np.random.Generator) -> List[int]:
+    """SVO -> SOV reorder + lexical mapping with stochastic synonym choice."""
+    conj = None
+    body = clause
+    if body and body[0] in v.src_conjs:
+        conj, body = body[0], body[1:]
+
+    def lex(w: int) -> int:
+        choices = v.tgt_map[w]
+        if len(choices) == 1:
+            return choices[0][0]
+        ps = np.array([p for _, p in choices])
+        idx = rng.choice(len(choices), p=ps / ps.sum())
+        return choices[idx][0]
+
+    # parse the clause shape emitted by _gen_clause
+    i = 0
+    subj = [body[i]]; i += 1
+    if i < len(body) and body[i] in v.src_adjs:
+        subj.append(body[i]); i += 1
+    verb = body[i]; i += 1
+    obj = [body[i]]; i += 1
+    if i < len(body) and body[i] in v.src_adjs:
+        obj.append(body[i]); i += 1
+    adv = None
+    if i < len(body) and body[i] in v.src_advs:
+        adv = body[i]; i += 1
+
+    out: List[int] = []
+    if conj is not None:
+        out.append(lex(conj))
+    out.extend(lex(w) for w in subj)
+    # a particle follows the (translated) subject ~half the time — an extra
+    # source of benign target-side variation
+    if rng.random() < 0.5:
+        out.append(int(rng.choice(v.particles)))
+    out.extend(lex(w) for w in obj)
+    if adv is not None:
+        out.append(lex(adv))
+    out.append(lex(verb))  # verb-final
+    return out
+
+
+def gen_mt_pair(v: MtVocab, rng: np.random.Generator) -> Tuple[List[int], List[int]]:
+    """One (source, reference) pair, both EOS-terminated, no BOS."""
+    n_clauses = 1 if rng.random() < 0.6 else 2
+    src: List[int] = []
+    for ci in range(n_clauses):
+        if ci > 0:
+            src.append(int(rng.choice(v.src_conjs)))
+        src.extend(_gen_clause(v, rng))
+    tgt: List[int] = []
+    for clause in _split_clauses(v, src):
+        tgt.extend(_translate_clause(v, clause, rng))
+    src = src[: MT_MAX_SRC - 1] + [EOS_ID]
+    tgt = tgt[: MT_MAX_TGT - 1] + [EOS_ID]
+    return src, tgt
+
+
+def gen_mt_dataset(v: MtVocab, n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded id arrays: src [n, MT_MAX_SRC], tgt [n, MT_MAX_TGT]."""
+    rng = np.random.default_rng(seed)
+    src = np.full((n, MT_MAX_SRC), PAD_ID, np.int32)
+    tgt = np.full((n, MT_MAX_TGT), PAD_ID, np.int32)
+    for i in range(n):
+        s, t = gen_mt_pair(v, rng)
+        src[i, : len(s)] = s
+        tgt[i, : len(t)] = t
+    return src, tgt
+
+
+# --------------------------------------------------------------------------
+# SR image generation
+# --------------------------------------------------------------------------
+def gen_sr_image(rng: np.random.Generator) -> np.ndarray:
+    """One 16x16 grayscale 'face': gradient background + ellipse + features."""
+    h = w = SR_HI
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    gx, gy = rng.uniform(-1, 1, 2)
+    base = rng.uniform(40, 160)
+    img = base + gx * (xx - w / 2) * rng.uniform(1, 5) + gy * (yy - h / 2) * rng.uniform(1, 5)
+    # face ellipse
+    cy, cx = rng.uniform(6, 10), rng.uniform(6, 10)
+    ry, rx = rng.uniform(4, 6.5), rng.uniform(3.5, 6)
+    face = ((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 <= 1.0
+    face_val = np.clip(base + rng.uniform(40, 90), 0, 255)
+    img[face] = face_val
+    # eyes and mouth (darker)
+    for dy, dx in ((-1.6, -1.6), (-1.6, 1.6)):
+        ey, ex = int(round(cy + dy)), int(round(cx + dx))
+        if 0 <= ey < h and 0 <= ex < w:
+            img[ey, ex] = max(face_val - rng.uniform(60, 110), 0)
+    my = int(round(cy + 2.2))
+    for dx in (-1, 0, 1):
+        mx = int(round(cx + dx))
+        if 0 <= my < h and 0 <= mx < w:
+            img[my, mx] = max(face_val - rng.uniform(40, 80), 0)
+    img += rng.normal(0, 3.0, (h, w))
+    return np.clip(np.round(img), 0, 255).astype(np.int32)
+
+
+def downsample(img: np.ndarray, lo: int = SR_LO) -> np.ndarray:
+    """Mean-pool to the low-res conditioning input."""
+    f = img.shape[0] // lo
+    return (
+        img.reshape(lo, f, lo, f).mean(axis=(1, 3)).round().clip(0, 255).astype(np.int32)
+    )
+
+
+def gen_sr_dataset(n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(src [n, 16+1], tgt [n, 256+1]) token arrays, EOS-terminated source.
+
+    Source = 4x4 low-res raster + EOS; target = 16x16 raster + EOS. The EOS
+    on the target lets the same decoding loop terminate both tasks.
+    """
+    rng = np.random.default_rng(seed)
+    src = np.zeros((n, SR_LO * SR_LO + 1), np.int32)
+    tgt = np.zeros((n, SR_HI * SR_HI + 1), np.int32)
+    for i in range(n):
+        hi = gen_sr_image(rng)
+        lo = downsample(hi)
+        src[i, :-1] = intensity_to_token(lo.ravel())
+        src[i, -1] = EOS_ID
+        tgt[i, :-1] = intensity_to_token(hi.ravel())
+        tgt[i, -1] = EOS_ID
+    return src, tgt
+
+
+# --------------------------------------------------------------------------
+# Dataset emit (consumed by the rust eval harnesses)
+# --------------------------------------------------------------------------
+def _rows(src: np.ndarray, tgt: np.ndarray) -> List[dict]:
+    out = []
+    for s, t in zip(src, tgt):
+        s = [int(x) for x in s if x != PAD_ID]
+        t = [int(x) for x in t if x != PAD_ID]
+        out.append({"src": s, "ref": t})
+    return out
+
+
+def emit_datasets(outdir: str, n_dev: int = 200, n_test: int = 200, n_sr_dev: int = 48) -> None:
+    """Write dev/test JSON + vocab for the rust side."""
+    os.makedirs(outdir, exist_ok=True)
+    v = build_mt_vocab()
+    dev = gen_mt_dataset(v, n_dev, seed=7001)
+    test = gen_mt_dataset(v, n_test, seed=7002)
+    sr = gen_sr_dataset(n_sr_dev, seed=7003)
+    with open(os.path.join(outdir, "mt_dev.json"), "w") as f:
+        json.dump(_rows(*dev), f)
+    with open(os.path.join(outdir, "mt_test.json"), "w") as f:
+        json.dump(_rows(*test), f)
+    with open(os.path.join(outdir, "sr_dev.json"), "w") as f:
+        json.dump(_rows(*sr), f)
+    with open(os.path.join(outdir, "vocab.json"), "w") as f:
+        json.dump(v.to_json(), f)

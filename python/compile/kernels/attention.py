@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: tiled (flash-style) scaled-dot-product attention.
+
+The paper's wall-clock argument rests on the scoring model evaluating all
+output positions in parallel; attention over the whole hypothesis is the
+compute hot-spot of that parallel scoring pass. On GPU the classical
+decomposition is a threadblock per query tile with K/V staged through
+shared memory. The TPU re-think (see DESIGN.md §Hardware-Adaptation):
+
+* the grid iterates `(batch*heads, q_tile, k_tile)`; `BlockSpec` expresses
+  the HBM->VMEM schedule that threadblocks + shared memory expressed on GPU;
+* per-(bh, q_tile) running max / normalizer / output accumulators live in
+  VMEM scratch across the `k_tile` axis (online softmax, so the full
+  [Tq, Tk] score matrix never materializes);
+* matmul shapes are `(TILE_Q x Dh) @ (Dh x TILE_K)` and
+  `(TILE_Q x TILE_K) @ (TILE_K x Dh)` — MXU-systolic-friendly, f32
+  accumulation.
+
+`interpret=True` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+lowers to plain HLO, which is exactly what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+# Default tile sizes. Chosen by the VMEM model in DESIGN.md §8: with
+# Dh <= 64 and f32, scratch per (bh, q_tile) step is
+# TILE_Q*(2 + Dh) + 2*TILE_K*Dh + TILE_Q*TILE_K floats ≈ 21 KiB at 32/64 —
+# far below the ~16 MiB VMEM budget, leaving room for double buffering.
+DEFAULT_TILE_Q = 32
+DEFAULT_TILE_K = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, nk):
+    """One (bh, q_tile, k_tile) grid step of online-softmax attention.
+
+    Refs:
+      q_ref:   [TILE_Q, Dh]      query tile (VMEM)
+      k_ref:   [TILE_K, Dh]      key tile (VMEM)
+      v_ref:   [TILE_K, Dh]      value tile (VMEM)
+      mask_ref:[TILE_Q, TILE_K]  additive mask tile
+      o_ref:   [TILE_Q, Dh]      output tile (written on the last k step)
+      m_ref/l_ref/acc_ref: VMEM scratch — running max, normalizer, weighted
+        value accumulator carried across the k_tile grid axis.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    mask = mask_ref[...]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + mask
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    # `keep` zeroes masked keys exactly: the additive NEG_INF alone is not
+    # enough because exp(s - rowmax) of the *least-masked* masked key is 1
+    # when a whole row is masked (padding rows must stay inert).
+    keep = (mask > NEG_INF * 0.5).astype(jnp.float32)
+    p = jnp.exp(s - m_cur[:, None]) * keep
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v_ref[...], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        # Fully-masked rows have l == 0; emit zeros rather than NaN so
+        # padded positions stay inert.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    tile_q: int = DEFAULT_TILE_Q,
+    tile_k: int = DEFAULT_TILE_K,
+) -> jnp.ndarray:
+    """Pallas tiled attention; same contract as `ref.attention_ref`.
+
+    Shapes: q [B,H,Tq,Dh], k/v [B,H,Tk,Dh], mask [B,1|H,Tq,Tk] additive.
+    Tq/Tk need not divide the tile sizes (padded internally; padded key
+    columns are masked out, padded query rows are dropped on return).
+    """
+    b, h, tq, dh = q.shape
+    tk = k.shape[2]
+    if mask.shape[1] == 1:
+        mask = jnp.broadcast_to(mask, (b, h, tq, tk))
+
+    tile_q = min(tile_q, max(8, tq))
+    tile_k = min(tile_k, max(8, tk))
+
+    qp = _pad_to(q.reshape(b * h, tq, dh), 1, tile_q)
+    kp = _pad_to(k.reshape(b * h, tk, dh), 1, tile_k)
+    vp = _pad_to(v.reshape(b * h, tk, dh), 1, tile_k)
+    maskp = _pad_to(
+        _pad_to(mask.reshape(b * h, tq, tk), 2, tile_k, NEG_INF), 1, tile_q, NEG_INF
+    )
+    tqp, tkp = qp.shape[1], kp.shape[1]
+    nq, nk = tqp // tile_q, tkp // tile_k
+    scale = 1.0 / (dh ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, nk=nk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, tile_q, dh), lambda bh, qq, kk: (bh, qq, 0)),
+            pl.BlockSpec((None, tile_k, dh), lambda bh, qq, kk: (bh, kk, 0)),
+            pl.BlockSpec((None, tile_k, dh), lambda bh, qq, kk: (bh, kk, 0)),
+            pl.BlockSpec((None, tile_q, tile_k), lambda bh, qq, kk: (bh, qq, kk)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_q, dh), lambda bh, qq, kk: (bh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tqp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q,), jnp.float32),
+            pltpu.VMEM((tile_q,), jnp.float32),
+            pltpu.VMEM((tile_q, dh), jnp.float32),
+        ],
+        interpret=True,
+    )(qp, kp, vp, maskp)
+    return out[:, :tq].reshape(b, h, tq, dh)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the combined scoring/proposal projection (Fig. 3).
+
+This is the layer the paper *adds* to a pre-trained Transformer to turn it
+into a combined scoring-and-proposal model: a single feedforward layer with
+hidden size k*d_hidden and output size k*d_model, with a residual connection
+from the decoder output to each of the k per-head outputs. The original
+vocabulary projection is then applied to every head (done outside this
+kernel so the projection weights stay shared).
+
+Kernel decomposition (TPU thinking — DESIGN.md §Hardware-Adaptation): the k
+heads are *output parallelism*, so the grid is `(head, t_tile)` and each
+step computes a fused `(TILE_T x D) @ (D x Hd) -> relu -> @ (Hd x D)` chain
+whose operands sit in VMEM. On GPU this would have been k separate kernels
+or a batched GEMM over threadblocks; on TPU it is one systolic-friendly
+fused GEMM pipeline per grid step with f32 accumulation on the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_T = 64
+
+
+def _blockheads_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One (head, t_tile) grid step.
+
+    Refs:
+      h_ref:  [TILE_T, D]  decoder-output tile
+      w1_ref: [D, Hd], b1_ref: [1, Hd], w2_ref: [Hd, D], b2_ref: [1, D]
+        — this head's weights (the index map selects the head)
+      o_ref:  [TILE_T, D]  this head's output tile
+    """
+    h = h_ref[...]
+    a = jnp.maximum(
+        jnp.dot(h, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...], 0.0
+    )
+    o = jnp.dot(a, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = (o + h).astype(o_ref.dtype)
+
+
+def blockheads(
+    h: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    *,
+    tile_t: int = DEFAULT_TILE_T,
+) -> jnp.ndarray:
+    """Pallas k-head block projection; same contract as `ref.blockheads_ref`.
+
+    Args:
+      h:  [T, D] decoder outputs; w1 [K, D, Hd]; b1 [K, Hd]; w2 [K, Hd, D];
+      b2: [K, D].
+
+    Returns:
+      [T, K, D] per-head representations.
+    """
+    t, d = h.shape
+    k, _, hd = w1.shape
+    tile_t = min(tile_t, max(8, t))
+    rem = (-t) % tile_t
+    hp = jnp.pad(h, ((0, rem), (0, 0))) if rem else h
+    tp = hp.shape[0]
+    nt = tp // tile_t
+
+    out = pl.pallas_call(
+        _blockheads_kernel,
+        grid=(k, nt),
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda kk, tt: (tt, 0)),
+            pl.BlockSpec((None, d, hd), lambda kk, tt: (kk, 0, 0)),
+            pl.BlockSpec((None, hd), lambda kk, tt: (kk, 0)),
+            pl.BlockSpec((None, hd, d), lambda kk, tt: (kk, 0, 0)),
+            pl.BlockSpec((None, d), lambda kk, tt: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tile_t, d), lambda kk, tt: (kk, tt, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, tp, d), h.dtype),
+        interpret=True,
+    )(hp, w1, b1, w2, b2)
+    return jnp.transpose(out[:, :t], (1, 0, 2))

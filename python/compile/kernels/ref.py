@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite compares the Pallas
+implementations against, and the implementation the training loop uses
+(identical math; interpret-mode Pallas is much slower to trace/run, so we
+reserve it for the exported inference graph where it matters).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q: [B, H, Tq, Dh] queries.
+      k: [B, H, Tk, Dh] keys.
+      v: [B, H, Tk, Dh] values.
+      mask: [B, 1 or H, Tq, Tk] additive mask (0 = keep, NEG_INF = drop).
+
+    Returns:
+      [B, H, Tq, Dh] attention output.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale + mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def blockheads_ref(
+    h: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference combined scoring/proposal projection (paper Fig. 3).
+
+    For each of the k heads, a position-wise feedforward with a residual
+    connection back to the decoder output:
+
+        out_i = h + relu(h @ w1_i + b1_i) @ w2_i + b2_i
+
+    Args:
+      h:  [T, D] decoder outputs (a single flattened batch*time axis).
+      w1: [K, D, Hd], b1: [K, Hd], w2: [K, Hd, D], b2: [K, D].
+
+    Returns:
+      [T, K, D] per-head representations fed to the shared vocab projection.
+    """
+    # [T,K,Hd]
+    a = jax.nn.relu(jnp.einsum("td,kdh->tkh", h, w1) + b1[None])
+    o = jnp.einsum("tkh,khd->tkd", a, w2) + b2[None]
+    return o + h[:, None, :]

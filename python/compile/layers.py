@@ -1,0 +1,192 @@
+"""L2 building blocks: embeddings, layer norm, attention, FFN, stacks.
+
+Parameters are plain nested dicts (pytrees); no framework dependency. Every
+layer takes `use_pallas` so the exported inference graph can route the hot
+spots through the L1 Pallas kernels while training uses the (numerically
+identical, much faster to trace) jnp reference path. Equality of the two
+paths is asserted by `python/tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.attention import attention as pallas_attention
+from .kernels.blockheads import blockheads as pallas_blockheads
+
+Params = Dict[str, object]
+
+
+def _glorot(rng: np.random.Generator, shape) -> jnp.ndarray:
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jnp.asarray(rng.uniform(-lim, lim, shape), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Layer norm
+# --------------------------------------------------------------------------
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+def embedding_init(rng: np.random.Generator, vocab: int, d: int, max_len: int) -> Params:
+    return {
+        "tok": jnp.asarray(rng.normal(0, d ** -0.5, (vocab, d)), jnp.float32),
+        "pos": jnp.asarray(rng.normal(0, 0.02, (max_len, d)), jnp.float32),
+    }
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens [B,T] -> [B,T,D] (scaled token emb + learned positions)."""
+    d = p["tok"].shape[1]
+    x = p["tok"][tokens] * (d ** 0.5)
+    return x + p["pos"][: tokens.shape[1]][None]
+
+
+# --------------------------------------------------------------------------
+# Multi-head attention
+# --------------------------------------------------------------------------
+def mha_init(rng: np.random.Generator, d: int) -> Params:
+    return {
+        "wq": _glorot(rng, (d, d)),
+        "wk": _glorot(rng, (d, d)),
+        "wv": _glorot(rng, (d, d)),
+        "wo": _glorot(rng, (d, d)),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def mha(
+    p: Params,
+    x_q: jnp.ndarray,
+    x_kv: jnp.ndarray,
+    mask: jnp.ndarray,
+    n_heads: int,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Multi-head attention. mask: [B,1,Tq,Tk] additive."""
+    q = _split_heads(x_q @ p["wq"], n_heads)
+    k = _split_heads(x_kv @ p["wk"], n_heads)
+    v = _split_heads(x_kv @ p["wv"], n_heads)
+    attn = pallas_attention if use_pallas else kref.attention_ref
+    o = attn(q, k, v, mask)
+    return _merge_heads(o) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# Position-wise FFN
+# --------------------------------------------------------------------------
+def ffn_init(rng: np.random.Generator, d: int, d_ff: int) -> Params:
+    return {
+        "w1": _glorot(rng, (d, d_ff)),
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": _glorot(rng, (d_ff, d)),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def ffn(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+# --------------------------------------------------------------------------
+# Encoder / decoder layers (pre-LN)
+# --------------------------------------------------------------------------
+def encoder_layer_init(rng: np.random.Generator, d: int, d_ff: int) -> Params:
+    return {
+        "ln1": layernorm_init(d),
+        "attn": mha_init(rng, d),
+        "ln2": layernorm_init(d),
+        "ffn": ffn_init(rng, d, d_ff),
+    }
+
+
+def encoder_layer(p: Params, x: jnp.ndarray, mask: jnp.ndarray, n_heads: int, use_pallas: bool) -> jnp.ndarray:
+    x = x + mha(p["attn"], layernorm(p["ln1"], x), layernorm(p["ln1"], x), mask, n_heads, use_pallas)
+    return x + ffn(p["ffn"], layernorm(p["ln2"], x))
+
+
+def decoder_layer_init(rng: np.random.Generator, d: int, d_ff: int) -> Params:
+    return {
+        "ln1": layernorm_init(d),
+        "self": mha_init(rng, d),
+        "ln2": layernorm_init(d),
+        "cross": mha_init(rng, d),
+        "ln3": layernorm_init(d),
+        "ffn": ffn_init(rng, d, d_ff),
+    }
+
+
+def decoder_layer(
+    p: Params,
+    x: jnp.ndarray,
+    memory: jnp.ndarray,
+    self_mask: jnp.ndarray,
+    cross_mask: jnp.ndarray,
+    n_heads: int,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    h = layernorm(p["ln1"], x)
+    x = x + mha(p["self"], h, h, self_mask, n_heads, use_pallas)
+    x = x + mha(p["cross"], layernorm(p["ln2"], x), memory, cross_mask, n_heads, use_pallas)
+    return x + ffn(p["ffn"], layernorm(p["ln3"], x))
+
+
+# --------------------------------------------------------------------------
+# Block-heads (paper Fig. 3) — init here, apply via kernel/ref
+# --------------------------------------------------------------------------
+def blockheads_init(rng: np.random.Generator, d: int, d_hidden: int, k: int) -> Params:
+    return {
+        "w1": jnp.stack([_glorot(rng, (d, d_hidden)) for _ in range(k)]),
+        "b1": jnp.zeros((k, d_hidden), jnp.float32),
+        "w2": jnp.stack([_glorot(rng, (d_hidden, d)) for _ in range(k)]),
+        "b2": jnp.zeros((k, d), jnp.float32),
+    }
+
+
+def blockheads_apply(p: Params, h: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """h [B,T,D] -> [B,T,K,D]."""
+    b, t, d = h.shape
+    flat = h.reshape(b * t, d)
+    fn = pallas_blockheads if use_pallas else kref.blockheads_ref
+    out = fn(flat, p["w1"], p["b1"], p["w2"], p["b2"])
+    return out.reshape(b, t, p["w1"].shape[0], d)
+
+
+# --------------------------------------------------------------------------
+# Masks
+# --------------------------------------------------------------------------
+def padding_mask(tokens: jnp.ndarray) -> jnp.ndarray:
+    """[B,T] ids -> [B,1,1,T] additive mask (PAD=0 positions dropped)."""
+    keep = (tokens != 0).astype(jnp.float32)
+    return (1.0 - keep)[:, None, None, :] * kref.NEG_INF
+
+
+def causal_mask(t: int) -> jnp.ndarray:
+    """[1,1,T,T] additive lower-triangular mask."""
+    m = jnp.tril(jnp.ones((t, t), jnp.float32))
+    return (1.0 - m)[None, None] * kref.NEG_INF

@@ -1,0 +1,285 @@
+"""L2: the combined scoring-and-proposal Transformer (paper §4, §6).
+
+An encoder–decoder Transformer whose decoder output feeds the k-head
+block-projection layer (Fig. 3). Head i at decoder position t predicts
+reference token r_{t+i-1} given r_{<t} — i.e. head 1 is the ordinary
+next-token scorer p_1 and heads 2..k are the proposal models p_2..p_k,
+all computed by a single model invocation (the property §4's merged
+verify+predict loop exploits).
+
+The same architecture serves both evaluation tasks (synthetic MT and image
+super-resolution); only vocabulary size and sequence lengths differ.
+
+Also defined here: the simplified non-autoregressive (NAT) and iterative-
+refinement comparators used for Table 4 — they reuse the same encoder and a
+*non-causal* decoder over a length-predicted canvas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+Params = Dict[str, object]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters. Defaults give a ~1M-parameter model that trains in
+    minutes on one CPU core while keeping the Transformer structure (MHA,
+    cross-attention, FFN, pre-LN) of the paper's transformer_base."""
+
+    vocab: int
+    max_src: int
+    max_tgt: int
+    k: int = 1
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    d_hidden: int = 128   # block-heads hidden size (paper: d_hidden)
+    n_enc: int = 2
+    n_dec: int = 2
+
+    def with_k(self, k: int) -> "ModelConfig":
+        return dataclasses.replace(self, k=k)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, seed: int) -> Params:
+    """Trunk + block-heads parameters.
+
+    The 'trunk' (embeddings, encoder, decoder, final LN, vocab projection)
+    is what the paper pre-trains; 'heads' is the inserted Fig. 3 layer.
+    The split matters for frozen-base vs fine-tuned training (§6.1).
+    """
+    rng = np.random.default_rng(seed)
+    trunk = {
+        "src_emb": L.embedding_init(rng, cfg.vocab, cfg.d_model, cfg.max_src),
+        "tgt_emb": L.embedding_init(rng, cfg.vocab, cfg.d_model, cfg.max_tgt),
+        "enc": [L.encoder_layer_init(rng, cfg.d_model, cfg.d_ff) for _ in range(cfg.n_enc)],
+        "dec": [L.decoder_layer_init(rng, cfg.d_model, cfg.d_ff) for _ in range(cfg.n_dec)],
+        "enc_ln": L.layernorm_init(cfg.d_model),
+        "dec_ln": L.layernorm_init(cfg.d_model),
+        "proj": L._glorot(rng, (cfg.d_model, cfg.vocab)),
+    }
+    heads = L.blockheads_init(rng, cfg.d_model, cfg.d_hidden, cfg.k)
+    return {"trunk": trunk, "heads": heads}
+
+
+def reinit_heads(params: Params, cfg: ModelConfig, seed: int) -> Params:
+    """Fresh Fig. 3 layer for a new k on top of an existing trunk."""
+    rng = np.random.default_rng(seed)
+    return {
+        "trunk": params["trunk"],
+        "heads": L.blockheads_init(rng, cfg.d_model, cfg.d_hidden, cfg.k),
+    }
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+def encode(params: Params, cfg: ModelConfig, src: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
+    """src [B,S] -> memory [B,S,D]."""
+    t = params["trunk"]
+    mask = L.padding_mask(src)
+    x = L.embed(t["src_emb"], src)
+    for lyr in t["enc"]:
+        x = L.encoder_layer(lyr, x, mask, cfg.n_heads, use_pallas)
+    return L.layernorm(t["enc_ln"], x)
+
+
+def decode_heads(
+    params: Params,
+    cfg: ModelConfig,
+    memory: jnp.ndarray,
+    src: jnp.ndarray,
+    tgt_in: jnp.ndarray,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Causal decode: tgt_in [B,T] -> per-head logits [B,T,K,V].
+
+    tgt_in follows the shifted convention: tgt_in[:,0] = BOS and
+    tgt_in[:,t] = r_{t-1}. Head i (0-indexed axis K) at position t scores
+    r_{t+i}.
+    """
+    t = params["trunk"]
+    self_mask = L.causal_mask(tgt_in.shape[1])
+    cross_mask = L.padding_mask(src)
+    x = L.embed(t["tgt_emb"], tgt_in)
+    for lyr in t["dec"]:
+        x = L.decoder_layer(lyr, x, memory, self_mask, cross_mask, cfg.n_heads, use_pallas)
+    h = L.layernorm(t["dec_ln"], x)
+    hk = L.blockheads_apply(params["heads"], h, use_pallas)  # [B,T,K,D]
+    return jnp.einsum("btkd,dv->btkv", hk, t["proj"])
+
+
+def forward(params: Params, cfg: ModelConfig, src: jnp.ndarray, tgt_in: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
+    """Full fwd: [B,T,K,V] logits."""
+    memory = encode(params, cfg, src, use_pallas)
+    return decode_heads(params, cfg, memory, src, tgt_in, use_pallas)
+
+
+# --------------------------------------------------------------------------
+# Training loss (§6: one uniformly-sampled head per minibatch)
+# --------------------------------------------------------------------------
+def shift_labels(tgt: jnp.ndarray, i: int) -> jnp.ndarray:
+    """Labels for head i (0-indexed): position t gets r_{t+i} (PAD beyond)."""
+    if i == 0:
+        return tgt
+    b, t = tgt.shape
+    return jnp.concatenate([tgt[:, i:], jnp.zeros((b, i), tgt.dtype)], axis=1)
+
+
+def mean_head_loss(
+    params: Params,
+    cfg: ModelConfig,
+    src: jnp.ndarray,
+    tgt: jnp.ndarray,
+    label_smoothing: float = 0.1,
+) -> jnp.ndarray:
+    """Mean cross entropy over all k heads in one forward pass.
+
+    The paper (§6) had to subsample one head per minibatch because of
+    memory limits at transformer_base scale; at this session's model scale
+    the full mean fits easily, giving every head a gradient every step —
+    important because the CPU budget allows only ~1e3 steps per variant.
+    The §6 sampled estimator is kept as `head_loss` (used by tests and
+    available via Trainer options)."""
+    b, t_len = tgt.shape
+    bos = jnp.full((b, 1), 1, tgt.dtype)
+    tgt_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    logits = forward(params, cfg, src, tgt_in)  # [B,T,K,V]
+    labels = jnp.stack([shift_labels(tgt, i) for i in range(cfg.k)], axis=2)  # [B,T,K]
+    mask = (labels != 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if label_smoothing > 0:
+        uniform = -jnp.mean(logp, axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * uniform
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def head_loss(
+    params: Params,
+    cfg: ModelConfig,
+    src: jnp.ndarray,
+    tgt: jnp.ndarray,
+    head: int,
+    label_smoothing: float = 0.1,
+) -> jnp.ndarray:
+    """Cross entropy of one head. `head` is static (0-indexed), so the
+    trainer jits one step per head and samples among them uniformly per
+    minibatch — §6's unbiased single-head estimate of the mean loss."""
+    b, t_len = tgt.shape
+    bos = jnp.full((b, 1), 1, tgt.dtype)
+    tgt_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    logits_i = forward(params, cfg, src, tgt_in)[:, :, head]  # [B,T,V]
+    labels = shift_labels(tgt, head)
+    mask = (labels != 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits_i, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if label_smoothing > 0:
+        uniform = -jnp.mean(logp, axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * uniform
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Greedy decode in JAX (teacher decodes for distillation + sanity evals)
+# --------------------------------------------------------------------------
+def greedy_decode(
+    params: Params, cfg: ModelConfig, src: jnp.ndarray, max_len: int
+) -> jnp.ndarray:
+    """Batched greedy decode with head 0. Returns [B, max_len] tokens
+    (EOS-terminated, PAD after). Build-time utility only — the serving
+    decode loop lives in rust/src/decoding."""
+    b = src.shape[0]
+    memory = encode(params, cfg, src)
+    # simple python loop (build path only; clarity over speed)
+    tgt_in = jnp.zeros((b, max_len), jnp.int32).at[:, 0].set(1)  # col 0 = BOS
+    done = jnp.zeros((b,), bool)
+    outs = []
+    for pos in range(max_len - 1):
+        logits = decode_heads(params, cfg, memory, src, tgt_in)[:, :, 0]
+        nxt = jnp.argmax(logits[:, pos], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(done, 0, nxt)
+        outs.append(nxt)
+        done = done | (nxt == 2)
+        tgt_in = tgt_in.at[:, pos + 1].set(nxt)
+        if bool(jnp.all(done)):
+            break
+    out = jnp.stack(outs, axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Simplified NAT + iterative-refinement comparators (Table 4)
+# --------------------------------------------------------------------------
+def init_nat_params(cfg: ModelConfig, seed: int) -> Params:
+    """NAT = trunk with a non-causal decoder + a length head on the mean
+    encoder state. Decoder input is the low-confidence 'canvas' (position
+    embeddings only)."""
+    p = init_params(cfg, seed)
+    rng = np.random.default_rng(seed + 17)
+    p["len_head"] = {
+        "w": L._glorot(rng, (cfg.d_model, cfg.max_tgt)),
+        "b": jnp.zeros((cfg.max_tgt,), jnp.float32),
+    }
+    return p
+
+
+def nat_forward(
+    params: Params, cfg: ModelConfig, src: jnp.ndarray, tgt_in: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Non-causal decode over a canvas: returns ([B,T,V] logits, [B,max_tgt]
+    length logits). `tgt_in` carries the previous iteration's tokens (all
+    BOS for the first NAT shot; the refinement decoder feeds back outputs)."""
+    t = params["trunk"]
+    memory = encode(params, cfg, src)
+    cross_mask = L.padding_mask(src)
+    b, tt = tgt_in.shape
+    none_mask = jnp.zeros((1, 1, tt, tt), jnp.float32)  # full visibility
+    x = L.embed(t["tgt_emb"], tgt_in)
+    for lyr in t["dec"]:
+        x = L.decoder_layer(lyr, x, memory, none_mask, cross_mask, cfg.n_heads, False)
+    h = L.layernorm(t["dec_ln"], x)
+    hk = L.blockheads_apply(params["heads"], h, False)[:, :, 0]
+    logits = hk @ t["proj"]
+    src_keep = (src != 0).astype(jnp.float32)[..., None]
+    pooled = jnp.sum(memory * src_keep, axis=1) / jnp.maximum(jnp.sum(src_keep, axis=1), 1.0)
+    len_logits = pooled @ params["len_head"]["w"] + params["len_head"]["b"]
+    return logits, len_logits
+
+
+def nat_loss(params: Params, cfg: ModelConfig, src: jnp.ndarray, tgt: jnp.ndarray, noise_key=None) -> jnp.ndarray:
+    """Token CE on a canvas (BOS canvas or corrupted-output canvas for the
+    refinement model) + length CE."""
+    b, t_len = tgt.shape
+    canvas = jnp.ones_like(tgt)  # all-BOS canvas
+    if noise_key is not None:
+        # refinement training: canvas = reference with random token dropout
+        drop = jax.random.bernoulli(noise_key, 0.3, tgt.shape)
+        repl = jax.random.randint(noise_key, tgt.shape, 3, cfg.vocab)
+        canvas = jnp.where(drop, repl, tgt)
+        canvas = jnp.where(tgt == 0, 1, canvas)
+    logits, len_logits = nat_forward(params, cfg, src, canvas)
+    mask = (tgt != 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    tok_loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    lens = jnp.sum(mask, axis=1).astype(jnp.int32)
+    len_lp = jax.nn.log_softmax(len_logits, axis=-1)
+    len_loss = -jnp.mean(jnp.take_along_axis(len_lp, lens[:, None], axis=-1))
+    return tok_loss + 0.1 * len_loss
+
+
+def count_params(params: Params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(params)))

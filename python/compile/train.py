@@ -1,0 +1,259 @@
+"""Training pipeline (§6): base models, block-head variants, distillation.
+
+Reproduces the paper's training matrix at session scale:
+
+* **base**: trunk + k=1 head trained on gold data (the paper's pre-trained
+  transformer_base stand-in).
+* per block size k in {2,4,6,8,10}, four variants:
+    - `regular`  — frozen trunk, gold data        (Table 1 col 1)
+    - `distill`  — frozen trunk, distilled data   (Table 1 col 2)
+    - `ft`       — fine-tuned trunk, gold data    (Table 1 col 3)
+    - `both`     — fine-tuned trunk, distilled    (Table 1 col 4)
+* distilled data: beam-4 decodes of a *separately seeded* teacher on the
+  training sources (§6.2).
+* SR task: `regular` (frozen) and `ft` variants per k (Table 2 columns;
+  the approximate-acceptance columns are inference-time settings).
+
+Everything is hand-rolled (Adam, schedules, checkpoints as npz) — no
+optax/flax on this image.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import beam as beam_mod
+from . import data as D
+from . import model as M
+
+Params = M.Params
+
+
+# --------------------------------------------------------------------------
+# Checkpoints
+# --------------------------------------------------------------------------
+def _flatten(params, prefix="") -> Dict[str, np.ndarray]:
+    """Flatten a params pytree to {path: array}. Dict keys are visited in
+    sorted order to match jax's tree flattening, so the emitted name order
+    equals the positional argument order of the lowered HLO."""
+    out = {}
+    if isinstance(params, dict):
+        for k in sorted(params.keys()):
+            out.update(_flatten(params[k], f"{prefix}{k}/"))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def save_ckpt(path: str, params: Params) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **_flatten(params))
+
+
+def load_ckpt(path: str, like: Params) -> Params:
+    """Restore into the structure of `like` (shape-checked)."""
+    flat = dict(np.load(path))
+
+    def rebuild(template, prefix=""):
+        if isinstance(template, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in template.items()}
+        if isinstance(template, (list, tuple)):
+            return [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(template)]
+        arr = flat[prefix[:-1]]
+        assert arr.shape == tuple(template.shape), (prefix, arr.shape, template.shape)
+        return jnp.asarray(arr)
+
+    return rebuild(like)
+
+
+# --------------------------------------------------------------------------
+# Adam with a trainability filter (frozen-trunk support, §6.1)
+# --------------------------------------------------------------------------
+class Adam:
+    def __init__(self, params: Params, trainable: Callable[[str], bool]):
+        self.m = jax.tree_util.tree_map(jnp.zeros_like, params)
+        self.v = jax.tree_util.tree_map(jnp.zeros_like, params)
+        # mask pytree of 0/1 floats matching params, derived from path names
+        flat = _flatten(params)
+        self.mask_flat = {k: float(trainable(k)) for k in flat}
+        self.t = 0
+
+    def mask_tree(self, like: Params):
+        def rebuild(template, prefix=""):
+            if isinstance(template, dict):
+                return {k: rebuild(v, f"{prefix}{k}/") for k, v in template.items()}
+            if isinstance(template, (list, tuple)):
+                return [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(template)]
+            return jnp.asarray(self.mask_flat[prefix[:-1]], jnp.float32)
+
+        return rebuild(like)
+
+
+def make_train_step(
+    cfg: M.ModelConfig,
+    head: Optional[int],
+    mask: Params,
+    b1=0.9,
+    b2=0.98,
+    eps=1e-9,
+):
+    """One jitted Adam step. `head=None` uses the mean-over-heads loss
+    (default; see model.mean_head_loss); an integer selects the paper's
+    §6 single-head estimator."""
+
+    def loss_fn(params, src, tgt):
+        if head is None:
+            return M.mean_head_loss(params, cfg, src, tgt)
+        return M.head_loss(params, cfg, src, tgt, head)
+
+    @jax.jit
+    def step(params, m, v, t, src, tgt, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, src, tgt)
+        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+        v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+        mh = jax.tree_util.tree_map(lambda mm: mm / (1 - b1 ** t), m)
+        vh = jax.tree_util.tree_map(lambda vv: vv / (1 - b2 ** t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mm, vv, msk: p - msk * lr * mm / (jnp.sqrt(vv) + eps),
+            params, mh, vh, mask,
+        )
+        return params, m, v, loss
+
+    return step
+
+
+def lr_schedule(step: int, d_model: int, warmup: int = 300, scale: float = 2.0) -> float:
+    """Transformer inverse-sqrt schedule, scaled for the small model."""
+    step = max(step, 1)
+    return scale * d_model ** -0.5 * min(step ** -0.5, step * warmup ** -1.5)
+
+
+# lr scale for warm-started variant runs: gentler than from-scratch so the
+# fine-tuned trunk is adapted, not destroyed, within ~1e3 steps
+FT_LR_SCALE = 0.8
+
+
+# --------------------------------------------------------------------------
+# Generic training loop
+# --------------------------------------------------------------------------
+def train(
+    cfg: M.ModelConfig,
+    params: Params,
+    src: np.ndarray,
+    tgt: np.ndarray,
+    steps: int,
+    batch: int,
+    trainable: Callable[[str], bool] = lambda _: True,
+    seed: int = 0,
+    log_every: int = 200,
+    tag: str = "",
+    sampled_heads: bool = False,
+    lr_scale: float = 2.0,
+) -> Params:
+    """Train with the mean-over-heads loss (default) or the paper's §6
+    uniform-random-head estimator (`sampled_heads=True`)."""
+    rng = np.random.default_rng(seed)
+    opt = Adam(params, trainable)
+    mask = opt.mask_tree(params)
+    if sampled_heads:
+        steps_by_head = [make_train_step(cfg, h, mask) for h in range(cfg.k)]
+    else:
+        steps_by_head = [make_train_step(cfg, None, mask)]
+    m, v = opt.m, opt.v
+    n = src.shape[0]
+    t0 = time.time()
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n, batch)
+        head = int(rng.integers(0, len(steps_by_head)))
+        lr = lr_schedule(t, cfg.d_model, scale=lr_scale)
+        params, m, v, loss = steps_by_head[head](
+            params, m, v, jnp.asarray(t, jnp.float32),
+            jnp.asarray(src[idx]), jnp.asarray(tgt[idx]), jnp.asarray(lr, jnp.float32),
+        )
+        if t % log_every == 0 or t == steps:
+            print(f"  [{tag}] step {t}/{steps} loss={float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return params
+
+
+def trunk_frozen(path: str) -> bool:
+    return not path.startswith("trunk/")
+
+
+def all_trainable(path: str) -> bool:
+    return True
+
+
+# --------------------------------------------------------------------------
+# Task pipelines
+# --------------------------------------------------------------------------
+MT_KS = [2, 4, 6, 8, 10]
+MT_VARIANTS = ["regular", "distill", "ft", "both"]
+
+
+def mt_config(vocab_size: int, k: int = 1) -> M.ModelConfig:
+    return M.ModelConfig(
+        vocab=vocab_size, max_src=D.MT_MAX_SRC, max_tgt=D.MT_MAX_TGT, k=k
+    )
+
+
+def sr_config(k: int = 1) -> M.ModelConfig:
+    return M.ModelConfig(
+        vocab=D.SR_VOCAB,
+        max_src=D.SR_LO * D.SR_LO + 1,
+        max_tgt=D.SR_HI * D.SR_HI + 2,
+        k=k,
+        d_model=64,
+        n_heads=4,
+    )
+
+
+def distill_targets(
+    params: Params, cfg: M.ModelConfig, src: np.ndarray, batch: int = 64
+) -> np.ndarray:
+    """Teacher beam-4 decodes of the training sources (§6.2)."""
+    outs = []
+    for i in range(0, src.shape[0], batch):
+        outs.append(beam_mod.beam_decode(params, cfg, jnp.asarray(src[i : i + batch]), cfg.max_tgt))
+        print(f"  distill {i + batch}/{src.shape[0]}", flush=True)
+    return np.concatenate(outs, axis=0)
+
+
+def train_variant(
+    base_params: Params,
+    cfg1: M.ModelConfig,
+    k: int,
+    variant: str,
+    src: np.ndarray,
+    tgt_gold: np.ndarray,
+    tgt_distill: Optional[np.ndarray],
+    steps: int,
+    batch: int,
+    seed: int,
+) -> Tuple[M.ModelConfig, Params]:
+    """Warm-start trunk from base, fresh k-head layer, train per variant."""
+    cfg = cfg1.with_k(k)
+    params = M.reinit_heads(base_params, cfg, seed=seed + k)
+    if variant in ("distill", "both"):
+        assert tgt_distill is not None
+        tgt = tgt_distill
+    else:
+        tgt = tgt_gold
+    finetune = variant in ("ft", "both")
+    trainable = all_trainable if finetune else trunk_frozen
+    params = train(
+        cfg, params, src, tgt, steps=steps, batch=batch,
+        trainable=trainable, seed=seed, tag=f"k{k}-{variant}",
+        lr_scale=FT_LR_SCALE if finetune else 2.0,
+    )
+    return cfg, params

@@ -1,0 +1,95 @@
+"""Synthetic-data generators: determinism, shape, and distributional facts
+the experiments rely on (stochastic lexical choice, image structure)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def vocab():
+    return D.build_mt_vocab()
+
+
+def test_vocab_deterministic(vocab):
+    v2 = D.build_mt_vocab()
+    assert vocab.words == v2.words
+    assert vocab.tgt_map == v2.tgt_map
+
+
+def test_vocab_some_synonyms(vocab):
+    multi = [w for w, c in vocab.tgt_map.items() if len(c) > 1]
+    assert len(multi) >= 5  # stochastic lexical choice exists
+
+
+def test_mt_dataset_reproducible(vocab):
+    a = D.gen_mt_dataset(vocab, 16, seed=3)
+    b = D.gen_mt_dataset(vocab, 16, seed=3)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_mt_pair_structure(vocab):
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        src, tgt = D.gen_mt_pair(vocab, rng)
+        assert src[-1] == D.EOS_ID and tgt[-1] == D.EOS_ID
+        assert len(src) <= D.MT_MAX_SRC and len(tgt) <= D.MT_MAX_TGT
+        assert all(t != D.PAD_ID for t in src)
+        # verb-final within each clause: last non-EOS token of a 1-clause
+        # sentence is a verb translation
+        assert len(tgt) >= 4
+
+
+def test_mt_translation_is_ambiguous(vocab):
+    """Same source must admit different references across samples — the
+    property distillation exploits."""
+    rng1 = np.random.default_rng(1)
+    src, _ = D.gen_mt_pair(vocab, rng1)
+    outs = set()
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        clauses = D._split_clauses(vocab, src[:-1])
+        t = []
+        for c in clauses:
+            t.extend(D._translate_clause(vocab, c, rng))
+        outs.add(tuple(t))
+    assert len(outs) > 1
+
+
+def test_sr_images_in_range():
+    rng = np.random.default_rng(2)
+    img = D.gen_sr_image(rng)
+    assert img.shape == (D.SR_HI, D.SR_HI)
+    assert img.min() >= 0 and img.max() <= 255
+    lo = D.downsample(img)
+    assert lo.shape == (D.SR_LO, D.SR_LO)
+
+
+def test_sr_dataset_tokens():
+    src, tgt = D.gen_sr_dataset(4, seed=5)
+    assert src.shape == (4, D.SR_LO * D.SR_LO + 1)
+    assert tgt.shape == (4, D.SR_HI * D.SR_HI + 1)
+    assert (src[:, -1] == D.EOS_ID).all() and (tgt[:, -1] == D.EOS_ID).all()
+    body = tgt[:, :-1]
+    assert body.min() >= D.NUM_SPECIALS and body.max() < D.SR_VOCAB
+
+
+def test_intensity_token_roundtrip():
+    v = np.arange(256)
+    np.testing.assert_array_equal(D.token_to_intensity(D.intensity_to_token(v)), v)
+
+
+def test_emit_datasets(tmp_path):
+    D.emit_datasets(str(tmp_path), n_dev=5, n_test=5, n_sr_dev=2)
+    for f in ["mt_dev.json", "mt_test.json", "sr_dev.json", "vocab.json"]:
+        with open(tmp_path / f) as fh:
+            obj = json.load(fh)
+        assert obj
+    with open(tmp_path / "mt_dev.json") as fh:
+        rows = json.load(fh)
+    assert len(rows) == 5
+    assert all("src" in r and "ref" in r for r in rows)

@@ -1,0 +1,85 @@
+"""AOT export: HLO text parses, weight bundles are well-formed, and the
+exported decode graph is numerically identical to the in-process model."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def small():
+    v = D.build_mt_vocab()
+    cfg = T.mt_config(v.size, k=2)
+    params = M.init_params(cfg, seed=0)
+    return v, cfg, params
+
+
+def test_hlo_text_exports(tmp_path, small):
+    _, cfg, params = small
+    src = jnp.zeros((1, cfg.max_src), jnp.int32)
+    path = str(tmp_path / "enc.hlo.txt")
+    aot.export_fn(aot.make_encode_fn(cfg), (params, src), path)
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # weights are parameters, not constants: count parameter instructions
+    n_params = len(T._flatten(params))
+    assert text.count("parameter(") >= n_params + 1
+
+
+def test_weights_bundle_roundtrip(tmp_path, small):
+    _, _, params = small
+    path = str(tmp_path / "w.bin")
+    entries = aot.write_weights(path, params)
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        data = f.read()
+    assert header == entries
+    flat = T._flatten(params)
+    assert [e["name"] for e in entries] == list(flat.keys())
+    for e in entries:
+        arr = np.frombuffer(
+            data[e["offset"]: e["offset"] + e["nbytes"]],
+            dtype=np.dtype(e["dtype"]),
+        ).reshape(e["shape"])
+        np.testing.assert_array_equal(arr, np.asarray(flat[e["name"]]))
+
+
+def test_topk_outputs_sorted_and_consistent(small):
+    v, cfg, params = small
+    src, tgt = D.gen_mt_dataset(v, 2, seed=1)
+    src, tgt = jnp.asarray(src[:, : cfg.max_src]), jnp.asarray(tgt[:, : cfg.max_tgt])
+    mem = M.encode(params, cfg, src)
+    bos = jnp.ones((2, 1), jnp.int32)
+    tgt_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    topv, topi = jax.jit(aot.make_decode_fn(cfg))(params, mem, src, tgt_in)
+    assert topv.shape == (2, cfg.max_tgt, cfg.k, aot.TOPT)
+    # sorted descending
+    assert bool(jnp.all(topv[..., :-1] >= topv[..., 1:]))
+    # top-1 equals argmax of full logits
+    logits = M.decode_heads(params, cfg, mem, src, tgt_in)
+    np.testing.assert_array_equal(
+        np.asarray(topi[..., 0]), np.asarray(jnp.argmax(logits, axis=-1))
+    )
+
+
+def test_manifest_plan_names():
+    p = aot.plan("min")
+    assert "mt_base" in p and "sr_base" in p
+    full = aot.plan("full")
+    for k in [2, 4, 6, 8, 10]:
+        for v in ["regular", "distill", "ft", "both"]:
+            assert f"mt_k{k}_{v}" in full
+        assert f"sr_k{k}_ft" in full
+    assert "mt_nat" in full and "mt_refine" in full

@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes per the session contract; adversarial cases
+(fully-masked rows, length-1, tile-misaligned sizes) are pinned explicitly.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import attention
+from compile.kernels.blockheads import blockheads
+from compile.kernels.ref import NEG_INF, attention_ref, blockheads_ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, shape), dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    tq=st.integers(1, 70),
+    tk=st.integers(1, 70),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 10),
+)
+def test_attention_matches_ref(b, h, tq, tk, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, tq, dh))
+    k = _rand(rng, (b, h, tk, dh))
+    v = _rand(rng, (b, h, tk, dh))
+    mask = jnp.where(
+        jnp.asarray(rng.random((b, 1, tq, tk))) < 0.85, 0.0, NEG_INF
+    ).astype(jnp.float32)
+    # keep at least one key visible per row: fully-masked rows have
+    # different (deliberate) semantics, pinned by the dedicated test below
+    mask = mask.at[..., 0].set(0.0)
+    out = attention(q, k, v, mask)
+    ref = attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@hypothesis.given(
+    tile_q=st.sampled_from([8, 16, 32]),
+    tile_k=st.sampled_from([8, 16, 64]),
+)
+def test_attention_tile_invariance(tile_q, tile_k):
+    """The online-softmax accumulation must be exact for any tiling."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 2, 33, 16))
+    k = _rand(rng, (2, 2, 47, 16))
+    v = _rand(rng, (2, 2, 47, 16))
+    mask = jnp.zeros((2, 1, 33, 47), jnp.float32)
+    out = attention(q, k, v, mask, tile_q=tile_q, tile_k=tile_k)
+    ref = attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_fully_masked_rows_are_zero():
+    """Rows with no visible keys must emit zeros, not NaN (padding rows)."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 2, 8, 16))
+    k = _rand(rng, (1, 2, 8, 16))
+    v = _rand(rng, (1, 2, 8, 16))
+    mask = jnp.full((1, 1, 8, 8), NEG_INF, jnp.float32)
+    out = attention(q, k, v, mask)
+    assert not bool(jnp.any(jnp.isnan(out)))
+    np.testing.assert_allclose(out, jnp.zeros_like(out), atol=1e-6)
+
+
+def test_attention_causal_equals_ref():
+    rng = np.random.default_rng(2)
+    t = 29
+    q = _rand(rng, (1, 4, t, 16))
+    k = _rand(rng, (1, 4, t, 16))
+    v = _rand(rng, (1, 4, t, 16))
+    causal = (1.0 - jnp.tril(jnp.ones((t, t))))[None, None] * NEG_INF
+    out = attention(q, k, v, causal.astype(jnp.float32))
+    ref = attention_ref(q, k, v, causal.astype(jnp.float32))
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_length_one():
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 1, 1, 8))
+    k = _rand(rng, (1, 1, 1, 8))
+    v = _rand(rng, (1, 1, 1, 8))
+    mask = jnp.zeros((1, 1, 1, 1), jnp.float32)
+    out = attention(q, k, v, mask)
+    np.testing.assert_allclose(out, v, atol=1e-6)  # softmax over 1 key
+
+
+def test_attention_per_head_mask():
+    """mask with H (not 1) on axis 1 must be honored per head."""
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (1, 2, 5, 8))
+    k = _rand(rng, (1, 2, 7, 8))
+    v = _rand(rng, (1, 2, 7, 8))
+    mask = jnp.where(jnp.asarray(rng.random((1, 2, 5, 7))) < 0.7, 0.0, NEG_INF).astype(jnp.float32)
+    np.testing.assert_allclose(
+        attention(q, k, v, mask), attention_ref(q, k, v, mask), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_attention_bf16_inputs():
+    """bf16 in, f32 accumulation: results close to the f32 reference."""
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (1, 2, 17, 16)).astype(jnp.bfloat16)
+    k = _rand(rng, (1, 2, 23, 16)).astype(jnp.bfloat16)
+    v = _rand(rng, (1, 2, 23, 16)).astype(jnp.bfloat16)
+    mask = jnp.zeros((1, 1, 17, 23), jnp.float32).astype(jnp.bfloat16)
+    out = attention(q, k, v, mask).astype(jnp.float32)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        mask.astype(jnp.float32))
+    np.testing.assert_allclose(out, ref, atol=5e-2, rtol=5e-2)
+
+
+# --------------------------------------------------------------------------
+# Block heads
+# --------------------------------------------------------------------------
+@hypothesis.given(
+    t=st.integers(1, 130),
+    k=st.sampled_from([1, 2, 4, 6, 10]),
+    d=st.sampled_from([16, 64]),
+    hd=st.sampled_from([32, 128]),
+    seed=st.integers(0, 5),
+)
+def test_blockheads_matches_ref(t, k, d, hd, seed):
+    rng = np.random.default_rng(seed)
+    h = _rand(rng, (t, d))
+    w1 = _rand(rng, (k, d, hd), scale=0.1)
+    b1 = _rand(rng, (k, hd), scale=0.1)
+    w2 = _rand(rng, (k, hd, d), scale=0.1)
+    b2 = _rand(rng, (k, d), scale=0.1)
+    out = blockheads(h, w1, b1, w2, b2)
+    ref = blockheads_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+@hypothesis.given(tile_t=st.sampled_from([8, 16, 64, 128]))
+def test_blockheads_tile_invariance(tile_t):
+    rng = np.random.default_rng(7)
+    h = _rand(rng, (45, 32))
+    w1 = _rand(rng, (3, 32, 64), scale=0.1)
+    b1 = _rand(rng, (3, 64), scale=0.1)
+    w2 = _rand(rng, (3, 64, 32), scale=0.1)
+    b2 = _rand(rng, (3, 32), scale=0.1)
+    out = blockheads(h, w1, b1, w2, b2, tile_t=tile_t)
+    ref = blockheads_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_blockheads_residual_identity():
+    """Zero weights -> output is exactly the residual input per head."""
+    t, d, k, hd = 9, 16, 4, 8
+    rng = np.random.default_rng(8)
+    h = _rand(rng, (t, d))
+    zeros = (
+        jnp.zeros((k, d, hd)), jnp.zeros((k, hd)),
+        jnp.zeros((k, hd, d)), jnp.zeros((k, d)),
+    )
+    out = blockheads(h, *zeros)
+    for i in range(k):
+        np.testing.assert_allclose(out[:, i], h, atol=1e-6)
+
+
+def test_blockheads_head_independence():
+    """Perturbing head i's weights must not change head j's output."""
+    rng = np.random.default_rng(9)
+    t, d, k, hd = 12, 16, 3, 8
+    h = _rand(rng, (t, d))
+    w1 = _rand(rng, (k, d, hd), scale=0.1)
+    b1 = _rand(rng, (k, hd), scale=0.1)
+    w2 = _rand(rng, (k, hd, d), scale=0.1)
+    b2 = _rand(rng, (k, d), scale=0.1)
+    base = blockheads(h, w1, b1, w2, b2)
+    w1b = w1.at[1].add(1.0)
+    pert = blockheads(h, w1b, b1, w2, b2)
+    np.testing.assert_allclose(pert[:, 0], base[:, 0], atol=1e-6)
+    np.testing.assert_allclose(pert[:, 2], base[:, 2], atol=1e-6)
+    assert float(jnp.max(jnp.abs(pert[:, 1] - base[:, 1]))) > 1e-3

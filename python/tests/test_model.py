@@ -1,0 +1,127 @@
+"""L2 correctness: model shapes, head semantics, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def vocab():
+    return D.build_mt_vocab()
+
+
+@pytest.fixture(scope="module")
+def cfg(vocab):
+    return T.mt_config(vocab.size, k=4)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, seed=0)
+
+
+def test_forward_shapes(cfg, params, vocab):
+    src, tgt = D.gen_mt_dataset(vocab, 3, seed=5)
+    logits = M.forward(params, cfg, jnp.asarray(src), jnp.asarray(tgt))
+    assert logits.shape == (3, cfg.max_tgt, cfg.k, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+def test_pallas_and_ref_paths_agree(cfg, params, vocab):
+    """The exported (pallas) graph must equal the training (jnp) graph."""
+    src, tgt = D.gen_mt_dataset(vocab, 2, seed=6)
+    a = M.forward(params, cfg, jnp.asarray(src), jnp.asarray(tgt), use_pallas=False)
+    b = M.forward(params, cfg, jnp.asarray(src), jnp.asarray(tgt), use_pallas=True)
+    np.testing.assert_allclose(a, b, atol=3e-4, rtol=3e-4)
+
+
+def test_causality(cfg, params, vocab):
+    """Changing future decoder inputs must not change earlier positions."""
+    src, tgt = D.gen_mt_dataset(vocab, 1, seed=7)
+    src, tgt = jnp.asarray(src), jnp.asarray(tgt)
+    mem = M.encode(params, cfg, src)
+    out1 = M.decode_heads(params, cfg, mem, src, tgt)
+    tgt2 = tgt.at[:, 10:].set(5)
+    out2 = M.decode_heads(params, cfg, mem, src, tgt2)
+    np.testing.assert_allclose(out1[:, :10], out2[:, :10], atol=1e-5)
+
+
+def test_head_shift_semantics():
+    tgt = jnp.asarray([[4, 5, 6, 2, 0, 0]], jnp.int32)
+    np.testing.assert_array_equal(M.shift_labels(tgt, 0), tgt)
+    np.testing.assert_array_equal(
+        M.shift_labels(tgt, 2), jnp.asarray([[6, 2, 0, 0, 0, 0]], jnp.int32)
+    )
+
+
+def test_loss_decreases(cfg, vocab):
+    src, tgt = D.gen_mt_dataset(vocab, 256, seed=8)
+    p = M.init_params(cfg, seed=1)
+    l0 = float(M.head_loss(p, cfg, jnp.asarray(src[:32]), jnp.asarray(tgt[:32]), 0))
+    p = T.train(cfg, p, src, tgt, steps=60, batch=16, seed=2, log_every=1000)
+    l1 = float(M.head_loss(p, cfg, jnp.asarray(src[:32]), jnp.asarray(tgt[:32]), 0))
+    assert l1 < l0 - 0.5, (l0, l1)
+
+
+def test_frozen_trunk_stays_frozen(cfg, vocab):
+    src, tgt = D.gen_mt_dataset(vocab, 64, seed=9)
+    p0 = M.init_params(cfg, seed=3)
+    trunk_before = jax.tree_util.tree_leaves(p0["trunk"])
+    p1 = T.train(cfg, p0, src, tgt, steps=10, batch=8,
+                 trainable=T.trunk_frozen, seed=4, log_every=1000)
+    trunk_after = jax.tree_util.tree_leaves(p1["trunk"])
+    for a, b in zip(trunk_before, trunk_after):
+        np.testing.assert_array_equal(a, b)
+    # heads must have moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(p0["heads"]),
+                        jax.tree_util.tree_leaves(p1["heads"]))
+    )
+    assert moved
+
+
+def test_greedy_decode_terminates(cfg, params, vocab):
+    src, _ = D.gen_mt_dataset(vocab, 2, seed=10)
+    out = M.greedy_decode(params, cfg, jnp.asarray(src), max_len=12)
+    assert out.shape[0] == 2 and out.shape[1] <= 12
+
+
+def test_ckpt_roundtrip(tmp_path, cfg, params):
+    path = str(tmp_path / "p.npz")
+    T.save_ckpt(path, params)
+    loaded = T.load_ckpt(path, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_flatten_order_matches_jax(params):
+    """write_weights order must equal jax.jit's positional flatten order."""
+    names = list(T._flatten(params).keys())
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    jax_names = []
+    for path, _ in leaves:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            else:
+                parts.append(str(p.idx))
+        jax_names.append("/".join(parts))
+    assert names == jax_names
+
+
+def test_nat_forward_shapes(vocab):
+    cfg = T.mt_config(vocab.size, k=1)
+    p = M.init_nat_params(cfg, seed=0)
+    src, tgt = D.gen_mt_dataset(vocab, 2, seed=11)
+    logits, len_logits = M.nat_forward(p, cfg, jnp.asarray(src), jnp.asarray(tgt))
+    assert logits.shape == (2, cfg.max_tgt, cfg.vocab)
+    assert len_logits.shape == (2, cfg.max_tgt)
+    loss = M.nat_loss(p, cfg, jnp.asarray(src), jnp.asarray(tgt))
+    assert np.isfinite(float(loss))

@@ -1,0 +1,112 @@
+//! Coordinator-layer benchmarks: the pure-rust hot path *around* the model
+//! invocation — verify/accept state machine, batch assembly, JSON wire
+//! codec, queue operations. The coordinator must stay far below the model
+//! invocation cost (DESIGN.md §8 target: <10% of end-to-end time).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use blockdecode::batching::{Request, RequestQueue};
+use blockdecode::bench::Bench;
+use blockdecode::decoding::state::BlockState;
+use blockdecode::decoding::Criterion;
+use blockdecode::model::BlockScores;
+use blockdecode::util::json::Json;
+use blockdecode::util::rng::Rng;
+use blockdecode::util::tensor::{TensorF32, TensorI32};
+
+fn fake_scores(b: usize, t: usize, k: usize, topt: usize, rng: &mut Rng) -> BlockScores {
+    let n = b * t * k * topt;
+    let topi = TensorI32::from_vec(
+        &[b, t, k, topt],
+        (0..n).map(|_| rng.range(3, 100) as i32).collect(),
+    );
+    let topv = TensorF32::from_vec(&[b, t, k, topt], (0..n).map(|_| rng.f64() as f32).collect());
+    BlockScores { topv, topi, k, topt }
+}
+
+fn main() {
+    let mut b = Bench::new(6);
+    let mut rng = Rng::new(7);
+
+    // verify/accept over a full batch iteration (pure rust hot loop)
+    let scores = fake_scores(8, 28, 8, 8, &mut rng);
+    b.case("state/absorb_batch8", "seq", || {
+        let mut n = 0;
+        for row in 0..8 {
+            let mut st = BlockState::new(8, Criterion::Exact, 27);
+            st.proposals = (0..8).map(|i| 10 + i).collect();
+            let _ = st.absorb(&scores, row);
+            n += 1;
+            std::hint::black_box(&st);
+        }
+        n
+    });
+
+    // decoder-input row assembly
+    let mut tgt = TensorI32::zeros(&[8, 28]);
+    let mut st = BlockState::new(8, Criterion::Exact, 27);
+    st.accepted = vec![5; 12];
+    st.proposals = vec![6; 8];
+    b.case("state/build_row_batch8", "row", || {
+        for r in 0..8 {
+            st.build_row(tgt.row_mut(r));
+        }
+        8
+    });
+
+    // criteria dispatch
+    b.case("criteria/exact_1k", "check", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            if Criterion::Exact.accepts(&scores, i % 8, i % 28, 42) {
+                acc += 1;
+            }
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+    b.case("criteria/top8_1k", "check", || {
+        let mut acc = 0usize;
+        for i in 0..1000 {
+            if Criterion::TopK(8).accepts(&scores, i % 8, i % 28, 42) {
+                acc += 1;
+            }
+        }
+        std::hint::black_box(acc);
+        1000
+    });
+
+    // queue throughput
+    let q = Arc::new(RequestQueue::new());
+    b.case("queue/push_pop_256", "req", || {
+        for i in 0..256u64 {
+            let (tx, _rx) = channel();
+            q.push(Request {
+                id: i,
+                src: vec![4, 5, 2],
+                criterion: None,
+                arrived: Instant::now(),
+                respond: tx,
+            });
+        }
+        let mut n = 0;
+        while n < 256 {
+            n += q.try_pop(64).len();
+        }
+        n
+    });
+
+    // wire codec
+    let line = r#"{"src":[14,55,23,88,41,2],"criterion":"top2"}"#;
+    b.case("json/parse_request_1k", "msg", || {
+        for _ in 0..1000 {
+            let j = Json::parse(line).unwrap();
+            std::hint::black_box(&j);
+        }
+        1000
+    });
+
+    println!("\n== summary ==\n{}", b.report());
+}

@@ -1,0 +1,57 @@
+//! End-to-end decode benchmarks — one case per paper experiment family:
+//! greedy vs blockwise at several k (Tables 1/4 speed axis), criteria
+//! (§5), and batched vs single-sentence decoding (Figure 4 conditions).
+
+use blockdecode::bench::Bench;
+use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
+use blockdecode::harness::Ctx;
+
+fn main() {
+    blockdecode::util::logging::init();
+    let ctx = match Ctx::load("artifacts") {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("decode_bench skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let ds = ctx.dataset("mt_dev.json").expect("dev set");
+    let srcs8: Vec<Vec<i32>> = ds.rows.iter().take(8).map(|r| r.src.clone()).collect();
+    let src1 = &srcs8[..1];
+
+    let mut b = Bench::new(12);
+
+    let base = ctx.model("mt_base").expect("mt_base");
+    b.case("greedy/mt_base/b8", "tok", || {
+        let r = decoding::greedy_decode(&base, &srcs8, None).unwrap();
+        r.iter().map(|x| x.tokens.len()).sum()
+    });
+    b.case("greedy/mt_base/b1", "tok", || {
+        let r = decoding::greedy_decode(&base, src1, None).unwrap();
+        r[0].tokens.len()
+    });
+    drop(base);
+
+    for variant in ["mt_k8_both", "mt_k4_both", "mt_k10_both"] {
+        if !ctx.has_variant(variant) {
+            continue;
+        }
+        let model = ctx.model(variant).expect(variant);
+        b.case(&format!("blockwise/{variant}/exact/b8"), "tok", |
+| {
+            let r = decoding::blockwise_decode(&model, &srcs8, &BlockwiseConfig::default()).unwrap();
+            r.iter().map(|x| x.tokens.len()).sum()
+        });
+        b.case(&format!("blockwise/{variant}/exact/b1"), "tok", || {
+            let r = decoding::blockwise_decode(&model, src1, &BlockwiseConfig::default()).unwrap();
+            r[0].tokens.len()
+        });
+        b.case(&format!("blockwise/{variant}/top2/b8"), "tok", || {
+            let cfg = BlockwiseConfig { criterion: Criterion::TopK(2), ..Default::default() };
+            let r = decoding::blockwise_decode(&model, &srcs8, &cfg).unwrap();
+            r.iter().map(|x| x.tokens.len()).sum()
+        });
+    }
+
+    println!("\n== summary ==\n{}", b.report());
+}

@@ -1,0 +1,97 @@
+//! Runtime-layer benchmarks: the cost anatomy of one coordinator
+//! iteration — tensor upload, model invocation (encode / decode per
+//! bucket), output download — plus weight-upload and compile costs.
+//! This is the profile that drives the L3 perf pass (EXPERIMENTS.md §Perf).
+
+use blockdecode::bench::Bench;
+use blockdecode::harness::Ctx;
+use blockdecode::util::tensor::{TensorF32, TensorI32};
+
+fn main() {
+    blockdecode::util::logging::init();
+    let ctx = match Ctx::load("artifacts") {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("runtime_bench skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    let mut b = Bench::new(8);
+
+    // pick the largest-k MT variant available (sweep may be partial)
+    let variant_name = ctx
+        .manifest
+        .task_variants("mt")
+        .iter()
+        .rev()
+        .map(|v| v.name.clone())
+        .next()
+        .expect("an mt variant");
+    eprintln!("runtime_bench variant: {variant_name}");
+
+    // weight bundle load + upload (model cold start)
+    let spec = ctx.manifest.variant(&variant_name).expect("variant").clone();
+    b.case("weights/load_bundle", "B", || {
+        let w = blockdecode::runtime::WeightBundle::load(&spec.weights).unwrap();
+        w.entries.iter().map(|e| e.data.len()).sum()
+    });
+    let bundle = blockdecode::runtime::WeightBundle::load(&spec.weights).unwrap();
+    b.case("weights/upload_device", "B", || {
+        let w = ctx.rt.upload_weights(&bundle).unwrap();
+        std::hint::black_box(&w);
+        bundle.entries.iter().map(|e| e.data.len()).sum()
+    });
+
+    let model = ctx.model(&variant_name).expect("model");
+    let s = model.max_src();
+    let t = model.max_tgt();
+    let d = model.spec.config.d_model;
+
+    // host->device upload of the per-iteration tensors
+    let src8 = TensorI32::zeros(&[8, s]);
+    let mem8 = TensorF32::zeros(&[8, s, d]);
+    let tgt8 = TensorI32::zeros(&[8, t]);
+    b.case("upload/src_i32[8,S]", "B", || {
+        let buf = ctx.rt.upload_i32(&src8).unwrap();
+        std::hint::black_box(&buf);
+        src8.data.len() * 4
+    });
+    b.case("upload/memory_f32[8,S,D]", "B", || {
+        let buf = ctx.rt.upload_f32(&mem8).unwrap();
+        std::hint::black_box(&buf);
+        mem8.data.len() * 4
+    });
+
+    // model invocations per bucket
+    let mut src_real = TensorI32::zeros(&[8, s]);
+    for r in 0..8 {
+        // tiny synthetic source: a few ids + EOS
+        let row = src_real.row_mut(r);
+        row[0] = 4;
+        row[1] = 25;
+        row[2] = 2;
+    }
+    b.case("invoke/encode_b8", "row", || {
+        let m = model.encode(&src_real).unwrap();
+        std::hint::black_box(&m);
+        8
+    });
+    let memory = model.encode(&src_real).unwrap();
+    b.case("invoke/decode_b8 (scores+download)", "pos", || {
+        let sc = model.decode_topk(&memory, &src_real, &tgt8).unwrap();
+        std::hint::black_box(&sc);
+        8 * t
+    });
+
+    let src1 = TensorI32::from_vec(&[1, s], src_real.row(0).to_vec());
+    let tgt1 = TensorI32::zeros(&[1, t]);
+    let mem1 = model.encode(&src1).unwrap();
+    b.case("invoke/decode_b1", "pos", || {
+        let sc = model.decode_topk(&mem1, &src1, &tgt1).unwrap();
+        std::hint::black_box(&sc);
+        t
+    });
+
+    println!("\n== summary ==\n{}", b.report());
+}

@@ -1,0 +1,250 @@
+//! Request types and the dynamic batching queue.
+//!
+//! The queue implements the classic dynamic-batching policy: the engine
+//! asks for up to `max_batch` requests and the queue returns as soon as
+//! either (a) that many are waiting, or (b) `max_wait` has elapsed since
+//! the oldest waiting request — trading a little latency for batch fill.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::decoding::criteria::Criterion;
+use crate::decoding::state::BlockStats;
+
+/// A decode request entering the coordinator.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub src: Vec<i32>,
+    /// per-request criterion override (server protocol allows it)
+    pub criterion: Option<Criterion>,
+    pub arrived: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub stats: BlockStats,
+    pub queued: Duration,
+    pub e2e: Duration,
+    pub error: Option<String>,
+}
+
+/// Thread-safe dynamic batching queue.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    q: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct QueueInner {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue; returns false if the queue is closed.
+    pub fn push(&self, r: Request) -> bool {
+        let mut q = self.q.lock().unwrap();
+        if q.closed {
+            return false;
+        }
+        q.items.push_back(r);
+        self.cv.notify_all();
+        true
+    }
+
+    /// No more producers: wake all consumers.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dynamic batch: waits up to `max_wait` for a first request, then
+    /// keeps gathering until `max_batch` or the same deadline — trading a
+    /// bounded amount of latency for batch fill.
+    ///
+    /// Returns `None` when closed and drained; `Some(empty)` on timeout
+    /// (callers poll their stop conditions between calls).
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<Request>> {
+        assert!(max_batch >= 1);
+        let deadline = Instant::now() + max_wait;
+        let mut q = self.q.lock().unwrap();
+        // bounded wait for the first item
+        loop {
+            if !q.items.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(vec![]);
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(q, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            q = guard;
+        }
+        let mut out = Vec::with_capacity(max_batch);
+        loop {
+            while out.len() < max_batch {
+                match q.items.pop_front() {
+                    Some(r) => out.push(r),
+                    None => break,
+                }
+            }
+            if out.len() >= max_batch || q.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(q, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            q = guard;
+            if timeout.timed_out() && q.items.is_empty() {
+                break;
+            }
+        }
+        Some(out)
+    }
+
+    /// Non-blocking drain of up to `n` requests (engine refill path).
+    pub fn try_pop(&self, n: usize) -> Vec<Request> {
+        let mut q = self.q.lock().unwrap();
+        let take = n.min(q.items.len());
+        q.items.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Request { id, src: vec![4, 2], criterion: None, arrived: Instant::now(), respond: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn pop_batch_gets_waiting_items() {
+        let q = RequestQueue::new();
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.push(r1);
+        q.push(r2);
+        let batch = q.pop_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q = RequestQueue::new();
+        let mut keep = vec![];
+        for i in 0..5 {
+            let (r, k) = req(i);
+            q.push(r);
+            keep.push(k);
+        }
+        let batch = q.pop_batch(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_batch_blocks_until_push() {
+        let q = Arc::new(RequestQueue::new());
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop_batch(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(30));
+        let (r, _k) = req(9);
+        q.push(r);
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got[0].id, 9);
+    }
+
+    #[test]
+    fn pop_batch_times_out_empty() {
+        let q = RequestQueue::new();
+        let t0 = Instant::now();
+        let got = q.pop_batch(4, Duration::from_millis(20)).unwrap();
+        assert!(got.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_unblocks_and_returns_none() {
+        let q = Arc::new(RequestQueue::new());
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop_batch(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let q = RequestQueue::new();
+        q.close();
+        let (r, _k) = req(1);
+        assert!(!q.push(r));
+    }
+
+    #[test]
+    fn batch_waits_for_fill_up_to_deadline() {
+        let q = Arc::new(RequestQueue::new());
+        let (r, _k) = req(1);
+        q.push(r);
+        let q2 = q.clone();
+        let h = thread::spawn(move || {
+            let t0 = Instant::now();
+            let b = q2.pop_batch(2, Duration::from_millis(80)).unwrap();
+            (b.len(), t0.elapsed())
+        });
+        thread::sleep(Duration::from_millis(25));
+        let (r2, _k2) = req(2);
+        q.push(r2);
+        let (n, _el) = h.join().unwrap();
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn try_pop_nonblocking() {
+        let q = RequestQueue::new();
+        assert!(q.try_pop(4).is_empty());
+        let (r, _k) = req(1);
+        q.push(r);
+        assert_eq!(q.try_pop(4).len(), 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Micro-benchmark framework (no `criterion` offline): warmup, timed
+//! iterations with robust statistics, and aligned text reports. Used by
+//! the `cargo bench` targets under `rust/benches/` (harness = false).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, std_dev};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub std_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub min_us: f64,
+    /// optional derived throughput (unit/s), e.g. tokens/s
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(10),
+            results: vec![],
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(budget_secs: u64) -> Self {
+        Bench { budget: Duration::from_secs(budget_secs), ..Default::default() }
+    }
+
+    /// Run one case; `f` returns a work unit count for throughput (0 = none).
+    pub fn case<F: FnMut() -> usize>(&mut self, name: &str, unit: &'static str, mut f: F) {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut times = Vec::new();
+        let mut units = 0usize;
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (times.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            units += f();
+            times.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let total_s: f64 = times.iter().sum::<f64>() / 1e6;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_us: mean,
+            std_us: std_dev(&times),
+            p50_us: percentile(&times, 0.5),
+            p90_us: percentile(&times, 0.9),
+            min_us: times.iter().copied().fold(f64::INFINITY, f64::min),
+            throughput: if units > 0 {
+                Some((units as f64 / total_s, unit))
+            } else {
+                None
+            },
+        };
+        println!("{}", render_line(&m));
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Full report (also suitable for bench_output.txt).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for m in &self.results {
+            out.push_str(&render_line(m));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn render_line(m: &Measurement) -> String {
+    let tput = match m.throughput {
+        Some((v, u)) => format!("  {v:>10.1} {u}/s"),
+        None => String::new(),
+    };
+    format!(
+        "{:<44} {:>7} iters  mean {:>10.1}us  p50 {:>10.1}us  p90 {:>10.1}us  min {:>10.1}us{}",
+        m.name, m.iters, m.mean_us, m.p50_us, m.p90_us, m.min_us, tput
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let mut b = Bench { budget: Duration::from_millis(200), ..Default::default() };
+        b.case("spin", "op", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            10_000
+        });
+        let m = &b.results()[0];
+        assert!(m.iters >= 5);
+        assert!(m.mean_us > 0.0);
+        assert!(m.throughput.unwrap().0 > 0.0);
+        assert!(m.min_us <= m.p50_us && m.p50_us <= m.p90_us.max(m.p50_us));
+    }
+
+    #[test]
+    fn report_contains_cases() {
+        let mut b = Bench { budget: Duration::from_millis(50), ..Default::default() };
+        b.case("a", "op", || 1);
+        b.case("b", "op", || 1);
+        let r = b.report();
+        assert!(r.contains("a") && r.contains("b"));
+    }
+}

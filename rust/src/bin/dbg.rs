@@ -1,0 +1,12 @@
+use blockdecode::testing::sim::*;
+use blockdecode::decoding::Criterion;
+fn main() {
+    let m = SimModel::new(60, 5, 1.0, 40, 12);
+    let src = vec![5, 2];
+    let (out, inv, blocks) = sim_blockwise(&m, &src, Criterion::Exact, 25);
+    println!("out.len={} inv={} blocks={:?}", out.len(), inv, blocks);
+    // check agreement directly
+    let g = m.greedy(&src, 10);
+    println!("greedy: {:?}", g);
+    for h in 0..5 { println!("head {} at []: {}", h, m.head_next(&src, &[], h)); }
+}

@@ -1,0 +1,137 @@
+//! Batch blockwise parallel decoder (§3 + §4 combined-model loop).
+//!
+//! Drives a batch of `BlockState`s against a `ScoringModel`: every
+//! iteration is **one** model invocation that simultaneously (a) verifies
+//! each row's pending proposals against head 0 and (b) produces the next
+//! block of proposals at the new frontier (§4's merged substeps). Rows
+//! finish independently; the loop runs until all rows are done.
+//!
+//! With `Criterion::Exact` the output is guaranteed identical to greedy
+//! decoding with head 0 — the paper's core invariant, enforced by the
+//! integration tests in `rust/tests/decode_equivalence.rs`.
+
+use anyhow::Result;
+
+use crate::model::ScoringModel;
+use crate::tokenizer::PAD;
+use crate::util::tensor::TensorI32;
+
+use super::criteria::Criterion;
+use super::state::{BlockState, BlockStats, DecodeTrace};
+
+/// Decoder configuration.
+#[derive(Debug, Clone)]
+pub struct BlockwiseConfig {
+    pub criterion: Criterion,
+    /// §5.3 minimum accepted block size (1 = off)
+    pub min_block: usize,
+    /// cap on generated tokens (defaults to model max_tgt - 1)
+    pub max_len: Option<usize>,
+    /// effective block size; defaults to the model's k
+    pub k: Option<usize>,
+    pub record_trace: bool,
+}
+
+impl Default for BlockwiseConfig {
+    fn default() -> Self {
+        BlockwiseConfig {
+            criterion: Criterion::Exact,
+            min_block: 1,
+            max_len: None,
+            k: None,
+            record_trace: false,
+        }
+    }
+}
+
+/// One decoded sequence plus its speed accounting.
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub tokens: Vec<i32>,
+    pub stats: BlockStats,
+    pub trace: Option<DecodeTrace>,
+}
+
+/// Decode a batch of sources. `srcs` may have any length ≤ the model's
+/// bucket capacity; rows are padded into the chosen bucket.
+pub fn decode_batch(
+    model: &ScoringModel,
+    srcs: &[Vec<i32>],
+    cfg: &BlockwiseConfig,
+) -> Result<Vec<DecodeResult>> {
+    assert!(!srcs.is_empty());
+    let bucket = model.pick_bucket(srcs.len());
+    anyhow::ensure!(
+        srcs.len() <= bucket,
+        "batch of {} exceeds largest bucket {bucket}",
+        srcs.len()
+    );
+    let max_len = cfg.max_len.unwrap_or(model.max_tgt() - 1).min(model.max_tgt() - 1);
+    let k = cfg.k.unwrap_or_else(|| model.k()).min(model.k());
+
+    // source batch [bucket, S]
+    let s_len = model.max_src();
+    let mut src = TensorI32::zeros(&[bucket, s_len]);
+    for (b, s) in srcs.iter().enumerate() {
+        anyhow::ensure!(s.len() <= s_len, "source row {b} too long ({} > {s_len})", s.len());
+        src.row_mut(b)[..s.len()].copy_from_slice(s);
+    }
+
+    // encode once per batch
+    let memory = model.encode(&src)?;
+
+    let mut states: Vec<BlockState> = (0..srcs.len())
+        .map(|_| {
+            let mut st = BlockState::new(k, cfg.criterion, max_len).with_min_block(cfg.min_block.max(1).min(k));
+            if cfg.record_trace {
+                st = st.with_trace();
+            }
+            st
+        })
+        .collect();
+
+    let t_len = model.max_tgt();
+    let mut tgt_in = TensorI32::zeros(&[bucket, t_len]);
+    // bootstrap rows so even the first invocation is well-formed
+    loop {
+        let mut any_active = false;
+        for (b, st) in states.iter().enumerate() {
+            if !st.done {
+                any_active = true;
+            }
+            st.build_row(tgt_in.row_mut(b));
+        }
+        // padding rows of the bucket stay PAD (inert)
+        for b in states.len()..bucket {
+            tgt_in.row_mut(b).fill(PAD);
+        }
+        if !any_active {
+            break;
+        }
+        let scores = model.decode_topk(&memory, &src, &tgt_in)?;
+        for (b, st) in states.iter_mut().enumerate() {
+            st.absorb(&scores, b);
+        }
+    }
+
+    Ok(states
+        .into_iter()
+        .map(|st| DecodeResult {
+            tokens: st.accepted.clone(),
+            trace: st.trace.clone(),
+            stats: st.stats,
+        })
+        .collect())
+}
+
+/// Aggregate mean accepted block size over results (the paper's k̂ metric:
+/// total tokens / total accept substeps).
+pub fn mean_accepted_block(results: &[DecodeResult]) -> f64 {
+    let tokens: usize = results.iter().map(|r| r.stats.accepted_blocks.iter().sum::<usize>()).sum();
+    let steps: usize = results.iter().map(|r| r.stats.accepted_blocks.len()).sum();
+    if steps == 0 {
+        0.0
+    } else {
+        tokens as f64 / steps as f64
+    }
+}

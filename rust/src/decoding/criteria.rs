@@ -1,0 +1,125 @@
+//! Acceptance criteria for the **verify** substep (§3, §5).
+//!
+//! * `Exact` — the proposed token must equal p1's argmax: guarantees the
+//!   blockwise output is identical to greedy decoding (§3).
+//! * `TopK(k)` — the proposal may lie anywhere in p1's top-k (§5.1).
+//! * `Distance(eps)` — for ordinal vocabularies (image intensities): accept
+//!   if |intensity(proposal) − intensity(argmax)| ≤ eps (§5.2, the paper
+//!   uses ε = 2 for super-resolution).
+
+use crate::model::BlockScores;
+use crate::tokenizer;
+
+/// Verification criterion (§5). All criteria accept p1's exact argmax.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    Exact,
+    TopK(usize),
+    Distance(i32),
+}
+
+impl Criterion {
+    /// Would p1 (head 0) at decoder position `pos` of row `b` accept
+    /// `proposed`?
+    pub fn accepts(&self, scores: &BlockScores, b: usize, pos: usize, proposed: i32) -> bool {
+        match *self {
+            Criterion::Exact => scores.top1(b, pos, 0) == proposed,
+            Criterion::TopK(k) => scores.in_topk(b, pos, 0, proposed, k),
+            Criterion::Distance(eps) => {
+                let best = scores.top1(b, pos, 0);
+                if best == proposed {
+                    return true; // covers specials (EOS) too
+                }
+                // distance is defined on the intensity sub-vocabulary only
+                if !tokenizer::is_intensity(best) || !tokenizer::is_intensity(proposed) {
+                    return false;
+                }
+                (tokenizer::token_to_intensity(best) - tokenizer::token_to_intensity(proposed))
+                    .abs()
+                    <= eps
+            }
+        }
+    }
+
+    /// Human-readable label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Criterion::Exact => "exact".into(),
+            Criterion::TopK(k) => format!("top{k}"),
+            Criterion::Distance(e) => format!("dist{e}"),
+        }
+    }
+
+    /// Partial order used by the property tests: `self` is at least as
+    /// permissive as `other` if everything `other` accepts, `self` accepts.
+    pub fn relaxes(&self, other: &Criterion) -> bool {
+        match (self, other) {
+            (Criterion::Exact, Criterion::Exact) => true,
+            (Criterion::TopK(a), Criterion::Exact) => *a >= 1,
+            (Criterion::TopK(a), Criterion::TopK(b)) => a >= b,
+            (Criterion::Distance(a), Criterion::Exact) => *a >= 0,
+            (Criterion::Distance(a), Criterion::Distance(b)) => a >= b,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::BlockScores;
+    use crate::util::tensor::{TensorF32, TensorI32};
+
+    /// scores with a single (b=0, pos, head=0) row of given top ids
+    fn fake_scores(top_ids: &[i32]) -> BlockScores {
+        let t = top_ids.len();
+        BlockScores {
+            topv: TensorF32::from_vec(&[1, 1, 1, t], (0..t).map(|i| -(i as f32)).collect()),
+            topi: TensorI32::from_vec(&[1, 1, 1, t], top_ids.to_vec()),
+            k: 1,
+            topt: t,
+        }
+    }
+
+    #[test]
+    fn exact_only_argmax() {
+        let s = fake_scores(&[7, 9, 11]);
+        assert!(Criterion::Exact.accepts(&s, 0, 0, 7));
+        assert!(!Criterion::Exact.accepts(&s, 0, 0, 9));
+    }
+
+    #[test]
+    fn topk_widens() {
+        let s = fake_scores(&[7, 9, 11, 13]);
+        assert!(Criterion::TopK(2).accepts(&s, 0, 0, 9));
+        assert!(!Criterion::TopK(2).accepts(&s, 0, 0, 11));
+        assert!(Criterion::TopK(3).accepts(&s, 0, 0, 11));
+    }
+
+    #[test]
+    fn distance_on_intensities() {
+        use crate::tokenizer::intensity_to_token as it;
+        let s = fake_scores(&[it(100), it(90), it(80)]);
+        assert!(Criterion::Distance(2).accepts(&s, 0, 0, it(100)));
+        assert!(Criterion::Distance(2).accepts(&s, 0, 0, it(102)));
+        assert!(Criterion::Distance(2).accepts(&s, 0, 0, it(98)));
+        assert!(!Criterion::Distance(2).accepts(&s, 0, 0, it(103)));
+    }
+
+    #[test]
+    fn distance_rejects_special_mismatch() {
+        // argmax EOS, proposal an intensity: distance must not apply
+        let s = fake_scores(&[crate::tokenizer::EOS]);
+        assert!(!Criterion::Distance(255).accepts(&s, 0, 0, crate::tokenizer::intensity_to_token(0)));
+        assert!(Criterion::Distance(0).accepts(&s, 0, 0, crate::tokenizer::EOS));
+    }
+
+    #[test]
+    fn relaxes_partial_order() {
+        assert!(Criterion::TopK(3).relaxes(&Criterion::TopK(2)));
+        assert!(Criterion::TopK(2).relaxes(&Criterion::Exact));
+        assert!(Criterion::Distance(2).relaxes(&Criterion::Exact));
+        assert!(!Criterion::TopK(1).relaxes(&Criterion::TopK(2)));
+        assert!(!Criterion::Distance(2).relaxes(&Criterion::TopK(2)));
+    }
+}

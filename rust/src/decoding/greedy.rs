@@ -1,0 +1,77 @@
+//! Greedy baseline decoder (§2): one token per model invocation, using
+//! head 0 of the combined model. This is the reference the blockwise
+//! decoder must match exactly under `Criterion::Exact`, and the baseline
+//! every speedup in Tables 1/2/4 and Figure 4 is measured against.
+
+use anyhow::Result;
+
+use crate::model::ScoringModel;
+use crate::tokenizer::{BOS, EOS, PAD};
+use crate::util::tensor::TensorI32;
+
+use super::blockwise::DecodeResult;
+use super::state::BlockStats;
+
+/// Greedy-decode a batch of sources (one token per invocation).
+pub fn decode_batch(
+    model: &ScoringModel,
+    srcs: &[Vec<i32>],
+    max_len: Option<usize>,
+) -> Result<Vec<DecodeResult>> {
+    assert!(!srcs.is_empty());
+    let bucket = model.pick_bucket(srcs.len());
+    anyhow::ensure!(srcs.len() <= bucket, "batch exceeds bucket");
+    let max_len = max_len.unwrap_or(model.max_tgt() - 1).min(model.max_tgt() - 1);
+
+    let s_len = model.max_src();
+    let mut src = TensorI32::zeros(&[bucket, s_len]);
+    for (b, s) in srcs.iter().enumerate() {
+        src.row_mut(b)[..s.len()].copy_from_slice(s);
+    }
+    let memory = model.encode(&src)?;
+
+    let t_len = model.max_tgt();
+    let mut tgt_in = TensorI32::zeros(&[bucket, t_len]);
+    for b in 0..bucket {
+        tgt_in.row_mut(b).fill(PAD);
+        tgt_in.set(&[b, 0], BOS);
+    }
+
+    let n = srcs.len();
+    let mut out: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let mut done = vec![false; n];
+    let mut invocations = vec![0usize; n];
+
+    for pos in 0..max_len {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let scores = model.decode_topk(&memory, &src, &tgt_in)?;
+        for b in 0..n {
+            if done[b] {
+                continue;
+            }
+            invocations[b] += 1;
+            let tok = scores.top1(b, pos, 0);
+            out[b].push(tok);
+            if tok == EOS || out[b].len() >= max_len {
+                done[b] = true;
+            } else {
+                tgt_in.set(&[b, pos + 1], tok);
+            }
+        }
+    }
+
+    Ok(out
+        .into_iter()
+        .zip(invocations)
+        .map(|(tokens, inv)| {
+            let blocks = vec![1usize; tokens.len()];
+            DecodeResult {
+                tokens,
+                stats: BlockStats { accepted_blocks: blocks, invocations: inv },
+                trace: None,
+            }
+        })
+        .collect())
+}

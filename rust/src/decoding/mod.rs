@@ -1,0 +1,23 @@
+//! The paper's decoding algorithms (L3 core contribution).
+//!
+//! * [`blockwise`] — blockwise parallel decoding: predict / verify / accept
+//!   with the §4 combined-model merge (one invocation per iteration).
+//! * [`criteria`] — §5 acceptance criteria (exact, top-k, distance, plus
+//!   the §5.3 minimum-block floor in [`state::BlockState`]).
+//! * [`greedy`] — the baseline every speedup is measured against.
+//! * [`beam`] — beam-search reference (Table 4 rows).
+//! * [`nat`] — simplified NAT / iterative-refinement comparators.
+//! * [`state`] — the per-sequence state machine shared by the batch
+//!   decoders and the continuous-batching engine.
+
+pub mod beam;
+pub mod blockwise;
+pub mod criteria;
+pub mod greedy;
+pub mod nat;
+pub mod state;
+
+pub use blockwise::{decode_batch as blockwise_decode, mean_accepted_block, BlockwiseConfig, DecodeResult};
+pub use criteria::Criterion;
+pub use greedy::decode_batch as greedy_decode;
+pub use state::{BlockState, BlockStats, DecodeTrace, TraceStep};

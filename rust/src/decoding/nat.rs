@@ -1,0 +1,66 @@
+//! Non-autoregressive (NAT) and iterative-refinement comparators for
+//! Table 4 (simplified stand-ins for Gu et al. 2018 / Lee et al. 2018 —
+//! see DESIGN.md §1 for the substitution argument).
+//!
+//! * NAT: one parallel shot over an all-BOS canvas; the model also
+//!   predicts the output length, which truncates the canvas.
+//! * Iterative refinement: feed the previous output back as the canvas
+//!   `i_dec` times; each pass is one model invocation.
+
+use anyhow::Result;
+
+use crate::model::NatModel;
+use crate::tokenizer::{BOS, EOS, PAD};
+use crate::util::tensor::TensorI32;
+
+/// Decode a batch with `i_dec` refinement passes (0 = pure NAT one-shot).
+/// Returns (token rows, invocations per row).
+pub fn decode_batch(
+    model: &NatModel,
+    srcs: &[Vec<i32>],
+    i_dec: usize,
+) -> Result<Vec<(Vec<i32>, usize)>> {
+    assert!(!srcs.is_empty());
+    let b = srcs.len();
+    let s_len = model.spec.config.max_src;
+    let t_len = model.max_tgt();
+    let mut src = TensorI32::zeros(&[b, s_len]);
+    for (i, s) in srcs.iter().enumerate() {
+        src.row_mut(i)[..s.len()].copy_from_slice(s);
+    }
+
+    // shot 1: all-BOS canvas
+    let mut canvas = TensorI32::zeros(&[b, t_len]);
+    canvas.data.fill(BOS);
+    let (mut toks, lens) = model.decode_shot(&src, &canvas)?;
+    let mut invocations = 1usize;
+
+    // refinement passes: previous output becomes the canvas
+    for _ in 0..i_dec {
+        let mut c = TensorI32::zeros(&[b, t_len]);
+        for i in 0..b {
+            let row = c.row_mut(i);
+            for t in 0..t_len {
+                let tok = toks.get(&[i, t]);
+                row[t] = if tok == PAD { BOS } else { tok };
+            }
+        }
+        let (t2, _) = model.decode_shot(&src, &c)?;
+        toks = t2;
+        invocations += 1;
+    }
+
+    // truncate to predicted length (and at any emitted EOS)
+    let mut out = Vec::with_capacity(b);
+    for i in 0..b {
+        let len = (lens.get(&[i]) as usize).clamp(1, t_len - 1);
+        let mut row: Vec<i32> = (0..len).map(|t| toks.get(&[i, t])).collect();
+        if let Some(p) = row.iter().position(|&t| t == EOS) {
+            row.truncate(p + 1);
+        } else {
+            row.push(EOS);
+        }
+        out.push((row, invocations));
+    }
+    Ok(out)
+}

@@ -1,0 +1,373 @@
+//! Per-sequence state machine for blockwise parallel decoding.
+//!
+//! `BlockState` holds one request's hypothesis through the §3/§4 loop:
+//!
+//! 1. it contributes a decoder-input row `[BOS, accepted…, proposals…]`,
+//! 2. the engine runs one combined scoring/proposal invocation,
+//! 3. `absorb` verifies the proposals against head-0 (the criterion),
+//!    extends the hypothesis by k̂ ≥ 1 tokens, and — the §4 merge — pulls
+//!    the *next* block of proposals from the same invocation's output at
+//!    the new frontier.
+//!
+//! Both the standalone batch decoders (`decoding::blockwise`) and the
+//! continuous-batching engine (`scheduler::engine`) drive this type, so
+//! the algorithm is tested once and served everywhere.
+
+use crate::model::BlockScores;
+use crate::tokenizer::{BOS, EOS, PAD};
+
+use super::criteria::Criterion;
+
+/// Outcome counters for one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct BlockStats {
+    /// k̂ of every accept substep
+    pub accepted_blocks: Vec<usize>,
+    /// model invocations consumed (the +1 predict-only call included)
+    pub invocations: usize,
+}
+
+impl BlockStats {
+    pub fn mean_block(&self) -> f64 {
+        if self.accepted_blocks.is_empty() {
+            return 0.0;
+        }
+        self.accepted_blocks.iter().sum::<usize>() as f64 / self.accepted_blocks.len() as f64
+    }
+}
+
+/// Step-by-step trace (§7.4 example rendering).
+#[derive(Debug, Clone, Default)]
+pub struct DecodeTrace {
+    pub steps: Vec<TraceStep>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    pub proposed: Vec<i32>,
+    pub accepted: Vec<i32>,
+}
+
+/// One sequence's decoding state.
+#[derive(Debug, Clone)]
+pub struct BlockState {
+    /// proposal window size (block size k; may be < model k near the cap)
+    pub k: usize,
+    /// acceptance criterion for the verify substep
+    pub criterion: Criterion,
+    /// §5.3 minimum block size (1 = paper default behaviour)
+    pub min_block: usize,
+    /// hard output-length cap (tokens, excluding BOS)
+    pub max_len: usize,
+    /// accepted hypothesis r_1..r_j (includes EOS when finished)
+    pub accepted: Vec<i32>,
+    /// current block proposals p_1..p_k (empty before the first invocation)
+    pub proposals: Vec<i32>,
+    pub done: bool,
+    pub stats: BlockStats,
+    pub trace: Option<DecodeTrace>,
+}
+
+impl BlockState {
+    pub fn new(k: usize, criterion: Criterion, max_len: usize) -> Self {
+        assert!(k >= 1);
+        BlockState {
+            k,
+            criterion,
+            min_block: 1,
+            max_len,
+            accepted: Vec::new(),
+            proposals: Vec::new(),
+            done: false,
+            stats: BlockStats::default(),
+            trace: None,
+        }
+    }
+
+    pub fn with_min_block(mut self, l: usize) -> Self {
+        assert!(l >= 1 && l <= self.k);
+        self.min_block = l;
+        self
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(DecodeTrace::default());
+        self
+    }
+
+    /// Frontier j = number of accepted tokens.
+    pub fn frontier(&self) -> usize {
+        self.accepted.len()
+    }
+
+    /// How many proposal slots fit before the length cap. The decoder input
+    /// holds BOS + max_len tokens; proposal p_s sits at index j+s.
+    pub fn window(&self) -> usize {
+        self.k.min(self.max_len.saturating_sub(self.frontier()))
+    }
+
+    /// Write this sequence's decoder-input row `[BOS, accepted…,
+    /// proposals…, PAD…]` into `row` (length = 1 + max_len ≤ row.len()).
+    pub fn build_row(&self, row: &mut [i32]) {
+        row.fill(PAD);
+        row[0] = BOS;
+        for (i, &t) in self.accepted.iter().enumerate() {
+            row[1 + i] = t;
+        }
+        let j = self.frontier();
+        for (s, &p) in self.proposals.iter().enumerate() {
+            if 1 + j + s < row.len() {
+                row[1 + j + s] = p;
+            }
+        }
+    }
+
+    /// Verify + accept + re-predict from one invocation's scores.
+    ///
+    /// `b` is this sequence's row in the batch. Returns k̂ (0 only for the
+    /// bootstrap invocation that had no proposals yet).
+    pub fn absorb(&mut self, scores: &BlockScores, b: usize) -> usize {
+        if self.done {
+            return 0;
+        }
+        self.stats.invocations += 1;
+        let j = self.frontier();
+
+        let mut k_hat = 0;
+        if !self.proposals.is_empty() {
+            // --- verify (§3): longest prefix matching head-0 under the
+            // criterion; p_s's scorer row is decoder position j+s-1.
+            let w = self.proposals.len();
+            for s in 1..=w {
+                let pos = j + s - 1;
+                let tok = self.proposals[s - 1];
+                let forced = s <= self.min_block; // §5.3 floor
+                if forced || self.criterion.accepts(scores, b, pos, tok) {
+                    k_hat = s;
+                } else {
+                    break;
+                }
+            }
+            debug_assert!(k_hat >= 1, "p_1 must always be accepted");
+            k_hat = k_hat.max(1);
+
+            // --- accept: extend hypothesis, truncating at EOS
+            let mut block = Vec::with_capacity(k_hat);
+            for s in 0..k_hat {
+                let tok = self.proposals[s];
+                block.push(tok);
+                if tok == EOS {
+                    break;
+                }
+            }
+            if let Some(tr) = self.trace.as_mut() {
+                tr.steps.push(TraceStep {
+                    proposed: self.proposals.clone(),
+                    accepted: block.clone(),
+                });
+            }
+            self.stats.accepted_blocks.push(block.len());
+            self.accepted.extend_from_slice(&block);
+            if *self.accepted.last().unwrap() == EOS || self.accepted.len() >= self.max_len {
+                self.done = true;
+                self.proposals.clear();
+                return block.len();
+            }
+            k_hat = block.len();
+        }
+
+        // --- predict (§4 merge): the same invocation scored every head at
+        // the *new* frontier j', because position j' held an accepted token.
+        let j2 = self.frontier();
+        let w2 = self.k.min(self.max_len - j2);
+        self.proposals.clear();
+        for h in 0..w2.min(scores.k) {
+            self.proposals.push(scores.top1(b, j2, h));
+        }
+        k_hat
+    }
+
+    /// Output tokens (EOS-terminated if the model emitted one).
+    pub fn output(&self) -> &[i32] {
+        &self.accepted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::{TensorF32, TensorI32};
+
+    /// Build BlockScores where head h at position t predicts
+    /// `pred[t][h]` (top-1) and the runner-up is always token 99.
+    fn scores_from(pred: &[Vec<i32>], k: usize) -> BlockScores {
+        let t = pred.len();
+        let topt = 2;
+        let mut topi = TensorI32::zeros(&[1, t, k, topt]);
+        let mut topv = TensorF32::zeros(&[1, t, k, topt]);
+        for (ti, row) in pred.iter().enumerate() {
+            for h in 0..k {
+                topi.set(&[0, ti, h, 0], row[h]);
+                topi.set(&[0, ti, h, 1], 99);
+                topv.set(&[0, ti, h, 0], 1.0);
+                topv.set(&[0, ti, h, 1], 0.5);
+            }
+        }
+        BlockScores { topv, topi, k, topt }
+    }
+
+    #[test]
+    fn bootstrap_produces_proposals() {
+        let mut st = BlockState::new(2, Criterion::Exact, 8);
+        // head0@0 -> 10, head1@0 -> 11
+        let sc = scores_from(&vec![vec![10, 11]; 9], 2);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 0);
+        assert_eq!(st.proposals, vec![10, 11]);
+        assert_eq!(st.frontier(), 0);
+    }
+
+    #[test]
+    fn full_acceptance_advances_by_k() {
+        let mut st = BlockState::new(2, Criterion::Exact, 8);
+        st.proposals = vec![10, 11];
+        // verify rows: head0@0=10 (accept p1), head0@1=11 (accept p2);
+        // new proposals at frontier 2: head0@2=12, head1@2=13
+        let pred = vec![
+            vec![10, 11],
+            vec![11, 12],
+            vec![12, 13],
+            vec![13, 14],
+            vec![14, 15],
+            vec![15, 16],
+            vec![16, 17],
+            vec![17, 18],
+            vec![18, 19],
+        ];
+        let sc = scores_from(&pred, 2);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 2);
+        assert_eq!(st.accepted, vec![10, 11]);
+        assert_eq!(st.proposals, vec![12, 13]);
+    }
+
+    #[test]
+    fn rejection_backs_off_to_verified_prefix() {
+        let mut st = BlockState::new(3, Criterion::Exact, 16);
+        st.proposals = vec![10, 11, 99]; // p3 disagrees with head0@2=12
+        let pred = vec![
+            vec![10, 0, 0],
+            vec![11, 0, 0],
+            vec![12, 0, 0], // head0 wants 12, proposal said 99 -> reject
+            vec![20, 21, 22],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+        ];
+        let sc = scores_from(&pred, 3);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 2);
+        assert_eq!(st.accepted, vec![10, 11]);
+        // §4 merge: next proposals come from the new frontier position 2
+        assert_eq!(st.proposals, vec![12, 0, 0]);
+    }
+
+    #[test]
+    fn p1_always_accepted() {
+        let mut st = BlockState::new(2, Criterion::Exact, 8);
+        st.proposals = vec![10, 11];
+        // even though head0@0 says 10, make p2 mismatch
+        let pred = vec![vec![10, 5]; 9];
+        let sc = scores_from(&pred, 2);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 1);
+        assert_eq!(st.accepted, vec![10]);
+    }
+
+    #[test]
+    fn eos_terminates_block() {
+        let mut st = BlockState::new(3, Criterion::Exact, 8);
+        st.proposals = vec![10, EOS, 12];
+        let pred = vec![vec![10, 0, 0], vec![EOS, 0, 0], vec![12, 0, 0], vec![0, 0, 0],
+                        vec![0,0,0], vec![0,0,0], vec![0,0,0], vec![0,0,0], vec![0,0,0]];
+        let sc = scores_from(&pred, 3);
+        st.absorb(&sc, 0);
+        assert!(st.done);
+        assert_eq!(st.accepted, vec![10, EOS]);
+        assert!(st.proposals.is_empty());
+    }
+
+    #[test]
+    fn length_cap_respected() {
+        let mut st = BlockState::new(4, Criterion::Exact, 3);
+        st.proposals = vec![10, 11, 12]; // window already clamped to 3
+        let pred = vec![vec![10, 11, 12, 13]; 4];
+        // heads all agree -> would accept 3; cap = 3 -> done
+        let sc = scores_from(
+            &vec![vec![10, 0, 0, 0], vec![11, 0, 0, 0], vec![12, 0, 0, 0], vec![13, 0, 0, 0]],
+            4,
+        );
+        let _ = pred;
+        st.absorb(&sc, 0);
+        assert!(st.done);
+        assert_eq!(st.accepted.len(), 3);
+    }
+
+    #[test]
+    fn min_block_forces_acceptance() {
+        let mut st = BlockState::new(3, Criterion::Exact, 16).with_min_block(2);
+        st.proposals = vec![10, 99, 98]; // p2 would be rejected
+        let pred = vec![
+            vec![10, 0, 0], vec![11, 0, 0], vec![12, 0, 0], vec![13, 0, 0],
+            vec![0,0,0], vec![0,0,0], vec![0,0,0], vec![0,0,0], vec![0,0,0],
+            vec![0,0,0], vec![0,0,0], vec![0,0,0], vec![0,0,0], vec![0,0,0],
+            vec![0,0,0], vec![0,0,0], vec![0,0,0],
+        ];
+        let sc = scores_from(&pred, 3);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 2);
+        assert_eq!(st.accepted, vec![10, 99]); // forced despite mismatch
+    }
+
+    #[test]
+    fn build_row_layout() {
+        let mut st = BlockState::new(2, Criterion::Exact, 6);
+        st.accepted = vec![7, 8];
+        st.proposals = vec![9, 10];
+        let mut row = vec![-1; 7];
+        st.build_row(&mut row);
+        assert_eq!(row, vec![BOS, 7, 8, 9, 10, PAD, PAD]);
+    }
+
+    #[test]
+    fn window_shrinks_near_cap() {
+        let mut st = BlockState::new(4, Criterion::Exact, 5);
+        st.accepted = vec![1, 2, 3];
+        assert_eq!(st.window(), 2);
+        st.accepted = vec![1, 2, 3, 4, 5];
+        assert_eq!(st.window(), 0);
+    }
+
+    #[test]
+    fn trace_records_steps() {
+        let mut st = BlockState::new(2, Criterion::Exact, 8).with_trace();
+        st.proposals = vec![10, 11];
+        let mut pred = vec![vec![10, 11], vec![11, 12]];
+        pred.extend(vec![vec![12, 13]; 7]);
+        let sc = scores_from(&pred, 2);
+        st.absorb(&sc, 0);
+        let tr = st.trace.as_ref().unwrap();
+        assert_eq!(tr.steps.len(), 1);
+        assert_eq!(tr.steps[0].accepted, vec![10, 11]);
+    }
+}

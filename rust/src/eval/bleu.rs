@@ -1,0 +1,123 @@
+//! Corpus BLEU-4 with brevity penalty (Papineni et al. 2002), the metric
+//! for the MT columns of Tables 1 and 4. Token-id based (the synthetic
+//! task has no detokenization ambiguity); EOS/PAD are stripped first.
+
+use std::collections::HashMap;
+
+use crate::tokenizer::{EOS, PAD};
+
+/// Strip specials for scoring.
+pub fn clean(tokens: &[i32]) -> Vec<i32> {
+    tokens.iter().copied().filter(|&t| t != EOS && t != PAD).collect()
+}
+
+fn ngram_counts(tokens: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU-4 (percent, 0..100).
+pub fn corpus_bleu(hyps: &[Vec<i32>], refs: &[Vec<i32>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+
+    for (h, r) in hyps.iter().zip(refs) {
+        let h = clean(h);
+        let r = clean(r);
+        hyp_len += h.len();
+        ref_len += r.len();
+        for n in 1..=4 {
+            let hc = ngram_counts(&h, n);
+            let rc = ngram_counts(&r, n);
+            for (gram, &c) in &hc {
+                let rcount = rc.get(gram).copied().unwrap_or(0);
+                match_n[n - 1] += c.min(rcount);
+            }
+            total_n[n - 1] += h.len().saturating_sub(n - 1);
+        }
+    }
+
+    // smoothed (add-epsilon on zero counts, standard for short corpora);
+    // n-gram orders with no hypothesis n-grams at all (corpus shorter than
+    // n) are skipped rather than zeroing the whole score
+    let mut logsum = 0.0;
+    let mut used = 0usize;
+    for n in 0..4 {
+        if total_n[n] == 0 {
+            continue;
+        }
+        let p = if match_n[n] == 0 {
+            1.0 / (2.0 * total_n[n] as f64)
+        } else {
+            match_n[n] as f64 / total_n[n] as f64
+        };
+        logsum += p.ln();
+        used += 1;
+    }
+    if used == 0 {
+        return 0.0;
+    }
+    logsum /= used as f64;
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * logsum.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let refs = vec![vec![5, 6, 7, 8, 9, 2]];
+        let hyps = refs.clone();
+        assert!((corpus_bleu(&hyps, &refs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_hyp_is_0() {
+        assert_eq!(corpus_bleu(&[vec![]], &[vec![5, 6, 7]]), 0.0);
+    }
+
+    #[test]
+    fn partial_match_between() {
+        let refs = vec![vec![5, 6, 7, 8, 9, 10, 11, 12]];
+        let hyps = vec![vec![5, 6, 7, 8, 99, 10, 11, 12]];
+        let b = corpus_bleu(&hyps, &refs);
+        assert!(b > 10.0 && b < 90.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        let refs = vec![vec![5, 6, 7, 8, 9, 10, 11, 12]];
+        let full = corpus_bleu(&vec![vec![5, 6, 7, 8, 9, 10, 11, 12]], &refs);
+        let short = corpus_bleu(&vec![vec![5, 6, 7, 8]], &refs);
+        assert!(short < full);
+    }
+
+    #[test]
+    fn specials_stripped() {
+        let refs = vec![vec![5, 6, 7, EOS]];
+        let hyps = vec![vec![5, 6, 7, EOS, PAD, PAD]];
+        assert!((corpus_bleu(&hyps, &refs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn order_matters() {
+        let refs = vec![vec![5, 6, 7, 8, 9, 10]];
+        let reordered = corpus_bleu(&vec![vec![10, 9, 8, 7, 6, 5]], &refs);
+        let correct = corpus_bleu(&vec![vec![5, 6, 7, 8, 9, 10]], &refs);
+        assert!(reordered < correct * 0.5);
+    }
+}

@@ -1,0 +1,107 @@
+//! Image metrics for the super-resolution task: PSNR against ground truth
+//! and the local statistics used by the Table 3 preference proxy.
+
+use crate::tokenizer::token_to_intensity;
+
+/// Convert a raster token row to intensities, padding/truncating to n.
+pub fn to_intensities(tokens: &[i32], n: usize) -> Vec<i32> {
+    let mut out: Vec<i32> = tokens
+        .iter()
+        .filter(|&&t| crate::tokenizer::is_intensity(t))
+        .map(|&t| token_to_intensity(t))
+        .collect();
+    out.resize(n, 0);
+    out
+}
+
+/// Peak signal-to-noise ratio (dB) between two intensity rasters.
+pub fn psnr(a: &[i32], b: &[i32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let mse: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (255.0_f64 * 255.0 / mse).log10()
+}
+
+/// Mean absolute neighbour difference — a local high-frequency-energy
+/// statistic. Greedy decodes from under-trained models are over-smooth
+/// (low values); natural images have moderate values.
+pub fn roughness(img: &[i32], side: usize) -> f64 {
+    assert_eq!(img.len(), side * side);
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for y in 0..side {
+        for x in 0..side {
+            let v = img[y * side + x];
+            if x + 1 < side {
+                acc += (v - img[y * side + x + 1]).abs() as f64;
+                n += 1;
+            }
+            if y + 1 < side {
+                acc += (v - img[(y + 1) * side + x]).abs() as f64;
+                n += 1;
+            }
+        }
+    }
+    acc / n as f64
+}
+
+/// Global contrast (intensity std-dev).
+pub fn contrast(img: &[i32]) -> f64 {
+    let n = img.len() as f64;
+    let mean = img.iter().map(|&v| v as f64).sum::<f64>() / n;
+    (img.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::intensity_to_token;
+
+    #[test]
+    fn psnr_identity_infinite() {
+        let a = vec![10, 20, 30];
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_monotone_in_error() {
+        let a = vec![100; 16];
+        let b: Vec<i32> = a.iter().map(|v| v + 2).collect();
+        let c: Vec<i32> = a.iter().map(|v| v + 20).collect();
+        assert!(psnr(&a, &b) > psnr(&a, &c));
+    }
+
+    #[test]
+    fn roughness_flat_is_zero() {
+        assert_eq!(roughness(&vec![7; 16], 4), 0.0);
+    }
+
+    #[test]
+    fn roughness_checkerboard_is_high() {
+        let img: Vec<i32> = (0..16).map(|i| if (i / 4 + i % 4) % 2 == 0 { 0 } else { 255 }).collect();
+        assert!(roughness(&img, 4) > 200.0);
+    }
+
+    #[test]
+    fn to_intensities_filters_specials() {
+        let toks = vec![crate::tokenizer::BOS, intensity_to_token(5), crate::tokenizer::EOS];
+        assert_eq!(to_intensities(&toks, 2), vec![5, 0]);
+    }
+
+    #[test]
+    fn contrast_zero_for_flat() {
+        assert_eq!(contrast(&vec![9; 8]), 0.0);
+        assert!(contrast(&[0, 255]) > 100.0);
+    }
+}

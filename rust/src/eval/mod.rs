@@ -1,0 +1,10 @@
+//! Evaluation metrics: BLEU (MT), PSNR/local statistics (SR), and the
+//! Table 3 pairwise-preference proxy with bootstrap CIs.
+
+pub mod bleu;
+pub mod image;
+pub mod preference;
+
+pub use bleu::corpus_bleu;
+pub use image::{psnr, to_intensities};
+pub use preference::preference_row;

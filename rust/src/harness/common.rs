@@ -1,0 +1,191 @@
+//! Shared harness plumbing: artifact/context loading, batched evaluation
+//! of a (variant, criterion) setting over a dataset, and wall-clock
+//! measurement against the greedy baseline.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::decoding::{self, BlockwiseConfig, DecodeResult};
+use crate::eval::corpus_bleu;
+use crate::model::ScoringModel;
+use crate::runtime::{Manifest, Runtime};
+use crate::workload::Dataset;
+
+/// Everything a harness needs.
+pub struct Ctx {
+    pub manifest: Manifest,
+    pub rt: Rc<Runtime>,
+}
+
+impl Ctx {
+    pub fn load(artifacts: &str) -> Result<Self> {
+        let root = PathBuf::from(artifacts);
+        let manifest = Manifest::load(&root)?;
+        let rt = Rc::new(Runtime::cpu()?);
+        Ok(Ctx { manifest, rt })
+    }
+
+    pub fn model(&self, variant: &str) -> Result<ScoringModel> {
+        ScoringModel::load(self.rt.clone(), &self.manifest, variant)
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<Dataset> {
+        Dataset::load(&self.manifest.data_file(name))
+    }
+
+    pub fn has_variant(&self, name: &str) -> bool {
+        self.manifest.variants.contains_key(name)
+    }
+}
+
+/// Evaluation of one setting over a dataset.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub bleu: f64,
+    pub mean_block: f64,
+    pub outputs: Vec<Vec<i32>>,
+    pub invocations: usize,
+    pub wall_s: f64,
+}
+
+/// Run blockwise decoding over the whole dataset in bucket-sized batches.
+pub fn eval_blockwise(
+    model: &ScoringModel,
+    ds: &Dataset,
+    cfg: &BlockwiseConfig,
+    limit: Option<usize>,
+) -> Result<EvalOutcome> {
+    let n = limit.unwrap_or(ds.len()).min(ds.len());
+    let bucket = *model.buckets().last().unwrap();
+    let mut results: Vec<DecodeResult> = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for chunk in ds.rows[..n].chunks(bucket) {
+        let srcs: Vec<Vec<i32>> = chunk.iter().map(|r| r.src.clone()).collect();
+        results.extend(decoding::blockwise_decode(model, &srcs, cfg)?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.tokens.clone()).collect();
+    let refs: Vec<Vec<i32>> = ds.rows[..n].iter().map(|r| r.reference.clone()).collect();
+    Ok(EvalOutcome {
+        bleu: corpus_bleu(&outputs, &refs),
+        mean_block: decoding::mean_accepted_block(&results),
+        invocations: results.iter().map(|r| r.stats.invocations).sum(),
+        outputs,
+        wall_s,
+    })
+}
+
+/// Greedy baseline over the dataset (same batching).
+pub fn eval_greedy(
+    model: &ScoringModel,
+    ds: &Dataset,
+    limit: Option<usize>,
+    max_len: Option<usize>,
+) -> Result<EvalOutcome> {
+    let n = limit.unwrap_or(ds.len()).min(ds.len());
+    let bucket = *model.buckets().last().unwrap();
+    let mut results: Vec<DecodeResult> = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for chunk in ds.rows[..n].chunks(bucket) {
+        let srcs: Vec<Vec<i32>> = chunk.iter().map(|r| r.src.clone()).collect();
+        results.extend(decoding::greedy_decode(model, &srcs, max_len)?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.tokens.clone()).collect();
+    let refs: Vec<Vec<i32>> = ds.rows[..n].iter().map(|r| r.reference.clone()).collect();
+    Ok(EvalOutcome {
+        bleu: corpus_bleu(&outputs, &refs),
+        mean_block: 1.0,
+        invocations: results.iter().map(|r| r.stats.invocations).sum(),
+        outputs,
+        wall_s,
+    })
+}
+
+/// Markdown-ish table printer.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-"));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a results file under artifacts/../results/.
+pub fn save_results(name: &str, content: &str) -> Result<()> {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(name), content)?;
+    Ok(())
+}
+
+/// The standard criterion grid used in the paper's experiments.
+pub fn mt_variants_for(k: usize) -> [(&'static str, String); 4] {
+    [
+        ("regular", format!("mt_k{k}_regular")),
+        ("distill", format!("mt_k{k}_distill")),
+        ("ft", format!("mt_k{k}_ft")),
+        ("both", format!("mt_k{k}_both")),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Table;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["k", "BLEU", "block"]);
+        t.row(vec!["2".into(), "26.58".into(), "1.88".into()]);
+        t.row(vec!["10".into(), "25.60".into(), "4.95".into()]);
+        let s = t.render();
+        assert!(s.contains("BLEU"));
+        assert_eq!(s.lines().count(), 4);
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert_eq!(lens[0], lens[2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Figure 4 — wall-clock speedup vs mean accepted block size, for the
+//! best translation settings (distillation + fine tuning, Table 1 last
+//! column) and the best super-resolution settings (fine tuning +
+//! approximate ε=2 acceptance, Table 2 last column).
+//!
+//! Rendered as an ASCII scatter plus the underlying series (saved to
+//! results/figure4.txt) so the crossover the paper describes — iteration
+//! gains keep growing with k while wall-clock gains peak at intermediate
+//! k — is visible directly in the terminal.
+
+use anyhow::Result;
+
+use crate::decoding::{BlockwiseConfig, Criterion};
+use crate::harness::common::{eval_blockwise, eval_greedy, save_results, Ctx, Table};
+
+pub struct Point {
+    pub k: usize,
+    pub mean_block: f64,
+    pub speedup: f64,
+}
+
+fn series(
+    ctx: &Ctx,
+    task: &str,
+    criterion: Criterion,
+    limit: Option<usize>,
+) -> Result<Vec<Point>> {
+    // SR decodes are capped like Table 2 (same cap for baseline and
+    // blockwise, so the speedup ratio is unaffected)
+    let (ds, base, suffix, cap) = match task {
+        "mt" => (ctx.dataset("mt_dev.json")?, "mt_base", "both", None),
+        _ => (
+            ctx.dataset("sr_dev.json")?,
+            "sr_base",
+            "ft",
+            Some(crate::harness::table2::SR_EVAL_LEN),
+        ),
+    };
+    // SR rows run through the b1 bucket (the b8 T=258 invocation costs
+    // seconds on one CPU core); MT uses the batched path
+    let single = task != "mt";
+    let baseline_model = ctx.model(base)?;
+    let baseline = if single {
+        eval_singles(&baseline_model, &ds, limit, cap, None)?
+    } else {
+        let o = eval_greedy(&baseline_model, &ds, limit, cap)?;
+        (1.0, o.wall_s)
+    };
+    let mut pts = Vec::new();
+    for k in [2usize, 4, 6, 8, 10] {
+        let variant = format!("{task}_k{k}_{suffix}");
+        if !ctx.has_variant(&variant) {
+            continue;
+        }
+        let model = ctx.model(&variant)?;
+        let cfg = BlockwiseConfig { criterion, max_len: cap, ..Default::default() };
+        let (mean_block, wall) = if single {
+            eval_singles(&model, &ds, limit, cap, Some(&cfg))?
+        } else {
+            let o = eval_blockwise(&model, &ds, &cfg, limit)?;
+            (o.mean_block, o.wall_s)
+        };
+        pts.push(Point { k, mean_block, speedup: baseline.1 / wall.max(1e-9) });
+    }
+    Ok(pts)
+}
+
+/// Row-by-row (b1 bucket) evaluation: (mean accepted block, wall seconds).
+/// `cfg = None` runs the greedy baseline.
+fn eval_singles(
+    model: &crate::model::ScoringModel,
+    ds: &crate::workload::Dataset,
+    limit: Option<usize>,
+    cap: Option<usize>,
+    cfg: Option<&BlockwiseConfig>,
+) -> Result<(f64, f64)> {
+    let n = limit.unwrap_or(ds.len()).min(ds.len());
+    let mut tok = 0usize;
+    let mut steps = 0usize;
+    let t0 = std::time::Instant::now();
+    for row in &ds.rows[..n] {
+        let src = std::slice::from_ref(&row.src);
+        let r = match cfg {
+            Some(c) => crate::decoding::blockwise_decode(model, src, c)?,
+            None => crate::decoding::greedy_decode(model, src, cap)?,
+        };
+        tok += r[0].stats.accepted_blocks.iter().sum::<usize>();
+        steps += r[0].stats.accepted_blocks.len();
+    }
+    Ok((tok as f64 / steps.max(1) as f64, t0.elapsed().as_secs_f64()))
+}
+
+/// ASCII scatter: x = mean accepted block size, y = wall-clock speedup.
+pub fn scatter(mt: &[Point], sr: &[Point]) -> String {
+    let all: Vec<&Point> = mt.iter().chain(sr).collect();
+    if all.is_empty() {
+        return "(no points)".into();
+    }
+    let xmax = all.iter().map(|p| p.mean_block).fold(1.0, f64::max) * 1.05;
+    let ymax = all.iter().map(|p| p.speedup).fold(1.0, f64::max) * 1.1;
+    const W: usize = 64;
+    const H: usize = 20;
+    let mut grid = vec![vec![' '; W + 1]; H + 1];
+    let mut place = |pts: &[Point], c: char| {
+        for p in pts {
+            let x = ((p.mean_block / xmax) * W as f64).round() as usize;
+            let y = H - ((p.speedup / ymax) * H as f64).round() as usize;
+            grid[y.min(H)][x.min(W)] = c;
+        }
+    };
+    place(mt, 'T'); // translation
+    place(sr, 'S'); // super-resolution
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax * (H - i) as f64 / H as f64;
+        out.push_str(&format!("{yv:5.1}x |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("       +{}\n", "-".repeat(W + 1)));
+    out.push_str(&format!(
+        "        1{}{:.1}\n        mean accepted block size   (T=translation, S=super-res)\n",
+        " ".repeat(W.saturating_sub(8)),
+        xmax
+    ));
+    out
+}
+
+pub fn run(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
+    let mt = series(ctx, "mt", Criterion::Exact, limit)?;
+    let sr = series(ctx, "sr", Criterion::Distance(2), limit)?;
+
+    let mut table = Table::new(&["series", "k", "mean block", "wall-clock speedup"]);
+    for p in &mt {
+        table.row(vec!["MT both".into(), p.k.to_string(), format!("{:.2}", p.mean_block), format!("{:.2}x", p.speedup)]);
+    }
+    for p in &sr {
+        table.row(vec!["SR ft+approx".into(), p.k.to_string(), format!("{:.2}", p.mean_block), format!("{:.2}x", p.speedup)]);
+    }
+
+    let out = format!(
+        "Figure 4: wall-clock speedup vs mean accepted block size\n\n{}\n{}",
+        table.render(),
+        scatter(&mt, &sr)
+    );
+    save_results("figure4.txt", &out)?;
+    Ok(out)
+}

@@ -1,0 +1,12 @@
+//! Reproduction harnesses: one driver per paper table/figure (see
+//! DESIGN.md §3 for the experiment index). Each prints the paper-shaped
+//! table and saves it under results/.
+
+pub mod common;
+pub mod figure4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+pub use common::Ctx;

@@ -1,0 +1,110 @@
+//! Table 1 — English-German translation (synthetic stand-in): BLEU and
+//! mean accepted block size k̂ on the dev set for k ∈ {1,2,4,6,8,10} ×
+//! {regular, distillation, fine-tuning, both}, exact-match acceptance.
+//!
+//! Also regenerates the §7.1 extensions: top-k approximate acceptance
+//! (`table1_topk`) and the §5.3 minimum-block-size ablation
+//! (`ablation_minblock`), both on the "both" column like the paper.
+
+use anyhow::Result;
+
+use crate::decoding::{BlockwiseConfig, Criterion};
+use crate::harness::common::{eval_blockwise, eval_greedy, mt_variants_for, save_results, Ctx, Table};
+
+pub const KS: [usize; 5] = [2, 4, 6, 8, 10];
+
+pub fn run(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
+    let ds = ctx.dataset("mt_dev.json")?;
+    let mut table = Table::new(&["k", "Regular", "Distillation", "Fine Tuning", "Both"]);
+
+    // k = 1 row: the base model (and the distilled-data base if present)
+    let base = ctx.model("mt_base")?;
+    let g = eval_greedy(&base, &ds, limit, None)?;
+    let mut k1 = vec!["1".to_string(), format!("{:.2} / 1.00", g.bleu)];
+    if ctx.has_variant("mt_k1_distill") {
+        let m = ctx.model("mt_k1_distill")?;
+        let o = eval_greedy(&m, &ds, limit, None)?;
+        k1.push(format!("{:.2} / 1.00", o.bleu));
+    } else {
+        k1.push("-".into());
+    }
+    k1.push("-".into());
+    k1.push("-".into());
+    table.row(k1);
+
+    for k in KS {
+        let mut cells = vec![k.to_string()];
+        for (_, variant) in mt_variants_for(k) {
+            if !ctx.has_variant(&variant) {
+                cells.push("-".into());
+                continue;
+            }
+            let model = ctx.model(&variant)?;
+            let o = eval_blockwise(&model, &ds, &BlockwiseConfig::default(), limit)?;
+            cells.push(format!("{:.2} / {:.2}", o.bleu, o.mean_block));
+        }
+        table.row(cells);
+    }
+
+    let out = format!(
+        "Table 1: newstest2013-analogue dev set (BLEU / mean accepted block size)\n\
+         dataset rows: {}, exact-match acceptance\n\n{}",
+        limit.unwrap_or(ds.len()).min(ds.len()),
+        table.render()
+    );
+    save_results("table1.txt", &out)?;
+    Ok(out)
+}
+
+/// §7.1 top-k approximate decoding on the "both" column.
+pub fn run_topk(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
+    let ds = ctx.dataset("mt_dev.json")?;
+    let mut table = Table::new(&["k", "exact", "top-2", "top-3"]);
+    for k in KS {
+        let variant = format!("mt_k{k}_both");
+        if !ctx.has_variant(&variant) {
+            continue;
+        }
+        let model = ctx.model(&variant)?;
+        let mut cells = vec![k.to_string()];
+        for crit in [Criterion::Exact, Criterion::TopK(2), Criterion::TopK(3)] {
+            let cfg = BlockwiseConfig { criterion: crit, ..Default::default() };
+            let o = eval_blockwise(&model, &ds, &cfg, limit)?;
+            cells.push(format!("{:.2} / {:.2}", o.bleu, o.mean_block));
+        }
+        table.row(cells);
+    }
+    let out = format!(
+        "§7.1 approximate decoding, distilled + fine-tuned models\n\
+         (BLEU / mean accepted block size)\n\n{}",
+        table.render()
+    );
+    save_results("table1_topk.txt", &out)?;
+    Ok(out)
+}
+
+/// §5.3 minimum-block-size ablation on the "both" column.
+pub fn run_minblock(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
+    let ds = ctx.dataset("mt_dev.json")?;
+    let mut table = Table::new(&["k", "l=1 (paper)", "l=2", "l=3"]);
+    for k in KS {
+        let variant = format!("mt_k{k}_both");
+        if !ctx.has_variant(&variant) {
+            continue;
+        }
+        let model = ctx.model(&variant)?;
+        let mut cells = vec![k.to_string()];
+        for l in [1usize, 2, 3] {
+            let cfg = BlockwiseConfig { min_block: l.min(k), ..Default::default() };
+            let o = eval_blockwise(&model, &ds, &cfg, limit)?;
+            cells.push(format!("{:.2} / {:.2}", o.bleu, o.mean_block));
+        }
+        table.row(cells);
+    }
+    let out = format!(
+        "§5.3 minimum block size ablation (BLEU / mean accepted block size)\n\n{}",
+        table.render()
+    );
+    save_results("ablation_minblock.txt", &out)?;
+    Ok(out)
+}

@@ -1,0 +1,150 @@
+//! Table 4 — test-set comparison: BLEU and single-sentence wall-clock
+//! speedup vs the greedy baseline, for the paper's own rows (greedy k=1 on
+//! distilled data, blockwise k ∈ {2..10} with distillation + fine tuning)
+//! plus the comparator families it quotes (beam-4 Transformer, NAT,
+//! iterative-refinement Transformer — simplified in-repo implementations).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::decoding::{self, BlockwiseConfig};
+use crate::eval::corpus_bleu;
+use crate::harness::common::{save_results, Ctx, Table};
+use crate::model::NatModel;
+use crate::workload::Dataset;
+
+/// Single-sentence (B=1 semantics, bucket-1 executables) decode of the
+/// whole test set; returns (BLEU, total wall seconds, total invocations).
+fn run_blockwise_single(
+    ctx: &Ctx,
+    variant: &str,
+    ds: &Dataset,
+    limit: usize,
+) -> Result<(f64, f64, usize)> {
+    let model = ctx.model(variant)?;
+    let mut outs = Vec::new();
+    let mut inv = 0usize;
+    let t0 = Instant::now();
+    for row in &ds.rows[..limit] {
+        let r = decoding::blockwise_decode(
+            &model,
+            std::slice::from_ref(&row.src),
+            &BlockwiseConfig::default(),
+        )?;
+        inv += r[0].stats.invocations;
+        outs.push(r[0].tokens.clone());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let refs: Vec<Vec<i32>> = ds.rows[..limit].iter().map(|r| r.reference.clone()).collect();
+    Ok((corpus_bleu(&outs, &refs), wall, inv))
+}
+
+fn run_greedy_single(ctx: &Ctx, variant: &str, ds: &Dataset, limit: usize) -> Result<(f64, f64, usize)> {
+    let model = ctx.model(variant)?;
+    let mut outs = Vec::new();
+    let mut inv = 0usize;
+    let t0 = Instant::now();
+    for row in &ds.rows[..limit] {
+        let r = decoding::greedy_decode(&model, std::slice::from_ref(&row.src), None)?;
+        inv += r[0].stats.invocations;
+        outs.push(r[0].tokens.clone());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let refs: Vec<Vec<i32>> = ds.rows[..limit].iter().map(|r| r.reference.clone()).collect();
+    Ok((corpus_bleu(&outs, &refs), wall, inv))
+}
+
+fn run_beam_single(ctx: &Ctx, variant: &str, ds: &Dataset, limit: usize) -> Result<(f64, f64)> {
+    let model = ctx.model(variant)?;
+    let mut outs = Vec::new();
+    let t0 = Instant::now();
+    for row in &ds.rows[..limit] {
+        let (tokens, _inv) = decoding::beam::decode_one(&model, &row.src, 4, 0.6, None)?;
+        outs.push(tokens);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let refs: Vec<Vec<i32>> = ds.rows[..limit].iter().map(|r| r.reference.clone()).collect();
+    Ok((corpus_bleu(&outs, &refs), wall))
+}
+
+fn run_nat(ctx: &Ctx, variant: &str, ds: &Dataset, limit: usize, i_dec: usize) -> Result<(f64, f64)> {
+    let model = NatModel::load(ctx.rt.clone(), &ctx.manifest, variant)?;
+    let mut outs = Vec::new();
+    let t0 = Instant::now();
+    for row in &ds.rows[..limit] {
+        let r = decoding::nat::decode_batch(&model, std::slice::from_ref(&row.src), i_dec)?;
+        outs.push(r[0].0.clone());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let refs: Vec<Vec<i32>> = ds.rows[..limit].iter().map(|r| r.reference.clone()).collect();
+    Ok((corpus_bleu(&outs, &refs), wall))
+}
+
+pub fn run(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
+    let ds = ctx.dataset("mt_test.json")?;
+    let n = limit.unwrap_or(ds.len()).min(ds.len());
+    let mut table = Table::new(&["Model", "BLEU", "Wall-Clock Speedup"]);
+
+    // baselines on the original-data model
+    let (bleu_g, wall_base, _) = run_greedy_single(ctx, "mt_base", &ds, n)?;
+    table.row(vec!["Transformer baseline (greedy, gold data)".into(), f2(bleu_g), "1.00x".into()]);
+    let (bleu_b4, wall_b4) = run_beam_single(ctx, "mt_base", &ds, n)?;
+    table.row(vec![
+        "Transformer baseline (beam size 4)".into(),
+        f2(bleu_b4),
+        spd(wall_base, wall_b4),
+    ]);
+
+    // NAT + iterative refinement comparators
+    if ctx.has_variant("mt_nat") {
+        let (bleu, wall) = run_nat(ctx, "mt_nat", &ds, n, 0)?;
+        table.row(vec!["Non-autoregressive Transformer (1 shot)".into(), f2(bleu), spd(wall_base, wall)]);
+    }
+    if ctx.has_variant("mt_refine") {
+        for i_dec in [1usize, 2, 5] {
+            let (bleu, wall) = run_nat(ctx, "mt_refine", &ds, n, i_dec)?;
+            table.row(vec![
+                format!("Iterative refinement (i_dec = {i_dec})"),
+                f2(bleu),
+                spd(wall_base, wall),
+            ]);
+        }
+    }
+
+    // this work: greedy k=1 on distilled data + blockwise rows
+    let distill_base = if ctx.has_variant("mt_k1_distill") { "mt_k1_distill" } else { "mt_base" };
+    let (bleu_d, wall_d, _) = run_greedy_single(ctx, distill_base, &ds, n)?;
+    table.row(vec![
+        "Transformer with distillation (greedy, k=1)".into(),
+        f2(bleu_d),
+        spd(wall_base, wall_d),
+    ]);
+    for k in [2usize, 4, 6, 8, 10] {
+        let variant = format!("mt_k{k}_both");
+        if !ctx.has_variant(&variant) {
+            continue;
+        }
+        let (bleu, wall, _inv) = run_blockwise_single(ctx, &variant, &ds, n)?;
+        table.row(vec![
+            format!("Blockwise parallel decoding (k = {k})"),
+            f2(bleu),
+            spd(wall_base, wall),
+        ]);
+    }
+
+    let out = format!(
+        "Table 4: newstest2014-analogue test set, single-sentence decoding ({n} sentences)\n\
+         speedups relative to the greedy gold-data baseline\n\n{}",
+        table.render()
+    );
+    save_results("table4.txt", &out)?;
+    Ok(out)
+}
+
+fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+fn spd(base: f64, this: f64) -> String {
+    format!("{:.2}x", base / this.max(1e-9))
+}

@@ -1,0 +1,33 @@
+//! # blockdecode
+//!
+//! A serving-oriented reproduction of *Blockwise Parallel Decoding for Deep
+//! Autoregressive Models* (Stern, Shazeer, Uszkoreit — NIPS 2018).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! - **L1** (build time): Pallas kernels for the decode hot spot
+//!   (`python/compile/kernels/`), validated against pure-jnp oracles.
+//! - **L2** (build time): a JAX encoder–decoder Transformer with the paper's
+//!   combined scoring-and-proposal head, AOT-lowered to HLO text.
+//! - **L3** (this crate): loads the HLO artifacts through PJRT (`xla` crate)
+//!   and serves requests with the paper's blockwise parallel decoding
+//!   algorithm — predict / verify / accept — plus greedy, beam,
+//!   non-autoregressive, and iterative-refinement baselines.
+//!
+//! Python never runs on the request path: after `make artifacts`, the Rust
+//! binary is self-contained.
+
+pub mod batching;
+pub mod bench;
+pub mod decoding;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod testing;
+pub mod tokenizer;
+pub mod workload;
+pub mod util;

@@ -1,0 +1,220 @@
+//! `repro` — the blockdecode CLI: serving coordinator, one-off decoding,
+//! and the paper-reproduction harnesses.
+//!
+//! ```text
+//! repro serve   --variant mt_k8_both --addr 127.0.0.1:7700
+//! repro decode  --variant mt_k8_both --criterion top2 --n 8 --trace
+//! repro table1 | table1-topk | table2 | table3 | table4 | figure4
+//! repro ablation-minblock
+//! repro selftest
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use blockdecode::batching::RequestQueue;
+use blockdecode::decoding::{self, BlockwiseConfig};
+use blockdecode::harness::{self, Ctx};
+use blockdecode::metrics::Metrics;
+use blockdecode::scheduler::{Engine, EngineConfig};
+use blockdecode::server::{parse_criterion, Server};
+use blockdecode::tokenizer::Vocab;
+use blockdecode::util::argparse::{ArgError, ArgSpec};
+use blockdecode::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            if let Some(ArgError::Usage(u)) = e.downcast_ref::<ArgError>() {
+                println!("{u}");
+                0
+            } else {
+                eprintln!("error: {e:#}");
+                1
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &argv[1.min(argv.len())..];
+    match cmd {
+        "serve" => serve(rest),
+        "decode" => decode(rest),
+        "selftest" => selftest(rest),
+        "table1" => harness_cmd(rest, |ctx, l| harness::table1::run(ctx, l)),
+        "table1-topk" => harness_cmd(rest, |ctx, l| harness::table1::run_topk(ctx, l)),
+        "ablation-minblock" => harness_cmd(rest, |ctx, l| harness::table1::run_minblock(ctx, l)),
+        "table2" => harness_cmd(rest, |ctx, l| harness::table2::run(ctx, l)),
+        "table3" => harness_cmd(rest, |ctx, l| harness::table3::run(ctx, l)),
+        "table4" => harness_cmd(rest, |ctx, l| harness::table4::run(ctx, l)),
+        "figure4" => harness_cmd(rest, |ctx, l| harness::figure4::run(ctx, l)),
+        "help" | "--help" | "-h" => {
+            println!(
+                "repro — blockwise parallel decoding serving stack\n\n\
+                 subcommands:\n  serve, decode, selftest,\n  \
+                 table1, table1-topk, table2, table3, table4, figure4,\n  \
+                 ablation-minblock\n\nEach takes --help."
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `repro help`)"),
+    }
+}
+
+fn harness_cmd(
+    rest: &[String],
+    f: impl Fn(&Ctx, Option<usize>) -> Result<String>,
+) -> Result<()> {
+    let spec = ArgSpec::new("table harness", "regenerate a paper table/figure")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("limit", "0", "max dataset rows (0 = all)");
+    let a = spec.parse(rest)?;
+    let ctx = Ctx::load(&a.str("artifacts"))?;
+    let limit = match a.usize("limit")? {
+        0 => None,
+        n => Some(n),
+    };
+    let t0 = Instant::now();
+    let out = f(&ctx, limit)?;
+    println!("{out}");
+    println!("[{:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Serve a variant over TCP with the continuous-batching engine.
+fn serve(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("serve", "start the serving coordinator")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("variant", "mt_k8_both", "model variant to serve")
+        .opt("addr", "127.0.0.1:7700", "listen address")
+        .opt("criterion", "exact", "default acceptance criterion")
+        .opt("min-block", "1", "§5.3 minimum accepted block size");
+    let a = spec.parse(rest)?;
+
+    let ctx = Ctx::load(&a.str("artifacts"))?;
+    let queue = Arc::new(RequestQueue::new());
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?;
+    println!("serving {} on {}", a.str("variant"), server.local_addr());
+
+    // engine owns the (non-Send) PJRT state on this thread; the server
+    // accept loop runs on its own thread.
+    let stop2 = stop.clone();
+    let srv = std::thread::spawn(move || {
+        if let Err(e) = server.serve() {
+            log::error!("server: {e:#}");
+        }
+        stop2.store(true, Ordering::Relaxed);
+    });
+
+    let model = ctx.model(&a.str("variant"))?;
+    let cfg = EngineConfig {
+        criterion: parse_criterion(&a.str("criterion"))
+            .ok_or_else(|| anyhow::anyhow!("bad criterion"))?,
+        min_block: a.usize("min-block")?,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(model, cfg, queue.clone(), metrics.clone(), stop.clone());
+    let t0 = Instant::now();
+    engine.run()?;
+    let _ = srv.join();
+    println!("{}", metrics.report(t0).render());
+    Ok(())
+}
+
+/// One-off decoding of dev-set sentences with a step trace (§7.4).
+fn decode(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("decode", "decode dev sentences and show the block trace")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("variant", "mt_k8_both", "model variant")
+        .opt("criterion", "exact", "acceptance criterion")
+        .opt("n", "4", "number of sentences")
+        .flag("trace", "print the §7.4-style step-by-step trace");
+    let a = spec.parse(rest)?;
+    let ctx = Ctx::load(&a.str("artifacts"))?;
+    let model = ctx.model(&a.str("variant"))?;
+    let task = model.spec.task.clone();
+    let ds = ctx.dataset(&format!("{task}_dev.json"))?;
+    let vocab = Vocab::load(&ctx.manifest.data_file("vocab.json"))?;
+    let n = a.usize("n")?.min(ds.len());
+
+    let cfg = BlockwiseConfig {
+        criterion: parse_criterion(&a.str("criterion"))
+            .ok_or_else(|| anyhow::anyhow!("bad criterion"))?,
+        record_trace: a.flag("trace"),
+        ..Default::default()
+    };
+    for row in &ds.rows[..n] {
+        let out = decoding::blockwise_decode(&model, std::slice::from_ref(&row.src), &cfg)?;
+        let r = &out[0];
+        if task == "mt" {
+            println!("src:  {}", vocab.render(&row.src));
+            println!("ref:  {}", vocab.render(&row.reference));
+            println!("out:  {}", vocab.render(&r.tokens));
+        } else {
+            println!("(image output, {} tokens)", r.tokens.len());
+        }
+        println!(
+            "steps: {}  tokens: {}  mean block: {:.2}",
+            r.stats.accepted_blocks.len(),
+            r.tokens.len(),
+            r.stats.mean_block()
+        );
+        if let Some(tr) = &r.trace {
+            for (i, step) in tr.steps.iter().enumerate() {
+                println!(
+                    "  step {:>2}: {} token(s)  {:?}",
+                    i + 1,
+                    step.accepted.len(),
+                    step.accepted.iter().map(|&t| vocab.word(t)).collect::<Vec<_>>()
+                );
+            }
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Quick health check over the whole stack.
+fn selftest(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("selftest", "verify artifacts + runtime + algorithm")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let a = spec.parse(rest)?;
+    let ctx = Ctx::load(&a.str("artifacts"))?;
+    println!(
+        "manifest: {} variants, {} entries",
+        ctx.manifest.variants.len(),
+        ctx.manifest.entries.len()
+    );
+
+    let model = ctx.model("mt_base")?;
+    let ds = ctx.dataset("mt_dev.json")?;
+    let srcs: Vec<Vec<i32>> = ds.rows.iter().take(8).map(|r| r.src.clone()).collect();
+    let greedy = decoding::greedy_decode(&model, &srcs, None)?;
+    let block = decoding::blockwise_decode(&model, &srcs, &BlockwiseConfig::default())?;
+    for (g, b) in greedy.iter().zip(&block) {
+        anyhow::ensure!(g.tokens == b.tokens, "blockwise != greedy on base model");
+    }
+    println!("blockwise(exact) == greedy over {} sentences ✓", srcs.len());
+    let stats = ctx.rt.stats_snapshot();
+    println!(
+        "runtime: {} compiles ({:.1}s), {} executions ({:.1}ms mean)",
+        stats.compiles,
+        stats.compile_us as f64 / 1e6,
+        stats.executions,
+        stats.execute_us as f64 / 1e3 / stats.executions.max(1) as f64
+    );
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Serving metrics: counters, latency histograms, accepted-block-size
+//! tracking, and text report rendering. Shared (thread-safe) so server
+//! worker threads and the engine thread update one registry.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{summarize, Summary};
+
+/// Registry of serving metrics. Cheap to clone handles around (Arc it).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    completed: u64,
+    failed: u64,
+    tokens_out: u64,
+    invocations: u64,
+    accept_steps: u64,
+    accept_tokens: u64,
+    queue_us: Vec<f64>,
+    e2e_us: Vec<f64>,
+    batch_fill: Vec<f64>,
+}
+
+/// Snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub tokens_out: u64,
+    pub invocations: u64,
+    /// paper's k̂: tokens accepted / accept substeps
+    pub mean_accepted_block: f64,
+    pub queue_us: Summary,
+    pub e2e_us: Summary,
+    pub mean_batch_fill: f64,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_request(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_fail(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn on_complete(&self, queued: Duration, e2e: Duration, tokens: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        m.tokens_out += tokens as u64;
+        m.queue_us.push(queued.as_micros() as f64);
+        m.e2e_us.push(e2e.as_micros() as f64);
+    }
+
+    pub fn on_invocation(&self, batch_rows_active: usize, bucket: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.invocations += 1;
+        m.batch_fill.push(batch_rows_active as f64 / bucket.max(1) as f64);
+    }
+
+    pub fn on_accept(&self, block: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.accept_steps += 1;
+        m.accept_tokens += block as u64;
+    }
+
+    pub fn report(&self, since: Instant) -> Report {
+        let m = self.inner.lock().unwrap();
+        Report {
+            requests: m.requests,
+            completed: m.completed,
+            failed: m.failed,
+            tokens_out: m.tokens_out,
+            invocations: m.invocations,
+            mean_accepted_block: if m.accept_steps == 0 {
+                0.0
+            } else {
+                m.accept_tokens as f64 / m.accept_steps as f64
+            },
+            queue_us: summarize(&m.queue_us),
+            e2e_us: summarize(&m.e2e_us),
+            mean_batch_fill: if m.batch_fill.is_empty() {
+                0.0
+            } else {
+                m.batch_fill.iter().sum::<f64>() / m.batch_fill.len() as f64
+            },
+            wall: since.elapsed(),
+        }
+    }
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        let secs = self.wall.as_secs_f64().max(1e-9);
+        format!(
+            "requests={} completed={} failed={}\n\
+             throughput: {:.2} req/s, {:.1} tok/s\n\
+             invocations={} (mean batch fill {:.2})\n\
+             mean accepted block size k̂ = {:.2}\n\
+             queue  p50={:.1}ms p90={:.1}ms p99={:.1}ms\n\
+             e2e    p50={:.1}ms p90={:.1}ms p99={:.1}ms",
+            self.requests,
+            self.completed,
+            self.failed,
+            self.completed as f64 / secs,
+            self.tokens_out as f64 / secs,
+            self.invocations,
+            self.mean_batch_fill,
+            self.mean_accepted_block,
+            self.queue_us.p50 / 1000.0,
+            self.queue_us.p90 / 1000.0,
+            self.queue_us.p99 / 1000.0,
+            self.e2e_us.p50 / 1000.0,
+            self.e2e_us.p90 / 1000.0,
+            self.e2e_us.p99 / 1000.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let m = Metrics::new();
+        let t0 = Instant::now();
+        m.on_request();
+        m.on_request();
+        m.on_invocation(6, 8);
+        m.on_accept(3);
+        m.on_accept(1);
+        m.on_complete(Duration::from_millis(2), Duration::from_millis(10), 12);
+        let r = m.report(t0);
+        assert_eq!(r.requests, 2);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.tokens_out, 12);
+        assert!((r.mean_accepted_block - 2.0).abs() < 1e-9);
+        assert!((r.mean_batch_fill - 0.75).abs() < 1e-9);
+        assert!(r.render().contains("k̂ = 2.00"));
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let m = Metrics::new();
+        let r = m.report(Instant::now());
+        assert_eq!(r.mean_accepted_block, 0.0);
+        r.render();
+    }
+}

@@ -1,0 +1,218 @@
+//! High-level model handles over the runtime: a loaded variant with its
+//! device-resident weights and compiled entry points.
+//!
+//! `ScoringModel` is the combined scoring-and-proposal model (§4): one
+//! `decode_topk` invocation returns, for every decoder position and every
+//! head i ∈ 1..k, the top-t candidate tokens with logits — everything the
+//! blockwise verify/accept logic and the next prediction step need.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{
+    literal_to_f32, literal_to_i32, DeviceWeights, Executable, Manifest, Runtime, VariantSpec,
+    WeightBundle,
+};
+use crate::util::tensor::{TensorF32, TensorI32};
+
+/// Result of one combined scoring/proposal invocation.
+#[derive(Debug, Clone)]
+pub struct BlockScores {
+    /// [B, T, K, topt] logits, descending per (b,t,k)
+    pub topv: TensorF32,
+    /// [B, T, K, topt] token ids
+    pub topi: TensorI32,
+    pub k: usize,
+    pub topt: usize,
+}
+
+impl BlockScores {
+    /// p_head's argmax token at decoder position `t` for row `b`.
+    pub fn top1(&self, b: usize, t: usize, head: usize) -> i32 {
+        self.topi.get(&[b, t, head, 0])
+    }
+
+    /// Is `token` within the top-`kk` candidates of `head` at (b, t)?
+    pub fn in_topk(&self, b: usize, t: usize, head: usize, token: i32, kk: usize) -> bool {
+        (0..kk.min(self.topt)).any(|r| self.topi.get(&[b, t, head, r]) == token)
+    }
+
+    /// Logit of rank `r` (0 = best).
+    pub fn logit(&self, b: usize, t: usize, head: usize, r: usize) -> f32 {
+        self.topv.get(&[b, t, head, r])
+    }
+}
+
+/// A loaded combined scoring/proposal variant.
+pub struct ScoringModel {
+    pub spec: VariantSpec,
+    pub topt: usize,
+    rt: Rc<Runtime>,
+    weights: DeviceWeights,
+    encode: BTreeMap<usize, Rc<Executable>>,
+    decode: BTreeMap<usize, Rc<Executable>>,
+}
+
+impl ScoringModel {
+    pub fn load(rt: Rc<Runtime>, manifest: &Manifest, variant: &str) -> Result<Self> {
+        let spec = manifest.variant(variant)?.clone();
+        let bundle = WeightBundle::load(&spec.weights)
+            .with_context(|| format!("weights for {variant}"))?;
+        let weights = rt.upload_weights(&bundle)?;
+        let mut encode = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for (logical, key) in &spec.entries {
+            let e = &manifest.entries[key];
+            let exe = rt.load(key, &e.file)?;
+            if let Some(b) = logical.strip_prefix("encode_b") {
+                encode.insert(b.parse::<usize>()?, exe);
+            } else if let Some(b) = logical.strip_prefix("decode_b") {
+                decode.insert(b.parse::<usize>()?, exe);
+            }
+        }
+        if encode.is_empty() || decode.is_empty() {
+            bail!("variant {variant} lacks encode/decode entries");
+        }
+        log::info!(
+            "loaded {variant}: k={} {} params, buckets {:?}",
+            spec.k,
+            weights.total_params,
+            encode.keys().collect::<Vec<_>>()
+        );
+        Ok(ScoringModel { spec, topt: manifest.topt, rt, weights, encode, decode })
+    }
+
+    pub fn k(&self) -> usize {
+        self.spec.k
+    }
+
+    pub fn max_src(&self) -> usize {
+        self.spec.config.max_src
+    }
+
+    pub fn max_tgt(&self) -> usize {
+        self.spec.config.max_tgt
+    }
+
+    /// Available batch buckets (ascending).
+    pub fn buckets(&self) -> Vec<usize> {
+        self.encode.keys().copied().collect()
+    }
+
+    /// Smallest bucket that fits `n` rows (or the largest available).
+    pub fn pick_bucket(&self, n: usize) -> usize {
+        for &b in self.encode.keys() {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.encode.keys().last().unwrap()
+    }
+
+    /// Encode a padded source batch [B, S] -> memory [B, S, D].
+    ///
+    /// B must equal one of the buckets; the batcher pads rows with PAD=0,
+    /// which the model's padding mask makes inert.
+    pub fn encode(&self, src: &TensorI32) -> Result<TensorF32> {
+        let b = src.dims[0];
+        let exe = self
+            .encode
+            .get(&b)
+            .ok_or_else(|| anyhow::anyhow!("no encode bucket {b} (have {:?})", self.buckets()))?;
+        let src_buf = self.rt.upload_i32(src)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            self.weights.buffers.iter().collect();
+        args.push(&src_buf);
+        let out = self.rt.execute(exe, &args)?;
+        literal_to_f32(&out[0])
+    }
+
+    /// One combined scoring/proposal invocation.
+    ///
+    /// `memory` [B,S,D] from `encode`, `src` [B,S] (for the padding mask),
+    /// `tgt_in` [B,T] shifted decoder input. Returns top-t per (pos, head).
+    pub fn decode_topk(
+        &self,
+        memory: &TensorF32,
+        src: &TensorI32,
+        tgt_in: &TensorI32,
+    ) -> Result<BlockScores> {
+        let b = tgt_in.dims[0];
+        let exe = self
+            .decode
+            .get(&b)
+            .ok_or_else(|| anyhow::anyhow!("no decode bucket {b} (have {:?})", self.buckets()))?;
+        let mem_buf = self.rt.upload_f32(memory)?;
+        let src_buf = self.rt.upload_i32(src)?;
+        let tgt_buf = self.rt.upload_i32(tgt_in)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.push(&mem_buf);
+        args.push(&src_buf);
+        args.push(&tgt_buf);
+        let out = self.rt.execute(exe, &args)?;
+        anyhow::ensure!(out.len() == 2, "decode returned {} outputs", out.len());
+        let topv = literal_to_f32(&out[0])?;
+        let topi = literal_to_i32(&out[1])?;
+        anyhow::ensure!(topv.dims.len() == 4, "unexpected topv rank {:?}", topv.dims);
+        let k = topv.dims[2];
+        let topt = topv.dims[3];
+        Ok(BlockScores { topv, topi, k, topt })
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.rt
+    }
+}
+
+/// The simplified NAT / iterative-refinement comparator (Table 4).
+pub struct NatModel {
+    pub spec: VariantSpec,
+    rt: Rc<Runtime>,
+    weights: DeviceWeights,
+    nat: BTreeMap<usize, Rc<Executable>>,
+}
+
+impl NatModel {
+    pub fn load(rt: Rc<Runtime>, manifest: &Manifest, variant: &str) -> Result<Self> {
+        let spec = manifest.variant(variant)?.clone();
+        let bundle = WeightBundle::load(&spec.weights)?;
+        let weights = rt.upload_weights(&bundle)?;
+        let mut nat = BTreeMap::new();
+        for (logical, key) in &spec.entries {
+            if let Some(b) = logical.strip_prefix("nat_b") {
+                let e = &manifest.entries[key];
+                nat.insert(b.parse::<usize>()?, rt.load(key, &e.file)?);
+            }
+        }
+        if nat.is_empty() {
+            bail!("variant {variant} has no nat entries");
+        }
+        Ok(NatModel { spec, rt, weights, nat })
+    }
+
+    /// One parallel decode shot: (tokens [B,T], predicted lengths [B]).
+    pub fn decode_shot(
+        &self,
+        src: &TensorI32,
+        canvas: &TensorI32,
+    ) -> Result<(TensorI32, TensorI32)> {
+        let b = src.dims[0];
+        let exe = self
+            .nat
+            .get(&b)
+            .ok_or_else(|| anyhow::anyhow!("no nat bucket {b}"))?;
+        let src_buf = self.rt.upload_i32(src)?;
+        let canvas_buf = self.rt.upload_i32(canvas)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.push(&src_buf);
+        args.push(&canvas_buf);
+        let out = self.rt.execute(exe, &args)?;
+        Ok((literal_to_i32(&out[0])?, literal_to_i32(&out[1])?))
+    }
+
+    pub fn max_tgt(&self) -> usize {
+        self.spec.config.max_tgt
+    }
+}

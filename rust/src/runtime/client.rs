@@ -1,0 +1,176 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, uploads
+//! weight bundles to device buffers, and executes from the serving hot path.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit
+//! instruction ids in serialized protos; the text parser reassigns ids).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so a `Runtime` and everything
+//! holding its buffers live on one thread — the coordinator's engine thread
+//! (see `scheduler::engine`). The server side communicates via channels.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::weights::{DType, WeightBundle};
+use crate::util::tensor::{TensorF32, TensorI32};
+
+/// Wrapper around the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// entry name -> compiled executable (compile once, reuse everywhere)
+    cache: RefCell<BTreeMap<String, std::rc::Rc<Executable>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+/// Execution counters (observability for the perf pass).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_us: u64,
+    pub execute_us: u64,
+    pub bytes_uploaded: u64,
+}
+
+/// One compiled entry point.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A weight bundle resident on device.
+pub struct DeviceWeights {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    pub total_params: usize,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Load + compile an HLO-text entry point (cached by name).
+    pub fn load(&self, name: &str, path: &Path) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", name))?;
+        let us = t0.elapsed().as_micros() as u64;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_us += us;
+        }
+        log::debug!("compiled {name} in {us}us");
+        let e = std::rc::Rc::new(Executable { name: name.to_string(), exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Upload a weight bundle once; buffers are reused for every execution.
+    pub fn upload_weights(&self, bundle: &WeightBundle) -> Result<DeviceWeights> {
+        let mut buffers = Vec::with_capacity(bundle.entries.len());
+        let mut bytes = 0u64;
+        for e in &bundle.entries {
+            // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6 passes the
+            // ElementType discriminant where a PrimitiveType is expected,
+            // silently mistyping F32 uploads as F16. The typed API maps
+            // through `T::TY.primitive_type()` and is correct.
+            let buf = match e.dtype {
+                DType::F32 => {
+                    let v: Vec<f32> = e
+                        .data
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    self.client.buffer_from_host_buffer(&v, &e.dims, None)
+                }
+                DType::I32 => {
+                    let v: Vec<i32> = e
+                        .data
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    self.client.buffer_from_host_buffer(&v, &e.dims, None)
+                }
+            }
+            .with_context(|| format!("uploading {}", e.name))?;
+            bytes += e.data.len() as u64;
+            buffers.push(buf);
+        }
+        self.stats.borrow_mut().bytes_uploaded += bytes;
+        Ok(DeviceWeights { buffers, total_params: bundle.total_params() })
+    }
+
+    pub fn upload_i32(&self, t: &TensorI32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&t.data, &t.dims, None)?)
+    }
+
+    pub fn upload_f32(&self, t: &TensorF32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&t.data, &t.dims, None)?)
+    }
+
+    /// Execute with device buffers and fetch the result tuple to host.
+    ///
+    /// Entry points are exported with `return_tuple=True`, so the output is
+    /// one tuple buffer; it is synced to host and decomposed into the
+    /// individual result literals.
+    pub fn execute(
+        &self,
+        exe: &Executable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let out = exe.exe.execute_b(args).with_context(|| format!("executing {}", exe.name))?;
+        anyhow::ensure!(
+            !out.is_empty() && !out[0].is_empty(),
+            "no outputs from {}",
+            exe.name
+        );
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let us = t0.elapsed().as_micros() as u64;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_us += us;
+        }
+        Ok(parts)
+    }
+
+    pub fn stats_snapshot(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}
+
+/// Convert a host literal to an i32 tensor.
+pub fn literal_to_i32(lit: &xla::Literal) -> Result<TensorI32> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>()?;
+    Ok(TensorI32::from_vec(&dims, data))
+}
+
+/// Convert a host literal to an f32 tensor.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<TensorF32> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(TensorF32::from_vec(&dims, data))
+}

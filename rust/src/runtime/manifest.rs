@@ -1,0 +1,188 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Lists every trained variant (task, block size k, training
+//! recipe, weight bundle) and every lowered HLO entry point it uses.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered HLO entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub batch: usize,
+}
+
+/// Model dimensions as exported.
+#[derive(Debug, Clone)]
+pub struct VariantConfig {
+    pub vocab: usize,
+    pub max_src: usize,
+    pub max_tgt: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+}
+
+/// One trained model variant.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub task: String,
+    pub k: usize,
+    pub variant: String,
+    pub weights: PathBuf,
+    /// logical entry name ("encode_b8") -> entry key in `Manifest::entries`
+    pub entries: BTreeMap<String, String>,
+    pub config: VariantConfig,
+}
+
+/// The whole artifact set.
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub topt: usize,
+    pub buckets: Vec<usize>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub variants: BTreeMap<String, VariantSpec>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("manifest json")?;
+        let topt = j.get("topt")?.as_usize()?;
+        let buckets = j
+            .get("buckets")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok::<usize, anyhow::Error>(x.as_usize()?))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries")?.as_obj()? {
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: root.join(e.get("file")?.as_str()?),
+                    batch: e.get("batch")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_obj()? {
+            let c = v.get("config")?;
+            let mut ventries = BTreeMap::new();
+            for (le, key) in v.get("entries")?.as_obj()? {
+                let key = key.as_str()?.to_string();
+                if !entries.contains_key(&key) {
+                    bail!("variant {name} references unknown entry {key}");
+                }
+                ventries.insert(le.clone(), key);
+            }
+            variants.insert(
+                name.clone(),
+                VariantSpec {
+                    name: name.clone(),
+                    task: v.get("task")?.as_str()?.to_string(),
+                    k: v.get("k")?.as_usize()?,
+                    variant: v.get("variant")?.as_str()?.to_string(),
+                    weights: root.join(v.get("weights")?.as_str()?),
+                    entries: ventries,
+                    config: VariantConfig {
+                        vocab: c.get("vocab")?.as_usize()?,
+                        max_src: c.get("max_src")?.as_usize()?,
+                        max_tgt: c.get("max_tgt")?.as_usize()?,
+                        d_model: c.get("d_model")?.as_usize()?,
+                        n_heads: c.get("n_heads")?.as_usize()?,
+                    },
+                },
+            );
+        }
+        Ok(Manifest { root: root.to_path_buf(), topt, buckets, entries, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "variant '{name}' not in manifest (have: {:?}) — maybe `make artifacts-full`?",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Variants of a task, sorted by (k, variant name).
+    pub fn task_variants(&self, task: &str) -> Vec<&VariantSpec> {
+        let mut v: Vec<_> = self.variants.values().filter(|v| v.task == task).collect();
+        v.sort_by(|a, b| (a.k, &a.variant).cmp(&(b.k, &b.variant)));
+        v
+    }
+
+    pub fn data_file(&self, name: &str) -> PathBuf {
+        self.root.join("data").join(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    const SAMPLE: &str = r#"{
+      "topt": 8,
+      "buckets": [1, 8],
+      "tasks": {"mt": {"max_src": 20}},
+      "entries": {
+        "mt_k2_b1_encode": {"file": "hlo/mt_k2_b1_encode.hlo.txt", "batch": 1},
+        "mt_k2_b1_decode": {"file": "hlo/mt_k2_b1_decode.hlo.txt", "batch": 1}
+      },
+      "variants": {
+        "mt_k2_regular": {
+          "task": "mt", "k": 2, "variant": "regular",
+          "weights": "weights/mt_k2_regular.bin",
+          "params": [],
+          "entries": {"encode_b1": "mt_k2_b1_encode", "decode_b1": "mt_k2_b1_decode"},
+          "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let dir = std::env::temp_dir().join("bd_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(SAMPLE.as_bytes())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.topt, 8);
+        assert_eq!(m.buckets, vec![1, 8]);
+        let v = m.variant("mt_k2_regular").unwrap();
+        assert_eq!(v.k, 2);
+        assert_eq!(v.config.vocab, 127);
+        assert!(m.variant("nope").is_err());
+        assert_eq!(m.task_variants("mt").len(), 1);
+    }
+
+    #[test]
+    fn bad_entry_ref_rejected() {
+        let dir = std::env::temp_dir().join("bd_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = SAMPLE.replace("\"mt_k2_b1_encode\"}", "\"missing\"}");
+        let bad = bad.replace("\"encode_b1\": \"mt_k2_b1_encode\"", "\"encode_b1\": \"missing\"");
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(bad.as_bytes())
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapper, HLO artifact loading, weight
+//! bundles, and the artifact manifest. See `client` for the execution
+//! model (single engine thread; compile once; weights resident on device).
+
+pub mod client;
+pub mod manifest;
+pub mod weights;
+
+pub use client::{literal_to_f32, literal_to_i32, DeviceWeights, Executable, Runtime, RuntimeStats};
+pub use manifest::{EntrySpec, Manifest, VariantConfig, VariantSpec};
+pub use weights::{DType, WeightBundle, WeightEntry};

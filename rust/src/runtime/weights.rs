@@ -1,0 +1,155 @@
+//! Weight-bundle reader.
+//!
+//! Mirrors `python/compile/aot.py::write_weights`: a little-endian u32
+//! header length, a JSON header listing tensors in **HLO parameter order**,
+//! then the raw tensor data. The order contract is what lets the runtime
+//! pass weights positionally to `execute_b` without name matching at call
+//! time.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor in the bundle.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// Parsed bundle: tensors in parameter order.
+#[derive(Debug)]
+pub struct WeightBundle {
+    pub entries: Vec<WeightEntry>,
+}
+
+impl WeightBundle {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() < 4 {
+            bail!("weight bundle too short: {}", path.display());
+        }
+        let hlen = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        if bytes.len() < 4 + hlen {
+            bail!("truncated header in {}", path.display());
+        }
+        let header = std::str::from_utf8(&bytes[4..4 + hlen]).context("header utf8")?;
+        let parsed = Json::parse(header).context("header json")?;
+        let body = &bytes[4 + hlen..];
+        let mut entries = Vec::new();
+        for e in parsed.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let dtype = DType::parse(e.get("dtype")?.as_str()?)?;
+            let dims: Vec<usize> = e
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok::<usize, anyhow::Error>(x.as_usize()?))
+                .collect::<Result<_>>()?;
+            let offset = e.get("offset")?.as_usize()?;
+            let nbytes = e.get("nbytes")?.as_usize()?;
+            let expect: usize = dims.iter().product::<usize>() * dtype.size();
+            if nbytes != expect {
+                bail!("tensor {name}: nbytes {nbytes} != shape-implied {expect}");
+            }
+            if offset + nbytes > body.len() {
+                bail!("tensor {name}: data out of range");
+            }
+            entries.push(WeightEntry {
+                name,
+                dtype,
+                dims,
+                data: body[offset..offset + nbytes].to_vec(),
+            });
+        }
+        Ok(WeightBundle { entries })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.entries.iter().map(|e| e.dims.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn bundle_bytes() -> Vec<u8> {
+        let header = r#"[{"name":"a","dtype":"float32","shape":[2,2],"offset":0,"nbytes":16},
+                         {"name":"b","dtype":"int32","shape":[3],"offset":16,"nbytes":12}]"#;
+        let mut out = vec![];
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for f in [1.0f32, 2.0, 3.0, 4.0] {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        for i in [7i32, 8, 9] {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("bd_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        std::fs::File::create(&path).unwrap().write_all(&bundle_bytes()).unwrap();
+        let b = WeightBundle::load(&path).unwrap();
+        assert_eq!(b.entries.len(), 2);
+        assert_eq!(b.entries[0].name, "a");
+        assert_eq!(b.entries[0].dims, vec![2, 2]);
+        assert_eq!(b.entries[1].dtype, DType::I32);
+        assert_eq!(b.total_params(), 7);
+        let f: Vec<f32> = b.entries[0]
+            .data
+            .chunks(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(f, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let dir = std::env::temp_dir().join("bd_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        let mut bytes = bundle_bytes();
+        bytes.truncate(24); // cut into tensor data
+        std::fs::File::create(&path).unwrap().write_all(&bytes).unwrap();
+        assert!(WeightBundle::load(&path).is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! The continuous-batching decode engine — the serving coordinator's core
+//! loop (vLLM-style iteration-level scheduling, specialized to blockwise
+//! parallel decoding).
+//!
+//! One engine thread owns the PJRT runtime and the loaded model (the
+//! `xla` client is not `Send`). Every loop iteration:
+//!
+//! 1. **refill** — admit queued requests into free slots of the batch
+//!    bucket; new sources are batch-encoded and their memory rows are
+//!    scattered into the resident memory tensor;
+//! 2. **step** — one combined scoring/proposal invocation advances *every*
+//!    active slot (each by its own k̂ ≥ 1 tokens);
+//! 3. **complete** — finished slots respond to their waiters and free up.
+//!
+//! Because sequences join and leave at iteration granularity, a slot never
+//! waits for its batch-mates to finish (continuous batching), and the
+//! invocation count per sequence stays ~len/k̂ + 1.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::batching::{Request, RequestQueue, Response};
+use crate::decoding::criteria::Criterion;
+use crate::decoding::state::BlockState;
+use crate::metrics::Metrics;
+use crate::model::ScoringModel;
+use crate::tokenizer::PAD;
+use crate::util::tensor::{TensorF32, TensorI32};
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// default acceptance criterion (requests may override)
+    pub criterion: Criterion,
+    /// §5.3 minimum block size
+    pub min_block: usize,
+    /// max wall time the refill step waits to improve batch fill when the
+    /// engine is otherwise idle
+    pub admit_wait: Duration,
+    /// cap on generated tokens (None = model max)
+    pub max_len: Option<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            criterion: Criterion::Exact,
+            min_block: 1,
+            admit_wait: Duration::from_millis(2),
+            max_len: None,
+        }
+    }
+}
+
+struct Slot {
+    request: Request,
+    state: BlockState,
+    admitted: Instant,
+}
+
+/// The engine. Construct with a loaded model, then `run` on the owning
+/// thread; submit via the shared [`RequestQueue`]; stop via the flag.
+pub struct Engine {
+    model: ScoringModel,
+    cfg: EngineConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    bucket: usize,
+    // resident batch tensors (src ids, encoder memory, decoder input)
+    src: TensorI32,
+    memory: TensorF32,
+    tgt_in: TensorI32,
+    slots: Vec<Option<Slot>>,
+}
+
+impl Engine {
+    pub fn new(
+        model: ScoringModel,
+        cfg: EngineConfig,
+        queue: Arc<RequestQueue>,
+        metrics: Arc<Metrics>,
+        stop: Arc<AtomicBool>,
+    ) -> Self {
+        let bucket = *model.buckets().last().expect("model has buckets");
+        let s_len = model.max_src();
+        let t_len = model.max_tgt();
+        let d = model.spec.config.d_model;
+        Engine {
+            cfg,
+            queue,
+            metrics,
+            stop,
+            bucket,
+            src: TensorI32::zeros(&[bucket, s_len]),
+            memory: TensorF32::zeros(&[bucket, s_len, d]),
+            tgt_in: TensorI32::zeros(&[bucket, t_len]),
+            slots: (0..bucket).map(|_| None).collect(),
+            model,
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Admit new requests into free slots; batch-encode their sources and
+    /// scatter the memory rows into the resident tensor.
+    fn refill(&mut self) -> Result<()> {
+        let free: Vec<usize> =
+            (0..self.bucket).filter(|&i| self.slots[i].is_none()).collect();
+        if free.is_empty() {
+            return Ok(());
+        }
+        let incoming = if self.active() == 0 {
+            // engine idle: block briefly for a batch to form
+            match self.queue.pop_batch(free.len(), self.cfg.admit_wait) {
+                Some(v) => v,
+                None => return Ok(()), // queue closed
+            }
+        } else {
+            self.queue.try_pop(free.len())
+        };
+        if incoming.is_empty() {
+            return Ok(());
+        }
+
+        // batch-encode the new sources in one invocation
+        let s_len = self.model.max_src();
+        let mut enc_src = TensorI32::zeros(&[self.bucket, s_len]);
+        for (i, r) in incoming.iter().enumerate() {
+            let n = r.src.len().min(s_len);
+            enc_src.row_mut(i)[..n].copy_from_slice(&r.src[..n]);
+        }
+        let enc_memory = self.model.encode(&enc_src)?;
+        let d = self.model.spec.config.d_model;
+        let row_elems = s_len * d;
+
+        let max_len = self
+            .cfg
+            .max_len
+            .unwrap_or(self.model.max_tgt() - 1)
+            .min(self.model.max_tgt() - 1);
+        for (i, r) in incoming.into_iter().enumerate() {
+            let slot = free[i];
+            // scatter source ids + memory row into resident tensors
+            let n = r.src.len().min(s_len);
+            self.src.row_mut(slot).fill(PAD);
+            self.src.row_mut(slot)[..n].copy_from_slice(&r.src[..n]);
+            let src_off = slot * row_elems;
+            let enc_off = i * row_elems;
+            self.memory.data[src_off..src_off + row_elems]
+                .copy_from_slice(&enc_memory.data[enc_off..enc_off + row_elems]);
+
+            let criterion = r.criterion.unwrap_or(self.cfg.criterion);
+            let state = BlockState::new(self.model.k(), criterion, max_len)
+                .with_min_block(self.cfg.min_block.max(1).min(self.model.k()));
+            self.metrics.on_request();
+            self.slots[slot] = Some(Slot { request: r, state, admitted: Instant::now() });
+        }
+        Ok(())
+    }
+
+    /// One engine iteration. Returns false when fully idle and the queue
+    /// is closed (time to exit).
+    pub fn step(&mut self) -> Result<bool> {
+        self.refill()?;
+        let active = self.active();
+        if active == 0 {
+            if self.stop.load(Ordering::Relaxed) && self.queue.is_empty() {
+                return Ok(false);
+            }
+            // idle — wait for work (pop_batch blocks inside refill next turn)
+            std::thread::sleep(Duration::from_micros(200));
+            return Ok(true);
+        }
+
+        // build decoder-input rows
+        for i in 0..self.bucket {
+            match &self.slots[i] {
+                Some(s) => s.state.build_row(self.tgt_in.row_mut(i)),
+                None => self.tgt_in.row_mut(i).fill(PAD),
+            }
+        }
+
+        let scores = self.model.decode_topk(&self.memory, &self.src, &self.tgt_in)?;
+        self.metrics.on_invocation(active, self.bucket);
+
+        for i in 0..self.bucket {
+            let finished = {
+                let Some(s) = self.slots[i].as_mut() else { continue };
+                let had_proposals = !s.state.proposals.is_empty();
+                let k_hat = s.state.absorb(&scores, i);
+                if had_proposals {
+                    self.metrics.on_accept(k_hat);
+                }
+                s.state.done
+            };
+            if finished {
+                let slot = self.slots[i].take().unwrap();
+                let e2e = slot.request.arrived.elapsed();
+                let queued = slot.admitted.duration_since(slot.request.arrived);
+                let resp = Response {
+                    id: slot.request.id,
+                    tokens: slot.state.accepted.clone(),
+                    stats: slot.state.stats.clone(),
+                    queued,
+                    e2e,
+                    error: None,
+                };
+                self.metrics.on_complete(queued, e2e, resp.tokens.len());
+                let _ = slot.request.respond.send(resp);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Run until stopped and drained.
+    pub fn run(&mut self) -> Result<()> {
+        log::info!(
+            "engine up: variant={} k={} bucket={} criterion={}",
+            self.model.spec.name,
+            self.model.k(),
+            self.bucket,
+            self.cfg.criterion.label()
+        );
+        while self.step()? {}
+        log::info!("engine drained, exiting");
+        Ok(())
+    }
+}
+
+/// Handle used by producers to submit work and await the response.
+pub struct Submitter {
+    queue: Arc<RequestQueue>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Submitter {
+    pub fn new(queue: Arc<RequestQueue>) -> Self {
+        Submitter { queue, next_id: std::sync::atomic::AtomicU64::new(1) }
+    }
+
+    /// Submit one source; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        src: Vec<i32>,
+        criterion: Option<Criterion>,
+    ) -> std::sync::mpsc::Receiver<Response> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit_with(src, criterion, tx);
+        rx
+    }
+
+    /// Submit with an externally-owned response channel.
+    pub fn submit_with(
+        &self,
+        src: Vec<i32>,
+        criterion: Option<Criterion>,
+        respond: Sender<Response>,
+    ) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue.push(Request {
+            id,
+            src,
+            criterion,
+            arrived: Instant::now(),
+            respond,
+        });
+        id
+    }
+}

@@ -1,0 +1,224 @@
+//! Request router: a threaded TCP server speaking a JSON-line protocol,
+//! feeding the engine's dynamic-batching queue, plus a matching client.
+//!
+//! Wire format (one JSON object per line):
+//!
+//! ```text
+//! -> {"src":[14,5,2], "criterion":"exact"}          // or "top2", "dist2"
+//! <- {"id":1, "tokens":[77,61,2], "invocations":3, "blocks":[2,1], "ms":4.2}
+//! ```
+//!
+//! Each connection gets a reader thread; responses are delivered through
+//! the per-request channel and written back in completion order.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::batching::{RequestQueue, Response};
+use crate::decoding::criteria::Criterion;
+use crate::scheduler::Submitter;
+use crate::util::json::Json;
+
+/// Parse the wire name of a criterion ("exact", "topK", "distE").
+pub fn parse_criterion(s: &str) -> Option<Criterion> {
+    if s == "exact" {
+        return Some(Criterion::Exact);
+    }
+    if let Some(k) = s.strip_prefix("top") {
+        return k.parse().ok().map(Criterion::TopK);
+    }
+    if let Some(e) = s.strip_prefix("dist") {
+        return e.parse().ok().map(Criterion::Distance);
+    }
+    None
+}
+
+/// Serialize a response line.
+pub fn response_json(r: &Response) -> String {
+    let mut obj = vec![
+        ("id", Json::Num(r.id as f64)),
+        ("tokens", Json::arr_i32(&r.tokens)),
+        ("invocations", Json::Num(r.stats.invocations as f64)),
+        (
+            "blocks",
+            Json::Arr(r.stats.accepted_blocks.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        ("ms", Json::Num(r.e2e.as_secs_f64() * 1000.0)),
+    ];
+    if let Some(e) = &r.error {
+        obj.push(("error", Json::Str(e.clone())));
+    }
+    Json::obj(obj).to_string()
+}
+
+/// The TCP front end. Binds immediately; `serve` loops on accept.
+pub struct Server {
+    listener: TcpListener,
+    submitter: Arc<Submitter>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, queue: Arc<RequestQueue>, stop: Arc<AtomicBool>) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Server { listener, submitter: Arc::new(Submitter::new(queue)), stop })
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// Accept loop; returns when `stop` is set.
+    pub fn serve(&self) -> Result<()> {
+        log::info!("server listening on {}", self.local_addr());
+        let mut handles: Vec<JoinHandle<()>> = vec![];
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    log::debug!("connection from {peer}");
+                    let submitter = self.submitter.clone();
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, submitter) {
+                            log::debug!("connection ended: {e:#}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, submitter: Arc<Submitter>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match serve_line(&line, &submitter) {
+            Ok(resp) => response_json(&resp),
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Handle one request line synchronously (submit + await).
+fn serve_line(line: &str, submitter: &Submitter) -> Result<Response> {
+    let j = Json::parse(line).context("request json")?;
+    let src = j.get("src")?.as_ids()?;
+    anyhow::ensure!(!src.is_empty(), "empty src");
+    let criterion = match j.opt("criterion") {
+        Some(c) => Some(
+            parse_criterion(c.as_str()?)
+                .ok_or_else(|| anyhow::anyhow!("bad criterion {:?}", c))?,
+        ),
+        None => None,
+    };
+    let (tx, rx) = channel();
+    submitter.submit_with(src, criterion, tx);
+    rx.recv().context("engine dropped the request")
+}
+
+/// Line-protocol client (used by examples, tests, and the load generator).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Client-side view of a completed request.
+#[derive(Debug, Clone)]
+pub struct ClientResult {
+    pub tokens: Vec<i32>,
+    pub invocations: usize,
+    pub blocks: Vec<usize>,
+    pub ms: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn decode(&mut self, src: &[i32], criterion: Option<&str>) -> Result<ClientResult> {
+        let mut obj = vec![("src", Json::arr_i32(src))];
+        if let Some(c) = criterion {
+            obj.push(("criterion", Json::Str(c.to_string())));
+        }
+        let line = Json::obj(obj).to_string();
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        let j = Json::parse(reply.trim()).context("response json")?;
+        if let Some(e) = j.opt("error") {
+            anyhow::bail!("server error: {}", e.as_str().unwrap_or("?"));
+        }
+        Ok(ClientResult {
+            tokens: j.get("tokens")?.as_ids()?,
+            invocations: j.get("invocations")?.as_usize()?,
+            blocks: j
+                .get("blocks")?
+                .as_arr()?
+                .iter()
+                .map(|b| Ok::<usize, anyhow::Error>(b.as_usize()?))
+                .collect::<Result<_>>()?,
+            ms: j.get("ms")?.as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn criterion_names() {
+        assert_eq!(parse_criterion("exact"), Some(Criterion::Exact));
+        assert_eq!(parse_criterion("top2"), Some(Criterion::TopK(2)));
+        assert_eq!(parse_criterion("dist2"), Some(Criterion::Distance(2)));
+        assert_eq!(parse_criterion("nope"), None);
+        assert_eq!(parse_criterion("top"), None);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        use crate::decoding::state::BlockStats;
+        let r = Response {
+            id: 3,
+            tokens: vec![5, 6, 2],
+            stats: BlockStats { accepted_blocks: vec![2, 1], invocations: 3 },
+            queued: std::time::Duration::from_millis(1),
+            e2e: std::time::Duration::from_millis(7),
+            error: None,
+        };
+        let j = Json::parse(&response_json(&r)).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("tokens").unwrap().as_ids().unwrap(), vec![5, 6, 2]);
+        assert_eq!(j.get("invocations").unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -1,0 +1,139 @@
+//! Token conventions shared with `python/compile/data.py`, plus the text
+//! vocabulary (for pretty-printing traces) and the image intensity
+//! tokenizer used by the super-resolution task.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const NUM_SPECIALS: i32 = 3;
+
+/// Text vocabulary (id <-> word), loaded from artifacts/data/vocab.json.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    words: Vec<String>,
+}
+
+impl Vocab {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let words = j
+            .get("words")?
+            .as_arr()?
+            .iter()
+            .map(|w| Ok::<String, anyhow::Error>(w.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(words.len() > NUM_SPECIALS as usize, "vocab too small");
+        Ok(Vocab { words })
+    }
+
+    pub fn size(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Render a token sequence, dropping PAD, keeping EOS marker.
+    pub fn render(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&t| t != PAD)
+            .map(|&t| self.word(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn id(&self, word: &str) -> Option<i32> {
+        self.words.iter().position(|w| w == word).map(|i| i as i32)
+    }
+}
+
+/// Image intensity <-> token mapping (SR task). Intensities 0..=255 are
+/// offset past the specials, matching `data.intensity_to_token`.
+pub fn intensity_to_token(v: i32) -> i32 {
+    v.clamp(0, 255) + NUM_SPECIALS
+}
+
+pub fn token_to_intensity(t: i32) -> i32 {
+    (t - NUM_SPECIALS).clamp(0, 255)
+}
+
+/// Is this token an image intensity (vs a special)?
+pub fn is_intensity(t: i32) -> bool {
+    (NUM_SPECIALS..NUM_SPECIALS + 256).contains(&t)
+}
+
+/// Render a square grayscale image (raster-order intensity tokens) as
+/// ASCII art (for the superres example).
+pub fn render_ascii(tokens: &[i32], side: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut out = String::new();
+    for y in 0..side {
+        for x in 0..side {
+            let t = tokens.get(y * side + x).copied().unwrap_or(PAD);
+            let v = token_to_intensity(t) as usize;
+            let c = RAMP[(v * (RAMP.len() - 1)) / 255] as char;
+            out.push(c);
+            out.push(c);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_roundtrip() {
+        for v in [0, 1, 128, 255] {
+            assert_eq!(token_to_intensity(intensity_to_token(v)), v);
+        }
+        assert_eq!(intensity_to_token(-5), NUM_SPECIALS);
+        assert_eq!(intensity_to_token(999), NUM_SPECIALS + 255);
+    }
+
+    #[test]
+    fn specials_are_not_intensities() {
+        assert!(!is_intensity(PAD));
+        assert!(!is_intensity(BOS));
+        assert!(!is_intensity(EOS));
+        assert!(is_intensity(NUM_SPECIALS));
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let tokens: Vec<i32> = (0..16).map(|i| intensity_to_token(i * 16)).collect();
+        let s = render_ascii(&tokens, 4);
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.lines().all(|l| l.chars().count() == 8));
+    }
+
+    #[test]
+    fn vocab_load() {
+        let dir = std::env::temp_dir().join("bd_vocab_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("vocab.json"),
+            r#"{"words":["<pad>","<bos>","<eos>","noun0","verb0"],"specials":{"pad":0,"bos":1,"eos":2}}"#,
+        )
+        .unwrap();
+        let v = Vocab::load(&dir.join("vocab.json")).unwrap();
+        assert_eq!(v.size(), 5);
+        assert_eq!(v.word(3), "noun0");
+        assert_eq!(v.id("verb0"), Some(4));
+        assert_eq!(v.render(&[3, 4, 2, 0, 0]), "noun0 verb0 <eos>");
+    }
+}

@@ -1,0 +1,230 @@
+//! Tiny declarative CLI parser (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option: {0}")]
+    Unknown(String),
+    #[error("option {0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for {0}: {1}")]
+    Invalid(String, String),
+    #[error("{0}")]
+    Usage(String),
+}
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<&'static str>,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    cmd: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed result.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(cmd: &'static str, about: &'static str) -> Self {
+        ArgSpec { cmd, about, opts: vec![], positional: vec![] }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.cmd, self.about);
+        for o in &self.opts {
+            let v = if o.takes_value {
+                format!(" <value>{}", o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default())
+            } else {
+                String::new()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, v, o.help));
+        }
+        for (n, h) in &self.positional {
+            s.push_str(&format!("  <{n}>  {h}\n"));
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, ArgError> {
+        let mut values = BTreeMap::new();
+        let mut flags = vec![];
+        let mut positional = vec![];
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(ArgError::Usage(self.usage()));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| ArgError::Unknown(a.clone()))?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError::MissingValue(name.into()))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, ArgError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| ArgError::Invalid(name.into(), v))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, ArgError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| ArgError::Invalid(name.into(), v))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated usize list ("2,4,6").
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, ArgError> {
+        let v = self.str(name);
+        v.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|_| ArgError::Invalid(name.into(), v.clone())))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "a test command")
+            .opt("k", "8", "block size")
+            .opt("name", "x", "variant name")
+            .flag("verbose", "log more")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize("k").unwrap(), 8);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = spec().parse(&argv(&["--k", "4", "--verbose"])).unwrap();
+        assert_eq!(a.usize("k").unwrap(), 4);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = spec().parse(&argv(&["--k=10"])).unwrap();
+        assert_eq!(a.usize("k").unwrap(), 10);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(spec().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&argv(&["--k"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse(&argv(&["file1", "--k", "2", "file2"])).unwrap();
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let s = ArgSpec::new("t", "").opt("ks", "2,4,6", "");
+        let a = s.parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize_list("ks").unwrap(), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn help_is_usage_error() {
+        assert!(matches!(spec().parse(&argv(&["--help"])), Err(ArgError::Usage(_))));
+    }
+}

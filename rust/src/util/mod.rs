@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-repo (the offline crate set has no
+//! serde/clap/rand/criterion — see DESIGN.md §1).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

@@ -1,0 +1,207 @@
+//! Statistics substrate: summary stats, percentiles, histograms, and the
+//! bootstrap confidence intervals used by the Table 3 preference evaluation
+//! (the paper reports 90% bootstrap CIs over pairwise votes).
+
+use crate::util::rng::Rng;
+
+/// Summary of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0,1]. Input need not be sorted.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, q)
+}
+
+pub fn percentile_sorted(s: &[f64], q: f64) -> f64 {
+    if s.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: std_dev(xs),
+        min: s.first().copied().unwrap_or(f64::NAN),
+        max: s.last().copied().unwrap_or(f64::NAN),
+        p50: percentile_sorted(&s, 0.5),
+        p90: percentile_sorted(&s, 0.9),
+        p99: percentile_sorted(&s, 0.99),
+    }
+}
+
+/// Percentile bootstrap CI for the mean of `xs`.
+///
+/// `level` 0.90 reproduces the paper's Table 3 interval convention.
+pub fn bootstrap_ci(xs: &[f64], level: f64, iters: usize, seed: u64) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let mut rng = Rng::new(seed);
+    let mut means = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut acc = 0.0;
+        for _ in 0..xs.len() {
+            acc += xs[rng.below(xs.len())];
+        }
+        means.push(acc / xs.len() as f64);
+    }
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - level) / 2.0;
+    (
+        percentile_sorted(&means, alpha),
+        percentile_sorted(&means, 1.0 - alpha),
+    )
+}
+
+/// Fixed-bucket latency histogram (microseconds, log-spaced-ish buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    values: Vec<f64>, // retained for exact percentiles at report time
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 1us .. ~100s in x2 steps
+        let mut bounds = vec![];
+        let mut b = 1.0;
+        while b < 1e8 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], values: vec![] }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.values.push(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn summary(&self) -> Summary {
+        summarize(&self.values)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.values.extend_from_slice(&other.values);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_covers_true_mean() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..500).map(|_| 5.0 + rng.normal()).collect();
+        let (lo, hi) = bootstrap_ci(&xs, 0.9, 500, 7);
+        assert!(lo < 5.0 + 0.3 && hi > 5.0 - 0.3, "({lo},{hi})");
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn bootstrap_is_deterministic() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(bootstrap_ci(&xs, 0.9, 200, 1), bootstrap_ci(&xs, 0.9, 200, 1));
+    }
+
+    #[test]
+    fn histogram_counts_and_summary() {
+        let mut h = Histogram::new();
+        for v in [10.0, 20.0, 30.0, 1e6] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        let s = h.summary();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.max, 1e6);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(5.0);
+        b.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

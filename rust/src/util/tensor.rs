@@ -1,0 +1,119 @@
+//! Host-side dense tensors (row-major) used between the coordinator and the
+//! PJRT runtime: request batches are assembled into `TensorI32`/`TensorF32`
+//! and converted to/from `xla::Literal`s at the runtime boundary.
+
+/// Row-major i32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Row-major strides for `dims`.
+pub fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+macro_rules! tensor_impl {
+    ($ty:ident, $elem:ty) => {
+        impl $ty {
+            pub fn zeros(dims: &[usize]) -> Self {
+                Self { dims: dims.to_vec(), data: vec![0 as $elem; numel(dims)] }
+            }
+
+            pub fn from_vec(dims: &[usize], data: Vec<$elem>) -> Self {
+                assert_eq!(numel(dims), data.len(), "shape/data mismatch");
+                Self { dims: dims.to_vec(), data }
+            }
+
+            pub fn numel(&self) -> usize {
+                self.data.len()
+            }
+
+            /// Flat index for a multi-index (debug-checked).
+            pub fn idx(&self, ix: &[usize]) -> usize {
+                debug_assert_eq!(ix.len(), self.dims.len());
+                let st = strides(&self.dims);
+                let mut off = 0;
+                for (i, (&x, &s)) in ix.iter().zip(&st).enumerate() {
+                    debug_assert!(x < self.dims[i], "index {x} out of bound {}", self.dims[i]);
+                    off += x * s;
+                }
+                off
+            }
+
+            pub fn get(&self, ix: &[usize]) -> $elem {
+                self.data[self.idx(ix)]
+            }
+
+            pub fn set(&mut self, ix: &[usize], v: $elem) {
+                let i = self.idx(ix);
+                self.data[i] = v;
+            }
+
+            /// Mutable row `r` of a 2-D tensor.
+            pub fn row_mut(&mut self, r: usize) -> &mut [$elem] {
+                assert_eq!(self.dims.len(), 2);
+                let w = self.dims[1];
+                &mut self.data[r * w..(r + 1) * w]
+            }
+
+            pub fn row(&self, r: usize) -> &[$elem] {
+                assert_eq!(self.dims.len(), 2);
+                let w = self.dims[1];
+                &self.data[r * w..(r + 1) * w]
+            }
+        }
+    };
+}
+
+tensor_impl!(TensorI32, i32);
+tensor_impl!(TensorF32, f32);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+    }
+
+    #[test]
+    fn index_math() {
+        let mut t = TensorI32::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 42);
+        assert_eq!(t.get(&[1, 2, 3]), 42);
+        assert_eq!(t.data[1 * 12 + 2 * 4 + 3], 42);
+    }
+
+    #[test]
+    fn rows() {
+        let mut t = TensorI32::zeros(&[3, 4]);
+        t.row_mut(1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(t.row(1), &[1, 2, 3, 4]);
+        assert_eq!(t.row(0), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        TensorF32::from_vec(&[2, 2], vec![0.0; 3]);
+    }
+}

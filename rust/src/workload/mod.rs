@@ -1,0 +1,167 @@
+//! Workloads: evaluation datasets (emitted by the python build path — the
+//! single source of truth) and synthetic request streams with realistic
+//! arrival processes for the serving benchmarks.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One evaluation example.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub src: Vec<i32>,
+    pub reference: Vec<i32>,
+}
+
+/// An evaluation dataset (mt_dev / mt_test / sr_dev).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub rows: Vec<Row>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let mut rows = Vec::new();
+        for r in j.as_arr()? {
+            rows.push(Row { src: r.get("src")?.as_ids()?, reference: r.get("ref")?.as_ids()? });
+        }
+        anyhow::ensure!(!rows.is_empty(), "empty dataset {}", path.display());
+        Ok(Dataset { rows })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn srcs(&self) -> Vec<Vec<i32>> {
+        self.rows.iter().map(|r| r.src.clone()).collect()
+    }
+
+    pub fn refs(&self) -> Vec<Vec<i32>> {
+        self.rows.iter().map(|r| r.reference.clone()).collect()
+    }
+}
+
+/// Arrival process for request streams.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson process at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// On/off bursts: `burst` back-to-back requests, then `idle_ms` quiet.
+    Bursty { burst: usize, idle_ms: u64 },
+    /// Everything at t=0 (offline/batch evaluation).
+    Closed,
+}
+
+/// A generated request stream: (arrival offset, source tokens).
+#[derive(Debug, Clone)]
+pub struct RequestStream {
+    pub items: Vec<(Duration, Vec<i32>)>,
+}
+
+impl RequestStream {
+    /// Sample `n` requests from dataset rows under the arrival process.
+    pub fn generate(ds: &Dataset, n: usize, arrival: Arrival, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let mut items = Vec::with_capacity(n);
+        let mut burst_i = 0usize;
+        for i in 0..n {
+            let row = &ds.rows[rng.below(ds.rows.len())];
+            let at = match arrival {
+                Arrival::Closed => 0.0,
+                Arrival::Poisson { rate } => {
+                    t += rng.exp(rate);
+                    t
+                }
+                Arrival::Bursty { burst, idle_ms } => {
+                    if i > 0 && burst_i == 0 {
+                        t += idle_ms as f64 / 1000.0;
+                    }
+                    burst_i = (burst_i + 1) % burst.max(1);
+                    t
+                }
+            };
+            items.push((Duration::from_secs_f64(at), row.src.clone()));
+        }
+        RequestStream { items }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_ds(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bd_workload_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(br#"[{"src":[4,5,2],"ref":[7,8,2]},{"src":[6,2],"ref":[9,2]}]"#)
+            .unwrap();
+        p
+    }
+
+    #[test]
+    fn dataset_loads() {
+        let p = write_ds("ds.json");
+        let d = Dataset::load(&p).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.rows[0].src, vec![4, 5, 2]);
+        assert_eq!(d.rows[1].reference, vec![9, 2]);
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let p = write_ds("ds2.json");
+        let d = Dataset::load(&p).unwrap();
+        let s = RequestStream::generate(&d, 50, Arrival::Poisson { rate: 100.0 }, 1);
+        assert_eq!(s.items.len(), 50);
+        for w in s.items.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert!(s.items.last().unwrap().0 > Duration::ZERO);
+    }
+
+    #[test]
+    fn closed_arrivals_all_zero() {
+        let p = write_ds("ds3.json");
+        let d = Dataset::load(&p).unwrap();
+        let s = RequestStream::generate(&d, 10, Arrival::Closed, 2);
+        assert!(s.items.iter().all(|(t, _)| *t == Duration::ZERO));
+    }
+
+    #[test]
+    fn bursty_has_gaps() {
+        let p = write_ds("ds4.json");
+        let d = Dataset::load(&p).unwrap();
+        let s = RequestStream::generate(&d, 9, Arrival::Bursty { burst: 3, idle_ms: 100 }, 3);
+        let t0 = s.items[2].0;
+        let t1 = s.items[3].0;
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let p = write_ds("ds5.json");
+        let d = Dataset::load(&p).unwrap();
+        let a = RequestStream::generate(&d, 10, Arrival::Poisson { rate: 10.0 }, 7);
+        let b = RequestStream::generate(&d, 10, Arrival::Poisson { rate: 10.0 }, 7);
+        assert_eq!(a.items.len(), b.items.len());
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x, y);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Coordinator integration: server + continuous-batching engine + client
+//! over real TCP and real artifacts. Verifies the serving path returns
+//! exactly what the offline decoder computes, under concurrent load and
+//! mixed per-request criteria.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use blockdecode::batching::RequestQueue;
+use blockdecode::decoding::{self, BlockwiseConfig};
+use blockdecode::metrics::Metrics;
+use blockdecode::model::ScoringModel;
+use blockdecode::runtime::{Manifest, Runtime};
+use blockdecode::scheduler::{Engine, EngineConfig};
+use blockdecode::server::{Client, Server};
+use blockdecode::workload::Dataset;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn served_results_match_offline_decode() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&root).unwrap();
+    let dev = Dataset::load(&manifest.data_file("mt_dev.json")).unwrap();
+    let n = 12usize;
+    let srcs: Vec<Vec<i32>> = dev.rows.iter().take(n).map(|r| r.src.clone()).collect();
+
+    let queue = Arc::new(RequestQueue::new());
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let server = Server::bind("127.0.0.1:0", queue.clone(), stop.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+
+    // clients: 3 concurrent connections, interleaved criteria
+    let addr2 = addr.clone();
+    let srcs2 = srcs.clone();
+    let stop2 = stop.clone();
+    let clients = std::thread::spawn(move || {
+        let mut handles = vec![];
+        for lane in 0..3usize {
+            let addr = addr2.clone();
+            let srcs = srcs2.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let mut got = vec![];
+                for (i, s) in srcs.iter().enumerate() {
+                    if i % 3 != lane {
+                        continue;
+                    }
+                    let crit = if i % 2 == 0 { None } else { Some("exact") };
+                    let r = c.decode(s, crit).unwrap();
+                    assert!(!r.tokens.is_empty());
+                    assert!(r.invocations >= 1);
+                    assert_eq!(r.blocks.iter().sum::<usize>(), r.tokens.len());
+                    got.push((i, r.tokens));
+                }
+                got
+            }));
+        }
+        let mut all: Vec<(usize, Vec<i32>)> = vec![];
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        stop2.store(true, Ordering::Relaxed);
+        all
+    });
+
+    // engine on the main thread (owns PJRT)
+    let rt = std::rc::Rc::new(Runtime::cpu().unwrap());
+    let model = ScoringModel::load(rt.clone(), &manifest, "mt_k8_both").unwrap();
+    let mut engine = Engine::new(
+        model,
+        EngineConfig::default(),
+        queue.clone(),
+        metrics.clone(),
+        stop.clone(),
+    );
+    engine.run().unwrap();
+    let mut served = clients.join().unwrap();
+    let _ = srv.join();
+    served.sort_by_key(|(i, _)| *i);
+    assert_eq!(served.len(), n);
+
+    // offline reference with the same variant + criterion
+    let model = ScoringModel::load(rt, &manifest, "mt_k8_both").unwrap();
+    for (i, tokens) in &served {
+        let offline = decoding::blockwise_decode(
+            &model,
+            std::slice::from_ref(&srcs[*i]),
+            &BlockwiseConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(&offline[0].tokens, tokens, "served row {i} differs from offline");
+    }
+
+    // engine metrics are consistent
+    let report = metrics.report(std::time::Instant::now());
+    assert_eq!(report.completed, n as u64);
+    assert_eq!(report.failed, 0);
+    assert!(report.mean_accepted_block >= 1.0);
+}

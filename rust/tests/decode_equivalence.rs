@@ -1,0 +1,117 @@
+//! Integration tests over the real artifacts (require `make artifacts`).
+//!
+//! The central invariant (§3): blockwise parallel decoding with the exact
+//! acceptance criterion produces *identical* output to greedy decoding,
+//! while consuming no more model invocations.
+//!
+//! The MT checks share one PJRT runtime/compile cache (compilation of the
+//! entry points dominates the wall time, so the assertions are grouped
+//! into one test per task).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
+use blockdecode::model::ScoringModel;
+use blockdecode::runtime::{Manifest, Runtime};
+use blockdecode::workload::Dataset;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn mt_blockwise_invariants() {
+    let root = require_artifacts!();
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let dev = Dataset::load(&manifest.data_file("mt_dev.json")).unwrap();
+    let srcs: Vec<Vec<i32>> = dev.rows.iter().take(8).map(|r| r.src.clone()).collect();
+
+    // --- base model: blockwise(exact) == greedy, even at k=1
+    let base = ScoringModel::load(rt.clone(), &manifest, "mt_base").unwrap();
+    let g = decoding::greedy_decode(&base, &srcs, None).unwrap();
+    let b = decoding::blockwise_decode(&base, &srcs, &BlockwiseConfig::default()).unwrap();
+    for (gg, bb) in g.iter().zip(&b) {
+        assert_eq!(gg.tokens, bb.tokens, "k=1 blockwise must equal greedy");
+    }
+    drop(base);
+
+    // --- k=8 combined model
+    let model = ScoringModel::load(rt.clone(), &manifest, "mt_k8_both").unwrap();
+    let greedy = decoding::greedy_decode(&model, &srcs, None).unwrap();
+    let block = decoding::blockwise_decode(&model, &srcs, &BlockwiseConfig::default()).unwrap();
+    for (g, b) in greedy.iter().zip(&block) {
+        // 1. exact-match acceptance reproduces greedy exactly (§3)
+        assert_eq!(g.tokens, b.tokens, "blockwise(exact) must equal greedy");
+        // 2. it never uses more invocations (m -> ~m/k̂ + 1)
+        assert!(
+            b.stats.invocations <= g.stats.invocations + 1,
+            "blockwise {} invocations vs greedy {}",
+            b.stats.invocations,
+            g.stats.invocations
+        );
+        // 3. outputs are well-formed
+        assert!(!b.tokens.is_empty());
+        assert!(b.tokens.len() < model.max_tgt());
+        for &t in &b.tokens[..b.tokens.len() - 1] {
+            assert!(t != blockdecode::tokenizer::PAD && t != blockdecode::tokenizer::BOS);
+            assert_ne!(t, blockdecode::tokenizer::EOS);
+        }
+        // 4. per-step accounting adds up
+        let total: usize = b.stats.accepted_blocks.iter().sum();
+        assert_eq!(total, b.tokens.len());
+        // 5. every accepted block is within [1, k]
+        for &blk in &b.stats.accepted_blocks {
+            assert!((1..=model.k()).contains(&blk));
+        }
+    }
+    // speed signal exists on a trained model
+    let mean = decoding::mean_accepted_block(&block);
+    assert!(mean > 1.0, "trained k=8 model should accept >1 token/step, got {mean}");
+
+    // --- relaxing the criterion can only help block size
+    let top2 = decoding::blockwise_decode(
+        &model,
+        &srcs,
+        &BlockwiseConfig { criterion: Criterion::TopK(2), ..Default::default() },
+    )
+    .unwrap();
+    let m_top2 = decoding::mean_accepted_block(&top2);
+    assert!(m_top2 >= mean - 0.25, "top-2 mean {m_top2} well below exact {mean}");
+
+    // --- single-sentence bucket path agrees with the batched path
+    let single =
+        decoding::blockwise_decode(&model, &srcs[..1], &BlockwiseConfig::default()).unwrap();
+    assert_eq!(single[0].tokens, block[0].tokens, "b1 and b8 buckets disagree");
+}
+
+#[test]
+fn sr_distance_criterion_decodes() {
+    let root = require_artifacts!();
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let model = ScoringModel::load(rt, &manifest, "sr_k8_ft").unwrap();
+    let dev = Dataset::load(&manifest.data_file("sr_dev.json")).unwrap();
+    let srcs: Vec<Vec<i32>> = dev.rows.iter().take(1).map(|r| r.src.clone()).collect();
+    let cfg = BlockwiseConfig { criterion: Criterion::Distance(2), ..Default::default() };
+    let out = decoding::blockwise_decode(&model, &srcs, &cfg).unwrap();
+    for r in &out {
+        // SR decodes must produce (close to) a full raster
+        assert!(r.tokens.len() >= 256, "short SR output: {}", r.tokens.len());
+        assert!(r.stats.mean_block() >= 1.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Property tests of the blockwise algorithm and coordinator invariants,
+//! driven by the simulated scoring model (`testing::sim`) — no PJRT, so
+//! these sweep hundreds of cases quickly.
+
+use blockdecode::decoding::state::BlockState;
+use blockdecode::decoding::Criterion;
+use blockdecode::testing::sim::{sim_blockwise, SimModel};
+use blockdecode::testing::{check, gen_src};
+use blockdecode::tokenizer::EOS;
+
+/// §3's core guarantee across random models/sources/agreement levels:
+/// exact-criterion blockwise output == greedy output, with fewer calls.
+#[test]
+fn prop_exact_blockwise_equals_greedy() {
+    check("exact==greedy", 120, |rng| {
+        let k = 1 + rng.below(9);
+        let agreement = rng.f64();
+        let vocab = 20 + rng.below(200);
+        let mean_len = 4 + rng.below(20);
+        let m = SimModel::new(vocab, k, agreement, mean_len, rng.next_u64());
+        let src = gen_src(rng, vocab, 12);
+        let max_len = 4 + rng.below(28);
+        let greedy = m.greedy(&src, max_len);
+        let (block, inv, blocks) = sim_blockwise(&m, &src, Criterion::Exact, max_len);
+        assert_eq!(block, greedy);
+        assert!(inv <= greedy.len() + 1, "inv {inv} > len+1 {}", greedy.len() + 1);
+        let total: usize = blocks.iter().sum();
+        assert_eq!(total, block.len());
+        assert!(blocks.iter().all(|&b| b >= 1 && b <= k));
+    });
+}
+
+/// Iteration count shrinks monotonically (weakly) in proposal quality.
+#[test]
+fn prop_invocations_decrease_with_agreement() {
+    check("agreement-monotone", 40, |rng| {
+        let k = 2 + rng.below(8);
+        let vocab = 30 + rng.below(100);
+        let seed = rng.next_u64();
+        let src = gen_src(rng, vocab, 10);
+        let max_len = 20;
+        // same underlying p1 (same seed), increasing proposal agreement
+        let lo = SimModel::new(vocab, k, 0.0, 12, seed);
+        let hi = SimModel::new(vocab, k, 1.0, 12, seed);
+        let (out_lo, inv_lo, _) = sim_blockwise(&lo, &src, Criterion::Exact, max_len);
+        let (out_hi, inv_hi, _) = sim_blockwise(&hi, &src, Criterion::Exact, max_len);
+        assert_eq!(out_lo, out_hi, "p1 identical -> outputs identical");
+        assert!(
+            inv_hi <= inv_lo,
+            "perfect proposals used more invocations ({inv_hi} > {inv_lo})"
+        );
+    });
+}
+
+/// Relaxing the acceptance criterion never reduces the accepted block
+/// sizes for the *same* proposals (per-step dominance).
+#[test]
+fn prop_criterion_relaxation_monotone() {
+    check("criterion-monotone", 60, |rng| {
+        let k = 2 + rng.below(6);
+        let vocab = 40 + rng.below(60);
+        let m = SimModel::new(vocab, k, 0.5 + rng.f64() * 0.5, 10, rng.next_u64());
+        let src = gen_src(rng, vocab, 8);
+        let (_, inv_exact, _) = sim_blockwise(&m, &src, Criterion::Exact, 20);
+        let (_, inv_top3, _) = sim_blockwise(&m, &src, Criterion::TopK(3), 20);
+        // top-3 accepts a superset of exact per step, so with the sim's
+        // deterministic re-proposal the invocation count cannot increase
+        // by more than the length difference; sanity-bound it
+        assert!(inv_top3 <= inv_exact + 2, "top3 {inv_top3} vs exact {inv_exact}");
+    });
+}
+
+/// Minimum block size (§5.3): at least min(l, window) tokens per step.
+#[test]
+fn prop_min_block_floor_respected() {
+    check("min-block", 60, |rng| {
+        let k = 3 + rng.below(5);
+        let l = 2 + rng.below(k - 1);
+        let vocab = 50;
+        let m = SimModel::new(vocab, k, rng.f64() * 0.5, 14, rng.next_u64());
+        let src = gen_src(rng, vocab, 8);
+        let max_len = 24;
+
+        // drive BlockState manually with min_block
+        let mut st = BlockState::new(k, Criterion::Exact, max_len).with_min_block(l);
+        let t_len = max_len + 1;
+        let mut steps = 0;
+        while !st.done && steps < 100 {
+            let mut row = vec![0i32; t_len];
+            st.build_row(&mut row);
+            let used = 1 + st.accepted.len() + st.proposals.len();
+            let scores = m.score_rows(&src, &[row[..used].to_vec()], t_len);
+            let had = !st.proposals.is_empty();
+            let window = st.proposals.len();
+            let k_hat = st.absorb(&scores, 0);
+            if had && !st.done {
+                assert!(k_hat >= l.min(window), "k_hat {k_hat} < floor {}", l.min(window));
+            }
+            steps += 1;
+        }
+        // every accepted token still yields a well-formed output
+        let total: usize = st.stats.accepted_blocks.iter().sum();
+        assert_eq!(total, st.accepted.len());
+    });
+}
+
+/// EOS handling: the hypothesis never contains tokens after EOS.
+#[test]
+fn prop_eos_terminates() {
+    check("eos-terminates", 80, |rng| {
+        let m = SimModel::new(60, 1 + rng.below(8), rng.f64(), 3 + rng.below(5), rng.next_u64());
+        let src = gen_src(rng, 60, 8);
+        let (out, _, _) = sim_blockwise(&m, &src, Criterion::Exact, 30);
+        if let Some(p) = out.iter().position(|&t| t == EOS) {
+            assert_eq!(p, out.len() - 1, "tokens after EOS in {out:?}");
+        }
+    });
+}
+
+/// Batch independence: decoding a row alone or alongside other rows gives
+/// the same result (padding rows are inert).
+#[test]
+fn prop_batch_row_independence() {
+    check("batch-independence", 40, |rng| {
+        let k = 2 + rng.below(6);
+        let m = SimModel::new(80, k, 0.7, 10, rng.next_u64());
+        let src_a = gen_src(rng, 80, 8);
+        let src_b = gen_src(rng, 80, 8);
+        // simulate "batching" by scoring rows individually vs together —
+        // score_rows is per-row deterministic, so this checks the state
+        // machine's row-index handling
+        let (a_solo, _, _) = sim_blockwise(&m, &src_a, Criterion::Exact, 16);
+        let (a_again, _, _) = sim_blockwise(&m, &src_a, Criterion::Exact, 16);
+        let (b_solo, _, _) = sim_blockwise(&m, &src_b, Criterion::Exact, 16);
+        assert_eq!(a_solo, a_again);
+        // and a/b don't interfere through shared state
+        let (a_after_b, _, _) = sim_blockwise(&m, &src_a, Criterion::Exact, 16);
+        assert_eq!(a_solo, a_after_b);
+        let _ = b_solo;
+    });
+}
