@@ -116,7 +116,7 @@ fn run_service(variant: &str, stream: &RequestStream) -> Result<String> {
         queue.clone(),
         metrics.clone(),
         stop.clone(),
-    );
+    )?;
     let t0 = Instant::now();
     engine.run()?;
     let (done, lat) = load.join().unwrap()?;

@@ -55,12 +55,12 @@ fn main() {
     b.case("upload/src_i32[8,S]", "B", || {
         let buf = ctx.rt.upload_i32(&src8).unwrap();
         std::hint::black_box(&buf);
-        src8.data.len() * 4
+        buf.bytes as usize
     });
     b.case("upload/memory_f32[8,S,D]", "B", || {
         let buf = ctx.rt.upload_f32(&mem8).unwrap();
         std::hint::black_box(&buf);
-        mem8.data.len() * 4
+        buf.bytes as usize
     });
 
     // model invocations per bucket
@@ -77,21 +77,58 @@ fn main() {
         std::hint::black_box(&m);
         8
     });
-    let memory = model.encode(&src_real).unwrap();
-    b.case("invoke/decode_b8 (scores+download)", "pos", || {
-        let sc = model.decode_topk(&memory, &src_real, &tgt8).unwrap();
+
+    // "before" shape: the pre-session decode path re-uploaded memory
+    // [B,S,D] f32 + src [B,S] i32 + tgt [B,T] i32 on *every* step —
+    // begin_session_with performs exactly those uploads from host
+    let memory8 = model.encode(&src_real).unwrap();
+    b.case("step/legacy_reupload_b8 (repin+step)", "pos", || {
+        let sess = model.begin_session_with(src_real.clone(), memory8.clone()).unwrap();
+        let sc = sess.step(&tgt8).unwrap();
+        std::hint::black_box(&sc);
+        8 * t
+    });
+
+    // "after" shape: one pinned session, steps upload only the decoder input
+    let session8 = model.begin_session(&src_real).unwrap();
+    b.case("step/session_b8 (tgt upload only)", "pos", || {
+        let sc = session8.step(&tgt8).unwrap();
         std::hint::black_box(&sc);
         8 * t
     });
 
     let src1 = TensorI32::from_vec(&[1, s], src_real.row(0).to_vec());
     let tgt1 = TensorI32::zeros(&[1, t]);
-    let mem1 = model.encode(&src1).unwrap();
-    b.case("invoke/decode_b1", "pos", || {
-        let sc = model.decode_topk(&mem1, &src1, &tgt1).unwrap();
+    let session1 = model.begin_session(&src1).unwrap();
+    b.case("step/session_b1", "pos", || {
+        let sc = session1.step(&tgt1).unwrap();
         std::hint::black_box(&sc);
         t
     });
+
+    // upload-byte accounting: a steady-state session step must transfer
+    // exactly the [B,T] i32 decoder input — the O(B·S·D·4)-byte memory and
+    // O(B·S·4)-byte src re-uploads of the old decode_topk path are gone
+    let before = ctx.rt.stats_snapshot();
+    let _ = session8.step(&tgt8).unwrap();
+    let per_step = ctx.rt.stats_snapshot().delta(&before);
+    let tgt_bytes = (8 * t * 4) as u64;
+    let legacy_bytes = (8 * s * d * 4 + 8 * s * 4) as u64 + tgt_bytes;
+    assert_eq!(
+        per_step.uploads, 1,
+        "steady-state step should perform exactly one host->device transfer"
+    );
+    assert_eq!(
+        per_step.bytes_uploaded, tgt_bytes,
+        "steady-state step should upload only the [B,T] i32 decoder input"
+    );
+    assert_eq!(per_step.executions, 1);
+    eprintln!(
+        "per-step upload: {} B (pre-session path: {} B -> {:.0}x reduction)",
+        tgt_bytes,
+        legacy_bytes,
+        legacy_bytes as f64 / tgt_bytes as f64
+    );
 
     println!("\n== summary ==\n{}", b.report());
 }

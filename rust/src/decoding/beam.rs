@@ -27,9 +27,8 @@ pub fn decode_one(
     alpha: f32,
     max_len: Option<usize>,
 ) -> Result<(Vec<i32>, usize)> {
-    let bucket = model.pick_bucket(beam);
-    anyhow::ensure!(beam <= bucket, "beam {beam} exceeds bucket {bucket}");
     anyhow::ensure!(beam >= 1);
+    let bucket = model.pick_bucket(beam)?;
     let max_len = max_len.unwrap_or(model.max_tgt() - 1).min(model.max_tgt() - 1);
 
     let s_len = model.max_src();
@@ -37,7 +36,9 @@ pub fn decode_one(
     for b in 0..bucket {
         src.row_mut(b)[..src_ids.len()].copy_from_slice(src_ids);
     }
-    let memory = model.encode(&src)?;
+    // encode the replicated source once; one pinned session scores the
+    // whole beam every iteration
+    let session = model.begin_session(&src)?;
 
     let mut hyps = vec![Hyp { tokens: vec![], score: 0.0, done: false }];
     let t_len = model.max_tgt();
@@ -57,7 +58,7 @@ pub fn decode_one(
                 row[1 + i] = t;
             }
         }
-        let scores = model.decode_topk(&memory, &src, &tgt_in)?;
+        let scores = session.step(&tgt_in)?;
         invocations += 1;
 
         // log-softmax over the exported top-t as an approximation of the

@@ -1,10 +1,18 @@
 //! Batch blockwise parallel decoder (§3 + §4 combined-model loop).
 //!
-//! Drives a batch of `BlockState`s against a `ScoringModel`: every
+//! Drives a batch of `BlockState`s against a scoring session: every
 //! iteration is **one** model invocation that simultaneously (a) verifies
 //! each row's pending proposals against head 0 and (b) produces the next
 //! block of proposals at the new frontier (§4's merged substeps). Rows
 //! finish independently; the loop runs until all rows are done.
+//!
+//! The loop itself ([`decode_rows`]) is generic over
+//! [`BlockStepper`](crate::model::BlockStepper): in production it drives a
+//! device-resident [`DecodeSession`](crate::model::DecodeSession) — the
+//! encoder memory and source batch are uploaded once per decode, and each
+//! iteration transfers only the `[B,T]` decoder input — and in property
+//! tests it drives the simulated model, so the exact serving loop is the
+//! loop under test.
 //!
 //! With `Criterion::Exact` the output is guaranteed identical to greedy
 //! decoding with head 0 — the paper's core invariant, enforced by the
@@ -12,7 +20,7 @@
 
 use anyhow::Result;
 
-use crate::model::ScoringModel;
+use crate::model::{BlockStepper, ScoringModel};
 use crate::tokenizer::PAD;
 use crate::util::tensor::TensorI32;
 
@@ -52,20 +60,59 @@ pub struct DecodeResult {
     pub trace: Option<DecodeTrace>,
 }
 
+/// Drive a batch of row states to completion against `stepper`, one
+/// combined invocation per iteration.
+///
+/// Decoder-input rows are (re)built only for rows still in flight: a row
+/// that finishes is PAD-filled once and never touched again, and the
+/// padding rows of the bucket stay PAD from initialization — finished and
+/// padding rows are equally inert to the model.
+pub fn decode_rows<S: BlockStepper>(
+    stepper: &mut S,
+    states: &mut [BlockState],
+    bucket: usize,
+    t_len: usize,
+) -> Result<()> {
+    assert!(states.len() <= bucket, "{} states exceed bucket {bucket}", states.len());
+    // PAD == 0, so zero-init leaves padding rows (and rows of states that
+    // are somehow already done) inert from the start.
+    let mut tgt_in = TensorI32::zeros(&[bucket, t_len]);
+    debug_assert_eq!(PAD, 0);
+    loop {
+        let mut any_active = false;
+        for (b, st) in states.iter().enumerate() {
+            if st.done {
+                continue; // row was PAD-filled when it finished
+            }
+            any_active = true;
+            st.build_row(tgt_in.row_mut(b));
+        }
+        if !any_active {
+            break;
+        }
+        let scores = stepper.step(&tgt_in)?;
+        for (b, st) in states.iter_mut().enumerate() {
+            let was_done = st.done;
+            st.absorb(&scores, b);
+            if st.done && !was_done {
+                // retire the row: make it indistinguishable from padding
+                tgt_in.row_mut(b).fill(PAD);
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Decode a batch of sources. `srcs` may have any length ≤ the model's
-/// bucket capacity; rows are padded into the chosen bucket.
+/// bucket capacity; rows are padded into the chosen bucket. Encodes once,
+/// pins the encoder memory on device, and steps the session to completion.
 pub fn decode_batch(
     model: &ScoringModel,
     srcs: &[Vec<i32>],
     cfg: &BlockwiseConfig,
 ) -> Result<Vec<DecodeResult>> {
     assert!(!srcs.is_empty());
-    let bucket = model.pick_bucket(srcs.len());
-    anyhow::ensure!(
-        srcs.len() <= bucket,
-        "batch of {} exceeds largest bucket {bucket}",
-        srcs.len()
-    );
+    let bucket = model.pick_bucket(srcs.len())?;
     let max_len = cfg.max_len.unwrap_or(model.max_tgt() - 1).min(model.max_tgt() - 1);
     let k = cfg.k.unwrap_or_else(|| model.k()).min(model.k());
 
@@ -77,12 +124,14 @@ pub fn decode_batch(
         src.row_mut(b)[..s.len()].copy_from_slice(s);
     }
 
-    // encode once per batch
-    let memory = model.encode(&src)?;
+    // encode once per batch; memory + src stay device-resident for the
+    // whole decode
+    let mut session = model.begin_session(&src)?;
 
     let mut states: Vec<BlockState> = (0..srcs.len())
         .map(|_| {
-            let mut st = BlockState::new(k, cfg.criterion, max_len).with_min_block(cfg.min_block.max(1).min(k));
+            let mut st = BlockState::new(k, cfg.criterion, max_len)
+                .with_min_block(cfg.min_block.max(1).min(k));
             if cfg.record_trace {
                 st = st.with_trace();
             }
@@ -90,29 +139,7 @@ pub fn decode_batch(
         })
         .collect();
 
-    let t_len = model.max_tgt();
-    let mut tgt_in = TensorI32::zeros(&[bucket, t_len]);
-    // bootstrap rows so even the first invocation is well-formed
-    loop {
-        let mut any_active = false;
-        for (b, st) in states.iter().enumerate() {
-            if !st.done {
-                any_active = true;
-            }
-            st.build_row(tgt_in.row_mut(b));
-        }
-        // padding rows of the bucket stay PAD (inert)
-        for b in states.len()..bucket {
-            tgt_in.row_mut(b).fill(PAD);
-        }
-        if !any_active {
-            break;
-        }
-        let scores = model.decode_topk(&memory, &src, &tgt_in)?;
-        for (b, st) in states.iter_mut().enumerate() {
-            st.absorb(&scores, b);
-        }
-    }
+    decode_rows(&mut session, &mut states, bucket, model.max_tgt())?;
 
     Ok(states
         .into_iter()

@@ -19,8 +19,7 @@ pub fn decode_batch(
     max_len: Option<usize>,
 ) -> Result<Vec<DecodeResult>> {
     assert!(!srcs.is_empty());
-    let bucket = model.pick_bucket(srcs.len());
-    anyhow::ensure!(srcs.len() <= bucket, "batch exceeds bucket");
+    let bucket = model.pick_bucket(srcs.len())?;
     let max_len = max_len.unwrap_or(model.max_tgt() - 1).min(model.max_tgt() - 1);
 
     let s_len = model.max_src();
@@ -28,7 +27,8 @@ pub fn decode_batch(
     for (b, s) in srcs.iter().enumerate() {
         src.row_mut(b)[..s.len()].copy_from_slice(s);
     }
-    let memory = model.encode(&src)?;
+    // encode once; memory + src stay pinned on device for the whole decode
+    let session = model.begin_session(&src)?;
 
     let t_len = model.max_tgt();
     let mut tgt_in = TensorI32::zeros(&[bucket, t_len]);
@@ -46,7 +46,7 @@ pub fn decode_batch(
         if done.iter().all(|&d| d) {
             break;
         }
-        let scores = model.decode_topk(&memory, &src, &tgt_in)?;
+        let scores = session.step(&tgt_in)?;
         for b in 0..n {
             if done[b] {
                 continue;

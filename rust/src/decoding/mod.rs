@@ -17,7 +17,10 @@ pub mod greedy;
 pub mod nat;
 pub mod state;
 
-pub use blockwise::{decode_batch as blockwise_decode, mean_accepted_block, BlockwiseConfig, DecodeResult};
+pub use blockwise::{
+    decode_batch as blockwise_decode, decode_rows, mean_accepted_block, BlockwiseConfig,
+    DecodeResult,
+};
 pub use criteria::Criterion;
 pub use greedy::decode_batch as greedy_decode;
 pub use state::{BlockState, BlockStats, DecodeTrace, TraceStep};

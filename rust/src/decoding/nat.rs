@@ -29,10 +29,13 @@ pub fn decode_batch(
         src.row_mut(i)[..s.len()].copy_from_slice(s);
     }
 
+    // pin the source batch once; every shot uploads only the canvas
+    let session = model.begin_session(&src)?;
+
     // shot 1: all-BOS canvas
     let mut canvas = TensorI32::zeros(&[b, t_len]);
     canvas.data.fill(BOS);
-    let (mut toks, lens) = model.decode_shot(&src, &canvas)?;
+    let (mut toks, lens) = session.shot(&canvas)?;
     let mut invocations = 1usize;
 
     // refinement passes: previous output becomes the canvas
@@ -45,7 +48,7 @@ pub fn decode_batch(
                 row[t] = if tok == PAD { BOS } else { tok };
             }
         }
-        let (t2, _) = model.decode_shot(&src, &c)?;
+        let (t2, _) = session.shot(&c)?;
         toks = t2;
         invocations += 1;
     }

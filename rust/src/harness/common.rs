@@ -49,6 +49,9 @@ pub struct EvalOutcome {
     pub outputs: Vec<Vec<i32>>,
     pub invocations: usize,
     pub wall_s: f64,
+    /// host->device bytes transferred during the evaluation (session-based
+    /// decoding keeps this at one encode upload + [B,T] per step)
+    pub uploaded_bytes: u64,
 }
 
 /// Run blockwise decoding over the whole dataset in bucket-sized batches.
@@ -61,12 +64,14 @@ pub fn eval_blockwise(
     let n = limit.unwrap_or(ds.len()).min(ds.len());
     let bucket = *model.buckets().last().unwrap();
     let mut results: Vec<DecodeResult> = Vec::with_capacity(n);
+    let stats0 = model.runtime().stats_snapshot();
     let t0 = Instant::now();
     for chunk in ds.rows[..n].chunks(bucket) {
         let srcs: Vec<Vec<i32>> = chunk.iter().map(|r| r.src.clone()).collect();
         results.extend(decoding::blockwise_decode(model, &srcs, cfg)?);
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    let uploaded = model.runtime().stats_snapshot().delta(&stats0).bytes_uploaded;
     let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.tokens.clone()).collect();
     let refs: Vec<Vec<i32>> = ds.rows[..n].iter().map(|r| r.reference.clone()).collect();
     Ok(EvalOutcome {
@@ -75,6 +80,7 @@ pub fn eval_blockwise(
         invocations: results.iter().map(|r| r.stats.invocations).sum(),
         outputs,
         wall_s,
+        uploaded_bytes: uploaded,
     })
 }
 
@@ -88,12 +94,14 @@ pub fn eval_greedy(
     let n = limit.unwrap_or(ds.len()).min(ds.len());
     let bucket = *model.buckets().last().unwrap();
     let mut results: Vec<DecodeResult> = Vec::with_capacity(n);
+    let stats0 = model.runtime().stats_snapshot();
     let t0 = Instant::now();
     for chunk in ds.rows[..n].chunks(bucket) {
         let srcs: Vec<Vec<i32>> = chunk.iter().map(|r| r.src.clone()).collect();
         results.extend(decoding::greedy_decode(model, &srcs, max_len)?);
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    let uploaded = model.runtime().stats_snapshot().delta(&stats0).bytes_uploaded;
     let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.tokens.clone()).collect();
     let refs: Vec<Vec<i32>> = ds.rows[..n].iter().map(|r| r.reference.clone()).collect();
     Ok(EvalOutcome {
@@ -102,6 +110,7 @@ pub fn eval_greedy(
         invocations: results.iter().map(|r| r.stats.invocations).sum(),
         outputs,
         wall_s,
+        uploaded_bytes: uploaded,
     })
 }
 

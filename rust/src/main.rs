@@ -125,7 +125,7 @@ fn serve(rest: &[String]) -> Result<()> {
         min_block: a.usize("min-block")?,
         ..Default::default()
     };
-    let mut engine = Engine::new(model, cfg, queue.clone(), metrics.clone(), stop.clone());
+    let mut engine = Engine::new(model, cfg, queue.clone(), metrics.clone(), stop.clone())?;
     let t0 = Instant::now();
     engine.run()?;
     let _ = srv.join();
@@ -207,13 +207,35 @@ fn selftest(rest: &[String]) -> Result<()> {
         anyhow::ensure!(g.tokens == b.tokens, "blockwise != greedy on base model");
     }
     println!("blockwise(exact) == greedy over {} sentences ✓", srcs.len());
+
+    // session upload accounting: a steady-state decode step must transfer
+    // only the [B,T] i32 decoder input (memory + src stay device-resident)
+    let bucket = model.pick_bucket(1)?;
+    let mut src = blockdecode::util::tensor::TensorI32::zeros(&[bucket, model.max_src()]);
+    let n0 = srcs[0].len().min(model.max_src());
+    src.row_mut(0)[..n0].copy_from_slice(&srcs[0][..n0]);
+    let session = model.begin_session(&src)?;
+    let tgt = blockdecode::util::tensor::TensorI32::zeros(&[bucket, model.max_tgt()]);
+    let before = ctx.rt.stats_snapshot();
+    let _ = session.step(&tgt)?;
+    let d = ctx.rt.stats_snapshot().delta(&before);
+    let want = (bucket * model.max_tgt() * 4) as u64;
+    anyhow::ensure!(
+        d.uploads == 1 && d.bytes_uploaded == want,
+        "session step uploaded {} B in {} transfers (want {want} B in 1)",
+        d.bytes_uploaded,
+        d.uploads
+    );
+    println!("session step uploads {} B (decoder input only) ✓", d.bytes_uploaded);
+
     let stats = ctx.rt.stats_snapshot();
     println!(
-        "runtime: {} compiles ({:.1}s), {} executions ({:.1}ms mean)",
+        "runtime: {} compiles ({:.1}s), {} executions ({:.1}ms mean), {:.2} MiB uploaded",
         stats.compiles,
         stats.compile_us as f64 / 1e6,
         stats.executions,
-        stats.execute_us as f64 / 1e3 / stats.executions.max(1) as f64
+        stats.execute_us as f64 / 1e3 / stats.executions.max(1) as f64,
+        stats.bytes_uploaded as f64 / (1 << 20) as f64
     );
     println!("selftest OK");
     Ok(())

@@ -1,10 +1,16 @@
 //! High-level model handles over the runtime: a loaded variant with its
 //! device-resident weights and compiled entry points.
 //!
-//! `ScoringModel` is the combined scoring-and-proposal model (§4): one
-//! `decode_topk` invocation returns, for every decoder position and every
-//! head i ∈ 1..k, the top-t candidate tokens with logits — everything the
-//! blockwise verify/accept logic and the next prediction step need.
+//! `ScoringModel` is the combined scoring-and-proposal model (§4). Decoding
+//! is session-based: [`ScoringModel::begin_session`] encodes the source
+//! batch **once** and pins the encoder memory `[B,S,D]` and source ids
+//! `[B,S]` on device; every [`DecodeSession::step`] then uploads only the
+//! small `[B,T]` i32 decoder input and returns, for every decoder position
+//! and every head i ∈ 1..k, the top-t candidate tokens with logits —
+//! everything the blockwise verify/accept logic and the next prediction
+//! step need. The per-step host↔device traffic is therefore O(B·T·4)
+//! bytes instead of the O(B·S·D·4) the old one-shot `decode_topk` path
+//! paid to re-upload the (invariant) memory each iteration.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -12,8 +18,8 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{
-    literal_to_f32, literal_to_i32, DeviceWeights, Executable, Manifest, Runtime, VariantSpec,
-    WeightBundle,
+    literal_to_f32, literal_to_i32, DeviceTensor, DeviceWeights, Executable, Manifest, Runtime,
+    VariantSpec, WeightBundle,
 };
 use crate::util::tensor::{TensorF32, TensorI32};
 
@@ -45,12 +51,21 @@ impl BlockScores {
     }
 }
 
+/// Anything that can score one decoder-input batch per iteration of the
+/// blockwise loop: the device-resident [`DecodeSession`] in production,
+/// the simulated model (`testing::sim::SimSession`) in property tests.
+/// `decoding::blockwise::decode_rows` is generic over this, so the exact
+/// loop that serves requests is the loop the simulator exercises.
+pub trait BlockStepper {
+    fn step(&mut self, tgt_in: &TensorI32) -> Result<BlockScores>;
+}
+
 /// A loaded combined scoring/proposal variant.
 pub struct ScoringModel {
     pub spec: VariantSpec,
     pub topt: usize,
     rt: Rc<Runtime>,
-    weights: DeviceWeights,
+    weights: Rc<DeviceWeights>,
     encode: BTreeMap<usize, Rc<Executable>>,
     decode: BTreeMap<usize, Rc<Executable>>,
 }
@@ -60,7 +75,7 @@ impl ScoringModel {
         let spec = manifest.variant(variant)?.clone();
         let bundle = WeightBundle::load(&spec.weights)
             .with_context(|| format!("weights for {variant}"))?;
-        let weights = rt.upload_weights(&bundle)?;
+        let weights = Rc::new(rt.upload_weights(&bundle)?);
         let mut encode = BTreeMap::new();
         let mut decode = BTreeMap::new();
         for (logical, key) in &spec.entries {
@@ -101,14 +116,18 @@ impl ScoringModel {
         self.encode.keys().copied().collect()
     }
 
-    /// Smallest bucket that fits `n` rows (or the largest available).
-    pub fn pick_bucket(&self, n: usize) -> usize {
-        for &b in self.encode.keys() {
-            if b >= n {
-                return b;
-            }
-        }
-        *self.encode.keys().last().unwrap()
+    /// Smallest bucket that fits `n` rows. Errors when `n` exceeds every
+    /// available bucket (callers used to get the largest bucket silently
+    /// and fail later with a confusing shape mismatch).
+    pub fn pick_bucket(&self, n: usize) -> Result<usize> {
+        anyhow::ensure!(n >= 1, "cannot pick a bucket for an empty batch");
+        self.encode.keys().copied().find(|&b| b >= n).ok_or_else(|| {
+            anyhow::anyhow!(
+                "batch of {n} rows exceeds largest bucket {} (have {:?})",
+                self.encode.keys().last().copied().unwrap_or(0),
+                self.buckets()
+            )
+        })
     }
 
     /// Encode a padded source batch [B, S] -> memory [B, S, D].
@@ -122,43 +141,58 @@ impl ScoringModel {
             .get(&b)
             .ok_or_else(|| anyhow::anyhow!("no encode bucket {b} (have {:?})", self.buckets()))?;
         let src_buf = self.rt.upload_i32(src)?;
-        let mut args: Vec<&xla::PjRtBuffer> =
-            self.weights.buffers.iter().collect();
-        args.push(&src_buf);
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.push(src_buf.buffer());
         let out = self.rt.execute(exe, &args)?;
         literal_to_f32(&out[0])
     }
 
-    /// One combined scoring/proposal invocation.
-    ///
-    /// `memory` [B,S,D] from `encode`, `src` [B,S] (for the padding mask),
-    /// `tgt_in` [B,T] shifted decoder input. Returns top-t per (pos, head).
-    pub fn decode_topk(
-        &self,
-        memory: &TensorF32,
-        src: &TensorI32,
-        tgt_in: &TensorI32,
-    ) -> Result<BlockScores> {
-        let b = tgt_in.dims[0];
+    /// Start a device-resident decode session: encode `src` [B,S] once and
+    /// pin the resulting memory and the source ids on device. Every
+    /// subsequent [`DecodeSession::step`] uploads only the `[B,T]` decoder
+    /// input.
+    pub fn begin_session(&self, src: &TensorI32) -> Result<DecodeSession> {
+        let memory = self.encode(src)?;
+        self.begin_session_with(src.clone(), memory)
+    }
+
+    /// Start a session from an already-encoded memory tensor (the
+    /// continuous-batching engine boots with an all-PAD batch and scatters
+    /// real rows in as requests are admitted — see
+    /// [`DecodeSession::scatter_rows`]).
+    pub fn begin_session_with(&self, src: TensorI32, memory: TensorF32) -> Result<DecodeSession> {
+        anyhow::ensure!(src.dims.len() == 2, "src must be [B,S], got {:?}", src.dims);
+        let b = src.dims[0];
+        anyhow::ensure!(
+            memory.dims.len() == 3 && memory.dims[0] == b && memory.dims[1] == src.dims[1],
+            "memory {:?} does not match src {:?}",
+            memory.dims,
+            src.dims
+        );
+        anyhow::ensure!(
+            memory.dims[2] == self.spec.config.d_model,
+            "memory feature width {} != model d_model {}",
+            memory.dims[2],
+            self.spec.config.d_model
+        );
         let exe = self
             .decode
             .get(&b)
-            .ok_or_else(|| anyhow::anyhow!("no decode bucket {b} (have {:?})", self.buckets()))?;
-        let mem_buf = self.rt.upload_f32(memory)?;
-        let src_buf = self.rt.upload_i32(src)?;
-        let tgt_buf = self.rt.upload_i32(tgt_in)?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
-        args.push(&mem_buf);
-        args.push(&src_buf);
-        args.push(&tgt_buf);
-        let out = self.rt.execute(exe, &args)?;
-        anyhow::ensure!(out.len() == 2, "decode returned {} outputs", out.len());
-        let topv = literal_to_f32(&out[0])?;
-        let topi = literal_to_i32(&out[1])?;
-        anyhow::ensure!(topv.dims.len() == 4, "unexpected topv rank {:?}", topv.dims);
-        let k = topv.dims[2];
-        let topt = topv.dims[3];
-        Ok(BlockScores { topv, topi, k, topt })
+            .ok_or_else(|| anyhow::anyhow!("no decode bucket {b} (have {:?})", self.buckets()))?
+            .clone();
+        let src_dev = self.rt.upload_i32(&src)?;
+        let mem_dev = self.rt.upload_f32(&memory)?;
+        Ok(DecodeSession {
+            rt: self.rt.clone(),
+            weights: self.weights.clone(),
+            exe,
+            bucket: b,
+            t_len: self.max_tgt(),
+            src_host: src,
+            memory_host: memory,
+            src_dev,
+            mem_dev,
+        })
     }
 
     pub fn runtime(&self) -> &Rc<Runtime> {
@@ -166,11 +200,134 @@ impl ScoringModel {
     }
 }
 
+/// Per-decode device-resident state: the encoder memory `[B,S,D]` and
+/// source ids `[B,S]` pinned on device for the lifetime of the decode,
+/// plus host mirrors so the continuous-batching engine can scatter
+/// newly-admitted rows in. The session owns `Rc` handles to the runtime,
+/// weights, and decode entry point, so it is self-contained — an engine
+/// can hold it alongside the `ScoringModel` it came from.
+pub struct DecodeSession {
+    rt: Rc<Runtime>,
+    weights: Rc<DeviceWeights>,
+    exe: Rc<Executable>,
+    bucket: usize,
+    t_len: usize,
+    src_host: TensorI32,
+    memory_host: TensorF32,
+    src_dev: DeviceTensor,
+    mem_dev: DeviceTensor,
+}
+
+impl DecodeSession {
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Host mirror of the pinned source batch.
+    pub fn src(&self) -> &TensorI32 {
+        &self.src_host
+    }
+
+    /// Host mirror of the pinned encoder memory.
+    pub fn memory(&self) -> &TensorF32 {
+        &self.memory_host
+    }
+
+    /// One combined scoring/proposal invocation against the pinned state.
+    ///
+    /// `tgt_in` is the `[B,T]` shifted decoder input — the only host→device
+    /// transfer this performs. Returns top-t per (pos, head).
+    pub fn step(&self, tgt_in: &TensorI32) -> Result<BlockScores> {
+        anyhow::ensure!(
+            tgt_in.dims == [self.bucket, self.t_len],
+            "tgt_in {:?} does not match session [{}, {}]",
+            tgt_in.dims,
+            self.bucket,
+            self.t_len
+        );
+        let tgt_buf = self.rt.upload_i32(tgt_in)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.push(self.mem_dev.buffer());
+        args.push(self.src_dev.buffer());
+        args.push(tgt_buf.buffer());
+        let out = self.rt.execute(&self.exe, &args)?;
+        block_scores_from(&out)
+    }
+
+    /// Scatter newly-encoded rows into the resident batch: row `i` of
+    /// `enc_src`/`enc_memory` lands in slot `slots[i]`. The host mirrors
+    /// are updated and both device buffers re-pinned **once per refill**,
+    /// so admission costs one upload amortized over every subsequent step
+    /// (steady-state steps upload nothing but the decoder input).
+    pub fn scatter_rows(
+        &mut self,
+        slots: &[usize],
+        enc_src: &TensorI32,
+        enc_memory: &TensorF32,
+    ) -> Result<()> {
+        if slots.is_empty() {
+            return Ok(());
+        }
+        let s_len = self.src_host.dims[1];
+        anyhow::ensure!(
+            enc_src.dims.len() == 2 && enc_src.dims[1] == s_len,
+            "enc_src {:?} does not match session src width {s_len}",
+            enc_src.dims
+        );
+        anyhow::ensure!(
+            enc_src.dims[0] >= slots.len(),
+            "{} encoded rows for {} slots",
+            enc_src.dims[0],
+            slots.len()
+        );
+        anyhow::ensure!(
+            enc_memory.dims[0] >= slots.len(),
+            "{} encoded memory rows for {} slots",
+            enc_memory.dims[0],
+            slots.len()
+        );
+        let row_elems = self.memory_host.data.len() / self.bucket;
+        anyhow::ensure!(
+            enc_memory.data.len() / enc_memory.dims[0] == row_elems,
+            "enc_memory {:?} row size does not match session memory",
+            enc_memory.dims
+        );
+        for (i, &slot) in slots.iter().enumerate() {
+            anyhow::ensure!(slot < self.bucket, "slot {slot} out of bucket {}", self.bucket);
+            self.src_host.row_mut(slot).copy_from_slice(enc_src.row(i));
+            let dst = slot * row_elems;
+            let src_off = i * row_elems;
+            self.memory_host.data[dst..dst + row_elems]
+                .copy_from_slice(&enc_memory.data[src_off..src_off + row_elems]);
+        }
+        self.src_dev = self.rt.upload_i32(&self.src_host)?;
+        self.mem_dev = self.rt.upload_f32(&self.memory_host)?;
+        Ok(())
+    }
+}
+
+impl BlockStepper for DecodeSession {
+    fn step(&mut self, tgt_in: &TensorI32) -> Result<BlockScores> {
+        DecodeSession::step(self, tgt_in)
+    }
+}
+
+/// Decompose a decode entry point's output tuple into [`BlockScores`].
+fn block_scores_from(out: &[xla::Literal]) -> Result<BlockScores> {
+    anyhow::ensure!(out.len() == 2, "decode returned {} outputs", out.len());
+    let topv = literal_to_f32(&out[0])?;
+    let topi = literal_to_i32(&out[1])?;
+    anyhow::ensure!(topv.dims.len() == 4, "unexpected topv rank {:?}", topv.dims);
+    let k = topv.dims[2];
+    let topt = topv.dims[3];
+    Ok(BlockScores { topv, topi, k, topt })
+}
+
 /// The simplified NAT / iterative-refinement comparator (Table 4).
 pub struct NatModel {
     pub spec: VariantSpec,
     rt: Rc<Runtime>,
-    weights: DeviceWeights,
+    weights: Rc<DeviceWeights>,
     nat: BTreeMap<usize, Rc<Executable>>,
 }
 
@@ -178,7 +335,7 @@ impl NatModel {
     pub fn load(rt: Rc<Runtime>, manifest: &Manifest, variant: &str) -> Result<Self> {
         let spec = manifest.variant(variant)?.clone();
         let bundle = WeightBundle::load(&spec.weights)?;
-        let weights = rt.upload_weights(&bundle)?;
+        let weights = Rc::new(rt.upload_weights(&bundle)?);
         let mut nat = BTreeMap::new();
         for (logical, key) in &spec.entries {
             if let Some(b) = logical.strip_prefix("nat_b") {
@@ -192,27 +349,41 @@ impl NatModel {
         Ok(NatModel { spec, rt, weights, nat })
     }
 
-    /// One parallel decode shot: (tokens [B,T], predicted lengths [B]).
-    pub fn decode_shot(
-        &self,
-        src: &TensorI32,
-        canvas: &TensorI32,
-    ) -> Result<(TensorI32, TensorI32)> {
+    /// Pin `src` [B,S] on device for a run of refinement shots; each
+    /// [`NatSession::shot`] then uploads only the canvas.
+    pub fn begin_session(&self, src: &TensorI32) -> Result<NatSession> {
         let b = src.dims[0];
         let exe = self
             .nat
             .get(&b)
-            .ok_or_else(|| anyhow::anyhow!("no nat bucket {b}"))?;
-        let src_buf = self.rt.upload_i32(src)?;
-        let canvas_buf = self.rt.upload_i32(canvas)?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
-        args.push(&src_buf);
-        args.push(&canvas_buf);
-        let out = self.rt.execute(exe, &args)?;
-        Ok((literal_to_i32(&out[0])?, literal_to_i32(&out[1])?))
+            .ok_or_else(|| anyhow::anyhow!("no nat bucket {b} (have {:?})", self.nat.keys().collect::<Vec<_>>()))?
+            .clone();
+        let src_dev = self.rt.upload_i32(src)?;
+        Ok(NatSession { rt: self.rt.clone(), weights: self.weights.clone(), exe, src_dev })
     }
 
     pub fn max_tgt(&self) -> usize {
         self.spec.config.max_tgt
+    }
+}
+
+/// Device-resident state for a NAT / iterative-refinement decode: the
+/// source batch stays pinned across the `i_dec` refinement passes.
+pub struct NatSession {
+    rt: Rc<Runtime>,
+    weights: Rc<DeviceWeights>,
+    exe: Rc<Executable>,
+    src_dev: DeviceTensor,
+}
+
+impl NatSession {
+    /// One parallel decode shot: (tokens [B,T], predicted lengths [B]).
+    pub fn shot(&self, canvas: &TensorI32) -> Result<(TensorI32, TensorI32)> {
+        let canvas_buf = self.rt.upload_i32(canvas)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.push(self.src_dev.buffer());
+        args.push(canvas_buf.buffer());
+        let out = self.rt.execute(&self.exe, &args)?;
+        Ok((literal_to_i32(&out[0])?, literal_to_i32(&out[1])?))
     }
 }

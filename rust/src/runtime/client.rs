@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::weights::{DType, WeightBundle};
+use crate::runtime::weights::{le_bytes_to_f32, le_bytes_to_i32, DType, WeightBundle};
 use crate::util::tensor::{TensorF32, TensorI32};
 
 /// Wrapper around the PJRT CPU client.
@@ -27,13 +27,31 @@ pub struct Runtime {
 }
 
 /// Execution counters (observability for the perf pass).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct RuntimeStats {
     pub compiles: u64,
     pub executions: u64,
     pub compile_us: u64,
     pub execute_us: u64,
+    /// host->device transfer count (weights + per-step tensors)
+    pub uploads: u64,
     pub bytes_uploaded: u64,
+}
+
+impl RuntimeStats {
+    /// Counters accumulated since an `earlier` snapshot. Pairs with
+    /// [`Runtime::stats_snapshot`] to attribute uploads/executions to one
+    /// region of the serving path, e.g. a single decode-session step.
+    pub fn delta(&self, earlier: &RuntimeStats) -> RuntimeStats {
+        RuntimeStats {
+            compiles: self.compiles - earlier.compiles,
+            executions: self.executions - earlier.executions,
+            compile_us: self.compile_us - earlier.compile_us,
+            execute_us: self.execute_us - earlier.execute_us,
+            uploads: self.uploads - earlier.uploads,
+            bytes_uploaded: self.bytes_uploaded - earlier.bytes_uploaded,
+        }
+    }
 }
 
 /// One compiled entry point.
@@ -46,6 +64,22 @@ pub struct Executable {
 pub struct DeviceWeights {
     pub buffers: Vec<xla::PjRtBuffer>,
     pub total_params: usize,
+}
+
+/// A host tensor pinned on device: the buffer handle plus the upload size
+/// it was created with. Decode sessions hold these across iterations so
+/// invariant inputs (encoder memory, source ids) are paid for once per
+/// session instead of once per step.
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+    /// bytes transferred host->device when this handle was created
+    pub bytes: u64,
+}
+
+impl DeviceTensor {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
 }
 
 impl Runtime {
@@ -91,22 +125,16 @@ impl Runtime {
             // NOTE: not `buffer_from_host_raw_bytes` — xla 0.1.6 passes the
             // ElementType discriminant where a PrimitiveType is expected,
             // silently mistyping F32 uploads as F16. The typed API maps
-            // through `T::TY.primitive_type()` and is correct.
+            // through `T::TY.primitive_type()` and is correct; the bulk
+            // converters keep it cheap (one memcpy per tensor on LE targets
+            // instead of a per-element `from_le_bytes` loop).
             let buf = match e.dtype {
                 DType::F32 => {
-                    let v: Vec<f32> = e
-                        .data
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
+                    let v = le_bytes_to_f32(&e.data);
                     self.client.buffer_from_host_buffer(&v, &e.dims, None)
                 }
                 DType::I32 => {
-                    let v: Vec<i32> = e
-                        .data
-                        .chunks_exact(4)
-                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-                        .collect();
+                    let v = le_bytes_to_i32(&e.data);
                     self.client.buffer_from_host_buffer(&v, &e.dims, None)
                 }
             }
@@ -114,16 +142,29 @@ impl Runtime {
             bytes += e.data.len() as u64;
             buffers.push(buf);
         }
-        self.stats.borrow_mut().bytes_uploaded += bytes;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.uploads += bundle.entries.len() as u64;
+            s.bytes_uploaded += bytes;
+        }
         Ok(DeviceWeights { buffers, total_params: bundle.total_params() })
     }
 
-    pub fn upload_i32(&self, t: &TensorI32) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&t.data, &t.dims, None)?)
+    pub fn upload_i32(&self, t: &TensorI32) -> Result<DeviceTensor> {
+        let buf = self.client.buffer_from_host_buffer(&t.data, &t.dims, None)?;
+        Ok(self.account_upload(buf, (t.data.len() * 4) as u64))
     }
 
-    pub fn upload_f32(&self, t: &TensorF32) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&t.data, &t.dims, None)?)
+    pub fn upload_f32(&self, t: &TensorF32) -> Result<DeviceTensor> {
+        let buf = self.client.buffer_from_host_buffer(&t.data, &t.dims, None)?;
+        Ok(self.account_upload(buf, (t.data.len() * 4) as u64))
+    }
+
+    fn account_upload(&self, buf: xla::PjRtBuffer, bytes: u64) -> DeviceTensor {
+        let mut s = self.stats.borrow_mut();
+        s.uploads += 1;
+        s.bytes_uploaded += bytes;
+        DeviceTensor { buf, bytes }
     }
 
     /// Execute with device buffers and fetch the result tuple to host.
@@ -173,4 +214,41 @@ pub fn literal_to_f32(lit: &xla::Literal) -> Result<TensorF32> {
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data = lit.to_vec::<f32>()?;
     Ok(TensorF32::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RuntimeStats;
+
+    #[test]
+    fn stats_delta_subtracts_fieldwise() {
+        let earlier = RuntimeStats {
+            compiles: 2,
+            executions: 10,
+            compile_us: 5_000,
+            execute_us: 800,
+            uploads: 7,
+            bytes_uploaded: 4096,
+        };
+        let later = RuntimeStats {
+            compiles: 2,
+            executions: 13,
+            compile_us: 5_000,
+            execute_us: 1_100,
+            uploads: 10,
+            bytes_uploaded: 4096 + 3 * 112,
+        };
+        let d = later.delta(&earlier);
+        assert_eq!(d.compiles, 0);
+        assert_eq!(d.executions, 3);
+        assert_eq!(d.execute_us, 300);
+        assert_eq!(d.uploads, 3);
+        assert_eq!(d.bytes_uploaded, 336);
+    }
+
+    #[test]
+    fn stats_delta_of_self_is_zero() {
+        let s = RuntimeStats { compiles: 1, executions: 2, compile_us: 3, execute_us: 4, uploads: 5, bytes_uploaded: 6 };
+        assert_eq!(s.delta(&s), RuntimeStats::default());
+    }
 }

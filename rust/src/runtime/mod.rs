@@ -6,6 +6,8 @@ pub mod client;
 pub mod manifest;
 pub mod weights;
 
-pub use client::{literal_to_f32, literal_to_i32, DeviceWeights, Executable, Runtime, RuntimeStats};
+pub use client::{
+    literal_to_f32, literal_to_i32, DeviceTensor, DeviceWeights, Executable, Runtime, RuntimeStats,
+};
 pub use manifest::{EntrySpec, Manifest, VariantConfig, VariantSpec};
-pub use weights::{DType, WeightBundle, WeightEntry};
+pub use weights::{le_bytes_to_f32, le_bytes_to_i32, DType, WeightBundle, WeightEntry};

@@ -49,6 +49,44 @@ impl DType {
     }
 }
 
+/// Bulk little-endian byte → f32 conversion: one memcpy into the target
+/// allocation (plus a byte-swap fixup on big-endian targets) instead of a
+/// per-element `chunks_exact(4)`/`from_le_bytes` loop. `upload_weights`
+/// runs this over every weight byte at model load.
+pub fn le_bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "f32 payload length {} not a multiple of 4", bytes.len());
+    let n = bytes.len() / 4;
+    let mut v: Vec<f32> = Vec::with_capacity(n);
+    // SAFETY: the Vec owns an allocation of n f32s; every bit pattern is a
+    // valid f32, and the copy initializes all n * 4 bytes before set_len.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr() as *mut u8, n * 4);
+        v.set_len(n);
+    }
+    #[cfg(target_endian = "big")]
+    for x in v.iter_mut() {
+        *x = f32::from_bits(u32::from_le(x.to_bits()));
+    }
+    v
+}
+
+/// Bulk little-endian byte → i32 conversion; see [`le_bytes_to_f32`].
+pub fn le_bytes_to_i32(bytes: &[u8]) -> Vec<i32> {
+    assert_eq!(bytes.len() % 4, 0, "i32 payload length {} not a multiple of 4", bytes.len());
+    let n = bytes.len() / 4;
+    let mut v: Vec<i32> = Vec::with_capacity(n);
+    // SAFETY: as in `le_bytes_to_f32` — full initialization before set_len.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr() as *mut u8, n * 4);
+        v.set_len(n);
+    }
+    #[cfg(target_endian = "big")]
+    for x in v.iter_mut() {
+        *x = i32::from_le(*x);
+    }
+    v
+}
+
 /// Parsed bundle: tensors in parameter order.
 #[derive(Debug)]
 pub struct WeightBundle {
@@ -140,6 +178,38 @@ mod tests {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         assert_eq!(f, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bulk_conversion_matches_per_element() {
+        let floats = [0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE, -0.0, 42.042];
+        let mut bytes = Vec::new();
+        for f in floats {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        let bulk = le_bytes_to_f32(&bytes);
+        let per_elem: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(bulk.len(), per_elem.len());
+        for (a, b) in bulk.iter().zip(&per_elem) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        let ints = [0i32, -1, i32::MAX, i32::MIN, 123456789];
+        let mut bytes = Vec::new();
+        for i in ints {
+            bytes.extend_from_slice(&i.to_le_bytes());
+        }
+        assert_eq!(le_bytes_to_i32(&bytes), ints.to_vec());
+        assert!(le_bytes_to_f32(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bulk_conversion_rejects_ragged_input() {
+        let _ = le_bytes_to_f32(&[1, 2, 3]);
     }
 
     #[test]

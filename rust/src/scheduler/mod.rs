@@ -7,9 +7,11 @@
 //!
 //! 1. **refill** — admit queued requests into free slots of the batch
 //!    bucket; new sources are batch-encoded and their memory rows are
-//!    scattered into the resident memory tensor;
+//!    scattered into the *device-resident* decode session (one re-pin per
+//!    refill — see [`DecodeSession::scatter_rows`](crate::model::DecodeSession));
 //! 2. **step** — one combined scoring/proposal invocation advances *every*
-//!    active slot (each by its own k̂ ≥ 1 tokens);
+//!    active slot (each by its own k̂ ≥ 1 tokens); the only host→device
+//!    transfer in a steady-state step is the `[B,T]` decoder input;
 //! 3. **complete** — finished slots respond to their waiters and free up.
 //!
 //! Because sequences join and leave at iteration granularity, a slot never
@@ -27,7 +29,7 @@ use crate::batching::{Request, RequestQueue, Response};
 use crate::decoding::criteria::Criterion;
 use crate::decoding::state::BlockState;
 use crate::metrics::Metrics;
-use crate::model::ScoringModel;
+use crate::model::{DecodeSession, ScoringModel};
 use crate::tokenizer::PAD;
 use crate::util::tensor::{TensorF32, TensorI32};
 
@@ -71,9 +73,10 @@ pub struct Engine {
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     bucket: usize,
-    // resident batch tensors (src ids, encoder memory, decoder input)
-    src: TensorI32,
-    memory: TensorF32,
+    /// device-resident decode state (pinned src ids + encoder memory);
+    /// self-contained `Rc` handles, so it lives happily next to `model`
+    session: DecodeSession,
+    /// resident decoder-input batch; rows of free slots stay PAD
     tgt_in: TensorI32,
     slots: Vec<Option<Slot>>,
 }
@@ -85,23 +88,31 @@ impl Engine {
         queue: Arc<RequestQueue>,
         metrics: Arc<Metrics>,
         stop: Arc<AtomicBool>,
-    ) -> Self {
-        let bucket = *model.buckets().last().expect("model has buckets");
+    ) -> Result<Self> {
+        let bucket = *model
+            .buckets()
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("model has no batch buckets"))?;
         let s_len = model.max_src();
         let t_len = model.max_tgt();
         let d = model.spec.config.d_model;
-        Engine {
+        // boot with an all-PAD resident batch — no encode invocation; real
+        // rows are scattered in as requests are admitted
+        let session = model.begin_session_with(
+            TensorI32::zeros(&[bucket, s_len]),
+            TensorF32::zeros(&[bucket, s_len, d]),
+        )?;
+        Ok(Engine {
             cfg,
             queue,
             metrics,
             stop,
             bucket,
-            src: TensorI32::zeros(&[bucket, s_len]),
-            memory: TensorF32::zeros(&[bucket, s_len, d]),
+            session,
             tgt_in: TensorI32::zeros(&[bucket, t_len]),
             slots: (0..bucket).map(|_| None).collect(),
             model,
-        }
+        })
     }
 
     fn active(&self) -> usize {
@@ -109,7 +120,8 @@ impl Engine {
     }
 
     /// Admit new requests into free slots; batch-encode their sources and
-    /// scatter the memory rows into the resident tensor.
+    /// scatter the rows into the device-resident session (one re-pin per
+    /// refill, amortized over every subsequent step).
     fn refill(&mut self) -> Result<()> {
         let free: Vec<usize> =
             (0..self.bucket).filter(|&i| self.slots[i].is_none()).collect();
@@ -129,7 +141,8 @@ impl Engine {
             return Ok(());
         }
 
-        // batch-encode the new sources in one invocation
+        // batch-encode the new sources in one invocation (rows are PAD
+        // beyond the incoming count, so the encode batch is well-formed)
         let s_len = self.model.max_src();
         let mut enc_src = TensorI32::zeros(&[self.bucket, s_len]);
         for (i, r) in incoming.iter().enumerate() {
@@ -137,8 +150,10 @@ impl Engine {
             enc_src.row_mut(i)[..n].copy_from_slice(&r.src[..n]);
         }
         let enc_memory = self.model.encode(&enc_src)?;
-        let d = self.model.spec.config.d_model;
-        let row_elems = s_len * d;
+
+        // scatter encoded row i into resident slot free[i]
+        let slots = &free[..incoming.len()];
+        self.session.scatter_rows(slots, &enc_src, &enc_memory)?;
 
         let max_len = self
             .cfg
@@ -147,15 +162,6 @@ impl Engine {
             .min(self.model.max_tgt() - 1);
         for (i, r) in incoming.into_iter().enumerate() {
             let slot = free[i];
-            // scatter source ids + memory row into resident tensors
-            let n = r.src.len().min(s_len);
-            self.src.row_mut(slot).fill(PAD);
-            self.src.row_mut(slot)[..n].copy_from_slice(&r.src[..n]);
-            let src_off = slot * row_elems;
-            let enc_off = i * row_elems;
-            self.memory.data[src_off..src_off + row_elems]
-                .copy_from_slice(&enc_memory.data[enc_off..enc_off + row_elems]);
-
             let criterion = r.criterion.unwrap_or(self.cfg.criterion);
             let state = BlockState::new(self.model.k(), criterion, max_len)
                 .with_min_block(self.cfg.min_block.max(1).min(self.model.k()));
@@ -179,15 +185,16 @@ impl Engine {
             return Ok(true);
         }
 
-        // build decoder-input rows
+        // build decoder-input rows for occupied slots only — a freed slot's
+        // row was PAD-filled at completion and stays inert
         for i in 0..self.bucket {
-            match &self.slots[i] {
-                Some(s) => s.state.build_row(self.tgt_in.row_mut(i)),
-                None => self.tgt_in.row_mut(i).fill(PAD),
+            if let Some(s) = &self.slots[i] {
+                s.state.build_row(self.tgt_in.row_mut(i));
             }
         }
 
-        let scores = self.model.decode_topk(&self.memory, &self.src, &self.tgt_in)?;
+        // the only host->device transfer in a steady-state step: [B,T] i32
+        let scores = self.session.step(&self.tgt_in)?;
         self.metrics.on_invocation(active, self.bucket);
 
         for i in 0..self.bucket {
@@ -202,6 +209,7 @@ impl Engine {
             };
             if finished {
                 let slot = self.slots[i].take().unwrap();
+                self.tgt_in.row_mut(i).fill(PAD); // retire the row
                 let e2e = slot.request.arrived.elapsed();
                 let queued = slot.admitted.duration_since(slot.request.arrived);
                 let resp = Response {

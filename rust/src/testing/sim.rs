@@ -8,8 +8,8 @@
 //! agreement rate with p1 is tunable, which lets property tests sweep the
 //! whole accept/reject spectrum without touching PJRT.
 
-use crate::model::BlockScores;
-use crate::tokenizer::{BOS, EOS};
+use crate::model::{BlockScores, BlockStepper};
+use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::tensor::{TensorF32, TensorI32};
 
 /// Simulated model configuration.
@@ -125,6 +125,52 @@ impl SimModel {
     }
 }
 
+/// Sim-backed implementation of the device `DecodeSession` contract: the
+/// per-row sources play the pinned `src`/`memory` state, and each `step`
+/// scores one decoder-input batch. Plugging this into
+/// `decoding::blockwise::decode_rows` runs the *exact* production loop
+/// (including its finished-row PAD retirement) against the simulator, so
+/// session-based decoding can be checked token-for-token against the
+/// one-shot [`sim_blockwise`] reference without touching PJRT.
+pub struct SimSession<'a> {
+    model: &'a SimModel,
+    srcs: Vec<Vec<i32>>,
+    /// model invocations consumed (mirrors RuntimeStats.executions)
+    pub steps: usize,
+}
+
+impl<'a> SimSession<'a> {
+    pub fn new(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
+        SimSession { model, srcs, steps: 0 }
+    }
+}
+
+impl BlockStepper for SimSession<'_> {
+    fn step(&mut self, tgt_in: &TensorI32) -> anyhow::Result<BlockScores> {
+        self.steps += 1;
+        let b = tgt_in.dims[0];
+        let t_len = tgt_in.dims[1];
+        let (k, topt) = (self.model.k, self.model.topt);
+        let mut topi = TensorI32::zeros(&[b, t_len, k, topt]);
+        let mut topv = TensorF32::zeros(&[b, t_len, k, topt]);
+        let stride = t_len * k * topt;
+        for row in 0..b {
+            let r = tgt_in.row(row);
+            // PAD-only rows are padding or retired (finished) rows: inert,
+            // all-zero scores — exactly what absorb never reads
+            let used = r.iter().rposition(|&t| t != PAD).map_or(0, |p| p + 1);
+            if used == 0 {
+                continue;
+            }
+            let src = self.srcs.get(row).map(|s| s.as_slice()).unwrap_or(&[]);
+            let sc = self.model.score_rows(src, &[r[..used].to_vec()], t_len);
+            topi.data[row * stride..(row + 1) * stride].copy_from_slice(&sc.topi.data[..stride]);
+            topv.data[row * stride..(row + 1) * stride].copy_from_slice(&sc.topv.data[..stride]);
+        }
+        Ok(BlockScores { topv, topi, k, topt })
+    }
+}
+
 /// Drive a full blockwise decode against the simulated model; returns
 /// (output tokens, invocations, accepted blocks).
 pub fn sim_blockwise(
@@ -198,6 +244,39 @@ mod tests {
                 let (block, inv, _) = sim_blockwise(&m, &src, Criterion::Exact, 24);
                 assert_eq!(block, greedy, "agreement={agreement} seed-src {s}");
                 assert!(inv <= greedy.len() + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn session_loop_matches_oneshot_reference() {
+        // the session refactor's contract: begin_session + N×step through
+        // the production decode_rows loop produces byte-identical tokens
+        // to the pre-refactor one-shot scoring path, under Exact
+        use crate::decoding::blockwise::decode_rows;
+        use crate::decoding::state::BlockState;
+        for agreement in [0.0, 0.4, 0.9, 1.0] {
+            let m = SimModel::new(70, 5, agreement, 9, 21);
+            let srcs: Vec<Vec<i32>> =
+                (0..3).map(|s| vec![4 + s, 11, EOS]).collect();
+            let max_len = 22;
+            let t_len = max_len + 1;
+            let bucket = 4; // one padding row, like a real b4 bucket
+            let mut states: Vec<BlockState> = (0..srcs.len())
+                .map(|_| BlockState::new(m.k, Criterion::Exact, max_len))
+                .collect();
+            let mut session = SimSession::new(&m, srcs.clone());
+            decode_rows(&mut session, &mut states, bucket, t_len).unwrap();
+            for (i, st) in states.iter().enumerate() {
+                let (oneshot, inv, _) =
+                    sim_blockwise(&m, &srcs[i], Criterion::Exact, max_len);
+                assert_eq!(
+                    st.accepted, oneshot,
+                    "agreement={agreement} row {i}: session != one-shot"
+                );
+                // per-row trajectories are deterministic and independent,
+                // so the batched session consumes the same invocations
+                assert_eq!(st.stats.invocations, inv, "row {i} invocation count");
             }
         }
     }

@@ -85,7 +85,8 @@ fn served_results_match_offline_decode() {
         queue.clone(),
         metrics.clone(),
         stop.clone(),
-    );
+    )
+    .unwrap();
     engine.run().unwrap();
     let mut served = clients.join().unwrap();
     let _ = srv.join();

@@ -3,8 +3,8 @@
 //! these sweep hundreds of cases quickly.
 
 use blockdecode::decoding::state::BlockState;
-use blockdecode::decoding::Criterion;
-use blockdecode::testing::sim::{sim_blockwise, SimModel};
+use blockdecode::decoding::{decode_rows, Criterion};
+use blockdecode::testing::sim::{sim_blockwise, SimModel, SimSession};
 use blockdecode::testing::{check, gen_src};
 use blockdecode::tokenizer::EOS;
 
@@ -101,6 +101,40 @@ fn prop_min_block_floor_respected() {
         // every accepted token still yields a well-formed output
         let total: usize = st.stats.accepted_blocks.iter().sum();
         assert_eq!(total, st.accepted.len());
+    });
+}
+
+/// Session refactor invariant: the production `decode_rows` loop driven
+/// through the session contract (`begin_session` + N×`step`, sim-backed)
+/// produces byte-identical tokens to the one-shot reference path, under
+/// `Criterion::Exact`, across batch sizes, padding rows, and agreement
+/// levels.
+#[test]
+fn prop_session_loop_equals_oneshot() {
+    check("session==oneshot", 60, |rng| {
+        let k = 1 + rng.below(8);
+        let agreement = rng.f64();
+        let vocab = 30 + rng.below(120);
+        let mean_len = 4 + rng.below(14);
+        let m = SimModel::new(vocab, k, agreement, mean_len, rng.next_u64());
+        let n_rows = 1 + rng.below(4);
+        let srcs: Vec<Vec<i32>> = (0..n_rows).map(|_| gen_src(rng, vocab, 10)).collect();
+        let max_len = 4 + rng.below(20);
+        let t_len = max_len + 1;
+        // bucket may exceed the live rows; padding rows must stay inert
+        let bucket = n_rows + rng.below(3);
+
+        let mut states: Vec<BlockState> =
+            (0..n_rows).map(|_| BlockState::new(k, Criterion::Exact, max_len)).collect();
+        let mut session = SimSession::new(&m, srcs.clone());
+        decode_rows(&mut session, &mut states, bucket, t_len).unwrap();
+
+        for (i, st) in states.iter().enumerate() {
+            let (oneshot, inv, blocks) = sim_blockwise(&m, &srcs[i], Criterion::Exact, max_len);
+            assert_eq!(st.accepted, oneshot, "row {i} diverged from one-shot decode");
+            assert_eq!(st.stats.invocations, inv, "row {i} invocation count");
+            assert_eq!(st.stats.accepted_blocks, blocks, "row {i} accept trace");
+        }
     });
 }
 

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + tests, then the hygiene gates that keep
+# bench/example code from silently rotting (fmt, clippy -D warnings, and a
+# compile-only pass over every bench target).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+cargo bench --no-run
