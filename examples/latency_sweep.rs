@@ -25,20 +25,31 @@ fn main() -> Result<()> {
     let base = ctx.model("mt_base")?;
     let mut glat = Vec::new();
     let mut ginv = 0usize;
+    let gstats0 = ctx.rt.stats_snapshot();
     for row in &ds.rows[..n] {
         let t0 = Instant::now();
         let r = decoding::greedy_decode(&base, std::slice::from_ref(&row.src), None)?;
         glat.push(t0.elapsed().as_secs_f64() * 1000.0);
         ginv += r[0].stats.invocations;
     }
+    let gd = ctx.rt.stats_snapshot().delta(&gstats0);
     let gsum = summarize(&glat);
     println!(
-        "greedy baseline: {} sentences, {} invocations, p50 {:.1}ms\n",
-        n, ginv, gsum.p50
+        "greedy baseline: {} sentences, {} invocations, p50 {:.1}ms, \
+         {:.0} B up / {:.0} B down per step (incl. encodes)\n",
+        n,
+        ginv,
+        gsum.p50,
+        gd.bytes_uploaded as f64 / gd.executions.max(1) as f64,
+        gd.bytes_downloaded as f64 / gd.executions.max(1) as f64
     );
 
+    // per-step transfer bytes (averaged over every invocation of the
+    // setting, including its one encode per sentence) so the bench
+    // trajectory captures both transfer directions
     let mut table = Table::new(&[
         "setting", "mean k̂", "invocations", "p50 ms", "p90 ms", "speedup(p50)",
+        "↑B/step", "↓B/step",
     ]);
     let settings: Vec<(String, String, Criterion)> = ["mt_k8_both"]
         .iter()
@@ -60,6 +71,7 @@ fn main() -> Result<()> {
         let mut lat = Vec::new();
         let mut inv = 0usize;
         let mut blocks = (0usize, 0usize);
+        let stats0 = ctx.rt.stats_snapshot();
         for row in &ds.rows[..n] {
             let t0 = Instant::now();
             let r = decoding::blockwise_decode(&model, std::slice::from_ref(&row.src), &cfg)?;
@@ -68,6 +80,7 @@ fn main() -> Result<()> {
             blocks.0 += r[0].stats.accepted_blocks.iter().sum::<usize>();
             blocks.1 += r[0].stats.accepted_blocks.len();
         }
+        let d = ctx.rt.stats_snapshot().delta(&stats0);
         let s = summarize(&lat);
         table.row(vec![
             label,
@@ -76,6 +89,8 @@ fn main() -> Result<()> {
             format!("{:.1}", s.p50),
             format!("{:.1}", s.p90),
             format!("{:.2}x", gsum.p50 / s.p50),
+            format!("{:.0}", d.bytes_uploaded as f64 / d.executions.max(1) as f64),
+            format!("{:.0}", d.bytes_downloaded as f64 / d.executions.max(1) as f64),
         ]);
     }
     println!("{}", table.render());

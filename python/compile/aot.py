@@ -139,6 +139,39 @@ def make_decode_fn(cfg: M.ModelConfig):
     return fn
 
 
+def window_len(cfg: M.ModelConfig) -> int:
+    """Positions per row the frontier-windowed decode entry returns: the
+    k+1 decoder positions (verify window + re-predict slot) the blockwise
+    accept logic reads each step."""
+    return min(cfg.k + 1, cfg.max_tgt)
+
+
+def make_decode_window_fn(cfg: M.ModelConfig):
+    """Frontier-windowed decode entry: same combined forward pass as
+    `make_decode_fn`, but gathers, per batch row, only the `k+1`-position
+    score window starting at that row's frontier index — so the runtime
+    downloads O(B*(k+1)*K*TOPT) instead of O(B*T*K*TOPT) bytes per step.
+    `frontier` is an i32 [B] vector; the per-row start is clamped to
+    [0, T-(k+1)] by dynamic_slice (the rust session applies the identical
+    clamp so its host-side `base` matches the gather)."""
+    w = window_len(cfg)
+
+    def fn(params, memory, src, tgt_in, frontier):
+        logits = M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True)
+        topv, topi = manual_topk(logits, TOPT)     # [B,T,K,TOPT]
+
+        def gather(v, i, f):                       # [T,K,TOPT] x2, scalar
+            return (
+                jax.lax.dynamic_slice_in_dim(v, f, w, axis=0),
+                jax.lax.dynamic_slice_in_dim(i, f, w, axis=0),
+            )
+
+        wv, wi = jax.vmap(gather)(topv, topi, frontier)  # [B,w,K,TOPT]
+        return wv, wi.astype(jnp.int32)
+
+    return fn
+
+
 def make_logits_fn(cfg: M.ModelConfig):
     def fn(params, memory, src, tgt_in):
         return (M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True),)
@@ -347,9 +380,12 @@ class Builder:
                     self.manifest["entries"][e] = {"file": f"hlo/{e}.hlo.txt", "batch": b}
                 entry_names[f"nat_b{b}"] = e
             else:
+                fro = jnp.zeros((b,), jnp.int32)
                 for kind, mk, args in (
                     ("encode", make_encode_fn(cfg), (params, src)),
                     ("decode", make_decode_fn(cfg), (params, mem, src, tgt)),
+                    ("decode_window", make_decode_window_fn(cfg),
+                     (params, mem, src, tgt, fro)),
                 ):
                     e = f"{sig}_b{b}_{kind}"
                     if e not in self.manifest["entries"]:

@@ -74,6 +74,51 @@ def test_topk_outputs_sorted_and_consistent(small):
     )
 
 
+def test_decode_window_matches_full(small):
+    """The windowed decode entry must return, per row, exactly the
+    [frontier : frontier+k+1] slice of the full-length top-k tensors, with
+    out-of-range frontiers clamped the way dynamic_slice clamps (the rust
+    session mirrors that clamp host-side)."""
+    v, cfg, params = small
+    src, tgt = D.gen_mt_dataset(v, 2, seed=2)
+    src, tgt = jnp.asarray(src[:, : cfg.max_src]), jnp.asarray(tgt[:, : cfg.max_tgt])
+    mem = M.encode(params, cfg, src)
+    bos = jnp.ones((2, 1), jnp.int32)
+    tgt_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    topv, topi = jax.jit(aot.make_decode_fn(cfg))(params, mem, src, tgt_in)
+
+    w = aot.window_len(cfg)
+    assert w == cfg.k + 1
+    # row 0 at the start, row 1 past the end (must clamp to max_tgt - w)
+    frontier = jnp.asarray([0, cfg.max_tgt - 1], jnp.int32)
+    wv, wi = jax.jit(aot.make_decode_window_fn(cfg))(params, mem, src, tgt_in, frontier)
+    assert wv.shape == (2, w, cfg.k, aot.TOPT)
+    assert wi.shape == (2, w, cfg.k, aot.TOPT)
+    for b, start in enumerate([0, cfg.max_tgt - w]):
+        np.testing.assert_array_equal(
+            np.asarray(wi[b]), np.asarray(topi[b, start: start + w])
+        )
+        np.testing.assert_allclose(
+            np.asarray(wv[b]), np.asarray(topv[b, start: start + w])
+        )
+
+
+def test_decode_window_hlo_exports(tmp_path, small):
+    """The windowed entry must survive the HLO-text round-trip contract
+    (the same lowering path `export_variant` uses)."""
+    _, cfg, params = small
+    b = 1
+    src = jnp.zeros((b, cfg.max_src), jnp.int32)
+    tgt = jnp.zeros((b, cfg.max_tgt), jnp.int32)
+    mem = jnp.zeros((b, cfg.max_src, cfg.d_model), jnp.float32)
+    fro = jnp.zeros((b,), jnp.int32)
+    path = str(tmp_path / "win.hlo.txt")
+    aot.export_fn(aot.make_decode_window_fn(cfg), (params, mem, src, tgt, fro), path)
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
 def test_manifest_plan_names():
     p = aot.plan("min")
     assert "mt_base" in p and "sr_base" in p

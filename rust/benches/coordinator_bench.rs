@@ -11,19 +11,19 @@ use blockdecode::batching::{Request, RequestQueue};
 use blockdecode::bench::Bench;
 use blockdecode::decoding::state::BlockState;
 use blockdecode::decoding::Criterion;
-use blockdecode::model::BlockScores;
+use blockdecode::model::WindowScores;
 use blockdecode::util::json::Json;
 use blockdecode::util::rng::Rng;
 use blockdecode::util::tensor::{TensorF32, TensorI32};
 
-fn fake_scores(b: usize, t: usize, k: usize, topt: usize, rng: &mut Rng) -> BlockScores {
+fn fake_scores(b: usize, t: usize, k: usize, topt: usize, rng: &mut Rng) -> WindowScores {
     let n = b * t * k * topt;
     let topi = TensorI32::from_vec(
         &[b, t, k, topt],
         (0..n).map(|_| rng.range(3, 100) as i32).collect(),
     );
     let topv = TensorF32::from_vec(&[b, t, k, topt], (0..n).map(|_| rng.f64() as f32).collect());
-    BlockScores { topv, topi, k, topt }
+    WindowScores::full(topv, topi, k, topt)
 }
 
 fn main() {
@@ -52,6 +52,19 @@ fn main() {
     b.case("state/build_row_batch8", "row", || {
         for r in 0..8 {
             st.build_row(tgt.row_mut(r));
+        }
+        8
+    });
+
+    // steady-state incremental patch: the accepted prefix is already in
+    // the row, only the proposal window is rewritten
+    for r in 0..8 {
+        st.build_row(tgt.row_mut(r));
+    }
+    b.case("state/patch_row_batch8", "row", || {
+        let (c, w) = (st.accepted.len(), 1 + st.accepted.len() + st.proposals.len());
+        for r in 0..8 {
+            st.patch_row(tgt.row_mut(r), c, w);
         }
         8
     });

@@ -91,43 +91,90 @@ fn main() {
 
     // "after" shape: one pinned session, steps upload only the decoder input
     let session8 = model.begin_session(&src_real).unwrap();
-    b.case("step/session_b8 (tgt upload only)", "pos", || {
+    b.case("step/session_b8 (full download)", "pos", || {
         let sc = session8.step(&tgt8).unwrap();
         std::hint::black_box(&sc);
         8 * t
     });
 
+    // windowed shape: same invocation, but only the [B,k+1,K,topt] score
+    // window at each row's frontier comes back to the host
+    let frontiers8 = vec![0usize; 8];
+    if session8.windowed() {
+        b.case("step/session_windowed_b8", "pos", || {
+            let sc = session8.step_at(&tgt8, &frontiers8).unwrap();
+            std::hint::black_box(&sc);
+            8 * t
+        });
+    } else {
+        eprintln!("(no decode_window entries in these artifacts; windowed cases skipped)");
+    }
+
     let src1 = TensorI32::from_vec(&[1, s], src_real.row(0).to_vec());
     let tgt1 = TensorI32::zeros(&[1, t]);
     let session1 = model.begin_session(&src1).unwrap();
     b.case("step/session_b1", "pos", || {
-        let sc = session1.step(&tgt1).unwrap();
+        let sc = session1.step_at(&tgt1, &[0]).unwrap();
         std::hint::black_box(&sc);
         t
     });
 
-    // upload-byte accounting: a steady-state session step must transfer
-    // exactly the [B,T] i32 decoder input — the O(B·S·D·4)-byte memory and
-    // O(B·S·4)-byte src re-uploads of the old decode_topk path are gone
+    // transfer accounting: a steady-state step uploads only the [B,T] i32
+    // decoder input (+ the [B] i32 frontier vector on the windowed path)
+    // — the O(B·S·D·4)-byte memory and O(B·S·4)-byte src re-uploads of the
+    // old decode_topk path are gone — and downloads only the
+    // [B,k+1,K,topt] score window (the full [B,T,K,topt] tensors on
+    // manifests without windowed entries)
+    let k = model.k();
+    let topt = model.topt;
     let before = ctx.rt.stats_snapshot();
-    let _ = session8.step(&tgt8).unwrap();
+    let _ = session8.step_at(&tgt8, &frontiers8).unwrap();
     let per_step = ctx.rt.stats_snapshot().delta(&before);
     let tgt_bytes = (8 * t * 4) as u64;
-    let legacy_bytes = (8 * s * d * 4 + 8 * s * 4) as u64 + tgt_bytes;
-    assert_eq!(
-        per_step.uploads, 1,
-        "steady-state step should perform exactly one host->device transfer"
-    );
-    assert_eq!(
-        per_step.bytes_uploaded, tgt_bytes,
-        "steady-state step should upload only the [B,T] i32 decoder input"
-    );
+    let legacy_up = (8 * s * d * 4 + 8 * s * 4) as u64 + tgt_bytes;
+    let full_down = (2 * 8 * t * k * topt * 4) as u64; // topv f32 + topi i32
     assert_eq!(per_step.executions, 1);
+    assert_eq!(
+        per_step.downloads, 1,
+        "a step should perform exactly one device->host fetch"
+    );
+    if session8.windowed() {
+        let w = session8.window_len();
+        let win_down = (2 * 8 * w * k * topt * 4) as u64;
+        assert_eq!(
+            per_step.uploads, 2,
+            "a windowed step uploads the decoder input and the frontier vector"
+        );
+        assert_eq!(per_step.bytes_uploaded, tgt_bytes + 8 * 4);
+        assert_eq!(
+            per_step.bytes_downloaded, win_down,
+            "a windowed step must download only the [B,k+1,K,topt] window"
+        );
+        eprintln!(
+            "per-step download: {} B (full-tensor path: {} B -> {:.1}x reduction)",
+            win_down,
+            full_down,
+            full_down as f64 / win_down as f64
+        );
+    } else {
+        assert_eq!(
+            per_step.uploads, 1,
+            "steady-state step should perform exactly one host->device transfer"
+        );
+        assert_eq!(
+            per_step.bytes_uploaded, tgt_bytes,
+            "steady-state step should upload only the [B,T] i32 decoder input"
+        );
+        assert_eq!(
+            per_step.bytes_downloaded, full_down,
+            "the fallback path downloads the full [B,T,K,topt] tensors"
+        );
+    }
     eprintln!(
         "per-step upload: {} B (pre-session path: {} B -> {:.0}x reduction)",
-        tgt_bytes,
-        legacy_bytes,
-        legacy_bytes as f64 / tgt_bytes as f64
+        per_step.bytes_uploaded,
+        legacy_up,
+        legacy_up as f64 / per_step.bytes_uploaded as f64
     );
 
     println!("\n== summary ==\n{}", b.report());

@@ -58,7 +58,10 @@ pub fn decode_one(
                 row[1 + i] = t;
             }
         }
-        let scores = session.step(&tgt_in)?;
+        // every hypothesis row reads position `pos` only, so the windowed
+        // session downloads just the frontier window
+        let frontiers = vec![pos; bucket];
+        let scores = session.step_at(&tgt_in, &frontiers)?;
         invocations += 1;
 
         // log-softmax over the exported top-t as an approximation of the
@@ -75,7 +78,7 @@ pub fn decode_one(
                 .sum::<f32>()
                 .ln();
             for r in 0..beam.min(scores.topt) {
-                let tok = scores.topi.get(&[b, pos, 0, r]);
+                let tok = scores.token(b, pos, 0, r);
                 let lp = scores.logit(b, pos, 0, r) - denom;
                 let mut t2 = h.tokens.clone();
                 t2.push(tok);

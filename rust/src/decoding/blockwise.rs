@@ -9,10 +9,11 @@
 //! The loop itself ([`decode_rows`]) is generic over
 //! [`BlockStepper`](crate::model::BlockStepper): in production it drives a
 //! device-resident [`DecodeSession`](crate::model::DecodeSession) — the
-//! encoder memory and source batch are uploaded once per decode, and each
-//! iteration transfers only the `[B,T]` decoder input — and in property
-//! tests it drives the simulated model, so the exact serving loop is the
-//! loop under test.
+//! encoder memory and source batch are uploaded once per decode, each
+//! iteration uploads only the `[B,T]` decoder input plus the `[B]`
+//! per-row frontier indices, and downloads only the `[B,k+1,K,topt]`
+//! score window at those frontiers — and in property tests it drives the
+//! simulated model, so the exact serving loop is the loop under test.
 //!
 //! With `Criterion::Exact` the output is guaranteed identical to greedy
 //! decoding with head 0 — the paper's core invariant, enforced by the
@@ -63,10 +64,15 @@ pub struct DecodeResult {
 /// Drive a batch of row states to completion against `stepper`, one
 /// combined invocation per iteration.
 ///
-/// Decoder-input rows are (re)built only for rows still in flight: a row
-/// that finishes is PAD-filled once and never touched again, and the
-/// padding rows of the bucket stay PAD from initialization — finished and
-/// padding rows are equally inert to the model.
+/// Decoder-input rows are patched incrementally and only for rows still
+/// in flight: the accepted prefix is append-only, so each iteration
+/// rewrites just the cells from the previous frontier onward
+/// ([`BlockState::patch_row`]). A row that finishes is PAD-filled once
+/// and never touched again, and the padding rows of the bucket stay PAD
+/// from initialization — finished and padding rows are equally inert to
+/// the model. Each step passes the per-row frontier indices to the
+/// stepper so it can return (and, on device, download) only the
+/// `[B,k+1,K,topt]` score window the verify/accept logic reads.
 pub fn decode_rows<S: BlockStepper>(
     stepper: &mut S,
     states: &mut [BlockState],
@@ -78,6 +84,12 @@ pub fn decode_rows<S: BlockStepper>(
     // are somehow already done) inert from the start.
     let mut tgt_in = TensorI32::zeros(&[bucket, t_len]);
     debug_assert_eq!(PAD, 0);
+    // per-row incremental build state (accepted tokens already in the row,
+    // meaningful cells written) and the frontier vector for the stepper;
+    // inert rows keep frontier 0 — their scores are never read
+    let mut frontiers = vec![0usize; bucket];
+    let mut committed = vec![0usize; bucket];
+    let mut written = vec![0usize; bucket];
     loop {
         let mut any_active = false;
         for (b, st) in states.iter().enumerate() {
@@ -85,12 +97,15 @@ pub fn decode_rows<S: BlockStepper>(
                 continue; // row was PAD-filled when it finished
             }
             any_active = true;
-            st.build_row(tgt_in.row_mut(b));
+            frontiers[b] = st.frontier();
+            let (c, w) = st.patch_row(tgt_in.row_mut(b), committed[b], written[b]);
+            committed[b] = c;
+            written[b] = w;
         }
         if !any_active {
             break;
         }
-        let scores = stepper.step(&tgt_in)?;
+        let scores = stepper.step_at(&tgt_in, &frontiers)?;
         for (b, st) in states.iter_mut().enumerate() {
             let was_done = st.done;
             st.absorb(&scores, b);

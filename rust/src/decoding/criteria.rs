@@ -7,7 +7,7 @@
 //!   if |intensity(proposal) − intensity(argmax)| ≤ eps (§5.2, the paper
 //!   uses ε = 2 for super-resolution).
 
-use crate::model::BlockScores;
+use crate::model::WindowScores;
 use crate::tokenizer;
 
 /// Verification criterion (§5). All criteria accept p1's exact argmax.
@@ -21,7 +21,7 @@ pub enum Criterion {
 impl Criterion {
     /// Would p1 (head 0) at decoder position `pos` of row `b` accept
     /// `proposed`?
-    pub fn accepts(&self, scores: &BlockScores, b: usize, pos: usize, proposed: i32) -> bool {
+    pub fn accepts(&self, scores: &WindowScores, b: usize, pos: usize, proposed: i32) -> bool {
         match *self {
             Criterion::Exact => scores.top1(b, pos, 0) == proposed,
             Criterion::TopK(k) => scores.in_topk(b, pos, 0, proposed, k),
@@ -67,18 +67,18 @@ impl Criterion {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::BlockScores;
+    use crate::model::WindowScores;
     use crate::util::tensor::{TensorF32, TensorI32};
 
     /// scores with a single (b=0, pos, head=0) row of given top ids
-    fn fake_scores(top_ids: &[i32]) -> BlockScores {
+    fn fake_scores(top_ids: &[i32]) -> WindowScores {
         let t = top_ids.len();
-        BlockScores {
-            topv: TensorF32::from_vec(&[1, 1, 1, t], (0..t).map(|i| -(i as f32)).collect()),
-            topi: TensorI32::from_vec(&[1, 1, 1, t], top_ids.to_vec()),
-            k: 1,
-            topt: t,
-        }
+        WindowScores::full(
+            TensorF32::from_vec(&[1, 1, 1, t], (0..t).map(|i| -(i as f32)).collect()),
+            TensorI32::from_vec(&[1, 1, 1, t], top_ids.to_vec()),
+            1,
+            t,
+        )
     }
 
     #[test]

@@ -46,7 +46,10 @@ pub fn decode_batch(
         if done.iter().all(|&d| d) {
             break;
         }
-        let scores = session.step(&tgt_in)?;
+        // every live row's frontier is the shared position cursor; the
+        // windowed session then downloads only the scores around `pos`
+        let frontiers = vec![pos; bucket];
+        let scores = session.step_at(&tgt_in, &frontiers)?;
         for b in 0..n {
             if done[b] {
                 continue;

@@ -13,7 +13,7 @@
 //! continuous-batching engine (`scheduler::engine`) drive this type, so
 //! the algorithm is tested once and served everywhere.
 
-use crate::model::BlockScores;
+use crate::model::WindowScores;
 use crate::tokenizer::{BOS, EOS, PAD};
 
 use super::criteria::Criterion;
@@ -109,24 +109,50 @@ impl BlockState {
     /// Write this sequence's decoder-input row `[BOS, accepted…,
     /// proposals…, PAD…]` into `row` (length = 1 + max_len ≤ row.len()).
     pub fn build_row(&self, row: &mut [i32]) {
-        row.fill(PAD);
-        row[0] = BOS;
-        for (i, &t) in self.accepted.iter().enumerate() {
-            row[1 + i] = t;
-        }
+        self.patch_row(row, 0, 0);
+    }
+
+    /// Incrementally refresh this sequence's decoder-input row.
+    ///
+    /// `committed` is how many accepted tokens the row already holds and
+    /// `written` how many meaningful cells (BOS + accepted + proposals) it
+    /// held after the previous call (0 = virgin/PAD row, triggering a full
+    /// rebuild). The accepted prefix is append-only, so only cells from
+    /// the first change onward are rewritten, and stale proposal cells
+    /// beyond the new content are re-PADded. Returns the new
+    /// `(committed, written)` pair to thread into the next call.
+    pub fn patch_row(&self, row: &mut [i32], committed: usize, written: usize) -> (usize, usize) {
         let j = self.frontier();
-        for (s, &p) in self.proposals.iter().enumerate() {
-            if 1 + j + s < row.len() {
-                row[1 + j + s] = p;
+        debug_assert!(committed <= j, "accepted prefix shrank ({committed} -> {j})");
+        if written == 0 {
+            row.fill(PAD);
+            row[0] = BOS;
+        }
+        for (i, &t) in self.accepted[committed..].iter().enumerate() {
+            row[1 + committed + i] = t;
+        }
+        let mut end = 1 + j;
+        for &p in &self.proposals {
+            if end < row.len() {
+                row[end] = p;
+                end += 1;
             }
         }
+        // re-PAD stale proposal cells the previous (longer) content left
+        let stale_end = written.min(row.len());
+        if stale_end > end {
+            row[end..stale_end].fill(PAD);
+        }
+        (j, end)
     }
 
     /// Verify + accept + re-predict from one invocation's scores.
     ///
-    /// `b` is this sequence's row in the batch. Returns k̂ (0 only for the
+    /// `b` is this sequence's row in the batch; `scores` must cover
+    /// decoder positions `frontier() ..= frontier() + k` (a frontier
+    /// window or a full-length tensor). Returns k̂ (0 only for the
     /// bootstrap invocation that had no proposals yet).
-    pub fn absorb(&mut self, scores: &BlockScores, b: usize) -> usize {
+    pub fn absorb(&mut self, scores: &WindowScores, b: usize) -> usize {
         if self.done {
             return 0;
         }
@@ -198,9 +224,9 @@ mod tests {
     use super::*;
     use crate::util::tensor::{TensorF32, TensorI32};
 
-    /// Build BlockScores where head h at position t predicts
+    /// Build full-length WindowScores where head h at position t predicts
     /// `pred[t][h]` (top-1) and the runner-up is always token 99.
-    fn scores_from(pred: &[Vec<i32>], k: usize) -> BlockScores {
+    fn scores_from(pred: &[Vec<i32>], k: usize) -> WindowScores {
         let t = pred.len();
         let topt = 2;
         let mut topi = TensorI32::zeros(&[1, t, k, topt]);
@@ -213,7 +239,7 @@ mod tests {
                 topv.set(&[0, ti, h, 1], 0.5);
             }
         }
-        BlockScores { topv, topi, k, topt }
+        WindowScores::full(topv, topi, k, topt)
     }
 
     #[test]
@@ -347,6 +373,63 @@ mod tests {
         let mut row = vec![-1; 7];
         st.build_row(&mut row);
         assert_eq!(row, vec![BOS, 7, 8, 9, 10, PAD, PAD]);
+    }
+
+    #[test]
+    fn patch_row_matches_full_rebuild() {
+        // evolve a hypothesis the way the decode loop does and check the
+        // incrementally-patched row stays byte-identical to a from-scratch
+        // build_row at every step (including shrinking proposal windows)
+        let mut st = BlockState::new(3, Criterion::Exact, 10);
+        let mut inc = vec![-1i32; 11];
+        let (mut c, mut w) = (0usize, 0usize);
+        let phases: Vec<(Vec<i32>, Vec<i32>)> = vec![
+            (vec![], vec![5, 6, 7]),
+            (vec![5, 6], vec![8, 9, 10]),
+            (vec![5, 6, 8], vec![11]),
+            (vec![5, 6, 8, 11], vec![]),
+        ];
+        for (acc, props) in phases {
+            st.accepted = acc;
+            st.proposals = props;
+            let (c2, w2) = st.patch_row(&mut inc, c, w);
+            c = c2;
+            w = w2;
+            let mut full = vec![-1i32; 11];
+            st.build_row(&mut full);
+            assert_eq!(inc, full, "patched row diverged at frontier {}", st.frontier());
+            assert_eq!(c, st.frontier());
+            assert_eq!(w, 1 + st.frontier() + st.proposals.len());
+        }
+    }
+
+    #[test]
+    fn absorb_reads_frontier_window() {
+        // same verify/accept/re-predict, but through a [1, k+1, K, topt]
+        // window based at the frontier instead of a full-length tensor
+        let mut st = BlockState::new(2, Criterion::Exact, 8);
+        st.accepted = vec![20, 21, 22];
+        st.proposals = vec![10, 11];
+        // window covers positions 3..=5 (frontier 3, k+1 = 3 positions)
+        let pred = vec![vec![10, 11], vec![11, 12], vec![12, 13]];
+        let t = pred.len();
+        let topt = 2;
+        let mut topi = TensorI32::zeros(&[1, t, 2, topt]);
+        let mut topv = TensorF32::zeros(&[1, t, 2, topt]);
+        for (ti, row) in pred.iter().enumerate() {
+            for h in 0..2 {
+                topi.set(&[0, ti, h, 0], row[h]);
+                topi.set(&[0, ti, h, 1], 99);
+                topv.set(&[0, ti, h, 0], 1.0);
+                topv.set(&[0, ti, h, 1], 0.5);
+            }
+        }
+        let sc = WindowScores { topv, topi, base: vec![3], k: 2, topt };
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 2);
+        assert_eq!(st.accepted, vec![20, 21, 22, 10, 11]);
+        // §4 merge: re-predict at the new frontier 5 = window offset 2
+        assert_eq!(st.proposals, vec![12, 13]);
     }
 
     #[test]

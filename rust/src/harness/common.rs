@@ -50,8 +50,12 @@ pub struct EvalOutcome {
     pub invocations: usize,
     pub wall_s: f64,
     /// host->device bytes transferred during the evaluation (session-based
-    /// decoding keeps this at one encode upload + [B,T] per step)
+    /// decoding keeps this at one encode upload + [B,T] (+ [B] frontier)
+    /// per step)
     pub uploaded_bytes: u64,
+    /// device->host bytes transferred (windowed decoding keeps this at
+    /// [B,k+1,K,topt] per step instead of [B,T,K,topt])
+    pub downloaded_bytes: u64,
 }
 
 /// Run blockwise decoding over the whole dataset in bucket-sized batches.
@@ -71,7 +75,7 @@ pub fn eval_blockwise(
         results.extend(decoding::blockwise_decode(model, &srcs, cfg)?);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    let uploaded = model.runtime().stats_snapshot().delta(&stats0).bytes_uploaded;
+    let d = model.runtime().stats_snapshot().delta(&stats0);
     let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.tokens.clone()).collect();
     let refs: Vec<Vec<i32>> = ds.rows[..n].iter().map(|r| r.reference.clone()).collect();
     Ok(EvalOutcome {
@@ -80,7 +84,8 @@ pub fn eval_blockwise(
         invocations: results.iter().map(|r| r.stats.invocations).sum(),
         outputs,
         wall_s,
-        uploaded_bytes: uploaded,
+        uploaded_bytes: d.bytes_uploaded,
+        downloaded_bytes: d.bytes_downloaded,
     })
 }
 
@@ -101,7 +106,7 @@ pub fn eval_greedy(
         results.extend(decoding::greedy_decode(model, &srcs, max_len)?);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    let uploaded = model.runtime().stats_snapshot().delta(&stats0).bytes_uploaded;
+    let d = model.runtime().stats_snapshot().delta(&stats0);
     let outputs: Vec<Vec<i32>> = results.iter().map(|r| r.tokens.clone()).collect();
     let refs: Vec<Vec<i32>> = ds.rows[..n].iter().map(|r| r.reference.clone()).collect();
     Ok(EvalOutcome {
@@ -110,7 +115,8 @@ pub fn eval_greedy(
         invocations: results.iter().map(|r| r.stats.invocations).sum(),
         outputs,
         wall_s,
-        uploaded_bytes: uploaded,
+        uploaded_bytes: d.bytes_uploaded,
+        downloaded_bytes: d.bytes_downloaded,
     })
 }
 

@@ -33,6 +33,7 @@ pub fn run(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
     table.row(k1);
 
     let mut block_uploaded = 0u64;
+    let mut block_downloaded = 0u64;
     let mut block_evals = 0u64;
     for k in KS {
         let mut cells = vec![k.to_string()];
@@ -44,6 +45,7 @@ pub fn run(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
             let model = ctx.model(&variant)?;
             let o = eval_blockwise(&model, &ds, &BlockwiseConfig::default(), limit)?;
             block_uploaded += o.uploaded_bytes;
+            block_downloaded += o.downloaded_bytes;
             block_evals += 1;
             cells.push(format!("{:.2} / {:.2}", o.bleu, o.mean_block));
         }
@@ -53,12 +55,15 @@ pub fn run(ctx: &Ctx, limit: Option<usize>) -> Result<String> {
     let out = format!(
         "Table 1: newstest2013-analogue dev set (BLEU / mean accepted block size)\n\
          dataset rows: {}, exact-match acceptance\n\n{}\n\
-         host->device uploads: {:.2} MiB greedy baseline, {:.2} MiB mean per blockwise eval\n\
-         (device-resident sessions: one encode upload per batch + [B,T] i32 per step)\n",
+         host<->device transfer per blockwise eval (mean): \
+         {:.2} MiB up, {:.2} MiB down ({:.2} MiB up greedy baseline)\n\
+         (device-resident sessions: one encode upload per batch, [B,T] i32 + [B] frontier\n\
+          up and a [B,k+1,K,topt] score window down per step)\n",
         limit.unwrap_or(ds.len()).min(ds.len()),
         table.render(),
-        g.uploaded_bytes as f64 / (1 << 20) as f64,
-        block_uploaded as f64 / block_evals.max(1) as f64 / (1 << 20) as f64
+        block_uploaded as f64 / block_evals.max(1) as f64 / (1 << 20) as f64,
+        block_downloaded as f64 / block_evals.max(1) as f64 / (1 << 20) as f64,
+        g.uploaded_bytes as f64 / (1 << 20) as f64
     );
     save_results("table1.txt", &out)?;
     Ok(out)

@@ -208,34 +208,63 @@ fn selftest(rest: &[String]) -> Result<()> {
     }
     println!("blockwise(exact) == greedy over {} sentences ✓", srcs.len());
 
-    // session upload accounting: a steady-state decode step must transfer
-    // only the [B,T] i32 decoder input (memory + src stay device-resident)
+    // session transfer accounting: a steady-state decode step must upload
+    // only the [B,T] i32 decoder input (plus the [B] frontier vector on
+    // the windowed path; memory + src stay device-resident) and download
+    // only the [B,k+1,K,topt] frontier window (full tensors on manifests
+    // without decode_window entries)
     let bucket = model.pick_bucket(1)?;
     let mut src = blockdecode::util::tensor::TensorI32::zeros(&[bucket, model.max_src()]);
     let n0 = srcs[0].len().min(model.max_src());
     src.row_mut(0)[..n0].copy_from_slice(&srcs[0][..n0]);
     let session = model.begin_session(&src)?;
     let tgt = blockdecode::util::tensor::TensorI32::zeros(&[bucket, model.max_tgt()]);
+    let frontiers = vec![0usize; bucket];
     let before = ctx.rt.stats_snapshot();
-    let _ = session.step(&tgt)?;
+    let _ = session.step_at(&tgt, &frontiers)?;
     let d = ctx.rt.stats_snapshot().delta(&before);
-    let want = (bucket * model.max_tgt() * 4) as u64;
+    let tgt_bytes = (bucket * model.max_tgt() * 4) as u64;
+    let (want_ups, want_up): (u64, u64) = if session.windowed() {
+        (2, tgt_bytes + (bucket * 4) as u64)
+    } else {
+        (1, tgt_bytes)
+    };
     anyhow::ensure!(
-        d.uploads == 1 && d.bytes_uploaded == want,
-        "session step uploaded {} B in {} transfers (want {want} B in 1)",
+        d.uploads == want_ups && d.bytes_uploaded == want_up,
+        "session step uploaded {} B in {} transfers (want {want_up} B in {want_ups})",
         d.bytes_uploaded,
         d.uploads
     );
-    println!("session step uploads {} B (decoder input only) ✓", d.bytes_uploaded);
+    let want_down = (2 * bucket * session.window_len() * model.k() * model.topt * 4) as u64;
+    anyhow::ensure!(
+        d.downloads == 1 && d.bytes_downloaded == want_down,
+        "session step downloaded {} B in {} transfers (want {want_down} B in 1)",
+        d.bytes_downloaded,
+        d.downloads
+    );
+    let full_down = (2 * bucket * model.max_tgt() * model.k() * model.topt * 4) as u64;
+    if session.windowed() {
+        println!(
+            "session step: {} B up, {} B down ([B,k+1,K,topt] window; full path {} B) ✓",
+            d.bytes_uploaded, d.bytes_downloaded, full_down
+        );
+    } else {
+        println!(
+            "session step: {} B up, {} B down (no windowed entries in manifest) ✓",
+            d.bytes_uploaded, d.bytes_downloaded
+        );
+    }
 
     let stats = ctx.rt.stats_snapshot();
     println!(
-        "runtime: {} compiles ({:.1}s), {} executions ({:.1}ms mean), {:.2} MiB uploaded",
+        "runtime: {} compiles ({:.1}s), {} executions ({:.1}ms mean), \
+         {:.2} MiB uploaded, {:.2} MiB downloaded",
         stats.compiles,
         stats.compile_us as f64 / 1e6,
         stats.executions,
         stats.execute_us as f64 / 1e3 / stats.executions.max(1) as f64,
-        stats.bytes_uploaded as f64 / (1 << 20) as f64
+        stats.bytes_uploaded as f64 / (1 << 20) as f64,
+        stats.bytes_downloaded as f64 / (1 << 20) as f64
     );
     println!("selftest OK");
     Ok(())

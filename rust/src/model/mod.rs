@@ -2,15 +2,20 @@
 //! device-resident weights and compiled entry points.
 //!
 //! `ScoringModel` is the combined scoring-and-proposal model (§4). Decoding
-//! is session-based: [`ScoringModel::begin_session`] encodes the source
-//! batch **once** and pins the encoder memory `[B,S,D]` and source ids
-//! `[B,S]` on device; every [`DecodeSession::step`] then uploads only the
-//! small `[B,T]` i32 decoder input and returns, for every decoder position
-//! and every head i ∈ 1..k, the top-t candidate tokens with logits —
-//! everything the blockwise verify/accept logic and the next prediction
-//! step need. The per-step host↔device traffic is therefore O(B·T·4)
-//! bytes instead of the O(B·S·D·4) the old one-shot `decode_topk` path
-//! paid to re-upload the (invariant) memory each iteration.
+//! is session-based and **frontier-windowed**: [`ScoringModel::begin_session`]
+//! encodes the source batch **once** and pins the encoder memory `[B,S,D]`
+//! and source ids `[B,S]` on device; every [`DecodeSession::step_at`] then
+//! uploads only the `[B,T]` i32 decoder input plus a `[B]` i32 vector of
+//! per-row frontier indices, and downloads only the `[B,k+1,K,topt]` score
+//! window gathered at each row's frontier — the k+1 positions the blockwise
+//! verify/accept logic and the next prediction step actually read. The
+//! per-step traffic is therefore O(B·T) bytes up and O(B·(k+1)·K·topt)
+//! bytes down, instead of the O(B·S·D) up / O(B·T·K·topt) down the
+//! pre-session and pre-window paths paid to move (mostly unread) tensors
+//! each iteration. Manifests that predate the `decode_window_b*` entry
+//! still decode through the full-length [`DecodeSession::step`] path; the
+//! scores type is the same either way (`base` is all zeros and the window
+//! spans the whole decoder length).
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -23,31 +28,67 @@ use crate::runtime::{
 };
 use crate::util::tensor::{TensorF32, TensorI32};
 
-/// Result of one combined scoring/proposal invocation.
+/// Result of one combined scoring/proposal invocation: top-t candidates per
+/// (position, head) over a **frontier-relative window** of decoder
+/// positions. Window offset `o` of row `b` holds the scores of absolute
+/// decoder position `base[b] + o`; accessors take absolute positions and
+/// translate, so consumers never see the gather offset. A full-length
+/// `[B,T,K,topt]` tensor is the degenerate window with `base` all zero.
 #[derive(Debug, Clone)]
-pub struct BlockScores {
-    /// [B, T, K, topt] logits, descending per (b,t,k)
+pub struct WindowScores {
+    /// [B, W, K, topt] logits, descending per (b, o, k)
     pub topv: TensorF32,
-    /// [B, T, K, topt] token ids
+    /// [B, W, K, topt] token ids
     pub topi: TensorI32,
+    /// absolute decoder position of each row's window offset 0
+    pub base: Vec<usize>,
     pub k: usize,
     pub topt: usize,
 }
 
-impl BlockScores {
+impl WindowScores {
+    /// Wrap a full-length `[B,T,K,topt]` tensor pair as the trivial window
+    /// (base 0 everywhere) — the reference/fallback representation.
+    pub fn full(topv: TensorF32, topi: TensorI32, k: usize, topt: usize) -> Self {
+        let b = topi.dims[0];
+        WindowScores { topv, topi, base: vec![0; b], k, topt }
+    }
+
+    /// Number of decoder positions each row's window covers.
+    pub fn window(&self) -> usize {
+        self.topi.dims[1]
+    }
+
+    /// Window offset of absolute decoder position `pos` for row `b`.
+    fn off(&self, b: usize, pos: usize) -> usize {
+        let base = self.base[b];
+        assert!(
+            pos >= base && pos - base < self.window(),
+            "position {pos} outside row {b}'s score window [{base}, {})",
+            base + self.window()
+        );
+        pos - base
+    }
+
     /// p_head's argmax token at decoder position `t` for row `b`.
     pub fn top1(&self, b: usize, t: usize, head: usize) -> i32 {
-        self.topi.get(&[b, t, head, 0])
+        self.topi.get(&[b, self.off(b, t), head, 0])
     }
 
     /// Is `token` within the top-`kk` candidates of `head` at (b, t)?
     pub fn in_topk(&self, b: usize, t: usize, head: usize, token: i32, kk: usize) -> bool {
-        (0..kk.min(self.topt)).any(|r| self.topi.get(&[b, t, head, r]) == token)
+        let o = self.off(b, t);
+        (0..kk.min(self.topt)).any(|r| self.topi.get(&[b, o, head, r]) == token)
+    }
+
+    /// Candidate token of rank `r` (0 = best).
+    pub fn token(&self, b: usize, t: usize, head: usize, r: usize) -> i32 {
+        self.topi.get(&[b, self.off(b, t), head, r])
     }
 
     /// Logit of rank `r` (0 = best).
     pub fn logit(&self, b: usize, t: usize, head: usize, r: usize) -> f32 {
-        self.topv.get(&[b, t, head, r])
+        self.topv.get(&[b, self.off(b, t), head, r])
     }
 }
 
@@ -56,8 +97,13 @@ impl BlockScores {
 /// the simulated model (`testing::sim::SimSession`) in property tests.
 /// `decoding::blockwise::decode_rows` is generic over this, so the exact
 /// loop that serves requests is the loop the simulator exercises.
+///
+/// `frontiers[b]` is row `b`'s accepted-token count; implementations must
+/// return scores covering at least positions `frontiers[b] ..=
+/// frontiers[b] + k` (clamped to the decoder length) — everything the
+/// verify/accept/re-predict substeps read.
 pub trait BlockStepper {
-    fn step(&mut self, tgt_in: &TensorI32) -> Result<BlockScores>;
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores>;
 }
 
 /// A loaded combined scoring/proposal variant.
@@ -68,6 +114,9 @@ pub struct ScoringModel {
     weights: Rc<DeviceWeights>,
     encode: BTreeMap<usize, Rc<Executable>>,
     decode: BTreeMap<usize, Rc<Executable>>,
+    /// frontier-windowed decode entries; empty for manifests that predate
+    /// the `decode_window_b*` export (those fall back to full-length steps)
+    decode_window: BTreeMap<usize, Rc<Executable>>,
 }
 
 impl ScoringModel {
@@ -76,27 +125,26 @@ impl ScoringModel {
         let bundle = WeightBundle::load(&spec.weights)
             .with_context(|| format!("weights for {variant}"))?;
         let weights = Rc::new(rt.upload_weights(&bundle)?);
-        let mut encode = BTreeMap::new();
-        let mut decode = BTreeMap::new();
-        for (logical, key) in &spec.entries {
-            let e = &manifest.entries[key];
-            let exe = rt.load(key, &e.file)?;
-            if let Some(b) = logical.strip_prefix("encode_b") {
-                encode.insert(b.parse::<usize>()?, exe);
-            } else if let Some(b) = logical.strip_prefix("decode_b") {
-                decode.insert(b.parse::<usize>()?, exe);
-            }
-        }
+        let load_bucketed = |prefix: &str| -> Result<BTreeMap<usize, Rc<Executable>>> {
+            spec.bucketed(prefix)
+                .into_iter()
+                .map(|(b, key)| Ok((b, rt.load(key, &manifest.entries[key].file)?)))
+                .collect()
+        };
+        let encode = load_bucketed("encode_b")?;
+        let decode = load_bucketed("decode_b")?;
+        let decode_window = load_bucketed("decode_window_b")?;
         if encode.is_empty() || decode.is_empty() {
             bail!("variant {variant} lacks encode/decode entries");
         }
         log::info!(
-            "loaded {variant}: k={} {} params, buckets {:?}",
+            "loaded {variant}: k={} {} params, buckets {:?}{}",
             spec.k,
             weights.total_params,
-            encode.keys().collect::<Vec<_>>()
+            encode.keys().collect::<Vec<_>>(),
+            if decode_window.is_empty() { " (no windowed decode entries)" } else { "" }
         );
-        Ok(ScoringModel { spec, topt: manifest.topt, rt, weights, encode, decode })
+        Ok(ScoringModel { spec, topt: manifest.topt, rt, weights, encode, decode, decode_window })
     }
 
     pub fn k(&self) -> usize {
@@ -114,6 +162,11 @@ impl ScoringModel {
     /// Available batch buckets (ascending).
     pub fn buckets(&self) -> Vec<usize> {
         self.encode.keys().copied().collect()
+    }
+
+    /// Does this variant ship frontier-windowed decode entries?
+    pub fn has_windowed_decode(&self) -> bool {
+        !self.decode_window.is_empty()
     }
 
     /// Smallest bucket that fits `n` rows. Errors when `n` exceeds every
@@ -149,8 +202,8 @@ impl ScoringModel {
 
     /// Start a device-resident decode session: encode `src` [B,S] once and
     /// pin the resulting memory and the source ids on device. Every
-    /// subsequent [`DecodeSession::step`] uploads only the `[B,T]` decoder
-    /// input.
+    /// subsequent [`DecodeSession::step_at`] uploads only the `[B,T]`
+    /// decoder input and the `[B]` frontier vector.
     pub fn begin_session(&self, src: &TensorI32) -> Result<DecodeSession> {
         let memory = self.encode(src)?;
         self.begin_session_with(src.clone(), memory)
@@ -180,12 +233,15 @@ impl ScoringModel {
             .get(&b)
             .ok_or_else(|| anyhow::anyhow!("no decode bucket {b} (have {:?})", self.buckets()))?
             .clone();
+        let window_exe = self.decode_window.get(&b).cloned();
         let src_dev = self.rt.upload_i32(&src)?;
         let mem_dev = self.rt.upload_f32(&memory)?;
         Ok(DecodeSession {
             rt: self.rt.clone(),
             weights: self.weights.clone(),
             exe,
+            window_exe,
+            window: (self.spec.k + 1).min(self.max_tgt()),
             bucket: b,
             t_len: self.max_tgt(),
             src_host: src,
@@ -204,12 +260,17 @@ impl ScoringModel {
 /// source ids `[B,S]` pinned on device for the lifetime of the decode,
 /// plus host mirrors so the continuous-batching engine can scatter
 /// newly-admitted rows in. The session owns `Rc` handles to the runtime,
-/// weights, and decode entry point, so it is self-contained — an engine
+/// weights, and decode entry points, so it is self-contained — an engine
 /// can hold it alongside the `ScoringModel` it came from.
 pub struct DecodeSession {
     rt: Rc<Runtime>,
     weights: Rc<DeviceWeights>,
+    /// full-length decode entry (fallback + reference path)
     exe: Rc<Executable>,
+    /// frontier-windowed decode entry, when the manifest exports one
+    window_exe: Option<Rc<Executable>>,
+    /// positions gathered per row by `window_exe` (k + 1)
+    window: usize,
     bucket: usize,
     t_len: usize,
     src_host: TensorI32,
@@ -233,11 +294,26 @@ impl DecodeSession {
         &self.memory_host
     }
 
-    /// One combined scoring/proposal invocation against the pinned state.
-    ///
-    /// `tgt_in` is the `[B,T]` shifted decoder input — the only host→device
-    /// transfer this performs. Returns top-t per (pos, head).
-    pub fn step(&self, tgt_in: &TensorI32) -> Result<BlockScores> {
+    /// Does `step_at` run the frontier-windowed entry point?
+    pub fn windowed(&self) -> bool {
+        self.window_exe.is_some()
+    }
+
+    /// Positions of scores each `step_at` returns per row: k+1 on the
+    /// windowed path, the full decoder length on the fallback path.
+    pub fn window_len(&self) -> usize {
+        if self.window_exe.is_some() {
+            self.window
+        } else {
+            self.t_len
+        }
+    }
+
+    /// One **full-length** combined scoring/proposal invocation against the
+    /// pinned state: downloads the complete `[B,T,K,topt]` score tensors.
+    /// This is the fallback for manifests without windowed entries and the
+    /// reference path the windowed contract is property-tested against.
+    pub fn step(&self, tgt_in: &TensorI32) -> Result<WindowScores> {
         anyhow::ensure!(
             tgt_in.dims == [self.bucket, self.t_len],
             "tgt_in {:?} does not match session [{}, {}]",
@@ -251,14 +327,65 @@ impl DecodeSession {
         args.push(self.src_dev.buffer());
         args.push(tgt_buf.buffer());
         let out = self.rt.execute(&self.exe, &args)?;
-        block_scores_from(&out)
+        window_scores_from(&out)
+    }
+
+    /// One frontier-windowed invocation: uploads the `[B,T]` decoder input
+    /// plus the `[B]` frontier vector and downloads only the `[B,k+1,K,
+    /// topt]` score window gathered at each row's frontier — the positions
+    /// the verify/accept/re-predict logic reads. Falls back to the
+    /// full-length [`DecodeSession::step`] when the loaded manifest has no
+    /// `decode_window_b*` entry.
+    pub fn step_at(&self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        // enforce the frontier contract on both paths, so a caller bug
+        // cannot hide behind a manifest without windowed entries
+        anyhow::ensure!(
+            frontiers.len() == self.bucket,
+            "{} frontiers for bucket {}",
+            frontiers.len(),
+            self.bucket
+        );
+        let Some(exe) = &self.window_exe else {
+            return self.step(tgt_in);
+        };
+        anyhow::ensure!(
+            tgt_in.dims == [self.bucket, self.t_len],
+            "tgt_in {:?} does not match session [{}, {}]",
+            tgt_in.dims,
+            self.bucket,
+            self.t_len
+        );
+        // clamp exactly like the device-side dynamic_slice does, so `base`
+        // reflects the window the gather actually returned
+        let hi = self.t_len - self.window;
+        let base: Vec<usize> = frontiers.iter().map(|&f| f.min(hi)).collect();
+        let f_host =
+            TensorI32::from_vec(&[self.bucket], base.iter().map(|&s| s as i32).collect());
+        let tgt_buf = self.rt.upload_i32(tgt_in)?;
+        let f_buf = self.rt.upload_i32(&f_host)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+        args.push(self.mem_dev.buffer());
+        args.push(self.src_dev.buffer());
+        args.push(tgt_buf.buffer());
+        args.push(f_buf.buffer());
+        let out = self.rt.execute(exe, &args)?;
+        let mut scores = window_scores_from(&out)?;
+        anyhow::ensure!(
+            scores.window() == self.window,
+            "windowed decode returned {} positions, expected {}",
+            scores.window(),
+            self.window
+        );
+        scores.base = base;
+        Ok(scores)
     }
 
     /// Scatter newly-encoded rows into the resident batch: row `i` of
     /// `enc_src`/`enc_memory` lands in slot `slots[i]`. The host mirrors
     /// are updated and both device buffers re-pinned **once per refill**,
     /// so admission costs one upload amortized over every subsequent step
-    /// (steady-state steps upload nothing but the decoder input).
+    /// (steady-state steps upload nothing but the decoder input and the
+    /// frontier vector).
     pub fn scatter_rows(
         &mut self,
         slots: &[usize],
@@ -307,20 +434,21 @@ impl DecodeSession {
 }
 
 impl BlockStepper for DecodeSession {
-    fn step(&mut self, tgt_in: &TensorI32) -> Result<BlockScores> {
-        DecodeSession::step(self, tgt_in)
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        DecodeSession::step_at(self, tgt_in, frontiers)
     }
 }
 
-/// Decompose a decode entry point's output tuple into [`BlockScores`].
-fn block_scores_from(out: &[xla::Literal]) -> Result<BlockScores> {
+/// Decompose a decode entry point's output tuple into [`WindowScores`]
+/// (base zero; windowed callers overwrite `base` with the gather starts).
+fn window_scores_from(out: &[xla::Literal]) -> Result<WindowScores> {
     anyhow::ensure!(out.len() == 2, "decode returned {} outputs", out.len());
     let topv = literal_to_f32(&out[0])?;
     let topi = literal_to_i32(&out[1])?;
     anyhow::ensure!(topv.dims.len() == 4, "unexpected topv rank {:?}", topv.dims);
     let k = topv.dims[2];
     let topt = topv.dims[3];
-    Ok(BlockScores { topv, topi, k, topt })
+    Ok(WindowScores::full(topv, topi, k, topt))
 }
 
 /// The simplified NAT / iterative-refinement comparator (Table 4).
@@ -334,14 +462,12 @@ pub struct NatModel {
 impl NatModel {
     pub fn load(rt: Rc<Runtime>, manifest: &Manifest, variant: &str) -> Result<Self> {
         let spec = manifest.variant(variant)?.clone();
-        let bundle = WeightBundle::load(&spec.weights)?;
+        let bundle = WeightBundle::load(&spec.weights)
+            .with_context(|| format!("weights for {variant}"))?;
         let weights = Rc::new(rt.upload_weights(&bundle)?);
         let mut nat = BTreeMap::new();
-        for (logical, key) in &spec.entries {
-            if let Some(b) = logical.strip_prefix("nat_b") {
-                let e = &manifest.entries[key];
-                nat.insert(b.parse::<usize>()?, rt.load(key, &e.file)?);
-            }
+        for (b, key) in spec.bucketed("nat_b") {
+            nat.insert(b, rt.load(key, &manifest.entries[key].file)?);
         }
         if nat.is_empty() {
             bail!("variant {variant} has no nat entries");

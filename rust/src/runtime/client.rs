@@ -36,11 +36,14 @@ pub struct RuntimeStats {
     /// host->device transfer count (weights + per-step tensors)
     pub uploads: u64,
     pub bytes_uploaded: u64,
+    /// device->host transfer count (one result-tuple fetch per execution)
+    pub downloads: u64,
+    pub bytes_downloaded: u64,
 }
 
 impl RuntimeStats {
     /// Counters accumulated since an `earlier` snapshot. Pairs with
-    /// [`Runtime::stats_snapshot`] to attribute uploads/executions to one
+    /// [`Runtime::stats_snapshot`] to attribute transfers/executions to one
     /// region of the serving path, e.g. a single decode-session step.
     pub fn delta(&self, earlier: &RuntimeStats) -> RuntimeStats {
         RuntimeStats {
@@ -50,6 +53,8 @@ impl RuntimeStats {
             execute_us: self.execute_us - earlier.execute_us,
             uploads: self.uploads - earlier.uploads,
             bytes_uploaded: self.bytes_uploaded - earlier.bytes_uploaded,
+            downloads: self.downloads - earlier.downloads,
+            bytes_downloaded: self.bytes_downloaded - earlier.bytes_downloaded,
         }
     }
 }
@@ -187,10 +192,23 @@ impl Runtime {
         let lit = out[0][0].to_literal_sync()?;
         let parts = lit.to_tuple()?;
         let us = t0.elapsed().as_micros() as u64;
+        // `to_literal_sync` is the device->host fetch: its size is the sum
+        // of the tuple elements. Every entry point returns f32/i32 tensors,
+        // so 4 bytes per element.
+        let bytes: u64 = parts
+            .iter()
+            .map(|p| {
+                p.array_shape()
+                    .map(|s| s.dims().iter().map(|&d| d as u64).product::<u64>() * 4)
+                    .unwrap_or(0)
+            })
+            .sum();
         {
             let mut s = self.stats.borrow_mut();
             s.executions += 1;
             s.execute_us += us;
+            s.downloads += 1;
+            s.bytes_downloaded += bytes;
         }
         Ok(parts)
     }
@@ -229,6 +247,8 @@ mod tests {
             execute_us: 800,
             uploads: 7,
             bytes_uploaded: 4096,
+            downloads: 10,
+            bytes_downloaded: 9_000,
         };
         let later = RuntimeStats {
             compiles: 2,
@@ -237,6 +257,8 @@ mod tests {
             execute_us: 1_100,
             uploads: 10,
             bytes_uploaded: 4096 + 3 * 112,
+            downloads: 13,
+            bytes_downloaded: 9_000 + 3 * 2_304,
         };
         let d = later.delta(&earlier);
         assert_eq!(d.compiles, 0);
@@ -244,11 +266,22 @@ mod tests {
         assert_eq!(d.execute_us, 300);
         assert_eq!(d.uploads, 3);
         assert_eq!(d.bytes_uploaded, 336);
+        assert_eq!(d.downloads, 3);
+        assert_eq!(d.bytes_downloaded, 6_912);
     }
 
     #[test]
     fn stats_delta_of_self_is_zero() {
-        let s = RuntimeStats { compiles: 1, executions: 2, compile_us: 3, execute_us: 4, uploads: 5, bytes_uploaded: 6 };
+        let s = RuntimeStats {
+            compiles: 1,
+            executions: 2,
+            compile_us: 3,
+            execute_us: 4,
+            uploads: 5,
+            bytes_uploaded: 6,
+            downloads: 7,
+            bytes_downloaded: 8,
+        };
         assert_eq!(s.delta(&s), RuntimeStats::default());
     }
 }

@@ -41,6 +41,28 @@ pub struct VariantSpec {
     pub config: VariantConfig,
 }
 
+impl VariantSpec {
+    /// Entries whose logical name is `<prefix><bucket>` (e.g. `decode_b8`
+    /// for prefix `decode_b`), keyed by bucket size. The logical-name
+    /// grammar is the aot.py ↔ runtime contract: `encode_b*` and
+    /// `decode_b*` are mandatory for scoring variants, `decode_window_b*`
+    /// is the frontier-windowed decode entry newer manifests export
+    /// (loaders must treat it as optional), `nat_b*` is the NAT entry.
+    /// Names whose suffix is not a bucket number never match, so prefix
+    /// `decode_b` does not swallow `decode_window_b8`.
+    pub fn bucketed(&self, prefix: &str) -> BTreeMap<usize, &str> {
+        let mut out = BTreeMap::new();
+        for (logical, key) in &self.entries {
+            if let Some(rest) = logical.strip_prefix(prefix) {
+                if let Ok(b) = rest.parse::<usize>() {
+                    out.insert(b, key.as_str());
+                }
+            }
+        }
+        out
+    }
+}
+
 /// The whole artifact set.
 #[derive(Debug)]
 pub struct Manifest {
@@ -142,14 +164,16 @@ mod tests {
       "tasks": {"mt": {"max_src": 20}},
       "entries": {
         "mt_k2_b1_encode": {"file": "hlo/mt_k2_b1_encode.hlo.txt", "batch": 1},
-        "mt_k2_b1_decode": {"file": "hlo/mt_k2_b1_decode.hlo.txt", "batch": 1}
+        "mt_k2_b1_decode": {"file": "hlo/mt_k2_b1_decode.hlo.txt", "batch": 1},
+        "mt_k2_b1_decode_window": {"file": "hlo/mt_k2_b1_decode_window.hlo.txt", "batch": 1}
       },
       "variants": {
         "mt_k2_regular": {
           "task": "mt", "k": 2, "variant": "regular",
           "weights": "weights/mt_k2_regular.bin",
           "params": [],
-          "entries": {"encode_b1": "mt_k2_b1_encode", "decode_b1": "mt_k2_b1_decode"},
+          "entries": {"encode_b1": "mt_k2_b1_encode", "decode_b1": "mt_k2_b1_decode",
+                      "decode_window_b1": "mt_k2_b1_decode_window"},
           "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4}
         }
       }
@@ -171,6 +195,49 @@ mod tests {
         assert_eq!(v.config.vocab, 127);
         assert!(m.variant("nope").is_err());
         assert_eq!(m.task_variants("mt").len(), 1);
+    }
+
+    #[test]
+    fn bucketed_entries_by_prefix() {
+        let dir = std::env::temp_dir().join("bd_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(SAMPLE.as_bytes())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("mt_k2_regular").unwrap();
+        // `decode_b` must not swallow `decode_window_b1`
+        let dec = v.bucketed("decode_b");
+        assert_eq!(dec.len(), 1);
+        assert_eq!(dec[&1], "mt_k2_b1_decode");
+        let win = v.bucketed("decode_window_b");
+        assert_eq!(win.len(), 1);
+        assert_eq!(win[&1], "mt_k2_b1_decode_window");
+        assert!(v.bucketed("nat_b").is_empty());
+    }
+
+    #[test]
+    fn old_manifest_without_window_entries_parses() {
+        // manifests from before the frontier-windowed decode export must
+        // keep loading (the runtime then decodes via the full-length path)
+        let dir = std::env::temp_dir().join("bd_manifest_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = SAMPLE
+            .replace(
+                ",\n        \"mt_k2_b1_decode_window\": {\"file\": \"hlo/mt_k2_b1_decode_window.hlo.txt\", \"batch\": 1}",
+                "",
+            )
+            .replace(",\n                      \"decode_window_b1\": \"mt_k2_b1_decode_window\"", "");
+        assert!(!old.contains("decode_window"), "replacement failed: {old}");
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(old.as_bytes())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("mt_k2_regular").unwrap();
+        assert!(v.bucketed("decode_window_b").is_empty());
+        assert_eq!(v.bucketed("decode_b").len(), 1);
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //!    scattered into the *device-resident* decode session (one re-pin per
 //!    refill — see [`DecodeSession::scatter_rows`](crate::model::DecodeSession));
 //! 2. **step** — one combined scoring/proposal invocation advances *every*
-//!    active slot (each by its own k̂ ≥ 1 tokens); the only host→device
-//!    transfer in a steady-state step is the `[B,T]` decoder input;
+//!    active slot (each by its own k̂ ≥ 1 tokens); a steady-state step
+//!    uploads only the `[B,T]` decoder input plus the `[B]` frontier
+//!    vector, and downloads only the `[B,k+1,K,topt]` score window at
+//!    each slot's frontier (full tensors on manifests without windowed
+//!    decode entries);
 //! 3. **complete** — finished slots respond to their waiters and free up.
 //!
 //! Because sequences join and leave at iteration granularity, a slot never
@@ -62,6 +65,10 @@ struct Slot {
     request: Request,
     state: BlockState,
     admitted: Instant,
+    /// incremental decoder-input row state (see `BlockState::patch_row`):
+    /// accepted tokens already written, meaningful cells written
+    committed: usize,
+    written: usize,
 }
 
 /// The engine. Construct with a loaded model, then `run` on the owning
@@ -78,6 +85,9 @@ pub struct Engine {
     session: DecodeSession,
     /// resident decoder-input batch; rows of free slots stay PAD
     tgt_in: TensorI32,
+    /// per-slot frontier indices passed to every windowed step; free and
+    /// retired slots stay at 0 (their scores are never read)
+    frontiers: Vec<usize>,
     slots: Vec<Option<Slot>>,
 }
 
@@ -110,6 +120,7 @@ impl Engine {
             bucket,
             session,
             tgt_in: TensorI32::zeros(&[bucket, t_len]),
+            frontiers: vec![0; bucket],
             slots: (0..bucket).map(|_| None).collect(),
             model,
         })
@@ -166,7 +177,15 @@ impl Engine {
             let state = BlockState::new(self.model.k(), criterion, max_len)
                 .with_min_block(self.cfg.min_block.max(1).min(self.model.k()));
             self.metrics.on_request();
-            self.slots[slot] = Some(Slot { request: r, state, admitted: Instant::now() });
+            // committed/written start at 0: the first patch_row does a
+            // full rebuild of the (PAD-retired) row
+            self.slots[slot] = Some(Slot {
+                request: r,
+                state,
+                admitted: Instant::now(),
+                committed: 0,
+                written: 0,
+            });
         }
         Ok(())
     }
@@ -185,16 +204,22 @@ impl Engine {
             return Ok(true);
         }
 
-        // build decoder-input rows for occupied slots only — a freed slot's
-        // row was PAD-filled at completion and stays inert
+        // patch decoder-input rows for occupied slots only — the accepted
+        // prefix is append-only, so only cells past the previous frontier
+        // are rewritten; a freed slot's row was PAD-filled at completion
+        // and stays inert
         for i in 0..self.bucket {
-            if let Some(s) = &self.slots[i] {
-                s.state.build_row(self.tgt_in.row_mut(i));
+            if let Some(s) = self.slots[i].as_mut() {
+                self.frontiers[i] = s.state.frontier();
+                let (c, w) = s.state.patch_row(self.tgt_in.row_mut(i), s.committed, s.written);
+                s.committed = c;
+                s.written = w;
             }
         }
 
-        // the only host->device transfer in a steady-state step: [B,T] i32
-        let scores = self.session.step(&self.tgt_in)?;
+        // steady-state host->device transfer: [B,T] i32 decoder input plus
+        // the [B] i32 frontier vector; device->host is the frontier window
+        let scores = self.session.step_at(&self.tgt_in, &self.frontiers)?;
         self.metrics.on_invocation(active, self.bucket);
 
         for i in 0..self.bucket {
@@ -210,6 +235,7 @@ impl Engine {
             if finished {
                 let slot = self.slots[i].take().unwrap();
                 self.tgt_in.row_mut(i).fill(PAD); // retire the row
+                self.frontiers[i] = 0;
                 let e2e = slot.request.arrived.elapsed();
                 let queued = slot.admitted.duration_since(slot.request.arrived);
                 let resp = Response {

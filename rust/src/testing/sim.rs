@@ -8,7 +8,7 @@
 //! agreement rate with p1 is tunable, which lets property tests sweep the
 //! whole accept/reject spectrum without touching PJRT.
 
-use crate::model::{BlockScores, BlockStepper};
+use crate::model::{BlockStepper, WindowScores};
 use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::tensor::{TensorF32, TensorI32};
 
@@ -94,10 +94,31 @@ impl SimModel {
         out
     }
 
-    /// Build the `BlockScores` a real decode invocation would return for a
-    /// batch of decoder-input rows (each `[BOS, tokens…]`, PAD-free view
-    /// passed as slices).
-    pub fn score_rows(&self, src: &[i32], rows: &[Vec<i32>], t_len: usize) -> BlockScores {
+    /// Emit head `h`'s top-t candidate list at conditioning `prefix` via
+    /// `set(rank, token, logit)` — rank 0 is the model argmax, the other
+    /// ranks deterministic distinct fillers.
+    fn fill_ranks(
+        &self,
+        src: &[i32],
+        prefix: &[i32],
+        h: usize,
+        mut set: impl FnMut(usize, i32, f32),
+    ) {
+        let best = self.head_next(src, prefix, h);
+        for r in 0..self.topt {
+            let tok = if r == 0 {
+                best
+            } else {
+                3 + ((best as u64 + r as u64 * 7) % (self.vocab as u64 - 3)) as i32
+            };
+            set(r, tok, 5.0 - r as f32);
+        }
+    }
+
+    /// Build the full-length `WindowScores` a fallback decode invocation
+    /// would return for a batch of decoder-input rows (each `[BOS,
+    /// tokens…]`, PAD-free view passed as slices).
+    pub fn score_rows(&self, src: &[i32], rows: &[Vec<i32>], t_len: usize) -> WindowScores {
         let b = rows.len();
         let mut topi = TensorI32::zeros(&[b, t_len, self.k, self.topt]);
         let mut topv = TensorF32::zeros(&[b, t_len, self.k, self.topt]);
@@ -106,56 +127,70 @@ impl SimModel {
             for pos in 0..row.len().min(t_len) {
                 let prefix = &row[1..=pos.min(row.len() - 1)];
                 for h in 0..self.k {
-                    let best = self.head_next(src, prefix, h);
-                    for r in 0..self.topt {
-                        // rank 0 = model argmax; other ranks deterministic
-                        // distinct fillers
-                        let tok = if r == 0 {
-                            best
-                        } else {
-                            3 + ((best as u64 + r as u64 * 7) % (self.vocab as u64 - 3)) as i32
-                        };
+                    self.fill_ranks(src, prefix, h, |r, tok, val| {
                         topi.set(&[bi, pos, h, r], tok);
-                        topv.set(&[bi, pos, h, r], 5.0 - r as f32);
-                    }
+                        topv.set(&[bi, pos, h, r], val);
+                    });
                 }
             }
         }
-        BlockScores { topv, topi, k: self.k, topt: self.topt }
+        WindowScores::full(topv, topi, self.k, self.topt)
     }
 }
 
 /// Sim-backed implementation of the device `DecodeSession` contract: the
-/// per-row sources play the pinned `src`/`memory` state, and each `step`
-/// scores one decoder-input batch. Plugging this into
+/// per-row sources play the pinned `src`/`memory` state, and each
+/// `step_at` scores one decoder-input batch. In the default **windowed**
+/// mode it returns, like the device's `decode_window_b*` entry, only the
+/// `[B,k+1,K,topt]` window gathered at each row's (clamped) frontier; in
+/// `full` mode it plays a session whose manifest lacks windowed entries
+/// and returns the whole `[B,T,K,topt]` tensors. Plugging either into
 /// `decoding::blockwise::decode_rows` runs the *exact* production loop
-/// (including its finished-row PAD retirement) against the simulator, so
-/// session-based decoding can be checked token-for-token against the
-/// one-shot [`sim_blockwise`] reference without touching PJRT.
+/// (including its finished-row PAD retirement and incremental row
+/// patching) against the simulator, so both paths can be checked
+/// token-for-token against each other and against the one-shot
+/// [`sim_blockwise`] reference without touching PJRT.
 pub struct SimSession<'a> {
     model: &'a SimModel,
     srcs: Vec<Vec<i32>>,
+    /// serve the frontier-windowed contract (k+1 positions) instead of
+    /// the full-length fallback
+    windowed: bool,
     /// model invocations consumed (mirrors RuntimeStats.executions)
     pub steps: usize,
 }
 
 impl<'a> SimSession<'a> {
+    /// Production-shaped session: `step_at` returns a `[B,k+1,K,topt]`
+    /// frontier window.
     pub fn new(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
-        SimSession { model, srcs, steps: 0 }
+        SimSession { model, srcs, windowed: true, steps: 0 }
+    }
+
+    /// Fallback-shaped session: `step_at` ignores the frontiers and
+    /// returns the full `[B,T,K,topt]` tensors, like a `DecodeSession`
+    /// loaded from a manifest without `decode_window_b*` entries.
+    pub fn full(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
+        SimSession { model, srcs, windowed: false, steps: 0 }
     }
 }
 
 impl BlockStepper for SimSession<'_> {
-    fn step(&mut self, tgt_in: &TensorI32) -> anyhow::Result<BlockScores> {
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> anyhow::Result<WindowScores> {
         self.steps += 1;
         let b = tgt_in.dims[0];
         let t_len = tgt_in.dims[1];
+        anyhow::ensure!(frontiers.len() == b, "{} frontiers for batch {b}", frontiers.len());
         let (k, topt) = (self.model.k, self.model.topt);
-        let mut topi = TensorI32::zeros(&[b, t_len, k, topt]);
-        let mut topv = TensorF32::zeros(&[b, t_len, k, topt]);
-        let stride = t_len * k * topt;
+        let w = if self.windowed { (k + 1).min(t_len) } else { t_len };
+        let mut topi = TensorI32::zeros(&[b, w, k, topt]);
+        let mut topv = TensorF32::zeros(&[b, w, k, topt]);
+        let mut base = vec![0usize; b];
         for row in 0..b {
             let r = tgt_in.row(row);
+            // same clamp as the device-side dynamic_slice gather
+            let start = if self.windowed { frontiers[row].min(t_len - w) } else { 0 };
+            base[row] = start;
             // PAD-only rows are padding or retired (finished) rows: inert,
             // all-zero scores — exactly what absorb never reads
             let used = r.iter().rposition(|&t| t != PAD).map_or(0, |p| p + 1);
@@ -163,11 +198,23 @@ impl BlockStepper for SimSession<'_> {
                 continue;
             }
             let src = self.srcs.get(row).map(|s| s.as_slice()).unwrap_or(&[]);
-            let sc = self.model.score_rows(src, &[r[..used].to_vec()], t_len);
-            topi.data[row * stride..(row + 1) * stride].copy_from_slice(&sc.topi.data[..stride]);
-            topv.data[row * stride..(row + 1) * stride].copy_from_slice(&sc.topv.data[..stride]);
+            for o in 0..w {
+                let pos = start + o;
+                if pos >= used {
+                    // no conditioning exists at/after `used`; absorb never
+                    // reads these offsets, leave them zero like the full path
+                    break;
+                }
+                let prefix = &r[1..=pos.min(used - 1)];
+                for h in 0..k {
+                    self.model.fill_ranks(src, prefix, h, |rank, tok, val| {
+                        topi.set(&[row, o, h, rank], tok);
+                        topv.set(&[row, o, h, rank], val);
+                    });
+                }
+            }
         }
-        Ok(BlockScores { topv, topi, k, topt })
+        Ok(WindowScores { topv, topi, base, k, topt })
     }
 }
 
@@ -250,9 +297,11 @@ mod tests {
 
     #[test]
     fn session_loop_matches_oneshot_reference() {
-        // the session refactor's contract: begin_session + N×step through
-        // the production decode_rows loop produces byte-identical tokens
-        // to the pre-refactor one-shot scoring path, under Exact
+        // the windowed-contract invariant: begin_session + N×step_at
+        // through the production decode_rows loop (downloading only the
+        // [B,k+1,K,topt] frontier window each step) produces
+        // byte-identical tokens to the pre-refactor one-shot full-tensor
+        // scoring path, under Exact
         use crate::decoding::blockwise::decode_rows;
         use crate::decoding::state::BlockState;
         for agreement in [0.0, 0.4, 0.9, 1.0] {
@@ -277,6 +326,49 @@ mod tests {
                 // per-row trajectories are deterministic and independent,
                 // so the batched session consumes the same invocations
                 assert_eq!(st.stats.invocations, inv, "row {i} invocation count");
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_scores_match_full_slice() {
+        // a windowed step's [k+1] window must be the corresponding slice
+        // of the full-length tensors, with base set to the clamped start
+        let m = SimModel::new(60, 3, 0.6, 9, 17);
+        let srcs = vec![vec![5, 9, EOS]];
+        let t_len = 12;
+        let mut row = vec![PAD; t_len];
+        row[0] = BOS;
+        for (i, &t) in [11, 12, 13, 14, 15].iter().enumerate() {
+            row[1 + i] = t;
+        }
+        let mut tgt = TensorI32::zeros(&[1, t_len]);
+        tgt.row_mut(0).copy_from_slice(&row);
+        for frontier in [0usize, 2, 5, 10, 11] {
+            let mut win = SimSession::new(&m, srcs.clone());
+            let mut full = SimSession::full(&m, srcs.clone());
+            let w = win.step_at(&tgt, &[frontier]).unwrap();
+            let f = full.step_at(&tgt, &[frontier]).unwrap();
+            let wlen = m.k + 1;
+            let start = frontier.min(t_len - wlen);
+            assert_eq!(w.base, vec![start]);
+            assert_eq!(w.window(), wlen);
+            assert_eq!(f.base, vec![0]);
+            assert_eq!(f.window(), t_len);
+            for o in 0..wlen {
+                for h in 0..m.k {
+                    for r in 0..m.topt {
+                        assert_eq!(
+                            w.topi.get(&[0, o, h, r]),
+                            f.topi.get(&[0, start + o, h, r]),
+                            "frontier {frontier} offset {o} head {h} rank {r}"
+                        );
+                        assert_eq!(
+                            w.topv.get(&[0, o, h, r]),
+                            f.topv.get(&[0, start + o, h, r]),
+                        );
+                    }
+                }
             }
         }
     }

@@ -138,6 +138,52 @@ fn prop_session_loop_equals_oneshot() {
     });
 }
 
+/// Tentpole invariant of the frontier-windowed step contract: driving the
+/// production `decode_rows` loop through `step_at` with `[B,k+1,K,topt]`
+/// frontier windows is **byte-identical** — tokens, accept traces, and
+/// invocation counts — to driving it through the full-tensor reference
+/// path (the fallback for manifests without `decode_window_b*` entries),
+/// swept across low/mid/high proposal agreement.
+#[test]
+fn prop_windowed_equals_full_download() {
+    for &agreement in &[0.1, 0.5, 0.9] {
+        check(&format!("windowed==full@{agreement}"), 40, |rng| {
+            let k = 1 + rng.below(8);
+            let vocab = 30 + rng.below(120);
+            let mean_len = 4 + rng.below(14);
+            let m = SimModel::new(vocab, k, agreement, mean_len, rng.next_u64());
+            let n_rows = 1 + rng.below(4);
+            let srcs: Vec<Vec<i32>> = (0..n_rows).map(|_| gen_src(rng, vocab, 10)).collect();
+            let max_len = 4 + rng.below(20);
+            let t_len = max_len + 1;
+            let bucket = n_rows + rng.below(3);
+
+            let mut win_states: Vec<BlockState> =
+                (0..n_rows).map(|_| BlockState::new(k, Criterion::Exact, max_len)).collect();
+            let mut win = SimSession::new(&m, srcs.clone());
+            decode_rows(&mut win, &mut win_states, bucket, t_len).unwrap();
+
+            let mut full_states: Vec<BlockState> =
+                (0..n_rows).map(|_| BlockState::new(k, Criterion::Exact, max_len)).collect();
+            let mut full = SimSession::full(&m, srcs.clone());
+            decode_rows(&mut full, &mut full_states, bucket, t_len).unwrap();
+
+            assert_eq!(win.steps, full.steps, "windowed path changed the invocation count");
+            for (i, (w, f)) in win_states.iter().zip(&full_states).enumerate() {
+                assert_eq!(w.accepted, f.accepted, "row {i}: windowed tokens != full tokens");
+                assert_eq!(
+                    w.stats.accepted_blocks, f.stats.accepted_blocks,
+                    "row {i}: accept trace diverged"
+                );
+                assert_eq!(
+                    w.stats.invocations, f.stats.invocations,
+                    "row {i}: invocation count diverged"
+                );
+            }
+        });
+    }
+}
+
 /// EOS handling: the hypothesis never contains tokens after EOS.
 #[test]
 fn prop_eos_terminates() {

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verification: build + tests, then the hygiene gates that keep
 # bench/example code from silently rotting (fmt, clippy -D warnings, and a
-# compile-only pass over every bench target).
+# compile-only pass over every bench target), then the python-side tests
+# covering the aot.py <-> manifest.rs entry-point contract (skipped when
+# the python deps are not installed in this environment).
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -11,3 +13,10 @@ cargo test -q
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 cargo bench --no-run
+
+cd ..
+if python3 -c "import jax, pytest" >/dev/null 2>&1; then
+    python3 -m pytest python/tests -q
+else
+    echo "tier1: python deps (jax/pytest) unavailable — skipping python/tests"
+fi
