@@ -36,20 +36,22 @@ fn main() -> Result<()> {
     let gsum = summarize(&glat);
     println!(
         "greedy baseline: {} sentences, {} invocations, p50 {:.1}ms, \
-         {:.0} B up / {:.0} B down per step (incl. encodes)\n",
+         {:.0} B up / {:.0} B down / {:.0} pos scored per step (incl. encodes)\n",
         n,
         ginv,
         gsum.p50,
         gd.bytes_uploaded as f64 / gd.executions.max(1) as f64,
-        gd.bytes_downloaded as f64 / gd.executions.max(1) as f64
+        gd.bytes_downloaded as f64 / gd.executions.max(1) as f64,
+        gd.positions_scored as f64 / gd.executions.max(1) as f64
     );
 
-    // per-step transfer bytes (averaged over every invocation of the
-    // setting, including its one encode per sentence) so the bench
-    // trajectory captures both transfer directions
+    // per-step transfer bytes and scored decoder positions (averaged over
+    // every invocation of the setting, including its one encode per
+    // sentence) so the bench trajectory captures transfer and compute:
+    // pos/step collapses from ~T to ~k+1 once the cached tier is active
     let mut table = Table::new(&[
         "setting", "mean k̂", "invocations", "p50 ms", "p90 ms", "speedup(p50)",
-        "↑B/step", "↓B/step",
+        "↑B/step", "↓B/step", "pos/step",
     ]);
     let settings: Vec<(String, String, Criterion)> = ["mt_k8_both"]
         .iter()
@@ -91,6 +93,7 @@ fn main() -> Result<()> {
             format!("{:.2}x", gsum.p50 / s.p50),
             format!("{:.0}", d.bytes_uploaded as f64 / d.executions.max(1) as f64),
             format!("{:.0}", d.bytes_downloaded as f64 / d.executions.max(1) as f64),
+            format!("{:.0}", d.positions_scored as f64 / d.executions.max(1) as f64),
         ]);
     }
     println!("{}", table.render());

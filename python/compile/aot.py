@@ -149,8 +149,10 @@ def window_len(cfg: M.ModelConfig) -> int:
 def make_decode_window_fn(cfg: M.ModelConfig):
     """Frontier-windowed decode entry: same combined forward pass as
     `make_decode_fn`, but gathers, per batch row, only the `k+1`-position
-    score window starting at that row's frontier index — so the runtime
-    downloads O(B*(k+1)*K*TOPT) instead of O(B*T*K*TOPT) bytes per step.
+    logit window starting at that row's frontier index before the top-k —
+    so the runtime downloads O(B*(k+1)*K*TOPT) instead of O(B*T*K*TOPT)
+    bytes per step, and the TOPT argsort sweeps run over k+1 positions
+    instead of all T (per-position top-k commutes with the gather).
     `frontier` is an i32 [B] vector; the per-row start is clamped to
     [0, T-(k+1)] by dynamic_slice (the rust session applies the identical
     clamp so its host-side `base` matches the gather)."""
@@ -158,17 +160,33 @@ def make_decode_window_fn(cfg: M.ModelConfig):
 
     def fn(params, memory, src, tgt_in, frontier):
         logits = M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True)
-        topv, topi = manual_topk(logits, TOPT)     # [B,T,K,TOPT]
 
-        def gather(v, i, f):                       # [T,K,TOPT] x2, scalar
-            return (
-                jax.lax.dynamic_slice_in_dim(v, f, w, axis=0),
-                jax.lax.dynamic_slice_in_dim(i, f, w, axis=0),
-            )
+        def gather(l, f):                          # [T,K,V], scalar
+            return jax.lax.dynamic_slice_in_dim(l, f, w, axis=0)
 
-        wv, wi = jax.vmap(gather)(topv, topi, frontier)  # [B,w,K,TOPT]
-        return wv, wi.astype(jnp.int32)
+        win = jax.vmap(gather)(logits, frontier)   # [B,w,K,V]
+        topv, topi = manual_topk(win, TOPT)        # [B,w,K,TOPT]
+        return topv, topi.astype(jnp.int32)
 
+    return fn
+
+
+def make_decode_cached_fn(cfg: M.ModelConfig):
+    """KV-cached decode entry: the decoder runs only over the `k+1`
+    frontier window (`decode_heads_cached`), reading the stacked
+    [2*n_dec,B,T,H,Dh] self-attention caches for positions below each
+    row's frontier and scattering the fresh window K/V back in. Returns
+    the same [B,k+1,K,TOPT] window tensors as `make_decode_window_fn`
+    plus the updated caches — per-step decoder FLOPs drop from O(T) to
+    O(k+1). The rust session guards the cache-validity contract (see
+    `decode_heads_cached`) and falls back to the windowed entry when a
+    caller rewrites history."""
+    def fn(params, memory, src, tgt_in, frontier, kv):
+        logits, kv_new = M.decode_heads_cached(
+            params, cfg, memory, src, tgt_in, frontier, kv, use_pallas=True
+        )
+        topv, topi = manual_topk(logits, TOPT)     # [B,k+1,K,TOPT]
+        return topv, topi.astype(jnp.int32), kv_new
     return fn
 
 
@@ -381,11 +399,14 @@ class Builder:
                 entry_names[f"nat_b{b}"] = e
             else:
                 fro = jnp.zeros((b,), jnp.int32)
+                kv0 = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
                 for kind, mk, args in (
                     ("encode", make_encode_fn(cfg), (params, src)),
                     ("decode", make_decode_fn(cfg), (params, mem, src, tgt)),
                     ("decode_window", make_decode_window_fn(cfg),
                      (params, mem, src, tgt, fro)),
+                    ("decode_cached", make_decode_cached_fn(cfg),
+                     (params, mem, src, tgt, fro, kv0)),
                 ):
                     e = f"{sig}_b{b}_{kind}"
                     if e not in self.manifest["entries"]:
@@ -407,6 +428,10 @@ class Builder:
             "config": {
                 "vocab": cfg.vocab, "max_src": cfg.max_src, "max_tgt": cfg.max_tgt,
                 "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                # cache geometry for the decode_cached entries: the rust
+                # loader sizes the [2*n_dec,B,T,H,Dh] K/V buffers from this
+                # (absent in old manifests -> cached path stays disabled)
+                "n_dec": cfg.n_dec,
             },
         }
 

@@ -58,6 +58,20 @@ def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
     return x + p["pos"][: tokens.shape[1]][None]
 
 
+def embed_at(p: Params, tokens: jnp.ndarray, start: jnp.ndarray) -> jnp.ndarray:
+    """Window embedding: tokens [B,W] sitting at absolute positions
+    start[b]+o -> [B,W,D]. Same math as `embed`, but the position rows are
+    gathered per batch row at a dynamic offset (the cached decode entry
+    embeds only the k+1 frontier-window tokens)."""
+    d = p["tok"].shape[1]
+    w = tokens.shape[1]
+    x = p["tok"][tokens] * (d ** 0.5)
+    pos = jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(p["pos"], s, w, axis=0)
+    )(start)
+    return x + pos
+
+
 # --------------------------------------------------------------------------
 # Multi-head attention
 # --------------------------------------------------------------------------
@@ -95,6 +109,44 @@ def mha(
     attn = pallas_attention if use_pallas else kref.attention_ref
     o = attn(q, k, v, mask)
     return _merge_heads(o) @ p["wo"]
+
+
+def mha_cached(
+    p: Params,
+    x_win: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    start: jnp.ndarray,
+    mask: jnp.ndarray,
+    n_heads: int,
+    use_pallas: bool,
+):
+    """KV-cached self-attention over a frontier window.
+
+    Queries come from the W window hidden states `x_win` [B,W,D]; keys and
+    values are the running caches [B,T,H,Dh]. The window's fresh K/V are
+    computed here and scattered into the caches at each row's `start`
+    (dynamic_update_slice), so positions below the window are never
+    re-projected — the O(T)->O(W) FLOP cut of the cached decode path. The
+    attention itself rides the same tiled Pallas kernel as the full path
+    (W query rows against the T-length cache axis, `mask` [B,1,W,T]).
+
+    Returns (attn_out [B,W,D], k_cache, v_cache) with the updated caches.
+    """
+    b, w, d = x_win.shape
+    dh = d // n_heads
+    q = _split_heads(x_win @ p["wq"], n_heads)           # [B,H,W,Dh]
+    k_win = (x_win @ p["wk"]).reshape(b, w, n_heads, dh)  # [B,W,H,Dh]
+    v_win = (x_win @ p["wv"]).reshape(b, w, n_heads, dh)
+
+    def scatter(cache_row, win_row, s):                  # [T,H,Dh],[W,H,Dh]
+        return jax.lax.dynamic_update_slice_in_dim(cache_row, win_row, s, axis=0)
+
+    k_cache = jax.vmap(scatter)(k_cache, k_win, start)
+    v_cache = jax.vmap(scatter)(v_cache, v_win, start)
+    attn = pallas_attention if use_pallas else kref.attention_ref
+    o = attn(q, k_cache.transpose(0, 2, 1, 3), v_cache.transpose(0, 2, 1, 3), mask)
+    return _merge_heads(o) @ p["wo"], k_cache, v_cache
 
 
 # --------------------------------------------------------------------------
@@ -156,6 +208,31 @@ def decoder_layer(
     return x + ffn(p["ffn"], layernorm(p["ln3"], x))
 
 
+def decoder_layer_cached(
+    p: Params,
+    x: jnp.ndarray,
+    memory: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    start: jnp.ndarray,
+    self_mask: jnp.ndarray,
+    cross_mask: jnp.ndarray,
+    n_heads: int,
+    use_pallas: bool,
+):
+    """`decoder_layer` specialized to a frontier window: identical math,
+    but self-attention reads the [B,T,H,Dh] K/V caches (updated in place
+    at `start` with the window's fresh projections) instead of
+    re-projecting every decoder position. Returns (x, k_cache, v_cache)."""
+    h = layernorm(p["ln1"], x)
+    attn, k_cache, v_cache = mha_cached(
+        p["self"], h, k_cache, v_cache, start, self_mask, n_heads, use_pallas
+    )
+    x = x + attn
+    x = x + mha(p["cross"], layernorm(p["ln2"], x), memory, cross_mask, n_heads, use_pallas)
+    return x + ffn(p["ffn"], layernorm(p["ln3"], x)), k_cache, v_cache
+
+
 # --------------------------------------------------------------------------
 # Block-heads (paper Fig. 3) — init here, apply via kernel/ref
 # --------------------------------------------------------------------------
@@ -190,3 +267,14 @@ def causal_mask(t: int) -> jnp.ndarray:
     """[1,1,T,T] additive lower-triangular mask."""
     m = jnp.tril(jnp.ones((t, t), jnp.float32))
     return (1.0 - m)[None, None] * kref.NEG_INF
+
+
+def window_attn_mask(start: jnp.ndarray, w: int, t: int) -> jnp.ndarray:
+    """[B,1,W,T] additive causal mask for frontier-window queries against a
+    T-length K/V cache: window offset o of row b sits at absolute decoder
+    position start[b]+o and may attend cache positions <= start[b]+o.
+    Everything above — including stale cache entries past the window — is
+    dropped, which is what makes never-zeroed cache garbage inert."""
+    qpos = start[:, None] + jnp.arange(w)[None, :]           # [B,W]
+    keep = (jnp.arange(t)[None, None, :] <= qpos[:, :, None]).astype(jnp.float32)
+    return (1.0 - keep)[:, None] * kref.NEG_INF

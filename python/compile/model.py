@@ -127,6 +127,60 @@ def forward(params: Params, cfg: ModelConfig, src: jnp.ndarray, tgt_in: jnp.ndar
     return decode_heads(params, cfg, memory, src, tgt_in, use_pallas)
 
 
+def kv_cache_shape(cfg: ModelConfig, b: int) -> Tuple[int, ...]:
+    """Stacked decoder self-attention K/V cache: layer l's K is slice 2l
+    and its V slice 2l+1 of a [2*n_dec, B, T, H, Dh] tensor (one runtime
+    buffer regardless of depth)."""
+    return (2 * cfg.n_dec, b, cfg.max_tgt, cfg.n_heads, cfg.d_model // cfg.n_heads)
+
+
+def decode_heads_cached(
+    params: Params,
+    cfg: ModelConfig,
+    memory: jnp.ndarray,
+    src: jnp.ndarray,
+    tgt_in: jnp.ndarray,
+    frontier: jnp.ndarray,
+    kv: jnp.ndarray,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """KV-cached causal decode over the k+1-position frontier window.
+
+    Runs the decoder stack only over the window starting at each row's
+    (clamped) frontier: per-row window tokens are gathered from `tgt_in`
+    with dynamic_slice, self-attention reads the [2*n_dec,B,T,H,Dh] cache
+    `kv` for positions below the window and scatters the freshly-computed
+    window K/V back in, so per-step decoder FLOPs are O(k+1) instead of
+    O(T). Returns ([B,k+1,K,V] window logits, updated caches).
+
+    The contract the Rust session enforces host-side: cache entries below
+    a row's frontier must have been written by earlier windows of the SAME
+    (append-only) prefix — callers that rewrite history (beam repacking)
+    or reuse a row for a new request must invalidate first.
+    """
+    t = params["trunk"]
+    b, t_len = tgt_in.shape
+    w = min(cfg.k + 1, cfg.max_tgt)
+    start = jnp.clip(frontier, 0, t_len - w)                 # [B], like dynamic_slice
+    tok_win = jax.vmap(
+        lambda row, s: jax.lax.dynamic_slice_in_dim(row, s, w, axis=0)
+    )(tgt_in, start)                                          # [B,w]
+    self_mask = L.window_attn_mask(start, w, t_len)           # [B,1,w,T]
+    cross_mask = L.padding_mask(src)
+    x = L.embed_at(t["tgt_emb"], tok_win, start)
+    kv_out = []
+    for li, lyr in enumerate(t["dec"]):
+        x, k_c, v_c = L.decoder_layer_cached(
+            lyr, x, memory, kv[2 * li], kv[2 * li + 1], start,
+            self_mask, cross_mask, cfg.n_heads, use_pallas,
+        )
+        kv_out.extend([k_c, v_c])
+    h = L.layernorm(t["dec_ln"], x)
+    hk = L.blockheads_apply(params["heads"], h, use_pallas)   # [B,w,K,D]
+    logits = jnp.einsum("bwkd,dv->bwkv", hk, t["proj"])
+    return logits, jnp.stack(kv_out)
+
+
 # --------------------------------------------------------------------------
 # Training loss (§6: one uniformly-sampled head per minibatch)
 # --------------------------------------------------------------------------

@@ -1,7 +1,21 @@
 """Make `compile.*` importable when pytest runs from the repo root
-(`pytest python/tests/`) as well as from `python/`."""
+(`pytest python/tests/`) as well as from `python/`.
+
+Also registers a deterministic hypothesis profile ("tier1", derandomized)
+so property-test failures under `scripts/tier1.sh` reproduce exactly;
+select it with HYPOTHESIS_PROFILE=tier1 (the rust-side analogue is the
+BLOCKDECODE_PROP_SEED env var read by `testing::check`)."""
 
 import os
 import sys
 
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("tier1", derandomize=True)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+except ImportError:  # hypothesis is optional (test_kernels importorskips it)
+    pass

@@ -103,6 +103,99 @@ def test_decode_window_matches_full(small):
         )
 
 
+def test_decode_cached_matches_full_multistep(small):
+    """Tentpole numerics: the KV-cached entry's window logits must match
+    the from-scratch full forward to within fp32 tolerance after multi-step
+    prefix growth — cache entries below the frontier are read, never
+    recomputed — including a `scatter_rows`-style mid-sequence row reset
+    (new source, zeroed cache rows, frontier back to 0)."""
+    v, cfg, params = small
+    b, t_len = 2, cfg.max_tgt
+    w = cfg.k + 1
+    src_np, tgt_np = D.gen_mt_dataset(v, 3, seed=3)
+    src = jnp.asarray(src_np[:b, : cfg.max_src])
+    refs = [[int(x) for x in row if x != 0] for row in tgt_np[:, : t_len - 1]]
+    mem = M.encode(params, cfg, src)
+    kv = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
+    frontiers = [0, 0]
+
+    def build_rows():
+        """Decoder inputs [BOS, accepted..., k proposals..., PAD...]."""
+        rows = np.zeros((b, t_len), np.int32)
+        for r in range(b):
+            j = frontiers[r]
+            rows[r, 0] = 1
+            upto = min(j + cfg.k, len(refs[r]), t_len - 1)
+            rows[r, 1 : 1 + upto] = refs[r][:upto]
+        return jnp.asarray(rows)
+
+    def step_and_check():
+        nonlocal kv
+        tgt_in = build_rows()
+        f = jnp.asarray(frontiers, jnp.int32)
+        win, kv = M.decode_heads_cached(params, cfg, mem, src, tgt_in, f, kv)
+        full = M.decode_heads(params, cfg, mem, src, tgt_in)
+        assert win.shape == (b, w, cfg.k, cfg.vocab)
+        for r in range(b):
+            start = min(frontiers[r], t_len - w)
+            np.testing.assert_allclose(
+                np.asarray(win[r]),
+                np.asarray(full[r, start : start + w]),
+                rtol=1e-5,
+                atol=1e-5,
+                err_msg=f"row {r} frontier {frontiers[r]}",
+            )
+
+    # multi-step growth: row 0 advances by k per step, row 1 by 1 — the
+    # per-row dynamic windows diverge and earlier windows' cache entries
+    # get read as context for later ones
+    for _ in range(4):
+        step_and_check()
+        frontiers[0] = min(frontiers[0] + cfg.k, t_len - 1)
+        frontiers[1] = min(frontiers[1] + 1, t_len - 1)
+
+    # scatter_rows-style reset of row 1: swap in a new source, zero its
+    # cache rows, restart at frontier 0 — the cached path must track the
+    # new row from scratch
+    src = src.at[1].set(jnp.asarray(src_np[2, : cfg.max_src]))
+    mem = M.encode(params, cfg, src)
+    refs[1] = [int(x) for x in tgt_np[2, : t_len - 1] if x != 0]
+    kv = kv.at[:, 1].set(0.0)
+    frontiers[1] = 0
+    for _ in range(3):
+        step_and_check()
+        frontiers[1] = min(frontiers[1] + cfg.k, t_len - 1)
+
+
+def test_decode_cached_clamps_like_window(small):
+    """Out-of-range frontiers clamp to T-w exactly like the windowed entry
+    (the rust session applies the same clamp host-side to keep `base`
+    aligned with the gather)."""
+    v, cfg, params = small
+    b, t_len = 1, cfg.max_tgt
+    w = cfg.k + 1
+    src_np, tgt_np = D.gen_mt_dataset(v, 1, seed=4)
+    src = jnp.asarray(src_np[:b, : cfg.max_src])
+    mem = M.encode(params, cfg, src)
+    bos = jnp.ones((b, 1), jnp.int32)
+    tgt_in = jnp.concatenate([bos, jnp.asarray(tgt_np[:b, : t_len - 1])], axis=1)
+    # warm the cache over the whole sequence, then ask past the end
+    kv = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
+    f = 0
+    while f < t_len - w:
+        _, kv = M.decode_heads_cached(
+            params, cfg, mem, src, tgt_in, jnp.asarray([f], jnp.int32), kv
+        )
+        f += w
+    win, _ = M.decode_heads_cached(
+        params, cfg, mem, src, tgt_in, jnp.asarray([t_len + 5], jnp.int32), kv
+    )
+    full = M.decode_heads(params, cfg, mem, src, tgt_in)
+    np.testing.assert_allclose(
+        np.asarray(win[0]), np.asarray(full[0, t_len - w :]), rtol=1e-5, atol=1e-5
+    )
+
+
 def test_decode_window_hlo_exports(tmp_path, small):
     """The windowed entry must survive the HLO-text round-trip contract
     (the same lowering path `export_variant` uses)."""
@@ -117,6 +210,26 @@ def test_decode_window_hlo_exports(tmp_path, small):
     text = open(path).read()
     assert text.startswith("HloModule")
     assert "ENTRY" in text
+
+
+def test_decode_cached_hlo_exports(tmp_path, small):
+    """The cached entry (dynamic window slice + per-row cache scatter) must
+    survive the HLO-text lowering contract like every other entry."""
+    _, cfg, params = small
+    b = 1
+    src = jnp.zeros((b, cfg.max_src), jnp.int32)
+    tgt = jnp.zeros((b, cfg.max_tgt), jnp.int32)
+    mem = jnp.zeros((b, cfg.max_src, cfg.d_model), jnp.float32)
+    fro = jnp.zeros((b,), jnp.int32)
+    kv = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
+    path = str(tmp_path / "cached.hlo.txt")
+    aot.export_fn(
+        aot.make_decode_cached_fn(cfg), (params, mem, src, tgt, fro, kv), path
+    )
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "dynamic-update-slice" in text
 
 
 def test_manifest_plan_names():

@@ -97,12 +97,12 @@ fn main() {
         8 * t
     });
 
-    // windowed shape: same invocation, but only the [B,k+1,K,topt] score
-    // window at each row's frontier comes back to the host
+    // windowed shape: same full-decoder invocation, but only the
+    // [B,k+1,K,topt] score window at each row's frontier comes back
     let frontiers8 = vec![0usize; 8];
     if session8.windowed() {
         b.case("step/session_windowed_b8", "pos", || {
-            let sc = session8.step_at(&tgt8, &frontiers8).unwrap();
+            let sc = session8.step_windowed(&tgt8, &frontiers8).unwrap();
             std::hint::black_box(&sc);
             8 * t
         });
@@ -110,36 +110,63 @@ fn main() {
         eprintln!("(no decode_window entries in these artifacts; windowed cases skipped)");
     }
 
+    // cached shape: the decoder itself runs only over the k+1 frontier
+    // window against the chained K/V caches — O(k+1) scored positions per
+    // step instead of O(T)
+    if session8.cached() {
+        let w = session8.window_len();
+        b.case("step/session_cached_b8", "pos", || {
+            let sc = session8.step_at(&tgt8, &frontiers8).unwrap();
+            std::hint::black_box(&sc);
+            8 * w
+        });
+    } else {
+        eprintln!("(no decode_cached entries in these artifacts; cached cases skipped)");
+    }
+
     let src1 = TensorI32::from_vec(&[1, s], src_real.row(0).to_vec());
     let tgt1 = TensorI32::zeros(&[1, t]);
     let session1 = model.begin_session(&src1).unwrap();
+    // unit = positions actually scored: step_at serves the cached tier
+    // (k+1 positions) when the artifacts carry it, the full pass otherwise
+    let w1 = if session1.cached() {
+        session1.window_len()
+    } else {
+        t
+    };
     b.case("step/session_b1", "pos", || {
         let sc = session1.step_at(&tgt1, &[0]).unwrap();
         std::hint::black_box(&sc);
-        t
+        w1
     });
 
-    // transfer accounting: a steady-state step uploads only the [B,T] i32
-    // decoder input (+ the [B] i32 frontier vector on the windowed path)
-    // — the O(B·S·D·4)-byte memory and O(B·S·4)-byte src re-uploads of the
-    // old decode_topk path are gone — and downloads only the
-    // [B,k+1,K,topt] score window (the full [B,T,K,topt] tensors on
-    // manifests without windowed entries)
+    // transfer accounting for the windowed tier: a steady-state step
+    // uploads only the [B,T] i32 decoder input (+ the [B] i32 frontier
+    // vector on the windowed path) — the O(B·S·D·4)-byte memory and
+    // O(B·S·4)-byte src re-uploads of the old decode_topk path are gone —
+    // and downloads only the [B,k+1,K,topt] score window (the full
+    // [B,T,K,topt] tensors on manifests without windowed entries). Either
+    // way the decoder still scores all B·T positions on this tier.
     let k = model.k();
     let topt = model.topt;
     let before = ctx.rt.stats_snapshot();
-    let _ = session8.step_at(&tgt8, &frontiers8).unwrap();
+    let _ = session8.step_windowed(&tgt8, &frontiers8).unwrap();
     let per_step = ctx.rt.stats_snapshot().delta(&before);
     let tgt_bytes = (8 * t * 4) as u64;
     let legacy_up = (8 * s * d * 4 + 8 * s * 4) as u64 + tgt_bytes;
     let full_down = (2 * 8 * t * k * topt * 4) as u64; // topv f32 + topi i32
+    let full_positions = (8 * t) as u64;
     assert_eq!(per_step.executions, 1);
     assert_eq!(
         per_step.downloads, 1,
         "a step should perform exactly one device->host fetch"
     );
+    assert_eq!(
+        per_step.positions_scored, full_positions,
+        "the windowed/full tiers score every decoder position"
+    );
     if session8.windowed() {
-        let w = session8.window_len();
+        let w = session8.windowed_len();
         let win_down = (2 * 8 * w * k * topt * 4) as u64;
         assert_eq!(
             per_step.uploads, 2,
@@ -176,6 +203,34 @@ fn main() {
         legacy_up,
         legacy_up as f64 / per_step.bytes_uploaded as f64
     );
+
+    // compute accounting for the cached tier: scored positions drop from
+    // O(T·steps) to O((k+1)·steps)
+    if session8.cached() {
+        let cached_positions = (8 * session8.window_len()) as u64;
+        for _ in 0..2 {
+            let before = ctx.rt.stats_snapshot();
+            let _ = session8.step_at(&tgt8, &frontiers8).unwrap();
+            let d = ctx.rt.stats_snapshot().delta(&before);
+            assert_eq!(d.executions, 1);
+            assert_eq!(
+                d.positions_scored, cached_positions,
+                "a cached step must score exactly B·(k+1) positions"
+            );
+            assert!(
+                d.positions_scored < full_positions,
+                "cached step scored {} positions, full pass is {}",
+                d.positions_scored,
+                full_positions
+            );
+        }
+        eprintln!(
+            "per-step scored positions: {} (full pass: {} -> {:.1}x cut)",
+            cached_positions,
+            full_positions,
+            full_positions as f64 / cached_positions as f64
+        );
+    }
 
     println!("\n== summary ==\n{}", b.report());
 }

@@ -59,7 +59,11 @@ pub fn decode_one(
             }
         }
         // every hypothesis row reads position `pos` only, so the windowed
-        // session downloads just the frontier window
+        // session downloads just the frontier window. Repacking surviving
+        // hypotheses rewrites row prefixes each iteration, which fails the
+        // KV-cached tier's append-only validity check — the session
+        // detects it and serves beam through the windowed tier instead
+        // (correctness over the cached FLOP cut; see model::DecodeSession)
         let frontiers = vec![pos; bucket];
         let scores = session.step_at(&tgt_in, &frontiers)?;
         invocations += 1;

@@ -11,9 +11,12 @@
 //! device-resident [`DecodeSession`](crate::model::DecodeSession) — the
 //! encoder memory and source batch are uploaded once per decode, each
 //! iteration uploads only the `[B,T]` decoder input plus the `[B]`
-//! per-row frontier indices, and downloads only the `[B,k+1,K,topt]`
-//! score window at those frontiers — and in property tests it drives the
-//! simulated model, so the exact serving loop is the loop under test.
+//! per-row frontier indices, downloads only the `[B,k+1,K,topt]` score
+//! window at those frontiers, and (on manifests with `decode_cached_b*`
+//! entries) re-runs the decoder over only those k+1 positions against the
+//! session's K/V caches, since this loop's prefixes are append-only — and
+//! in property tests it drives the simulated model, so the exact serving
+//! loop is the loop under test.
 //!
 //! With `Criterion::Exact` the output is guaranteed identical to greedy
 //! decoding with head 0 — the paper's core invariant, enforced by the
@@ -86,7 +89,10 @@ pub fn decode_rows<S: BlockStepper>(
     debug_assert_eq!(PAD, 0);
     // per-row incremental build state (accepted tokens already in the row,
     // meaningful cells written) and the frontier vector for the stepper;
-    // inert rows keep frontier 0 — their scores are never read
+    // inert rows (padding, and finished rows once retired below) sit at
+    // frontier 0 — their scores are never read, and a PAD row at frontier
+    // 0 trivially satisfies the KV-cached tier's prefix-validity check,
+    // so one finished row cannot knock the batch off the cached path
     let mut frontiers = vec![0usize; bucket];
     let mut committed = vec![0usize; bucket];
     let mut written = vec![0usize; bucket];
@@ -111,7 +117,9 @@ pub fn decode_rows<S: BlockStepper>(
             st.absorb(&scores, b);
             if st.done && !was_done {
                 // retire the row: make it indistinguishable from padding
+                // (the engine's slot retirement does the same)
                 tgt_in.row_mut(b).fill(PAD);
+                frontiers[b] = 0;
             }
         }
     }

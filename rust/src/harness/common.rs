@@ -58,6 +58,15 @@ pub struct EvalOutcome {
     pub downloaded_bytes: u64,
 }
 
+/// Largest batch bucket of a variant, with error context instead of the
+/// bare `.last().unwrap()` the evaluators used to panic through when a
+/// manifest shipped a variant without entry points.
+fn largest_bucket(model: &ScoringModel) -> Result<usize> {
+    model.buckets().last().copied().ok_or_else(|| {
+        anyhow::anyhow!("variant {} has no batch buckets (empty entry set?)", model.spec.name)
+    })
+}
+
 /// Run blockwise decoding over the whole dataset in bucket-sized batches.
 pub fn eval_blockwise(
     model: &ScoringModel,
@@ -66,7 +75,7 @@ pub fn eval_blockwise(
     limit: Option<usize>,
 ) -> Result<EvalOutcome> {
     let n = limit.unwrap_or(ds.len()).min(ds.len());
-    let bucket = *model.buckets().last().unwrap();
+    let bucket = largest_bucket(model)?;
     let mut results: Vec<DecodeResult> = Vec::with_capacity(n);
     let stats0 = model.runtime().stats_snapshot();
     let t0 = Instant::now();
@@ -97,7 +106,7 @@ pub fn eval_greedy(
     max_len: Option<usize>,
 ) -> Result<EvalOutcome> {
     let n = limit.unwrap_or(ds.len()).min(ds.len());
-    let bucket = *model.buckets().last().unwrap();
+    let bucket = largest_bucket(model)?;
     let mut results: Vec<DecodeResult> = Vec::with_capacity(n);
     let stats0 = model.runtime().stats_snapshot();
     let t0 = Instant::now();

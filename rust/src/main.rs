@@ -208,11 +208,14 @@ fn selftest(rest: &[String]) -> Result<()> {
     }
     println!("blockwise(exact) == greedy over {} sentences ✓", srcs.len());
 
-    // session transfer accounting: a steady-state decode step must upload
-    // only the [B,T] i32 decoder input (plus the [B] frontier vector on
-    // the windowed path; memory + src stay device-resident) and download
-    // only the [B,k+1,K,topt] frontier window (full tensors on manifests
-    // without decode_window entries)
+    // session transfer + compute accounting. The windowed tier has an
+    // exact transfer contract: upload only the [B,T] i32 decoder input +
+    // the [B] frontier vector (memory + src stay device-resident),
+    // download only the [B,k+1,K,topt] frontier window — while still
+    // scoring all B·T decoder positions. The cached tier's claim is the
+    // compute side: per-step scored positions drop to B·(k+1); its cache
+    // traffic depends on the runtime's result layout, so only the
+    // decoder-input floor is asserted there.
     let bucket = model.pick_bucket(1)?;
     let mut src = blockdecode::util::tensor::TensorI32::zeros(&[bucket, model.max_src()]);
     let n0 = srcs[0].len().min(model.max_src());
@@ -220,10 +223,12 @@ fn selftest(rest: &[String]) -> Result<()> {
     let session = model.begin_session(&src)?;
     let tgt = blockdecode::util::tensor::TensorI32::zeros(&[bucket, model.max_tgt()]);
     let frontiers = vec![0usize; bucket];
-    let before = ctx.rt.stats_snapshot();
-    let _ = session.step_at(&tgt, &frontiers)?;
-    let d = ctx.rt.stats_snapshot().delta(&before);
     let tgt_bytes = (bucket * model.max_tgt() * 4) as u64;
+    let full_positions = (bucket * model.max_tgt()) as u64;
+
+    let before = ctx.rt.stats_snapshot();
+    let _ = session.step_windowed(&tgt, &frontiers)?;
+    let d = ctx.rt.stats_snapshot().delta(&before);
     let (want_ups, want_up): (u64, u64) = if session.windowed() {
         (2, tgt_bytes + (bucket * 4) as u64)
     } else {
@@ -235,12 +240,17 @@ fn selftest(rest: &[String]) -> Result<()> {
         d.bytes_uploaded,
         d.uploads
     );
-    let want_down = (2 * bucket * session.window_len() * model.k() * model.topt * 4) as u64;
+    let want_down = (2 * bucket * session.windowed_len() * model.k() * model.topt * 4) as u64;
     anyhow::ensure!(
         d.downloads == 1 && d.bytes_downloaded == want_down,
         "session step downloaded {} B in {} transfers (want {want_down} B in 1)",
         d.bytes_downloaded,
         d.downloads
+    );
+    anyhow::ensure!(
+        d.positions_scored == full_positions,
+        "windowed/full step scored {} positions (want {full_positions})",
+        d.positions_scored
     );
     let full_down = (2 * bucket * model.max_tgt() * model.k() * model.topt * 4) as u64;
     if session.windowed() {
@@ -253,6 +263,41 @@ fn selftest(rest: &[String]) -> Result<()> {
             "session step: {} B up, {} B down (no windowed entries in manifest) ✓",
             d.bytes_uploaded, d.bytes_downloaded
         );
+    }
+
+    if session.cached() {
+        // KV-cached tier: the O(T·steps) -> O((k+1)·steps) compute cut
+        let cached_positions = (bucket * session.window_len()) as u64;
+        for step in 0..2u32 {
+            let before = ctx.rt.stats_snapshot();
+            let _ = session.step_at(&tgt, &frontiers)?;
+            let d = ctx.rt.stats_snapshot().delta(&before);
+            anyhow::ensure!(
+                d.positions_scored == cached_positions,
+                "cached step {step} scored {} positions (want {cached_positions})",
+                d.positions_scored
+            );
+            anyhow::ensure!(
+                d.positions_scored < full_positions,
+                "cached step must score fewer than the {full_positions} full-pass positions"
+            );
+            anyhow::ensure!(
+                d.executions == 1 && d.downloads == 1,
+                "cached step ran {} executions / {} downloads",
+                d.executions,
+                d.downloads
+            );
+            anyhow::ensure!(
+                d.uploads >= 2 && d.bytes_uploaded >= tgt_bytes + (bucket * 4) as u64,
+                "cached step must upload at least the decoder input + frontier vector"
+            );
+        }
+        println!(
+            "cached step: {} positions scored per step (full pass: {}) ✓",
+            cached_positions, full_positions
+        );
+    } else {
+        println!("(no cached decode entries in manifest; cached-tier checks skipped)");
     }
 
     let stats = ctx.rt.stats_snapshot();

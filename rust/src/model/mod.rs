@@ -2,21 +2,56 @@
 //! device-resident weights and compiled entry points.
 //!
 //! `ScoringModel` is the combined scoring-and-proposal model (§4). Decoding
-//! is session-based and **frontier-windowed**: [`ScoringModel::begin_session`]
-//! encodes the source batch **once** and pins the encoder memory `[B,S,D]`
-//! and source ids `[B,S]` on device; every [`DecodeSession::step_at`] then
-//! uploads only the `[B,T]` i32 decoder input plus a `[B]` i32 vector of
-//! per-row frontier indices, and downloads only the `[B,k+1,K,topt]` score
-//! window gathered at each row's frontier — the k+1 positions the blockwise
-//! verify/accept logic and the next prediction step actually read. The
-//! per-step traffic is therefore O(B·T) bytes up and O(B·(k+1)·K·topt)
-//! bytes down, instead of the O(B·S·D) up / O(B·T·K·topt) down the
-//! pre-session and pre-window paths paid to move (mostly unread) tensors
-//! each iteration. Manifests that predate the `decode_window_b*` entry
-//! still decode through the full-length [`DecodeSession::step`] path; the
-//! scores type is the same either way (`base` is all zeros and the window
-//! spans the whole decoder length).
+//! is session-based: [`ScoringModel::begin_session`] encodes the source
+//! batch **once** and pins the encoder memory `[B,S,D]` and source ids
+//! `[B,S]` on device; every [`DecodeSession::step_at`] then uploads only
+//! the `[B,T]` i32 decoder input plus a `[B]` i32 vector of per-row
+//! frontier indices and returns the `[B,k+1,K,topt]` score window at each
+//! row's frontier. Three entry tiers serve that contract, best-available
+//! first:
+//!
+//! 1. **KV-cached** (`decode_cached_b*`): the decoder runs only over the
+//!    k+1 frontier window — causal self-attention reads per-layer K/V
+//!    caches `[2·n_dec,B,T,H,Dh]` for positions below the window and
+//!    scatters the freshly-computed window K/V back in — so per-step
+//!    decoder FLOPs are O(k+1), not O(T). The session chains the updated
+//!    caches from step to step (device-resident when the runtime's result
+//!    layout allows; host-mirrored otherwise).
+//! 2. **Windowed** (`decode_window_b*`): full-length decoder pass, but
+//!    only the frontier window is gathered and downloaded.
+//! 3. **Full** ([`DecodeSession::step`]): the complete `[B,T,K,topt]`
+//!    tensors — the fallback for the oldest manifests and the reference
+//!    path both newer tiers are property-tested against.
+//!
+//! **Cached step contract.** Cache entries below a row's frontier are only
+//! valid while that row's accepted prefix is append-only: a cache entry at
+//! position p was computed from the decoder input up to p at the step that
+//! last covered p with its window, and windows advance by at most k+1, so
+//! every position below the frontier was computed from tokens that are now
+//! final. The session enforces this host-side before every cached step:
+//! a row whose `tgt_in` prefix below the frontier differs from the tokens
+//! the cache saw (beam search repacks hypotheses into rows every
+//! iteration) is **invalidated** and the step falls back to the windowed
+//! tier; a frontier that jumps past the cached coverage likewise falls
+//! back (a window step can extend the cache, never rebuild an arbitrary
+//! prefix). Note the fallback is sticky, not per-step: windowed steps do
+//! not write the cache, so once any row fails admission at a nonzero
+//! frontier the batch stays on the windowed tier until every affected
+//! row's frontier returns to 0 (row retirement, or `scatter_rows`
+//! admission in the engine). That matches the callers that trip it: beam
+//! rewrites history every iteration (permanently windowed by design),
+//! and the append-only decoders never trip it at all —
+//! `cached_decode_falls_back_without_entries` asserts a full blockwise
+//! decode stays on the cached tier every step. `scatter_rows` invalidates
+//! admitted rows the same way — the new request restarts at frontier 0,
+//! rewriting the stale cache window-by-window before anything can attend
+//! to it, and the metadata reset re-arms the validity guard.
+//!
+//! Manifests that predate an entry tier simply fall back to the next one;
+//! the scores type is identical either way (`base` is all zeros and the
+//! window spans the whole decoder length on the full path).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
@@ -24,7 +59,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::{
     literal_to_f32, literal_to_i32, DeviceTensor, DeviceWeights, Executable, Manifest, Runtime,
-    VariantSpec, WeightBundle,
+    TrailingOutputs, VariantSpec, WeightBundle,
 };
 use crate::util::tensor::{TensorF32, TensorI32};
 
@@ -117,6 +152,9 @@ pub struct ScoringModel {
     /// frontier-windowed decode entries; empty for manifests that predate
     /// the `decode_window_b*` export (those fall back to full-length steps)
     decode_window: BTreeMap<usize, Rc<Executable>>,
+    /// KV-cached decode entries; empty for manifests that predate the
+    /// `decode_cached_b*` export (those fall back to the windowed tier)
+    decode_cached: BTreeMap<usize, Rc<Executable>>,
 }
 
 impl ScoringModel {
@@ -134,17 +172,28 @@ impl ScoringModel {
         let encode = load_bucketed("encode_b")?;
         let decode = load_bucketed("decode_b")?;
         let decode_window = load_bucketed("decode_window_b")?;
+        let decode_cached = load_bucketed("decode_cached_b")?;
         if encode.is_empty() || decode.is_empty() {
             bail!("variant {variant} lacks encode/decode entries");
         }
         log::info!(
-            "loaded {variant}: k={} {} params, buckets {:?}{}",
+            "loaded {variant}: k={} {} params, buckets {:?}{}{}",
             spec.k,
             weights.total_params,
             encode.keys().collect::<Vec<_>>(),
-            if decode_window.is_empty() { " (no windowed decode entries)" } else { "" }
+            if decode_window.is_empty() { " (no windowed decode entries)" } else { "" },
+            if decode_cached.is_empty() { " (no cached decode entries)" } else { "" }
         );
-        Ok(ScoringModel { spec, topt: manifest.topt, rt, weights, encode, decode, decode_window })
+        Ok(ScoringModel {
+            spec,
+            topt: manifest.topt,
+            rt,
+            weights,
+            encode,
+            decode,
+            decode_window,
+            decode_cached,
+        })
     }
 
     pub fn k(&self) -> usize {
@@ -167,6 +216,24 @@ impl ScoringModel {
     /// Does this variant ship frontier-windowed decode entries?
     pub fn has_windowed_decode(&self) -> bool {
         !self.decode_window.is_empty()
+    }
+
+    /// Does this variant ship KV-cached decode entries (with the cache
+    /// geometry the manifest must carry to size them)?
+    pub fn has_cached_decode(&self) -> bool {
+        !self.decode_cached.is_empty() && self.kv_dims(1).is_some()
+    }
+
+    /// Shape of the stacked decoder self-attention K/V cache the
+    /// `decode_cached_b*` entries take: `[2·n_dec, B, T, H, Dh]`. `None`
+    /// when the manifest predates the cached export (`n_dec` absent) or
+    /// the head geometry does not divide — the cached tier then stays off.
+    fn kv_dims(&self, bucket: usize) -> Option<Vec<usize>> {
+        let c = &self.spec.config;
+        if c.n_dec == 0 || c.n_heads == 0 || c.d_model % c.n_heads != 0 {
+            return None;
+        }
+        Some(vec![2 * c.n_dec, bucket, c.max_tgt, c.n_heads, c.d_model / c.n_heads])
     }
 
     /// Smallest bucket that fits `n` rows. Errors when `n` exceeds every
@@ -234,6 +301,18 @@ impl ScoringModel {
             .ok_or_else(|| anyhow::anyhow!("no decode bucket {b} (have {:?})", self.buckets()))?
             .clone();
         let window_exe = self.decode_window.get(&b).cloned();
+        // cached tier: entry + a zeroed cache (first step uploads it once;
+        // afterwards the updated cache chains from step to step)
+        let cached = self.decode_cached.get(&b).and_then(|exe| {
+            self.kv_dims(b).map(|dims| CachedDecode {
+                exe: exe.clone(),
+                state: RefCell::new(KvCacheState {
+                    kv: KvStore::Host(TensorF32::zeros(&dims)),
+                    cached_upto: vec![0; b],
+                    seen: TensorI32::zeros(&[b, self.max_tgt()]),
+                }),
+            })
+        });
         let src_dev = self.rt.upload_i32(&src)?;
         let mem_dev = self.rt.upload_f32(&memory)?;
         Ok(DecodeSession {
@@ -241,6 +320,7 @@ impl ScoringModel {
             weights: self.weights.clone(),
             exe,
             window_exe,
+            cached,
             window: (self.spec.k + 1).min(self.max_tgt()),
             bucket: b,
             t_len: self.max_tgt(),
@@ -269,7 +349,9 @@ pub struct DecodeSession {
     exe: Rc<Executable>,
     /// frontier-windowed decode entry, when the manifest exports one
     window_exe: Option<Rc<Executable>>,
-    /// positions gathered per row by `window_exe` (k + 1)
+    /// KV-cached decode entry + cache state, when the manifest exports one
+    cached: Option<CachedDecode>,
+    /// positions gathered per row by the windowed/cached entries (k + 1)
     window: usize,
     bucket: usize,
     t_len: usize,
@@ -277,6 +359,42 @@ pub struct DecodeSession {
     memory_host: TensorF32,
     src_dev: DeviceTensor,
     mem_dev: DeviceTensor,
+}
+
+/// The KV-cached decode tier of a session: the compiled entry plus the
+/// chained cache. `RefCell` because stepping is logically `&self` (the
+/// scores are the output; the cache is an internal carry).
+struct CachedDecode {
+    exe: Rc<Executable>,
+    state: RefCell<KvCacheState>,
+}
+
+/// Decoder self-attention K/V cache carry, plus the per-row validity
+/// metadata the session checks before trusting it (see the module docs'
+/// cached step contract).
+struct KvCacheState {
+    kv: KvStore,
+    /// positions `[0, cached_upto[b])` of row b hold cache entries written
+    /// by earlier windows of the prefix recorded in `seen`
+    cached_upto: Vec<usize>,
+    /// decoder-input rows as of the last cache write; a mismatch below a
+    /// row's frontier means the caller rewrote history (beam repacking,
+    /// slot reuse) and that row's cache is garbage
+    seen: TensorI32,
+}
+
+/// Where the chained cache currently lives. `Device` when the runtime's
+/// result layout let the previous step's output buffer stay resident
+/// (zero per-step cache traffic); `Host` at session start and when the
+/// tuple result layout forces the cache through host (downloaded with
+/// the step's result tuple, re-uploaded next step). Both are correct;
+/// the host round-trip pays O(2·n_dec·B·T·d_model) bytes per step for
+/// the O(T)→O(k+1) decoder-FLOP cut, a trade that is cheap on CPU PJRT
+/// (transfers are memcpys) and visible in `runtime_bench`'s cached- vs
+/// windowed-step wall-clock cases if it ever stops paying off.
+enum KvStore {
+    Device(xla::PjRtBuffer),
+    Host(TensorF32),
 }
 
 impl DecodeSession {
@@ -294,14 +412,33 @@ impl DecodeSession {
         &self.memory_host
     }
 
-    /// Does `step_at` run the frontier-windowed entry point?
+    /// Does `step_at` run the frontier-windowed entry point (when the
+    /// cached tier is absent or does not admit)?
     pub fn windowed(&self) -> bool {
         self.window_exe.is_some()
     }
 
+    /// Does this session have the KV-cached entry point?
+    pub fn cached(&self) -> bool {
+        self.cached.is_some()
+    }
+
     /// Positions of scores each `step_at` returns per row: k+1 on the
-    /// windowed path, the full decoder length on the fallback path.
+    /// cached/windowed paths, the full decoder length on the fallback path.
     pub fn window_len(&self) -> usize {
+        if self.cached.is_some() || self.window_exe.is_some() {
+            self.window
+        } else {
+            self.t_len
+        }
+    }
+
+    /// Positions per row the **windowed tier** specifically returns from
+    /// [`DecodeSession::step_windowed`]: k+1 with a windowed entry, the
+    /// full decoder length on its full-step fallback. Selftest/bench
+    /// assertions about that tier use this instead of re-deriving the
+    /// formula (`window_len` answers for whichever tier `step_at` picks).
+    pub fn windowed_len(&self) -> usize {
         if self.window_exe.is_some() {
             self.window
         } else {
@@ -309,11 +446,11 @@ impl DecodeSession {
         }
     }
 
-    /// One **full-length** combined scoring/proposal invocation against the
-    /// pinned state: downloads the complete `[B,T,K,topt]` score tensors.
-    /// This is the fallback for manifests without windowed entries and the
-    /// reference path the windowed contract is property-tested against.
-    pub fn step(&self, tgt_in: &TensorI32) -> Result<WindowScores> {
+    /// Validate the decoder-input shape and assemble the argument prefix
+    /// every decode entry point shares: weights…, pinned encoder memory,
+    /// pinned source ids. Callers append their tier's trailing arguments
+    /// (decoder input, frontier vector, K/V cache) in export order.
+    fn base_args(&self, tgt_in: &TensorI32) -> Result<Vec<&xla::PjRtBuffer>> {
         anyhow::ensure!(
             tgt_in.dims == [self.bucket, self.t_len],
             "tgt_in {:?} does not match session [{}, {}]",
@@ -321,24 +458,61 @@ impl DecodeSession {
             self.bucket,
             self.t_len
         );
-        let tgt_buf = self.rt.upload_i32(tgt_in)?;
         let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
         args.push(self.mem_dev.buffer());
         args.push(self.src_dev.buffer());
+        Ok(args)
+    }
+
+    /// One **full-length** combined scoring/proposal invocation against the
+    /// pinned state: downloads the complete `[B,T,K,topt]` score tensors.
+    /// This is the fallback for manifests without windowed entries and the
+    /// reference path the windowed contract is property-tested against.
+    pub fn step(&self, tgt_in: &TensorI32) -> Result<WindowScores> {
+        let mut args = self.base_args(tgt_in)?;
+        let tgt_buf = self.rt.upload_i32(tgt_in)?;
         args.push(tgt_buf.buffer());
         let out = self.rt.execute(&self.exe, &args)?;
+        self.rt.note_positions((self.bucket * self.t_len) as u64);
         window_scores_from(&out)
     }
 
-    /// One frontier-windowed invocation: uploads the `[B,T]` decoder input
-    /// plus the `[B]` frontier vector and downloads only the `[B,k+1,K,
-    /// topt]` score window gathered at each row's frontier — the positions
-    /// the verify/accept/re-predict logic reads. Falls back to the
+    /// One scoring invocation at the given per-row frontiers, through the
+    /// best tier the session has: KV-cached when the cache admits (see the
+    /// module docs), else frontier-windowed, else the full-length
+    /// [`DecodeSession::step`].
+    pub fn step_at(&self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        // enforce the frontier contract on every path, so a caller bug
+        // cannot hide behind a manifest without windowed/cached entries
+        anyhow::ensure!(
+            frontiers.len() == self.bucket,
+            "{} frontiers for bucket {}",
+            frontiers.len(),
+            self.bucket
+        );
+        if let Some(cd) = &self.cached {
+            anyhow::ensure!(
+                tgt_in.dims == [self.bucket, self.t_len],
+                "tgt_in {:?} does not match session [{}, {}]",
+                tgt_in.dims,
+                self.bucket,
+                self.t_len
+            );
+            if self.cache_admits(cd, tgt_in, frontiers) {
+                return self.step_cached(cd, tgt_in, frontiers);
+            }
+        }
+        self.step_windowed(tgt_in, frontiers)
+    }
+
+    /// One frontier-windowed invocation: the decoder still recomputes all
+    /// `T` positions, but only the `[B,k+1,K,topt]` score window gathered
+    /// at each row's frontier is downloaded. This is the PR-2 tier —
+    /// `step_at`'s fallback when the KV cache cannot serve a step, and the
+    /// reference the cached tier is benchmarked against. Falls back to the
     /// full-length [`DecodeSession::step`] when the loaded manifest has no
     /// `decode_window_b*` entry.
-    pub fn step_at(&self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
-        // enforce the frontier contract on both paths, so a caller bug
-        // cannot hide behind a manifest without windowed entries
+    pub fn step_windowed(&self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
         anyhow::ensure!(
             frontiers.len() == self.bucket,
             "{} frontiers for bucket {}",
@@ -348,27 +522,14 @@ impl DecodeSession {
         let Some(exe) = &self.window_exe else {
             return self.step(tgt_in);
         };
-        anyhow::ensure!(
-            tgt_in.dims == [self.bucket, self.t_len],
-            "tgt_in {:?} does not match session [{}, {}]",
-            tgt_in.dims,
-            self.bucket,
-            self.t_len
-        );
-        // clamp exactly like the device-side dynamic_slice does, so `base`
-        // reflects the window the gather actually returned
-        let hi = self.t_len - self.window;
-        let base: Vec<usize> = frontiers.iter().map(|&f| f.min(hi)).collect();
-        let f_host =
-            TensorI32::from_vec(&[self.bucket], base.iter().map(|&s| s as i32).collect());
+        let mut args = self.base_args(tgt_in)?;
+        let (base, f_host) = self.clamp_frontiers(frontiers);
         let tgt_buf = self.rt.upload_i32(tgt_in)?;
         let f_buf = self.rt.upload_i32(&f_host)?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
-        args.push(self.mem_dev.buffer());
-        args.push(self.src_dev.buffer());
         args.push(tgt_buf.buffer());
         args.push(f_buf.buffer());
         let out = self.rt.execute(exe, &args)?;
+        self.rt.note_positions((self.bucket * self.t_len) as u64);
         let mut scores = window_scores_from(&out)?;
         anyhow::ensure!(
             scores.window() == self.window,
@@ -376,6 +537,106 @@ impl DecodeSession {
             scores.window(),
             self.window
         );
+        scores.base = base;
+        Ok(scores)
+    }
+
+    /// Clamp per-row frontiers exactly like the device-side dynamic_slice
+    /// does — so `base` reflects the window the gather actually returns on
+    /// both the windowed and cached tiers — and build the `[B]` i32
+    /// frontier tensor those entries take.
+    fn clamp_frontiers(&self, frontiers: &[usize]) -> (Vec<usize>, TensorI32) {
+        let hi = self.t_len - self.window;
+        let base: Vec<usize> = frontiers.iter().map(|&f| f.min(hi)).collect();
+        let f_host =
+            TensorI32::from_vec(&[self.bucket], base.iter().map(|&s| s as i32).collect());
+        (base, f_host)
+    }
+
+    /// Can the KV-cached entry serve this step? Per row: the decoder input
+    /// below the frontier must match the tokens the cache was computed
+    /// from (callers that rewrite history — beam search repacks surviving
+    /// hypotheses into rows every iteration — fail here and get their rows
+    /// invalidated), and the frontier must not jump past the cached
+    /// coverage (a window step can extend the cache, never rebuild an
+    /// arbitrary prefix).
+    fn cache_admits(&self, cd: &CachedDecode, tgt_in: &TensorI32, frontiers: &[usize]) -> bool {
+        let mut state = cd.state.borrow_mut();
+        let mut ok = true;
+        for (b, &f) in frontiers.iter().enumerate() {
+            let j = f.min(self.t_len);
+            if tgt_in.row(b)[..j] != state.seen.row(b)[..j] {
+                // rewritten history: this row's cache content is garbage
+                state.cached_upto[b] = 0;
+                ok = false;
+            } else if j > state.cached_upto[b] {
+                // cache hole below the frontier
+                ok = false;
+            }
+        }
+        ok
+    }
+
+    /// One KV-cached invocation: uploads the `[B,T]` decoder input and the
+    /// `[B]` frontier vector (plus the cache mirror when the previous
+    /// step could not leave it on device), runs the decoder over only the
+    /// k+1 frontier window against the chained K/V caches, and downloads
+    /// the same `[B,k+1,K,topt]` window tensors as the windowed tier.
+    /// Scored decoder positions per step: B·(k+1) instead of B·T.
+    fn step_cached(
+        &self,
+        cd: &CachedDecode,
+        tgt_in: &TensorI32,
+        frontiers: &[usize],
+    ) -> Result<WindowScores> {
+        let mut args = self.base_args(tgt_in)?;
+        let (base, f_host) = self.clamp_frontiers(frontiers);
+        let tgt_buf = self.rt.upload_i32(tgt_in)?;
+        let f_buf = self.rt.upload_i32(&f_host)?;
+        let mut state = cd.state.borrow_mut();
+        let kv_uploaded;
+        let kv_arg = match &state.kv {
+            KvStore::Device(buf) => buf,
+            KvStore::Host(t) => {
+                kv_uploaded = self.rt.upload_f32(t)?;
+                kv_uploaded.buffer()
+            }
+        };
+        args.push(tgt_buf.buffer());
+        args.push(f_buf.buffer());
+        args.push(kv_arg);
+        let (host, trailing) = self.rt.execute_split(&cd.exe, &args, 2)?;
+        self.rt.note_positions((self.bucket * self.window) as u64);
+        let mut scores = window_scores_from(&host)?;
+        anyhow::ensure!(
+            scores.window() == self.window,
+            "cached decode returned {} positions, expected {}",
+            scores.window(),
+            self.window
+        );
+        // chain the updated cache into the next step
+        state.kv = match trailing {
+            TrailingOutputs::Device(mut bufs) => {
+                anyhow::ensure!(
+                    bufs.len() == 1,
+                    "cached decode returned {} trailing outputs, expected 1",
+                    bufs.len()
+                );
+                KvStore::Device(bufs.swap_remove(0))
+            }
+            TrailingOutputs::Host(lits) => {
+                anyhow::ensure!(
+                    lits.len() == 1,
+                    "cached decode returned {} trailing outputs, expected 1",
+                    lits.len()
+                );
+                KvStore::Host(literal_to_f32(&lits[0])?)
+            }
+        };
+        for (upto, &b0) in state.cached_upto.iter_mut().zip(&base) {
+            *upto = b0 + self.window;
+        }
+        state.seen.data.copy_from_slice(&tgt_in.data);
         scores.base = base;
         Ok(scores)
     }
@@ -429,6 +690,19 @@ impl DecodeSession {
         }
         self.src_dev = self.rt.upload_i32(&self.src_host)?;
         self.mem_dev = self.rt.upload_f32(&self.memory_host)?;
+        // per-row K/V cache invalidation: the admitted slot restarts at
+        // frontier 0, so its stale cache content is overwritten
+        // window-by-window before anything can attend to it; resetting the
+        // validity metadata (coverage + seen-prefix mirror, PAD == 0) is
+        // what re-arms the cached tier's admission guard for the new
+        // request
+        if let Some(cd) = &self.cached {
+            let mut state = cd.state.borrow_mut();
+            for &slot in slots {
+                state.cached_upto[slot] = 0;
+                state.seen.row_mut(slot).fill(0);
+            }
+        }
         Ok(())
     }
 }

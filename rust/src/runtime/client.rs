@@ -39,6 +39,11 @@ pub struct RuntimeStats {
     /// device->host transfer count (one result-tuple fetch per execution)
     pub downloads: u64,
     pub bytes_downloaded: u64,
+    /// decoder positions run through the scoring stack, accumulated by the
+    /// decode sessions: B·T per full/windowed step (the whole decoder
+    /// recomputes even when only a window is downloaded), B·(k+1) per
+    /// KV-cached step — the FLOP-side counterpart of the transfer counters
+    pub positions_scored: u64,
 }
 
 impl RuntimeStats {
@@ -55,6 +60,7 @@ impl RuntimeStats {
             bytes_uploaded: self.bytes_uploaded - earlier.bytes_uploaded,
             downloads: self.downloads - earlier.downloads,
             bytes_downloaded: self.bytes_downloaded - earlier.bytes_downloaded,
+            positions_scored: self.positions_scored - earlier.positions_scored,
         }
     }
 }
@@ -63,6 +69,21 @@ impl RuntimeStats {
 pub struct Executable {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
+}
+
+/// The trailing results of an [`Runtime::execute_split`] call — outputs the
+/// caller wants to keep feeding back into the next execution (K/V caches)
+/// rather than consume on host. Which variant you get depends on how the
+/// PJRT layer hands results back: one buffer per output keeps the trailing
+/// outputs device-resident; a single tuple buffer forces everything
+/// through one host fetch, in which case the trailing outputs come back as
+/// host literals and the caller re-uploads them next step (correct either
+/// way; transfer-free when the layout allows it).
+pub enum TrailingOutputs {
+    /// outputs still resident on device (per-output result layout)
+    Device(Vec<xla::PjRtBuffer>),
+    /// outputs fetched together with the leading ones (tuple result layout)
+    Host(Vec<xla::Literal>),
 }
 
 /// A weight bundle resident on device.
@@ -195,14 +216,7 @@ impl Runtime {
         // `to_literal_sync` is the device->host fetch: its size is the sum
         // of the tuple elements. Every entry point returns f32/i32 tensors,
         // so 4 bytes per element.
-        let bytes: u64 = parts
-            .iter()
-            .map(|p| {
-                p.array_shape()
-                    .map(|s| s.dims().iter().map(|&d| d as u64).product::<u64>() * 4)
-                    .unwrap_or(0)
-            })
-            .sum();
+        let bytes: u64 = parts.iter().map(literal_bytes).sum();
         {
             let mut s = self.stats.borrow_mut();
             s.executions += 1;
@@ -213,9 +227,85 @@ impl Runtime {
         Ok(parts)
     }
 
+    /// Execute and fetch only the first `n_host` results to host; the rest
+    /// come back as [`TrailingOutputs`] for the caller to chain into the
+    /// next execution. The KV-cached decode step uses this so the updated
+    /// caches never cross the device boundary when the result layout is
+    /// per-output (and only cross it once per step, not twice, otherwise).
+    pub fn execute_split(
+        &self,
+        exe: &Executable,
+        args: &[&xla::PjRtBuffer],
+        n_host: usize,
+    ) -> Result<(Vec<xla::Literal>, TrailingOutputs)> {
+        let t0 = Instant::now();
+        let mut out = exe.exe.execute_b(args).with_context(|| format!("executing {}", exe.name))?;
+        anyhow::ensure!(
+            !out.is_empty() && !out[0].is_empty(),
+            "no outputs from {}",
+            exe.name
+        );
+        let mut bufs = out.swap_remove(0);
+        let (host, trailing) = if bufs.len() == 1 {
+            // single tuple buffer: the whole result lands on host
+            let lit = bufs[0].to_literal_sync()?;
+            let mut parts = lit.to_tuple()?;
+            anyhow::ensure!(
+                parts.len() >= n_host,
+                "{} returned {} outputs, expected at least {n_host}",
+                exe.name,
+                parts.len()
+            );
+            let rest = parts.split_off(n_host);
+            (parts, TrailingOutputs::Host(rest))
+        } else {
+            // per-output buffers: fetch the leading results, keep the rest
+            // device-resident
+            anyhow::ensure!(
+                bufs.len() >= n_host,
+                "{} returned {} outputs, expected at least {n_host}",
+                exe.name,
+                bufs.len()
+            );
+            let rest = bufs.split_off(n_host);
+            let host = bufs
+                .iter()
+                .map(|b| b.to_literal_sync())
+                .collect::<Result<Vec<_>, _>>()?;
+            (host, TrailingOutputs::Device(rest))
+        };
+        let us = t0.elapsed().as_micros() as u64;
+        let mut bytes: u64 = host.iter().map(literal_bytes).sum();
+        if let TrailingOutputs::Host(rest) = &trailing {
+            bytes += rest.iter().map(literal_bytes).sum::<u64>();
+        }
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_us += us;
+            s.downloads += 1;
+            s.bytes_downloaded += bytes;
+        }
+        Ok((host, trailing))
+    }
+
+    /// Account decoder positions scored by a decode step (see
+    /// [`RuntimeStats::positions_scored`]).
+    pub fn note_positions(&self, n: u64) {
+        self.stats.borrow_mut().positions_scored += n;
+    }
+
     pub fn stats_snapshot(&self) -> RuntimeStats {
         self.stats.borrow().clone()
     }
+}
+
+/// Host-fetch size of a literal (all entry points move f32/i32 tensors, so
+/// 4 bytes per element).
+fn literal_bytes(lit: &xla::Literal) -> u64 {
+    lit.array_shape()
+        .map(|s| s.dims().iter().map(|&d| d as u64).product::<u64>() * 4)
+        .unwrap_or(0)
 }
 
 /// Convert a host literal to an i32 tensor.
@@ -249,6 +339,7 @@ mod tests {
             bytes_uploaded: 4096,
             downloads: 10,
             bytes_downloaded: 9_000,
+            positions_scored: 2_240,
         };
         let later = RuntimeStats {
             compiles: 2,
@@ -259,6 +350,7 @@ mod tests {
             bytes_uploaded: 4096 + 3 * 112,
             downloads: 13,
             bytes_downloaded: 9_000 + 3 * 2_304,
+            positions_scored: 2_240 + 3 * 72,
         };
         let d = later.delta(&earlier);
         assert_eq!(d.compiles, 0);
@@ -268,6 +360,7 @@ mod tests {
         assert_eq!(d.bytes_uploaded, 336);
         assert_eq!(d.downloads, 3);
         assert_eq!(d.bytes_downloaded, 6_912);
+        assert_eq!(d.positions_scored, 216);
     }
 
     #[test]
@@ -281,6 +374,7 @@ mod tests {
             bytes_uploaded: 6,
             downloads: 7,
             bytes_downloaded: 8,
+            positions_scored: 9,
         };
         assert_eq!(s.delta(&s), RuntimeStats::default());
     }

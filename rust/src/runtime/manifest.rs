@@ -26,6 +26,10 @@ pub struct VariantConfig {
     pub max_tgt: usize,
     pub d_model: usize,
     pub n_heads: usize,
+    /// decoder depth — sizes the `[2·n_dec, B, T, H, Dh]` K/V caches the
+    /// `decode_cached_b*` entries take. 0 in manifests from before the
+    /// cached export, which keeps the cached path disabled there.
+    pub n_dec: usize,
 }
 
 /// One trained model variant.
@@ -46,10 +50,13 @@ impl VariantSpec {
     /// for prefix `decode_b`), keyed by bucket size. The logical-name
     /// grammar is the aot.py ↔ runtime contract: `encode_b*` and
     /// `decode_b*` are mandatory for scoring variants, `decode_window_b*`
-    /// is the frontier-windowed decode entry newer manifests export
-    /// (loaders must treat it as optional), `nat_b*` is the NAT entry.
+    /// (frontier-windowed download) and `decode_cached_b*` (KV-cached
+    /// frontier-window compute, paired with `config.n_dec`) are optional
+    /// entries newer manifests export — loaders must fall back to the
+    /// older paths when they are absent — and `nat_b*` is the NAT entry.
     /// Names whose suffix is not a bucket number never match, so prefix
-    /// `decode_b` does not swallow `decode_window_b8`.
+    /// `decode_b` does not swallow `decode_window_b8` or
+    /// `decode_cached_b8`.
     pub fn bucketed(&self, prefix: &str) -> BTreeMap<usize, &str> {
         let mut out = BTreeMap::new();
         for (logical, key) in &self.entries {
@@ -125,6 +132,8 @@ impl Manifest {
                         max_tgt: c.get("max_tgt")?.as_usize()?,
                         d_model: c.get("d_model")?.as_usize()?,
                         n_heads: c.get("n_heads")?.as_usize()?,
+                        // optional: absent in pre-cached-decode manifests
+                        n_dec: c.opt("n_dec").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
                     },
                 },
             );
@@ -165,7 +174,8 @@ mod tests {
       "entries": {
         "mt_k2_b1_encode": {"file": "hlo/mt_k2_b1_encode.hlo.txt", "batch": 1},
         "mt_k2_b1_decode": {"file": "hlo/mt_k2_b1_decode.hlo.txt", "batch": 1},
-        "mt_k2_b1_decode_window": {"file": "hlo/mt_k2_b1_decode_window.hlo.txt", "batch": 1}
+        "mt_k2_b1_decode_window": {"file": "hlo/mt_k2_b1_decode_window.hlo.txt", "batch": 1},
+        "mt_k2_b1_decode_cached": {"file": "hlo/mt_k2_b1_decode_cached.hlo.txt", "batch": 1}
       },
       "variants": {
         "mt_k2_regular": {
@@ -173,8 +183,10 @@ mod tests {
           "weights": "weights/mt_k2_regular.bin",
           "params": [],
           "entries": {"encode_b1": "mt_k2_b1_encode", "decode_b1": "mt_k2_b1_decode",
-                      "decode_window_b1": "mt_k2_b1_decode_window"},
-          "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4}
+                      "decode_window_b1": "mt_k2_b1_decode_window",
+                      "decode_cached_b1": "mt_k2_b1_decode_cached"},
+          "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4,
+                     "n_dec": 2}
         }
       }
     }"#;
@@ -193,6 +205,7 @@ mod tests {
         let v = m.variant("mt_k2_regular").unwrap();
         assert_eq!(v.k, 2);
         assert_eq!(v.config.vocab, 127);
+        assert_eq!(v.config.n_dec, 2);
         assert!(m.variant("nope").is_err());
         assert_eq!(m.task_variants("mt").len(), 1);
     }
@@ -207,20 +220,25 @@ mod tests {
             .unwrap();
         let m = Manifest::load(&dir).unwrap();
         let v = m.variant("mt_k2_regular").unwrap();
-        // `decode_b` must not swallow `decode_window_b1`
+        // `decode_b` must swallow neither `decode_window_b1` nor
+        // `decode_cached_b1`
         let dec = v.bucketed("decode_b");
         assert_eq!(dec.len(), 1);
         assert_eq!(dec[&1], "mt_k2_b1_decode");
         let win = v.bucketed("decode_window_b");
         assert_eq!(win.len(), 1);
         assert_eq!(win[&1], "mt_k2_b1_decode_window");
+        let cached = v.bucketed("decode_cached_b");
+        assert_eq!(cached.len(), 1);
+        assert_eq!(cached[&1], "mt_k2_b1_decode_cached");
         assert!(v.bucketed("nat_b").is_empty());
     }
 
     #[test]
     fn old_manifest_without_window_entries_parses() {
-        // manifests from before the frontier-windowed decode export must
-        // keep loading (the runtime then decodes via the full-length path)
+        // manifests from before the frontier-windowed and KV-cached decode
+        // exports must keep loading (the runtime then decodes via the
+        // full-length path, and the missing n_dec pins the cache size to 0)
         let dir = std::env::temp_dir().join("bd_manifest_test4");
         std::fs::create_dir_all(&dir).unwrap();
         let old = SAMPLE
@@ -228,8 +246,16 @@ mod tests {
                 ",\n        \"mt_k2_b1_decode_window\": {\"file\": \"hlo/mt_k2_b1_decode_window.hlo.txt\", \"batch\": 1}",
                 "",
             )
-            .replace(",\n                      \"decode_window_b1\": \"mt_k2_b1_decode_window\"", "");
+            .replace(
+                ",\n        \"mt_k2_b1_decode_cached\": {\"file\": \"hlo/mt_k2_b1_decode_cached.hlo.txt\", \"batch\": 1}",
+                "",
+            )
+            .replace(",\n                      \"decode_window_b1\": \"mt_k2_b1_decode_window\"", "")
+            .replace(",\n                      \"decode_cached_b1\": \"mt_k2_b1_decode_cached\"", "")
+            .replace(",\n                     \"n_dec\": 2", "");
         assert!(!old.contains("decode_window"), "replacement failed: {old}");
+        assert!(!old.contains("decode_cached"), "replacement failed: {old}");
+        assert!(!old.contains("n_dec"), "replacement failed: {old}");
         std::fs::File::create(dir.join("manifest.json"))
             .unwrap()
             .write_all(old.as_bytes())
@@ -237,7 +263,9 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         let v = m.variant("mt_k2_regular").unwrap();
         assert!(v.bucketed("decode_window_b").is_empty());
+        assert!(v.bucketed("decode_cached_b").is_empty());
         assert_eq!(v.bucketed("decode_b").len(), 1);
+        assert_eq!(v.config.n_dec, 0, "missing n_dec must default to 0");
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod weights;
 
 pub use client::{
     literal_to_f32, literal_to_i32, DeviceTensor, DeviceWeights, Executable, Runtime, RuntimeStats,
+    TrailingOutputs,
 };
 pub use manifest::{EntrySpec, Manifest, VariantConfig, VariantSpec};
 pub use weights::{le_bytes_to_f32, le_bytes_to_i32, DType, WeightBundle, WeightEntry};

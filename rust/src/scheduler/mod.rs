@@ -12,9 +12,11 @@
 //! 2. **step** — one combined scoring/proposal invocation advances *every*
 //!    active slot (each by its own k̂ ≥ 1 tokens); a steady-state step
 //!    uploads only the `[B,T]` decoder input plus the `[B]` frontier
-//!    vector, and downloads only the `[B,k+1,K,topt]` score window at
-//!    each slot's frontier (full tensors on manifests without windowed
-//!    decode entries);
+//!    vector, downloads only the `[B,k+1,K,topt]` score window at each
+//!    slot's frontier, and on KV-cached manifests re-runs the decoder
+//!    over only those k+1 positions per slot (`scatter_rows` invalidates
+//!    an admitted slot's cache rows; older manifests fall back tier by
+//!    tier);
 //! 3. **complete** — finished slots respond to their waiters and free up.
 //!
 //! Because sequences join and leave at iteration granularity, a slot never

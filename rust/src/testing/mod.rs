@@ -3,16 +3,35 @@
 //!
 //! `check` runs a property over many seeded random cases and reports the
 //! failing seed (rerun with `case(seed)` to debug) — shrinking-lite, but
-//! deterministic and dependency-free.
+//! deterministic and dependency-free. The base seed comes from the
+//! `BLOCKDECODE_PROP_SEED` env var (decimal or 0x-hex; default 0xBD00), so
+//! tier-1 pins it for reproducible failures and a dev can re-roll locally.
 
 pub mod sim;
 
 use crate::util::rng::Rng;
 
+/// Base seed for [`check`]: `BLOCKDECODE_PROP_SEED` when set (decimal or
+/// 0x-prefixed hex), else 0xBD00 — every case `i` runs at base + i.
+pub fn prop_base_seed() -> u64 {
+    match std::env::var("BLOCKDECODE_PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            parsed.unwrap_or_else(|_| panic!("bad BLOCKDECODE_PROP_SEED '{s}'"))
+        }
+        Err(_) => 0xBD00,
+    }
+}
+
 /// Run `prop` over `cases` seeded inputs; panic with the seed on failure.
 pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
+    let base = prop_base_seed();
     for case in 0..cases {
-        let seed = 0xBD00 + case as u64;
+        let seed = base + case as u64;
         let mut rng = Rng::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             prop(&mut rng);

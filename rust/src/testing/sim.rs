@@ -138,40 +138,156 @@ impl SimModel {
     }
 }
 
+/// Which device entry tier a [`SimSession`] plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimMode {
+    /// full `[B,T,K,topt]` tensors, frontiers ignored (oldest manifests)
+    Full,
+    /// `[B,k+1,K,topt]` window gathered at the clamped frontier (the
+    /// `decode_window_b*` entry): full recompute, windowed download
+    Windowed,
+    /// KV-cached frontier-window compute (the `decode_cached_b*` entry):
+    /// tokens below the trust boundary come from the per-row cache, not
+    /// the fresh decoder input. `invalidate == true` is the correct
+    /// behaviour (the volatile proposal region is re-read fresh every
+    /// step, and rewritten history resets the row); `false` is the
+    /// deliberate stale-cache bug knob — the session keeps trusting every
+    /// previously-written cache entry, so proposal tokens replaced after
+    /// a rejection keep conditioning later scores.
+    Cached { invalidate: bool },
+}
+
+/// Per-row cache state for the cached modes: the token mirror plays the
+/// role of the device K/V cache (the sim's "hidden state" at a position is
+/// fully determined by the conditioning tokens, so caching the tokens *is*
+/// caching the K/V).
+#[derive(Default)]
+struct RowCache {
+    committed: Vec<i32>,
+    /// positions [0, upto) hold cache entries
+    upto: usize,
+    /// cumulative tokens served from the cache (trust-region reads) — lets
+    /// tests prove the cached path actually consulted the cache instead of
+    /// passing an equality check vacuously
+    trusted: usize,
+}
+
+impl RowCache {
+    /// Serve one cached step: build the effective decoder input (cache
+    /// below the trust boundary, fresh input above), then absorb the
+    /// window `[start, start+w)` into the cache.
+    fn advance(
+        &mut self,
+        fresh: &[i32],
+        j: usize,
+        start: usize,
+        w: usize,
+        invalidate: bool,
+    ) -> Vec<i32> {
+        let t_len = fresh.len();
+        if self.committed.len() != t_len {
+            self.committed = vec![PAD; t_len];
+            self.upto = 0;
+        }
+        // trust boundary: healthy = at most the frontier (the volatile
+        // proposal region is invalidated — re-read fresh — every step);
+        // bug knob = the whole cached coverage, proposals included
+        let mut trust = if invalidate {
+            j.min(self.upto)
+        } else {
+            self.upto.min(t_len)
+        };
+        if invalidate && self.committed[..trust] != fresh[..trust] {
+            // rewritten history below the frontier (beam-style repacking):
+            // invalidate the row and rebuild from the fresh input — the
+            // device session instead falls back to the windowed tier, but
+            // either way no stale entry is ever read
+            trust = 0;
+        }
+        self.trusted += trust;
+        let mut eff = fresh.to_vec();
+        eff[..trust].copy_from_slice(&self.committed[..trust]);
+        let end = (start + w).min(t_len);
+        self.committed[start..end].copy_from_slice(&eff[start..end]);
+        if invalidate {
+            self.upto = end;
+        } else {
+            self.upto = self.upto.max(end);
+        }
+        eff
+    }
+}
+
 /// Sim-backed implementation of the device `DecodeSession` contract: the
 /// per-row sources play the pinned `src`/`memory` state, and each
 /// `step_at` scores one decoder-input batch. In the default **windowed**
 /// mode it returns, like the device's `decode_window_b*` entry, only the
 /// `[B,k+1,K,topt]` window gathered at each row's (clamped) frontier; in
 /// `full` mode it plays a session whose manifest lacks windowed entries
-/// and returns the whole `[B,T,K,topt]` tensors. Plugging either into
-/// `decoding::blockwise::decode_rows` runs the *exact* production loop
-/// (including its finished-row PAD retirement and incremental row
-/// patching) against the simulator, so both paths can be checked
-/// token-for-token against each other and against the one-shot
+/// and returns the whole `[B,T,K,topt]` tensors; in `cached` mode it
+/// plays the `decode_cached_b*` entry — conditioning below the frontier
+/// is served from a per-row cache instead of the fresh decoder input,
+/// with a stale-cache bug knob (`cached_stale`) that skips the volatile
+/// invalidation a correct implementation must perform. Plugging any of
+/// them into `decoding::blockwise::decode_rows` runs the *exact*
+/// production loop (including its finished-row PAD retirement and
+/// incremental row patching) against the simulator, so the paths can be
+/// checked token-for-token against each other and against the one-shot
 /// [`sim_blockwise`] reference without touching PJRT.
 pub struct SimSession<'a> {
     model: &'a SimModel,
     srcs: Vec<Vec<i32>>,
-    /// serve the frontier-windowed contract (k+1 positions) instead of
-    /// the full-length fallback
-    windowed: bool,
+    mode: SimMode,
+    /// per-row cache state (cached modes only; sized lazily at first step)
+    rows: Vec<RowCache>,
     /// model invocations consumed (mirrors RuntimeStats.executions)
     pub steps: usize,
+    /// decoder positions scored (mirrors RuntimeStats.positions_scored):
+    /// B·T per full/windowed step — the device recomputes the whole
+    /// decoder on both — and B·(k+1) per cached step
+    pub positions_scored: usize,
 }
 
 impl<'a> SimSession<'a> {
+    fn with_mode(model: &'a SimModel, srcs: Vec<Vec<i32>>, mode: SimMode) -> Self {
+        SimSession { model, srcs, mode, rows: Vec::new(), steps: 0, positions_scored: 0 }
+    }
+
     /// Production-shaped session: `step_at` returns a `[B,k+1,K,topt]`
     /// frontier window.
     pub fn new(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
-        SimSession { model, srcs, windowed: true, steps: 0 }
+        Self::with_mode(model, srcs, SimMode::Windowed)
     }
 
     /// Fallback-shaped session: `step_at` ignores the frontiers and
     /// returns the full `[B,T,K,topt]` tensors, like a `DecodeSession`
     /// loaded from a manifest without `decode_window_b*` entries.
     pub fn full(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
-        SimSession { model, srcs, windowed: false, steps: 0 }
+        Self::with_mode(model, srcs, SimMode::Full)
+    }
+
+    /// KV-cached session: conditioning below each row's frontier comes
+    /// from the per-row cache, and only the k+1 window positions are
+    /// scored per step (`positions_scored` grows by B·(k+1), not B·T).
+    pub fn cached(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
+        Self::with_mode(model, srcs, SimMode::Cached { invalidate: true })
+    }
+
+    /// The stale-cache hazard knob: a cached session that **skips
+    /// invalidation** — proposal tokens written to the cache in earlier
+    /// steps keep conditioning later scores even after the verify substep
+    /// rejected and replaced them. `prop_stale_cache_bug_is_caught` proves
+    /// the equality property actually detects this class of bug.
+    pub fn cached_stale(model: &'a SimModel, srcs: Vec<Vec<i32>>) -> Self {
+        Self::with_mode(model, srcs, SimMode::Cached { invalidate: false })
+    }
+
+    /// Total tokens the cached modes served from their per-row caches
+    /// (trust-region reads) so far. Equality tests assert this is nonzero
+    /// — the cached == full property would be vacuous if the cache were
+    /// never actually consulted.
+    pub fn cache_trusted(&self) -> usize {
+        self.rows.iter().map(|r| r.trusted).sum()
     }
 }
 
@@ -182,15 +298,38 @@ impl BlockStepper for SimSession<'_> {
         let t_len = tgt_in.dims[1];
         anyhow::ensure!(frontiers.len() == b, "{} frontiers for batch {b}", frontiers.len());
         let (k, topt) = (self.model.k, self.model.topt);
-        let w = if self.windowed { (k + 1).min(t_len) } else { t_len };
+        let w = match self.mode {
+            SimMode::Full => t_len,
+            _ => (k + 1).min(t_len),
+        };
+        let scored_per_row = match self.mode {
+            SimMode::Cached { .. } => w,
+            _ => t_len,
+        };
+        self.positions_scored += b * scored_per_row;
+        if matches!(self.mode, SimMode::Cached { .. }) && self.rows.len() < b {
+            self.rows.resize_with(b, RowCache::default);
+        }
         let mut topi = TensorI32::zeros(&[b, w, k, topt]);
         let mut topv = TensorF32::zeros(&[b, w, k, topt]);
         let mut base = vec![0usize; b];
         for row in 0..b {
-            let r = tgt_in.row(row);
+            let fresh = tgt_in.row(row);
             // same clamp as the device-side dynamic_slice gather
-            let start = if self.windowed { frontiers[row].min(t_len - w) } else { 0 };
+            let start = match self.mode {
+                SimMode::Full => 0,
+                _ => frontiers[row].min(t_len - w),
+            };
             base[row] = start;
+            let eff_vec;
+            let r: &[i32] = match self.mode {
+                SimMode::Cached { invalidate } => {
+                    let j = frontiers[row].min(t_len);
+                    eff_vec = self.rows[row].advance(fresh, j, start, w, invalidate);
+                    &eff_vec
+                }
+                _ => fresh,
+            };
             // PAD-only rows are padding or retired (finished) rows: inert,
             // all-zero scores — exactly what absorb never reads
             let used = r.iter().rposition(|&t| t != PAD).map_or(0, |p| p + 1);
@@ -370,6 +509,64 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn cached_mode_matches_windowed_steps() {
+        // same inputs, growing append-only prefix: the cached session must
+        // return byte-identical windows to the windowed session while
+        // scoring only k+1 positions per step
+        let m = SimModel::new(60, 3, 0.6, 9, 17);
+        let srcs = vec![vec![5, 9, EOS]];
+        let t_len = 12;
+        let toks = [11, 12, 13, 14, 15, 16, 17, 18];
+        let mut win = SimSession::new(&m, srcs.clone());
+        let mut cached = SimSession::cached(&m, srcs.clone());
+        for step in 0..4 {
+            let mut tgt = TensorI32::zeros(&[1, t_len]);
+            let row = tgt.row_mut(0);
+            row[0] = BOS;
+            let filled = (2 * step + 4).min(toks.len());
+            row[1..1 + filled].copy_from_slice(&toks[..filled]);
+            let frontier = 2 * step;
+            let a = win.step_at(&tgt, &[frontier]).unwrap();
+            let b = cached.step_at(&tgt, &[frontier]).unwrap();
+            assert_eq!(a.base, b.base, "step {step}");
+            assert_eq!(a.topi.data, b.topi.data, "step {step}");
+            assert_eq!(a.topv.data, b.topv.data, "step {step}");
+        }
+        assert!(
+            cached.positions_scored < win.positions_scored,
+            "cached mode must score fewer positions ({} vs {})",
+            cached.positions_scored,
+            win.positions_scored
+        );
+        // the equality above is not vacuous: the growing prefix was served
+        // from the cache, not re-read from the fresh input
+        assert!(cached.cache_trusted() > 0, "cached session never consulted its cache");
+    }
+
+    #[test]
+    fn cached_mode_survives_rewritten_history() {
+        // beam-style repacking rewrites tokens below the frontier between
+        // steps; the healthy cached session must detect the mutation,
+        // invalidate the row, and still match the windowed session
+        let m = SimModel::new(60, 2, 0.5, 9, 23);
+        let srcs = vec![vec![7, EOS]];
+        let t_len = 10;
+        let hyps = [[11, 12, 13, 14], [21, 22, 23, 24]];
+        let mut win = SimSession::new(&m, srcs.clone());
+        let mut cached = SimSession::cached(&m, srcs.clone());
+        for (step, hyp) in hyps.iter().enumerate() {
+            let mut tgt = TensorI32::zeros(&[1, t_len]);
+            let row = tgt.row_mut(0);
+            row[0] = BOS;
+            row[1..5].copy_from_slice(hyp);
+            let a = win.step_at(&tgt, &[3]).unwrap();
+            let b = cached.step_at(&tgt, &[3]).unwrap();
+            assert_eq!(a.topi.data, b.topi.data, "step {step}");
+            assert_eq!(a.topv.data, b.topv.data, "step {step}");
         }
     }
 

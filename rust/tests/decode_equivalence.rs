@@ -100,6 +100,63 @@ fn mt_blockwise_invariants() {
 }
 
 #[test]
+fn cached_decode_falls_back_without_entries() {
+    // Manifests without `decode_cached_b*` entries must load and decode
+    // through the windowed fallback with identical outputs — the cached
+    // tier is a pure acceleration, never a semantic change. Stripping the
+    // entries from a freshly-loaded manifest simulates an old artifact set
+    // against the same weights, so this also keeps the full-path fallback
+    // exercised once the shipped artifacts carry cached entries.
+    let root = require_artifacts!();
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let dev = Dataset::load(&manifest.data_file("mt_dev.json")).unwrap();
+    let srcs: Vec<Vec<i32>> = dev.rows.iter().take(4).map(|r| r.src.clone()).collect();
+
+    let model = ScoringModel::load(rt.clone(), &manifest, "mt_k8_both").unwrap();
+    let before = rt.stats_snapshot();
+    let primary = decoding::blockwise_decode(&model, &srcs, &BlockwiseConfig::default()).unwrap();
+    let d = rt.stats_snapshot().delta(&before);
+    if model.has_cached_decode() {
+        // the tentpole claim on the real device path, across a full
+        // multi-step decode with *advancing* frontiers: every step must be
+        // served by the cached tier (B·(k+1) scored positions), never by
+        // a silent windowed fallback (B·T) — this is the only test that
+        // exercises `cache_admits` beyond frontier 0
+        let bucket = model.pick_bucket(srcs.len()).unwrap() as u64;
+        let w = (model.k() + 1).min(model.max_tgt()) as u64;
+        let decode_steps = d.executions - 1; // one encode, then the steps
+        assert!(decode_steps > 1, "expected a multi-step decode");
+        assert_eq!(
+            d.positions_scored,
+            decode_steps * bucket * w,
+            "a cached-tier decode must score B·(k+1) positions on every step"
+        );
+    }
+    drop(model);
+
+    let mut stripped = Manifest::load(&root).unwrap();
+    for v in stripped.variants.values_mut() {
+        v.entries.retain(|logical, _| !logical.starts_with("decode_cached_b"));
+    }
+    let fallback = ScoringModel::load(rt.clone(), &stripped, "mt_k8_both").unwrap();
+    assert!(!fallback.has_cached_decode(), "stripping the cached entries failed");
+    let fb = decoding::blockwise_decode(&fallback, &srcs, &BlockwiseConfig::default()).unwrap();
+
+    for (i, (a, b)) in primary.iter().zip(&fb).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "row {i}: cached and fallback paths disagree");
+        assert_eq!(
+            a.stats.invocations, b.stats.invocations,
+            "row {i}: invocation counts diverged"
+        );
+        assert_eq!(
+            a.stats.accepted_blocks, b.stats.accepted_blocks,
+            "row {i}: accept traces diverged"
+        );
+    }
+}
+
+#[test]
 fn sr_distance_criterion_decodes() {
     let root = require_artifacts!();
     let manifest = Manifest::load(&root).unwrap();

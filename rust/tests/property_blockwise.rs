@@ -184,6 +184,99 @@ fn prop_windowed_equals_full_download() {
     }
 }
 
+/// Tentpole invariant of the KV-cached step contract: driving the
+/// production `decode_rows` loop through a cached session — conditioning
+/// below each row's frontier served from the per-row cache, only the k+1
+/// window positions scored per step — is **byte-identical** in tokens,
+/// accept traces, and invocation counts to the full-tensor reference
+/// path, swept across low/mid/high proposal agreement. The per-step
+/// scored-position accounting is asserted too: O((k+1)·steps) for the
+/// cached path vs O(T·steps) for the full path.
+#[test]
+fn prop_cached_equals_full() {
+    for &agreement in &[0.1, 0.5, 0.9] {
+        let mut trusted_total = 0usize;
+        check(&format!("cached==full@{agreement}"), 40, |rng| {
+            let k = 1 + rng.below(8);
+            let vocab = 30 + rng.below(120);
+            let mean_len = 4 + rng.below(14);
+            let m = SimModel::new(vocab, k, agreement, mean_len, rng.next_u64());
+            let n_rows = 1 + rng.below(4);
+            let srcs: Vec<Vec<i32>> = (0..n_rows).map(|_| gen_src(rng, vocab, 10)).collect();
+            let max_len = 4 + rng.below(20);
+            let t_len = max_len + 1;
+            let bucket = n_rows + rng.below(3);
+
+            let mut c_states: Vec<BlockState> =
+                (0..n_rows).map(|_| BlockState::new(k, Criterion::Exact, max_len)).collect();
+            let mut cached = SimSession::cached(&m, srcs.clone());
+            decode_rows(&mut cached, &mut c_states, bucket, t_len).unwrap();
+
+            let mut f_states: Vec<BlockState> =
+                (0..n_rows).map(|_| BlockState::new(k, Criterion::Exact, max_len)).collect();
+            let mut full = SimSession::full(&m, srcs.clone());
+            decode_rows(&mut full, &mut f_states, bucket, t_len).unwrap();
+
+            assert_eq!(cached.steps, full.steps, "cached path changed the invocation count");
+            assert_eq!(
+                cached.positions_scored,
+                cached.steps * bucket * (k + 1).min(t_len),
+                "cached path must score exactly k+1 positions per row per step"
+            );
+            assert_eq!(full.positions_scored, full.steps * bucket * t_len);
+            trusted_total += cached.cache_trusted();
+            for (i, (c, f)) in c_states.iter().zip(&f_states).enumerate() {
+                assert_eq!(c.accepted, f.accepted, "row {i}: cached tokens != full tokens");
+                assert_eq!(
+                    c.stats.accepted_blocks, f.stats.accepted_blocks,
+                    "row {i}: accept trace diverged"
+                );
+                assert_eq!(
+                    c.stats.invocations, f.stats.invocations,
+                    "row {i}: invocation count diverged"
+                );
+            }
+        });
+        // the equality must not be vacuous: across the sweep, scores were
+        // actually conditioned on cache-served tokens below the frontier
+        assert!(trusted_total > 0, "cached mode never consulted its cache at {agreement}");
+    }
+}
+
+/// The equality property above has teeth: the deliberate stale-cache bug
+/// knob (`SimSession::cached_stale` skips the volatile invalidation, so
+/// proposal tokens rejected and replaced in earlier steps keep
+/// conditioning later scores) is caught by the same sweep — its decodes
+/// visibly diverge from the full path.
+#[test]
+fn prop_stale_cache_bug_is_caught() {
+    for &agreement in &[0.1, 0.5, 0.9] {
+        let mut diverged = 0usize;
+        check(&format!("stale-cache-caught@{agreement}"), 10, |rng| {
+            let k = 2 + rng.below(6);
+            let vocab = 30 + rng.below(120);
+            let m = SimModel::new(vocab, k, agreement, 8 + rng.below(8), rng.next_u64());
+            let srcs = vec![gen_src(rng, vocab, 10)];
+            let max_len = 8 + rng.below(12);
+            let t_len = max_len + 1;
+
+            let mut s_states = vec![BlockState::new(k, Criterion::Exact, max_len)];
+            let mut stale = SimSession::cached_stale(&m, srcs.clone());
+            decode_rows(&mut stale, &mut s_states, 1, t_len).unwrap();
+
+            let mut f_states = vec![BlockState::new(k, Criterion::Exact, max_len)];
+            let mut full = SimSession::full(&m, srcs.clone());
+            decode_rows(&mut full, &mut f_states, 1, t_len).unwrap();
+
+            let (s, f) = (&s_states[0], &f_states[0]);
+            if s.accepted != f.accepted || s.stats.accepted_blocks != f.stats.accepted_blocks {
+                diverged += 1;
+            }
+        });
+        assert!(diverged > 0, "stale-cache knob went undetected at agreement {agreement}");
+    }
+}
+
 /// EOS handling: the hypothesis never contains tokens after EOS.
 #[test]
 fn prop_eos_terminates() {
