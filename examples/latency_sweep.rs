@@ -11,6 +11,7 @@ use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
 use blockdecode::harness::common::Table;
 use blockdecode::harness::Ctx;
 use blockdecode::util::stats::summarize;
+use blockdecode::util::tensor::{TensorF32, TensorI32};
 use std::time::Instant;
 
 fn main() -> Result<()> {
@@ -44,6 +45,39 @@ fn main() -> Result<()> {
         gd.bytes_downloaded as f64 / gd.executions.max(1) as f64,
         gd.positions_scored as f64 / gd.executions.max(1) as f64
     );
+
+    // admission anatomy: bytes a continuous-batching refill uploads per
+    // admitted row — O(rows·S·D) on the device-scatter path (`scatter_b*`
+    // entries), the full O(B·S·D) mirror re-pin on old manifests. The
+    // warmup admission absorbs the one-time K/V cache pin (and any
+    // tuple-layout demotion) so the measured row is steady-state.
+    if let Ok(bucket) = base.pick_bucket(2) {
+        let s_len = base.max_src();
+        let d_model = base.spec.config.d_model;
+        let mut src_b = TensorI32::zeros(&[bucket, s_len]);
+        for (b, row) in ds.rows.iter().take(bucket).enumerate() {
+            let w = row.src.len().min(s_len);
+            src_b.row_mut(b)[..w].copy_from_slice(&row.src[..w]);
+        }
+        let mut sess = base.begin_session(&src_b)?;
+        let memory = base.encode(&src_b)?;
+        let enc_src = TensorI32::from_vec(&[1, s_len], src_b.row(0).to_vec());
+        let enc_mem =
+            TensorF32::from_vec(&[1, s_len, d_model], memory.data[..s_len * d_model].to_vec());
+        sess.scatter_rows(&[0], &enc_src, &enc_mem)?;
+        let t0 = Instant::now();
+        let before = ctx.rt.stats_snapshot();
+        sess.scatter_rows(&[1], &enc_src, &enc_mem)?;
+        let adm = ctx.rt.stats_snapshot().delta(&before);
+        let mirror = (bucket * s_len * d_model * 4 + bucket * s_len * 4) as u64;
+        println!(
+            "admission: {} B up / {:.2} ms per admitted row ({}; mirror re-pin: {} B)\n",
+            adm.bytes_uploaded,
+            t0.elapsed().as_secs_f64() * 1000.0,
+            if sess.device_scatter() { "device-side scatter" } else { "mirror fallback" },
+            mirror
+        );
+    }
 
     // per-step transfer bytes and scored decoder positions (averaged over
     // every invocation of the setting, including its one encode per

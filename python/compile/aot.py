@@ -190,6 +190,21 @@ def make_decode_cached_fn(cfg: M.ModelConfig):
     return fn
 
 
+def make_scatter_fn(cfg: M.ModelConfig):
+    """Device-side admission entry: scatter one newly-encoded row into the
+    resident batch state (`M.admit_rows`). Takes the session's resident
+    memory/src/kv buffers plus a [1] slot index and the admitted row's
+    [1,S] src ids / [1,S,D] encoder memory; returns the updated buffers,
+    which the rust runtime keeps device-resident via `execute_split` — so
+    admission uploads only the new row, not the whole [B,S,D] mirror. The
+    weight bundle is threaded through untouched (`keep_unused=True`
+    export convention: one positional buffer list serves every entry)."""
+    def fn(params, memory, src, kv, slot, row_src, row_memory):
+        del params
+        return M.admit_rows(cfg, memory, src, kv, slot, row_src, row_memory)
+    return fn
+
+
 def make_logits_fn(cfg: M.ModelConfig):
     def fn(params, memory, src, tgt_in):
         return (M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True),)
@@ -400,6 +415,9 @@ class Builder:
             else:
                 fro = jnp.zeros((b,), jnp.int32)
                 kv0 = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
+                slot = jnp.zeros((1,), jnp.int32)
+                row_src = jnp.zeros((1, cfg.max_src), jnp.int32)
+                row_mem = jnp.zeros((1, cfg.max_src, cfg.d_model), jnp.float32)
                 for kind, mk, args in (
                     ("encode", make_encode_fn(cfg), (params, src)),
                     ("decode", make_decode_fn(cfg), (params, mem, src, tgt)),
@@ -407,6 +425,8 @@ class Builder:
                      (params, mem, src, tgt, fro)),
                     ("decode_cached", make_decode_cached_fn(cfg),
                      (params, mem, src, tgt, fro, kv0)),
+                    ("scatter", make_scatter_fn(cfg),
+                     (params, mem, src, kv0, slot, row_src, row_mem)),
                 ):
                     e = f"{sig}_b{b}_{kind}"
                     if e not in self.manifest["entries"]:

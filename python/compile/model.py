@@ -181,6 +181,44 @@ def decode_heads_cached(
     return logits, jnp.stack(kv_out)
 
 
+def admit_rows(
+    cfg: ModelConfig,
+    memory: jnp.ndarray,
+    src: jnp.ndarray,
+    kv: jnp.ndarray,
+    slot: jnp.ndarray,
+    row_src: jnp.ndarray,
+    row_memory: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-side admission scatter: land one newly-encoded request in a
+    batch slot of the resident decode state without round-tripping the
+    whole batch through host.
+
+    `memory` [B,S,D], `src` [B,S], and `kv` [2*n_dec,B,T,H,Dh] are the
+    session's resident buffers; `slot` is a [1] i32 batch index (clamped to
+    [0, B-1] by dynamic_update_slice, matching the host-side bound check),
+    and `row_src` [1,S] / `row_memory` [1,S,D] are the admitted request's
+    encoder inputs/outputs. Returns the three buffers with the row
+    scattered in and the slot's K/V cache rows zeroed — the same per-row
+    `dynamic_update_slice` pattern `mha_cached` uses for its window
+    scatter, applied to the batch axis. The serving runtime invokes this
+    once per admitted row, so admission uploads O(rows*S*D) bytes instead
+    of re-pinning the O(B*S*D) mirror (rust/src/model/mod.rs
+    `DecodeSession::scatter_rows`).
+
+    Zeroing the cache rows is what lets the rust session drop its host
+    K/V handling entirely on admission: the slot restarts at frontier 0
+    with provably-empty cache content, and only the validity metadata
+    (coverage counters + seen-prefix mirror) is reset host-side.
+    """
+    s = slot[0]
+    memory = jax.lax.dynamic_update_slice_in_dim(memory, row_memory, s, axis=0)
+    src = jax.lax.dynamic_update_slice_in_dim(src, row_src, s, axis=0)
+    kv_zero = jnp.zeros(kv.shape[:1] + (1,) + kv.shape[2:], kv.dtype)
+    kv = jax.lax.dynamic_update_slice(kv, kv_zero, (0, s, 0, 0, 0))
+    return memory, src, kv
+
+
 # --------------------------------------------------------------------------
 # Training loss (§6: one uniformly-sampled head per minibatch)
 # --------------------------------------------------------------------------

@@ -232,6 +232,77 @@ def test_decode_cached_hlo_exports(tmp_path, small):
     assert "dynamic-update-slice" in text
 
 
+def test_scatter_admission_matches_repin(small):
+    """Device-side admission numerics: scattering newly-encoded rows into
+    the resident batch via `admit_rows` must be byte-identical to the
+    from-scratch re-pin the old host-mirror path performed (rebuild the
+    whole [B,S,D] memory / [B,S] src on host and re-upload), with the
+    admitted slots' K/V cache rows zeroed and every other slot untouched.
+    Pure data movement — exact equality, no fp tolerance."""
+    v, cfg, params = small
+    b = 4
+    rng = np.random.default_rng(7)
+    src_np, _ = D.gen_mt_dataset(v, b + 2, seed=5)
+    resident_src = np.asarray(src_np[:b, : cfg.max_src], np.int32)
+    resident_mem = np.asarray(
+        M.encode(params, cfg, jnp.asarray(resident_src)), np.float32
+    )
+    kv_np = rng.standard_normal(M.kv_cache_shape(cfg, b)).astype(np.float32)
+
+    # two admissions into non-adjacent slots, one invocation per row —
+    # exactly how DecodeSession::scatter_rows drives the entry
+    new_src = np.asarray(src_np[b : b + 2, : cfg.max_src], np.int32)
+    new_mem = np.asarray(M.encode(params, cfg, jnp.asarray(new_src)), np.float32)
+    slots = [2, 0]
+    fn = jax.jit(aot.make_scatter_fn(cfg))
+    mem, src, kv = jnp.asarray(resident_mem), jnp.asarray(resident_src), jnp.asarray(kv_np)
+    for i, slot in enumerate(slots):
+        mem, src, kv = fn(
+            params,
+            mem,
+            src,
+            kv,
+            jnp.asarray([slot], jnp.int32),
+            jnp.asarray(new_src[i : i + 1]),
+            jnp.asarray(new_mem[i : i + 1]),
+        )
+
+    # the from-scratch re-pin reference: host-side row copies
+    want_src = resident_src.copy()
+    want_mem = resident_mem.copy()
+    want_kv = kv_np.copy()
+    for i, slot in enumerate(slots):
+        want_src[slot] = new_src[i]
+        want_mem[slot] = new_mem[i]
+        want_kv[:, slot] = 0.0
+    np.testing.assert_array_equal(np.asarray(src), want_src)
+    np.testing.assert_array_equal(np.asarray(mem), want_mem)
+    np.testing.assert_array_equal(np.asarray(kv), want_kv)
+    # non-admitted slots kept their (nonzero) cache content bit-for-bit
+    assert np.any(np.asarray(kv)[:, 1] != 0.0)
+
+
+def test_scatter_hlo_exports(tmp_path, small):
+    """The scatter entry (batch-axis dynamic_update_slice) must survive the
+    HLO-text lowering contract like every other entry."""
+    _, cfg, params = small
+    b = 2
+    src = jnp.zeros((b, cfg.max_src), jnp.int32)
+    mem = jnp.zeros((b, cfg.max_src, cfg.d_model), jnp.float32)
+    kv = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
+    slot = jnp.zeros((1,), jnp.int32)
+    row_src = jnp.zeros((1, cfg.max_src), jnp.int32)
+    row_mem = jnp.zeros((1, cfg.max_src, cfg.d_model), jnp.float32)
+    path = str(tmp_path / "scatter.hlo.txt")
+    aot.export_fn(
+        aot.make_scatter_fn(cfg), (params, mem, src, kv, slot, row_src, row_mem), path
+    )
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "dynamic-update-slice" in text
+
+
 def test_manifest_plan_names():
     p = aot.plan("min")
     assert "mt_base" in p and "sr_base" in p

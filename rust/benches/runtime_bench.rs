@@ -90,7 +90,7 @@ fn main() {
     });
 
     // "after" shape: one pinned session, steps upload only the decoder input
-    let session8 = model.begin_session(&src_real).unwrap();
+    let mut session8 = model.begin_session(&src_real).unwrap();
     b.case("step/session_b8 (full download)", "pos", || {
         let sc = session8.step(&tgt8).unwrap();
         std::hint::black_box(&sc);
@@ -229,6 +229,56 @@ fn main() {
             cached_positions,
             full_positions,
             full_positions as f64 / cached_positions as f64
+        );
+    }
+
+    // admission anatomy: scatter one newly-encoded row into the resident
+    // batch. With `scatter_b*` entries only the admitted row travels —
+    // O(rows·S·D) uploaded bytes per refill — while the mirror fallback
+    // (old manifests, or a tuple result layout that demoted the session)
+    // re-pins the whole O(B·S·D) batch state. A warmup admission runs
+    // first: the very first device scatter may additionally pin the K/V
+    // cache once, and is where any demotion happens.
+    let enc_src1 = TensorI32::from_vec(&[1, s], src_real.row(0).to_vec());
+    let enc_mem1 = TensorF32::from_vec(&[1, s, d], memory8.data[..s * d].to_vec());
+    session8.scatter_rows(&[7], &enc_src1, &enc_mem1).unwrap();
+    b.case("admit/scatter_row_b8", "row", || {
+        session8.scatter_rows(&[6], &enc_src1, &enc_mem1).unwrap();
+        1
+    });
+    let full_repin = (8 * s * d * 4 + 8 * s * 4) as u64;
+    let row_bytes = (s * d * 4 + s * 4 + 4) as u64;
+    let before = ctx.rt.stats_snapshot();
+    session8.scatter_rows(&[5], &enc_src1, &enc_mem1).unwrap();
+    let adm = ctx.rt.stats_snapshot().delta(&before);
+    if session8.device_scatter() {
+        assert_eq!(adm.executions, 1, "device admission is one scatter invocation per row");
+        assert_eq!(adm.uploads, 3, "device admission uploads row src, row memory, slot index");
+        assert_eq!(
+            adm.bytes_uploaded, row_bytes,
+            "device admission must upload only the admitted row"
+        );
+        assert_eq!(
+            adm.bytes_downloaded, 0,
+            "device admission keeps the resident buffers on device"
+        );
+        eprintln!(
+            "per-admission upload: {} B (mirror re-pin: {} B -> {:.1}x cut)",
+            row_bytes,
+            full_repin,
+            full_repin as f64 / row_bytes as f64
+        );
+    } else {
+        assert_eq!(adm.executions, 0, "mirror admission runs no entry point");
+        assert_eq!(adm.uploads, 2, "mirror admission re-pins memory + src");
+        assert_eq!(
+            adm.bytes_uploaded, full_repin,
+            "mirror admission re-uploads the whole [B,S,D] + [B,S] state"
+        );
+        eprintln!(
+            "per-admission upload: {} B (mirror fallback: no scatter entries, \
+             no cached tier, or tuple result layout)",
+            adm.bytes_uploaded
         );
     }
 

@@ -300,6 +300,72 @@ fn selftest(rest: &[String]) -> Result<()> {
         println!("(no cached decode entries in manifest; cached-tier checks skipped)");
     }
 
+    // admission accounting: with `scatter_b*` entries an admission uploads
+    // only the admitted row (O(rows·S·D) bytes, one scatter invocation per
+    // row, resident buffers never crossing back to host); the mirror
+    // fallback re-pins the whole O(B·S·D) batch state. One warmup
+    // admission runs first — the first device scatter may pin the K/V
+    // cache once, and is where a tuple result layout demotes the session.
+    if let Ok(big) = model.pick_bucket(2) {
+        let s_len = model.max_src();
+        let d_model = model.spec.config.d_model;
+        let mut src_b = blockdecode::util::tensor::TensorI32::zeros(&[big, s_len]);
+        for (b, s) in srcs.iter().take(big).enumerate() {
+            let n = s.len().min(s_len);
+            src_b.row_mut(b)[..n].copy_from_slice(&s[..n]);
+        }
+        let mut sess = model.begin_session(&src_b)?;
+        let memory = model.encode(&src_b)?;
+        let row_elems = s_len * d_model;
+        let enc_src = blockdecode::util::tensor::TensorI32::from_vec(
+            &[1, s_len],
+            src_b.row(0).to_vec(),
+        );
+        let enc_mem = blockdecode::util::tensor::TensorF32::from_vec(
+            &[1, s_len, d_model],
+            memory.data[..row_elems].to_vec(),
+        );
+        sess.scatter_rows(&[1], &enc_src, &enc_mem)?;
+        let before = ctx.rt.stats_snapshot();
+        sess.scatter_rows(&[0], &enc_src, &enc_mem)?;
+        let adm = ctx.rt.stats_snapshot().delta(&before);
+        let full_repin = (big * s_len * d_model * 4 + big * s_len * 4) as u64;
+        let row_bytes = (s_len * d_model * 4 + s_len * 4 + 4) as u64;
+        if sess.device_scatter() {
+            anyhow::ensure!(
+                adm.executions == 1 && adm.uploads == 3 && adm.bytes_uploaded == row_bytes,
+                "device admission uploaded {} B in {} transfers / {} executions \
+                 (want {row_bytes} B in 3 / 1)",
+                adm.bytes_uploaded,
+                adm.uploads,
+                adm.executions
+            );
+            anyhow::ensure!(
+                adm.bytes_downloaded == 0,
+                "device admission downloaded {} B (resident buffers must stay on device)",
+                adm.bytes_downloaded
+            );
+            println!(
+                "admission: {} B up per row (mirror re-pin: {} B -> {:.1}x cut) ✓",
+                row_bytes,
+                full_repin,
+                full_repin as f64 / row_bytes as f64
+            );
+        } else {
+            anyhow::ensure!(
+                adm.executions == 0 && adm.uploads == 2 && adm.bytes_uploaded == full_repin,
+                "mirror admission uploaded {} B in {} transfers (want {full_repin} B in 2)",
+                adm.bytes_uploaded,
+                adm.uploads
+            );
+            println!(
+                "admission: {} B up per refill (mirror fallback: no scatter entries, \
+                 no cached tier, or tuple result layout)",
+                adm.bytes_uploaded
+            );
+        }
+    }
+
     let stats = ctx.rt.stats_snapshot();
     println!(
         "runtime: {} compiles ({:.1}s), {} executions ({:.1}ms mean), \

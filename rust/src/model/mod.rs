@@ -23,6 +23,25 @@
 //!    tensors — the fallback for the oldest manifests and the reference
 //!    path both newer tiers are property-tested against.
 //!
+//! **Admission contract.** A session's resident state (encoder memory,
+//! source ids, K/V caches) is batch-shaped, and the continuous-batching
+//! engine reuses slots across requests: [`DecodeSession::scatter_rows`]
+//! lands newly-encoded rows in free slots. On manifests with `scatter_b*`
+//! entries, admission is **device-side**: one entry invocation per
+//! admitted row uploads only that row's `[1,S]` source ids, `[1,S,D]`
+//! encoder memory, and `[1]` slot index, and the entry scatters them into
+//! the resident buffers (zeroing the slot's K/V cache rows in the same
+//! pass) with per-row `dynamic_update_slice` — the updated buffers stay
+//! device-resident through [`Runtime::execute_split`], so admission costs
+//! O(rows·S·D) uploaded bytes and the session keeps **no host mirror** of
+//! the batch state, only the thin geometry/validity metadata. Manifests
+//! without scatter entries (and runtimes whose tuple result layout forces
+//! the scatter outputs through host — the session demotes itself after
+//! the first such admission) fall back to the pre-scatter contract:
+//! host mirrors are patched and both device buffers re-pinned once per
+//! refill, O(B·S·D) per admission. Both paths are byte-identical in
+//! decode output; only the transfer accounting differs.
+//!
 //! **Cached step contract.** Cache entries below a row's frontier are only
 //! valid while that row's accepted prefix is append-only: a cache entry at
 //! position p was computed from the decoder input up to p at the step that
@@ -43,9 +62,11 @@
 //! and the append-only decoders never trip it at all —
 //! `cached_decode_falls_back_without_entries` asserts a full blockwise
 //! decode stays on the cached tier every step. `scatter_rows` invalidates
-//! admitted rows the same way — the new request restarts at frontier 0,
-//! rewriting the stale cache window-by-window before anything can attend
-//! to it, and the metadata reset re-arms the validity guard.
+//! admitted rows the same way — the new request restarts at frontier 0
+//! with its cache rows zeroed device-side by the scatter entry (rewritten
+//! lazily window-by-window on the mirror path, where the window mask
+//! keeps stale entries inert), and the metadata reset re-arms the
+//! validity guard.
 //!
 //! Manifests that predate an entry tier simply fall back to the next one;
 //! the scores type is identical either way (`base` is all zeros and the
@@ -155,6 +176,10 @@ pub struct ScoringModel {
     /// KV-cached decode entries; empty for manifests that predate the
     /// `decode_cached_b*` export (those fall back to the windowed tier)
     decode_cached: BTreeMap<usize, Rc<Executable>>,
+    /// device-side admission scatter entries; empty for manifests that
+    /// predate the `scatter_b*` export (those re-pin the host mirror on
+    /// every `scatter_rows` admission)
+    scatter: BTreeMap<usize, Rc<Executable>>,
 }
 
 impl ScoringModel {
@@ -173,16 +198,18 @@ impl ScoringModel {
         let decode = load_bucketed("decode_b")?;
         let decode_window = load_bucketed("decode_window_b")?;
         let decode_cached = load_bucketed("decode_cached_b")?;
+        let scatter = load_bucketed("scatter_b")?;
         if encode.is_empty() || decode.is_empty() {
             bail!("variant {variant} lacks encode/decode entries");
         }
         log::info!(
-            "loaded {variant}: k={} {} params, buckets {:?}{}{}",
+            "loaded {variant}: k={} {} params, buckets {:?}{}{}{}",
             spec.k,
             weights.total_params,
             encode.keys().collect::<Vec<_>>(),
             if decode_window.is_empty() { " (no windowed decode entries)" } else { "" },
-            if decode_cached.is_empty() { " (no cached decode entries)" } else { "" }
+            if decode_cached.is_empty() { " (no cached decode entries)" } else { "" },
+            if scatter.is_empty() { " (no device-scatter entries)" } else { "" }
         );
         Ok(ScoringModel {
             spec,
@@ -193,6 +220,7 @@ impl ScoringModel {
             decode,
             decode_window,
             decode_cached,
+            scatter,
         })
     }
 
@@ -222,6 +250,13 @@ impl ScoringModel {
     /// geometry the manifest must carry to size them)?
     pub fn has_cached_decode(&self) -> bool {
         !self.decode_cached.is_empty() && self.kv_dims(1).is_some()
+    }
+
+    /// Does this variant ship device-side admission scatter entries? The
+    /// scatter entry takes the stacked K/V cache as an argument (it zeroes
+    /// the admitted rows), so it is only usable alongside the cached tier.
+    pub fn has_device_scatter(&self) -> bool {
+        !self.scatter.is_empty() && self.has_cached_decode()
     }
 
     /// Shape of the stacked decoder self-attention K/V cache the
@@ -315,17 +350,26 @@ impl ScoringModel {
         });
         let src_dev = self.rt.upload_i32(&src)?;
         let mem_dev = self.rt.upload_f32(&memory)?;
+        let s_len = src.dims[1];
+        // admission path: the device-side scatter entry needs the cached
+        // tier (its K/V argument); otherwise keep host mirrors so
+        // `scatter_rows` can fall back to the full re-pin
+        let resident = match self.scatter.get(&b) {
+            Some(exe) if cached.is_some() => ResidentState::Scatter { exe: exe.clone() },
+            _ => ResidentState::Mirror { src_host: src, memory_host: memory },
+        };
         Ok(DecodeSession {
             rt: self.rt.clone(),
             weights: self.weights.clone(),
             exe,
             window_exe,
             cached,
+            resident,
             window: (self.spec.k + 1).min(self.max_tgt()),
             bucket: b,
             t_len: self.max_tgt(),
-            src_host: src,
-            memory_host: memory,
+            s_len,
+            d_model: self.spec.config.d_model,
             src_dev,
             mem_dev,
         })
@@ -337,11 +381,15 @@ impl ScoringModel {
 }
 
 /// Per-decode device-resident state: the encoder memory `[B,S,D]` and
-/// source ids `[B,S]` pinned on device for the lifetime of the decode,
-/// plus host mirrors so the continuous-batching engine can scatter
-/// newly-admitted rows in. The session owns `Rc` handles to the runtime,
-/// weights, and decode entry points, so it is self-contained — an engine
-/// can hold it alongside the `ScoringModel` it came from.
+/// source ids `[B,S]` pinned on device for the lifetime of the decode.
+/// With `scatter_b*` entries the batch state lives **only** on device —
+/// the continuous-batching engine admits new rows through the device-side
+/// scatter and the host keeps just the geometry + cache-validity
+/// metadata; without them the session carries host mirrors and re-pins
+/// both buffers per admission (see [`ResidentState`]). The session owns
+/// `Rc` handles to the runtime, weights, and decode entry points, so it
+/// is self-contained — an engine can hold it alongside the
+/// `ScoringModel` it came from.
 pub struct DecodeSession {
     rt: Rc<Runtime>,
     weights: Rc<DeviceWeights>,
@@ -351,14 +399,37 @@ pub struct DecodeSession {
     window_exe: Option<Rc<Executable>>,
     /// KV-cached decode entry + cache state, when the manifest exports one
     cached: Option<CachedDecode>,
+    /// admission path (device-side scatter vs host-mirror re-pin)
+    resident: ResidentState,
     /// positions gathered per row by the windowed/cached entries (k + 1)
     window: usize,
     bucket: usize,
     t_len: usize,
-    src_host: TensorI32,
-    memory_host: TensorF32,
+    /// source width S — with `d_model` the only batch geometry the
+    /// device-scatter admission path needs host-side
+    s_len: usize,
+    d_model: usize,
     src_dev: DeviceTensor,
     mem_dev: DeviceTensor,
+}
+
+/// How [`DecodeSession::scatter_rows`] lands newly-encoded rows in the
+/// resident batch state.
+enum ResidentState {
+    /// `scatter_b*` entry: one invocation per admitted row uploads only
+    /// that row (`[1,S]` src + `[1,S,D]` memory + `[1]` slot index); the
+    /// entry scatters it into the resident memory/src/K-V buffers —
+    /// zeroing the slot's cache rows in the same pass — and the updated
+    /// buffers chain device-to-device. No host mirror exists in this
+    /// state. If the runtime's tuple result layout ever forces the
+    /// outputs through host, the session re-pins them once and demotes
+    /// itself to `Mirror` (the downloaded tensors are the mirrors).
+    Scatter { exe: Rc<Executable> },
+    /// pre-scatter fallback (manifests without `scatter_b*`, sessions
+    /// without the cached tier, or post-demotion): host mirrors are
+    /// patched row-by-row and both device buffers re-pinned once per
+    /// refill — O(B·S·D) uploaded bytes per admission.
+    Mirror { src_host: TensorI32, memory_host: TensorF32 },
 }
 
 /// The KV-cached decode tier of a session: the compiled entry plus the
@@ -402,14 +473,13 @@ impl DecodeSession {
         self.bucket
     }
 
-    /// Host mirror of the pinned source batch.
-    pub fn src(&self) -> &TensorI32 {
-        &self.src_host
-    }
-
-    /// Host mirror of the pinned encoder memory.
-    pub fn memory(&self) -> &TensorF32 {
-        &self.memory_host
+    /// Does `scatter_rows` admit through the device-side scatter entry
+    /// (uploading only the admitted rows), rather than re-pinning a host
+    /// mirror? Starts true on manifests with `scatter_b*` entries and a
+    /// cached tier; flips to false permanently if the runtime's result
+    /// layout ever forces the scatter outputs through host.
+    pub fn device_scatter(&self) -> bool {
+        matches!(self.resident, ResidentState::Scatter { .. })
     }
 
     /// Does `step_at` run the frontier-windowed entry point (when the
@@ -642,11 +712,19 @@ impl DecodeSession {
     }
 
     /// Scatter newly-encoded rows into the resident batch: row `i` of
-    /// `enc_src`/`enc_memory` lands in slot `slots[i]`. The host mirrors
-    /// are updated and both device buffers re-pinned **once per refill**,
-    /// so admission costs one upload amortized over every subsequent step
-    /// (steady-state steps upload nothing but the decoder input and the
-    /// frontier vector).
+    /// `enc_src`/`enc_memory` lands in slot `slots[i]`. The encode batch
+    /// must hold **exactly** one row per slot (callers with a
+    /// bucket-shaped encode batch slice it down first — see
+    /// [`validate_scatter_args`]).
+    ///
+    /// On the device-scatter path admission uploads only the admitted
+    /// rows — O(rows·S·D) bytes, one `scatter_b*` invocation per row —
+    /// and the updated memory/src/K-V buffers stay device-resident. On
+    /// the mirror path the host mirrors are patched and both device
+    /// buffers re-pinned **once per refill** (O(B·S·D) bytes). Either
+    /// way, admission costs are amortized over every subsequent step:
+    /// steady-state steps upload nothing but the decoder input and the
+    /// frontier vector.
     pub fn scatter_rows(
         &mut self,
         slots: &[usize],
@@ -656,46 +734,28 @@ impl DecodeSession {
         if slots.is_empty() {
             return Ok(());
         }
-        let s_len = self.src_host.dims[1];
-        anyhow::ensure!(
-            enc_src.dims.len() == 2 && enc_src.dims[1] == s_len,
-            "enc_src {:?} does not match session src width {s_len}",
-            enc_src.dims
-        );
-        anyhow::ensure!(
-            enc_src.dims[0] >= slots.len(),
-            "{} encoded rows for {} slots",
-            enc_src.dims[0],
-            slots.len()
-        );
-        anyhow::ensure!(
-            enc_memory.dims[0] >= slots.len(),
-            "{} encoded memory rows for {} slots",
-            enc_memory.dims[0],
-            slots.len()
-        );
-        let row_elems = self.memory_host.data.len() / self.bucket;
-        anyhow::ensure!(
-            enc_memory.data.len() / enc_memory.dims[0] == row_elems,
-            "enc_memory {:?} row size does not match session memory",
-            enc_memory.dims
-        );
-        for (i, &slot) in slots.iter().enumerate() {
-            anyhow::ensure!(slot < self.bucket, "slot {slot} out of bucket {}", self.bucket);
-            self.src_host.row_mut(slot).copy_from_slice(enc_src.row(i));
-            let dst = slot * row_elems;
-            let src_off = i * row_elems;
-            self.memory_host.data[dst..dst + row_elems]
-                .copy_from_slice(&enc_memory.data[src_off..src_off + row_elems]);
+        validate_scatter_args(self.bucket, self.s_len, self.d_model, slots, enc_src, enc_memory)?;
+        let mut applied = 0;
+        while applied < slots.len() {
+            let ResidentState::Scatter { exe } = &self.resident else { break };
+            let exe = exe.clone();
+            let stayed =
+                self.scatter_row_device(&exe, slots[applied], applied, enc_src, enc_memory)?;
+            applied += 1;
+            if !stayed {
+                break; // demoted mid-refill; the mirror path finishes below
+            }
         }
-        self.src_dev = self.rt.upload_i32(&self.src_host)?;
-        self.mem_dev = self.rt.upload_f32(&self.memory_host)?;
+        if applied < slots.len() {
+            self.repin_rows(&slots[applied..], applied, enc_src, enc_memory)?;
+        }
         // per-row K/V cache invalidation: the admitted slot restarts at
-        // frontier 0, so its stale cache content is overwritten
-        // window-by-window before anything can attend to it; resetting the
-        // validity metadata (coverage + seen-prefix mirror, PAD == 0) is
-        // what re-arms the cached tier's admission guard for the new
-        // request
+        // frontier 0, so anything stale is unreachable — the device
+        // scatter zeroed its cache rows outright, and on the mirror path
+        // the window-attention mask keeps unreplaced entries inert while
+        // they are overwritten window-by-window. Resetting the validity
+        // metadata (coverage + seen-prefix mirror, PAD == 0) is what
+        // re-arms the cached tier's admission guard for the new request.
         if let Some(cd) = &self.cached {
             let mut state = cd.state.borrow_mut();
             for &slot in slots {
@@ -705,6 +765,165 @@ impl DecodeSession {
         }
         Ok(())
     }
+
+    /// One device-side admission: upload only the admitted row (`[1,S]`
+    /// src ids + `[1,S,D]` memory + `[1]` slot index), run the
+    /// `scatter_b*` entry, and chain the returned memory/src/K-V buffers
+    /// as the new resident state. Returns whether the outputs stayed
+    /// device-resident: a tuple result layout forces them through host,
+    /// in which case the downloaded tensors *are* the up-to-date mirrors
+    /// — the session re-pins them once and demotes itself to the mirror
+    /// path for the rest of its life (byte-identical either way; the
+    /// O(rows·S·D) upload contract only holds while resident).
+    fn scatter_row_device(
+        &mut self,
+        exe: &Rc<Executable>,
+        slot: usize,
+        i: usize,
+        enc_src: &TensorI32,
+        enc_memory: &TensorF32,
+    ) -> Result<bool> {
+        let row_elems = self.s_len * self.d_model;
+        let row_src = TensorI32::from_vec(&[1, self.s_len], enc_src.row(i).to_vec());
+        let row_mem = TensorF32::from_vec(
+            &[1, self.s_len, self.d_model],
+            enc_memory.data[i * row_elems..(i + 1) * row_elems].to_vec(),
+        );
+        let slot_t = TensorI32::from_vec(&[1], vec![slot as i32]);
+        let row_src_buf = self.rt.upload_i32(&row_src)?;
+        let row_mem_buf = self.rt.upload_f32(&row_mem)?;
+        let slot_buf = self.rt.upload_i32(&slot_t)?;
+        let cd = self
+            .cached
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("device scatter requires the cached tier"))?;
+        let trailing = {
+            let state = cd.state.borrow();
+            let kv_uploaded;
+            let kv_arg = match &state.kv {
+                KvStore::Device(buf) => buf,
+                // admission before any cached step: pin the cache once —
+                // it then chains device-to-device (on per-output layouts)
+                // and the first cached step inherits it for free
+                KvStore::Host(t) => {
+                    kv_uploaded = self.rt.upload_f32(t)?;
+                    kv_uploaded.buffer()
+                }
+            };
+            let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+            args.push(self.mem_dev.buffer());
+            args.push(self.src_dev.buffer());
+            args.push(kv_arg);
+            args.push(slot_buf.buffer());
+            args.push(row_src_buf.buffer());
+            args.push(row_mem_buf.buffer());
+            let (_, trailing) = self.rt.execute_split(exe, &args, 0)?;
+            trailing
+        };
+        match trailing {
+            TrailingOutputs::Device(mut bufs) => {
+                anyhow::ensure!(
+                    bufs.len() == 3,
+                    "scatter returned {} outputs, expected 3",
+                    bufs.len()
+                );
+                let kv_buf = bufs.pop().unwrap();
+                let src_buf = bufs.pop().unwrap();
+                let mem_buf = bufs.pop().unwrap();
+                self.mem_dev = DeviceTensor::resident(mem_buf);
+                self.src_dev = DeviceTensor::resident(src_buf);
+                cd.state.borrow_mut().kv = KvStore::Device(kv_buf);
+                Ok(true)
+            }
+            TrailingOutputs::Host(lits) => {
+                anyhow::ensure!(
+                    lits.len() == 3,
+                    "scatter returned {} outputs, expected 3",
+                    lits.len()
+                );
+                let memory_host = literal_to_f32(&lits[0])?;
+                let src_host = literal_to_i32(&lits[1])?;
+                cd.state.borrow_mut().kv = KvStore::Host(literal_to_f32(&lits[2])?);
+                self.mem_dev = self.rt.upload_f32(&memory_host)?;
+                self.src_dev = self.rt.upload_i32(&src_host)?;
+                log::info!(
+                    "tuple result layout returned scatter outputs on host; \
+                     demoting session to mirror-based admission"
+                );
+                self.resident = ResidentState::Mirror { src_host, memory_host };
+                Ok(false)
+            }
+        }
+    }
+
+    /// Mirror-path admission for encode-batch rows `offset..`: copy them
+    /// into the host mirrors and re-pin both device buffers once — the
+    /// pre-scatter contract, kept for old manifests and demoted sessions.
+    fn repin_rows(
+        &mut self,
+        slots: &[usize],
+        offset: usize,
+        enc_src: &TensorI32,
+        enc_memory: &TensorF32,
+    ) -> Result<()> {
+        let row_elems = self.s_len * self.d_model;
+        let ResidentState::Mirror { src_host, memory_host } = &mut self.resident else {
+            anyhow::bail!("mirror admission without host mirrors");
+        };
+        for (i, &slot) in slots.iter().enumerate() {
+            src_host.row_mut(slot).copy_from_slice(enc_src.row(offset + i));
+            let dst = slot * row_elems;
+            let src_off = (offset + i) * row_elems;
+            memory_host.data[dst..dst + row_elems]
+                .copy_from_slice(&enc_memory.data[src_off..src_off + row_elems]);
+        }
+        self.src_dev = self.rt.upload_i32(src_host)?;
+        self.mem_dev = self.rt.upload_f32(memory_host)?;
+        Ok(())
+    }
+}
+
+/// Validate one [`DecodeSession::scatter_rows`] call against the session
+/// geometry: every admitted slot must be inside the bucket, and
+/// `enc_src`/`enc_memory` must hold **exactly** one `[S]` / `[S,D]` row
+/// per slot. The row count is strict — the old contract silently ignored
+/// extra rows, which let a caller admit the wrong row without any error;
+/// callers with a bucket-shaped encode batch (the engine encodes into the
+/// full bucket) slice it down to the admitted rows first.
+fn validate_scatter_args(
+    bucket: usize,
+    s_len: usize,
+    d_model: usize,
+    slots: &[usize],
+    enc_src: &TensorI32,
+    enc_memory: &TensorF32,
+) -> Result<()> {
+    anyhow::ensure!(
+        enc_src.dims.len() == 2 && enc_src.dims[1] == s_len,
+        "enc_src {:?} does not match session src width {s_len}",
+        enc_src.dims
+    );
+    anyhow::ensure!(
+        enc_src.dims[0] == slots.len(),
+        "{} encoded rows for {} slots (row counts must match exactly)",
+        enc_src.dims[0],
+        slots.len()
+    );
+    anyhow::ensure!(
+        enc_memory.dims.len() == 3 && enc_memory.dims[1] == s_len && enc_memory.dims[2] == d_model,
+        "enc_memory {:?} does not match session memory rows [{s_len}, {d_model}]",
+        enc_memory.dims
+    );
+    anyhow::ensure!(
+        enc_memory.dims[0] == slots.len(),
+        "{} encoded memory rows for {} slots (row counts must match exactly)",
+        enc_memory.dims[0],
+        slots.len()
+    );
+    for &slot in slots {
+        anyhow::ensure!(slot < bucket, "slot {slot} out of bucket {bucket}");
+    }
+    Ok(())
 }
 
 impl BlockStepper for DecodeSession {
@@ -785,5 +1004,62 @@ impl NatSession {
         args.push(canvas_buf.buffer());
         let out = self.rt.execute(&self.exe, &args)?;
         Ok((literal_to_i32(&out[0])?, literal_to_i32(&out[1])?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::validate_scatter_args;
+    use crate::util::tensor::{TensorF32, TensorI32};
+
+    const BUCKET: usize = 8;
+    const S: usize = 5;
+    const D: usize = 4;
+
+    fn rows(n: usize) -> (TensorI32, TensorF32) {
+        (TensorI32::zeros(&[n, S]), TensorF32::zeros(&[n, S, D]))
+    }
+
+    #[test]
+    fn scatter_args_accept_exact_row_count() {
+        let (src, mem) = rows(3);
+        validate_scatter_args(BUCKET, S, D, &[0, 4, 7], &src, &mem).unwrap();
+        let (src1, mem1) = rows(1);
+        validate_scatter_args(BUCKET, S, D, &[7], &src1, &mem1).unwrap();
+    }
+
+    #[test]
+    fn scatter_args_reject_row_count_mismatch() {
+        // extra rows used to be silently ignored — a caller could admit
+        // the wrong row without any error; both directions must fail now
+        let (src, mem) = rows(3);
+        let err = validate_scatter_args(BUCKET, S, D, &[0, 1], &src, &mem).unwrap_err();
+        assert!(err.to_string().contains("row counts must match"), "{err}");
+        assert!(validate_scatter_args(BUCKET, S, D, &[0, 1, 2, 3], &src, &mem).is_err());
+        // memory row count mismatching the (correct) src row count
+        let (src2, _) = rows(2);
+        let (_, mem3) = rows(3);
+        assert!(validate_scatter_args(BUCKET, S, D, &[0, 1], &src2, &mem3).is_err());
+    }
+
+    #[test]
+    fn scatter_args_reject_bad_slot() {
+        let (src, mem) = rows(1);
+        let err = validate_scatter_args(BUCKET, S, D, &[BUCKET], &src, &mem).unwrap_err();
+        assert!(err.to_string().contains("out of bucket"), "{err}");
+    }
+
+    #[test]
+    fn scatter_args_reject_wrong_widths() {
+        // src width != session S
+        let bad_src = TensorI32::zeros(&[1, S + 1]);
+        let (_, mem) = rows(1);
+        assert!(validate_scatter_args(BUCKET, S, D, &[0], &bad_src, &mem).is_err());
+        // memory row shape != [S, D]
+        let (src, _) = rows(1);
+        let bad_mem = TensorF32::zeros(&[1, S, D + 2]);
+        assert!(validate_scatter_args(BUCKET, S, D, &[0], &src, &bad_mem).is_err());
+        let bad_rank = TensorF32::zeros(&[1, S * D]);
+        assert!(validate_scatter_args(BUCKET, S, D, &[0], &src, &bad_rank).is_err());
     }
 }

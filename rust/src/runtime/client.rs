@@ -106,6 +106,15 @@ impl DeviceTensor {
     pub fn buffer(&self) -> &xla::PjRtBuffer {
         &self.buf
     }
+
+    /// Wrap an executable's output buffer as a resident handle. No
+    /// host->device transfer happened (the buffer was produced on device),
+    /// so `bytes` is 0 — the device-side scatter admission path uses this
+    /// to chain updated memory/src buffers without touching the transfer
+    /// counters.
+    pub fn resident(buf: xla::PjRtBuffer) -> DeviceTensor {
+        DeviceTensor { buf, bytes: 0 }
+    }
 }
 
 impl Runtime {

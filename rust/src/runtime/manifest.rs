@@ -49,14 +49,16 @@ impl VariantSpec {
     /// Entries whose logical name is `<prefix><bucket>` (e.g. `decode_b8`
     /// for prefix `decode_b`), keyed by bucket size. The logical-name
     /// grammar is the aot.py ↔ runtime contract: `encode_b*` and
-    /// `decode_b*` are mandatory for scoring variants, `decode_window_b*`
-    /// (frontier-windowed download) and `decode_cached_b*` (KV-cached
-    /// frontier-window compute, paired with `config.n_dec`) are optional
-    /// entries newer manifests export — loaders must fall back to the
-    /// older paths when they are absent — and `nat_b*` is the NAT entry.
-    /// Names whose suffix is not a bucket number never match, so prefix
-    /// `decode_b` does not swallow `decode_window_b8` or
-    /// `decode_cached_b8`.
+    /// `decode_b*` are mandatory for scoring variants; `decode_window_b*`
+    /// (frontier-windowed download), `decode_cached_b*` (KV-cached
+    /// frontier-window compute, paired with `config.n_dec`), and
+    /// `scatter_b*` (device-side admission scatter of one encoded row into
+    /// the resident batch + K/V state) are optional entries newer
+    /// manifests export — loaders must fall back to the older paths when
+    /// they are absent (full-length steps; full host-mirror re-pin per
+    /// admission) — and `nat_b*` is the NAT entry. Names whose suffix is
+    /// not a bucket number never match, so prefix `decode_b` does not
+    /// swallow `decode_window_b8` or `decode_cached_b8`.
     pub fn bucketed(&self, prefix: &str) -> BTreeMap<usize, &str> {
         let mut out = BTreeMap::new();
         for (logical, key) in &self.entries {
@@ -175,7 +177,8 @@ mod tests {
         "mt_k2_b1_encode": {"file": "hlo/mt_k2_b1_encode.hlo.txt", "batch": 1},
         "mt_k2_b1_decode": {"file": "hlo/mt_k2_b1_decode.hlo.txt", "batch": 1},
         "mt_k2_b1_decode_window": {"file": "hlo/mt_k2_b1_decode_window.hlo.txt", "batch": 1},
-        "mt_k2_b1_decode_cached": {"file": "hlo/mt_k2_b1_decode_cached.hlo.txt", "batch": 1}
+        "mt_k2_b1_decode_cached": {"file": "hlo/mt_k2_b1_decode_cached.hlo.txt", "batch": 1},
+        "mt_k2_b1_scatter": {"file": "hlo/mt_k2_b1_scatter.hlo.txt", "batch": 1}
       },
       "variants": {
         "mt_k2_regular": {
@@ -184,7 +187,8 @@ mod tests {
           "params": [],
           "entries": {"encode_b1": "mt_k2_b1_encode", "decode_b1": "mt_k2_b1_decode",
                       "decode_window_b1": "mt_k2_b1_decode_window",
-                      "decode_cached_b1": "mt_k2_b1_decode_cached"},
+                      "decode_cached_b1": "mt_k2_b1_decode_cached",
+                      "scatter_b1": "mt_k2_b1_scatter"},
           "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4,
                      "n_dec": 2}
         }
@@ -231,14 +235,18 @@ mod tests {
         let cached = v.bucketed("decode_cached_b");
         assert_eq!(cached.len(), 1);
         assert_eq!(cached[&1], "mt_k2_b1_decode_cached");
+        let scatter = v.bucketed("scatter_b");
+        assert_eq!(scatter.len(), 1);
+        assert_eq!(scatter[&1], "mt_k2_b1_scatter");
         assert!(v.bucketed("nat_b").is_empty());
     }
 
     #[test]
     fn old_manifest_without_window_entries_parses() {
-        // manifests from before the frontier-windowed and KV-cached decode
-        // exports must keep loading (the runtime then decodes via the
-        // full-length path, and the missing n_dec pins the cache size to 0)
+        // manifests from before the frontier-windowed, KV-cached, and
+        // device-scatter exports must keep loading (the runtime then
+        // decodes via the full-length path, re-pins the host mirror per
+        // admission, and the missing n_dec pins the cache size to 0)
         let dir = std::env::temp_dir().join("bd_manifest_test4");
         std::fs::create_dir_all(&dir).unwrap();
         let old = SAMPLE
@@ -250,11 +258,17 @@ mod tests {
                 ",\n        \"mt_k2_b1_decode_cached\": {\"file\": \"hlo/mt_k2_b1_decode_cached.hlo.txt\", \"batch\": 1}",
                 "",
             )
+            .replace(
+                ",\n        \"mt_k2_b1_scatter\": {\"file\": \"hlo/mt_k2_b1_scatter.hlo.txt\", \"batch\": 1}",
+                "",
+            )
             .replace(",\n                      \"decode_window_b1\": \"mt_k2_b1_decode_window\"", "")
             .replace(",\n                      \"decode_cached_b1\": \"mt_k2_b1_decode_cached\"", "")
+            .replace(",\n                      \"scatter_b1\": \"mt_k2_b1_scatter\"", "")
             .replace(",\n                     \"n_dec\": 2", "");
         assert!(!old.contains("decode_window"), "replacement failed: {old}");
         assert!(!old.contains("decode_cached"), "replacement failed: {old}");
+        assert!(!old.contains("scatter"), "replacement failed: {old}");
         assert!(!old.contains("n_dec"), "replacement failed: {old}");
         std::fs::File::create(dir.join("manifest.json"))
             .unwrap()
@@ -264,6 +278,7 @@ mod tests {
         let v = m.variant("mt_k2_regular").unwrap();
         assert!(v.bucketed("decode_window_b").is_empty());
         assert!(v.bucketed("decode_cached_b").is_empty());
+        assert!(v.bucketed("scatter_b").is_empty());
         assert_eq!(v.bucketed("decode_b").len(), 1);
         assert_eq!(v.config.n_dec, 0, "missing n_dec must default to 0");
     }

@@ -7,8 +7,11 @@
 //!
 //! 1. **refill** — admit queued requests into free slots of the batch
 //!    bucket; new sources are batch-encoded and their memory rows are
-//!    scattered into the *device-resident* decode session (one re-pin per
-//!    refill — see [`DecodeSession::scatter_rows`](crate::model::DecodeSession));
+//!    scattered into the *device-resident* decode session — on manifests
+//!    with `scatter_b*` entries the admission runs device-side and
+//!    uploads only the admitted rows (O(rows·S·D) bytes), otherwise one
+//!    host-mirror re-pin per refill — see
+//!    [`DecodeSession::scatter_rows`](crate::model::DecodeSession);
 //! 2. **step** — one combined scoring/proposal invocation advances *every*
 //!    active slot (each by its own k̂ ≥ 1 tokens); a steady-state step
 //!    uploads only the `[B,T]` decoder input plus the `[B]` frontier
@@ -132,9 +135,18 @@ impl Engine {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// The engine's device-resident decode session — read-only
+    /// observability (tests and diagnostics inspect the admission mode
+    /// via [`DecodeSession::device_scatter`]).
+    pub fn session(&self) -> &DecodeSession {
+        &self.session
+    }
+
     /// Admit new requests into free slots; batch-encode their sources and
-    /// scatter the rows into the device-resident session (one re-pin per
-    /// refill, amortized over every subsequent step).
+    /// scatter the rows into the device-resident session — device-side
+    /// (only the admitted rows travel) on manifests with `scatter_b*`
+    /// entries, one host-mirror re-pin per refill otherwise. Either cost
+    /// is amortized over every subsequent step.
     fn refill(&mut self) -> Result<()> {
         let free: Vec<usize> =
             (0..self.bucket).filter(|&i| self.slots[i].is_none()).collect();
@@ -164,9 +176,20 @@ impl Engine {
         }
         let enc_memory = self.model.encode(&enc_src)?;
 
-        // scatter encoded row i into resident slot free[i]
-        let slots = &free[..incoming.len()];
-        self.session.scatter_rows(slots, &enc_src, &enc_memory)?;
+        // scatter encoded row i into resident slot free[i]. The session's
+        // admission contract is strict — exactly one encode row per slot —
+        // so the bucket-shaped encode batch is sliced down to the admitted
+        // prefix (its rows are contiguous and first): on the device-scatter
+        // path only these rows travel to the device.
+        let n = incoming.len();
+        let slots = &free[..n];
+        let row_elems = enc_memory.data.len() / self.bucket;
+        let rows_src = TensorI32::from_vec(&[n, s_len], enc_src.data[..n * s_len].to_vec());
+        let rows_mem = TensorF32::from_vec(
+            &[n, s_len, enc_memory.dims[2]],
+            enc_memory.data[..n * row_elems].to_vec(),
+        );
+        self.session.scatter_rows(slots, &rows_src, &rows_mem)?;
 
         let max_len = self
             .cfg

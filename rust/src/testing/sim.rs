@@ -289,6 +289,29 @@ impl<'a> SimSession<'a> {
     pub fn cache_trusted(&self) -> usize {
         self.rows.iter().map(|r| r.trusted).sum()
     }
+
+    /// Sim analogue of `DecodeSession::scatter_rows` admission: replace
+    /// slot `slots[i]`'s source with `new_srcs[i]` and reset that row's
+    /// cache state — the sim equivalent of the device path scattering the
+    /// new row into the resident memory/src buffers and zeroing its K/V
+    /// cache rows in the same pass. Row counts are strict, matching the
+    /// device contract.
+    pub fn scatter_rows(&mut self, slots: &[usize], new_srcs: &[Vec<i32>]) {
+        assert_eq!(
+            slots.len(),
+            new_srcs.len(),
+            "one source per admitted slot (row counts must match exactly)"
+        );
+        for (i, &slot) in slots.iter().enumerate() {
+            if self.srcs.len() <= slot {
+                self.srcs.resize(slot + 1, Vec::new());
+            }
+            self.srcs[slot] = new_srcs[i].clone();
+            if slot < self.rows.len() {
+                self.rows[slot] = RowCache::default();
+            }
+        }
+    }
 }
 
 impl BlockStepper for SimSession<'_> {

@@ -10,10 +10,17 @@
 
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
 
+use blockdecode::batching::{Request, RequestQueue};
 use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
+use blockdecode::metrics::Metrics;
 use blockdecode::model::ScoringModel;
 use blockdecode::runtime::{Manifest, Runtime};
+use blockdecode::scheduler::{Engine, EngineConfig};
 use blockdecode::workload::Dataset;
 
 fn artifacts() -> Option<PathBuf> {
@@ -154,6 +161,164 @@ fn cached_decode_falls_back_without_entries() {
             "row {i}: accept traces diverged"
         );
     }
+}
+
+/// Drive the continuous-batching engine through two admission waves by
+/// stepping it manually (no TCP): wave 1 is admitted into an empty batch,
+/// wave 2 mid-flight into the remaining free slots while wave-1 rows are
+/// still decoding. Returns each request's tokens (request order) plus
+/// whether the session was still on device-side scatter admission at the
+/// end.
+fn run_two_waves(
+    model: ScoringModel,
+    srcs: &[Vec<i32>],
+    first_wave: usize,
+) -> (Vec<Vec<i32>>, bool) {
+    let queue = Arc::new(RequestQueue::new());
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut engine =
+        Engine::new(model, EngineConfig::default(), queue.clone(), metrics, stop).unwrap();
+
+    let push = |i: usize| {
+        let (tx, rx) = channel();
+        assert!(queue.push(Request {
+            id: i as u64,
+            src: srcs[i].clone(),
+            criterion: None,
+            arrived: Instant::now(),
+            respond: tx,
+        }));
+        rx
+    };
+    let mut rxs: Vec<_> = (0..first_wave).map(&push).collect();
+    // a couple of steps so wave 1 is admitted and mid-decode...
+    for _ in 0..2 {
+        engine.step().unwrap();
+    }
+    // ...then wave 2 lands in different slots of the live batch
+    rxs.extend((first_wave..srcs.len()).map(&push));
+
+    let mut tokens: Vec<Option<Vec<i32>>> = vec![None; srcs.len()];
+    let mut guard = 0;
+    while tokens.iter().any(|t| t.is_none()) {
+        engine.step().unwrap();
+        guard += 1;
+        assert!(guard < 2_000, "engine did not drain both waves");
+        for (i, rx) in rxs.iter().enumerate() {
+            if tokens[i].is_none() {
+                if let Ok(resp) = rx.try_recv() {
+                    assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+                    tokens[i] = Some(resp.tokens);
+                }
+            }
+        }
+    }
+    let device_scatter = engine.session().device_scatter();
+    (tokens.into_iter().map(Option::unwrap).collect(), device_scatter)
+}
+
+#[test]
+fn engine_admission_matches_fresh_session() {
+    // The admission tentpole on the real device path. Two waves of
+    // requests flow through the engine — wave 2 admitted into slots of a
+    // live batch while wave-1 rows are mid-decode — and every request's
+    // output must be byte-identical to a fresh-session offline decode of
+    // the same source. On manifests with cached entries the scored-
+    // position accounting must additionally show every decode step served
+    // by the cached tier (B·(k+1) positions): admission that knocked
+    // neighbouring rows off the cached tier, or left residue in an
+    // admitted slot, would break one of the two.
+    let root = require_artifacts!();
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let dev = Dataset::load(&manifest.data_file("mt_dev.json")).unwrap();
+    let srcs: Vec<Vec<i32>> = dev.rows.iter().take(8).map(|r| r.src.clone()).collect();
+    let first_wave = 3;
+
+    let model = ScoringModel::load(rt.clone(), &manifest, "mt_k8_both").unwrap();
+    let has_cached = model.has_cached_decode();
+    let has_scatter = model.has_device_scatter();
+    let bucket = *model.buckets().last().unwrap() as u64;
+    let w = (model.k() + 1).min(model.max_tgt()) as u64;
+
+    let before = rt.stats_snapshot();
+    let (served, device_scatter) = run_two_waves(model, &srcs, first_wave);
+    let d = rt.stats_snapshot().delta(&before);
+
+    if has_cached {
+        // executions = 2 wave encodes + one scatter invocation per
+        // admitted row (device path; a demotion would have happened on
+        // the very first admission, leaving exactly the one probe) + the
+        // decode steps, which must all have scored B·(k+1) positions
+        let scatter_execs = if device_scatter {
+            srcs.len() as u64
+        } else if has_scatter {
+            1
+        } else {
+            0
+        };
+        let decode_steps = d
+            .executions
+            .checked_sub(2 + scatter_execs)
+            .expect("execution accounting: encodes + scatters exceeded total executions");
+        assert!(decode_steps > 2, "expected a multi-step two-wave decode");
+        assert_eq!(
+            d.positions_scored,
+            decode_steps * bucket * w,
+            "every engine step must stay on the cached tier across admissions"
+        );
+    }
+
+    // byte-identity vs a fresh offline session per request (the re-pin
+    // reference: encode + begin_session from scratch, no admission path)
+    let model = ScoringModel::load(rt.clone(), &manifest, "mt_k8_both").unwrap();
+    let offline = decoding::blockwise_decode(&model, &srcs, &BlockwiseConfig::default()).unwrap();
+    for (i, tokens) in served.iter().enumerate() {
+        assert_eq!(
+            tokens, &offline[i].tokens,
+            "request {i}: engine admission path diverged from fresh session"
+        );
+    }
+
+    // scatter_rows error paths on a real session: row-count mismatch
+    // (strict contract), bad slot, wrong widths
+    let s_len = model.max_src();
+    let d_model = model.spec.config.d_model;
+    let mut src1 = blockdecode::util::tensor::TensorI32::zeros(&[1, s_len]);
+    let n0 = srcs[0].len().min(s_len);
+    src1.row_mut(0)[..n0].copy_from_slice(&srcs[0][..n0]);
+    let mut session = model.begin_session(&src1).unwrap();
+    let enc_src = blockdecode::util::tensor::TensorI32::zeros(&[2, s_len]);
+    let enc_mem = blockdecode::util::tensor::TensorF32::zeros(&[2, s_len, d_model]);
+    assert!(
+        session.scatter_rows(&[0], &enc_src, &enc_mem).is_err(),
+        "row-count mismatch must be an error"
+    );
+    let one_src = blockdecode::util::tensor::TensorI32::zeros(&[1, s_len]);
+    let one_mem = blockdecode::util::tensor::TensorF32::zeros(&[1, s_len, d_model]);
+    assert!(
+        session.scatter_rows(&[session.bucket()], &one_src, &one_mem).is_err(),
+        "slot outside the bucket must be an error"
+    );
+    let bad_mem = blockdecode::util::tensor::TensorF32::zeros(&[1, s_len, d_model + 1]);
+    assert!(
+        session.scatter_rows(&[0], &one_src, &bad_mem).is_err(),
+        "memory row-size mismatch must be an error"
+    );
+    session.scatter_rows(&[0], &one_src, &one_mem).unwrap();
+
+    // old manifests without `scatter_b*` entries fall back to the full
+    // host-mirror re-pin with byte-identical engine output
+    let mut stripped = Manifest::load(&root).unwrap();
+    for v in stripped.variants.values_mut() {
+        v.entries.retain(|logical, _| !logical.starts_with("scatter_b"));
+    }
+    let fallback = ScoringModel::load(rt.clone(), &stripped, "mt_k8_both").unwrap();
+    assert!(!fallback.has_device_scatter(), "stripping the scatter entries failed");
+    let (served_fb, device_scatter_fb) = run_two_waves(fallback, &srcs, first_wave);
+    assert!(!device_scatter_fb, "scatter-stripped session cannot admit device-side");
+    assert_eq!(served, served_fb, "mirror-fallback admission diverged from device scatter");
 }
 
 #[test]

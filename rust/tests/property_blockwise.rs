@@ -243,6 +243,81 @@ fn prop_cached_equals_full() {
     }
 }
 
+/// Tentpole invariant of the admission contract: scattering new sources
+/// into a session that already served a previous wave of requests —
+/// slots reused in arbitrary (non-prefix) order, caches reset per row —
+/// decodes the admitted rows **byte-identically** to the from-scratch
+/// re-pin reference (the one-shot `sim_blockwise` of the same source),
+/// with the non-admitted rows retired and inert throughout. This is the
+/// sim-level proof that admission leaves no residue, for both the
+/// KV-cached and windowed session modes (the device analogue: `scatter_b*`
+/// device-side admission vs rebuilding the resident state from host).
+#[test]
+fn prop_scatter_equals_repin() {
+    check("scatter==repin", 40, |rng| {
+        let k = 1 + rng.below(8);
+        let agreement = rng.f64();
+        let vocab = 30 + rng.below(120);
+        let mean_len = 4 + rng.below(14);
+        let m = SimModel::new(vocab, k, agreement, mean_len, rng.next_u64());
+        let bucket = 2 + rng.below(4);
+        let max_len = 4 + rng.below(20);
+        let t_len = max_len + 1;
+
+        // wave 1 fills every slot; wave 2 admits into a random subset of
+        // (now stale) slots, in shuffled order like the engine's free list
+        let srcs_a: Vec<Vec<i32>> = (0..bucket).map(|_| gen_src(rng, vocab, 10)).collect();
+        let mut slot_pool: Vec<usize> = (0..bucket).collect();
+        rng.shuffle(&mut slot_pool);
+        let n_admit = 1 + rng.below(bucket);
+        let slots = &slot_pool[..n_admit];
+        let srcs_b: Vec<Vec<i32>> = (0..n_admit).map(|_| gen_src(rng, vocab, 10)).collect();
+
+        for cached_mode in [true, false] {
+            let mut session = if cached_mode {
+                SimSession::cached(&m, srcs_a.clone())
+            } else {
+                SimSession::new(&m, srcs_a.clone())
+            };
+            let mut wave1: Vec<BlockState> =
+                (0..bucket).map(|_| BlockState::new(k, Criterion::Exact, max_len)).collect();
+            decode_rows(&mut session, &mut wave1, bucket, t_len).unwrap();
+
+            session.scatter_rows(slots, &srcs_b);
+            // non-admitted slots stay retired, exactly like engine slots
+            // whose requests completed but saw no replacement yet
+            let mut wave2: Vec<BlockState> = (0..bucket)
+                .map(|_| {
+                    let mut st = BlockState::new(k, Criterion::Exact, max_len);
+                    st.done = true;
+                    st
+                })
+                .collect();
+            for &s in slots {
+                wave2[s] = BlockState::new(k, Criterion::Exact, max_len);
+            }
+            decode_rows(&mut session, &mut wave2, bucket, t_len).unwrap();
+
+            for (i, &slot) in slots.iter().enumerate() {
+                let (repin, inv, blocks) =
+                    sim_blockwise(&m, &srcs_b[i], Criterion::Exact, max_len);
+                let st = &wave2[slot];
+                assert_eq!(
+                    st.accepted, repin,
+                    "cached={cached_mode} slot {slot}: admitted row != re-pin reference"
+                );
+                assert_eq!(st.stats.invocations, inv, "slot {slot} invocation count");
+                assert_eq!(st.stats.accepted_blocks, blocks, "slot {slot} accept trace");
+            }
+            for (slot, st) in wave2.iter().enumerate() {
+                if !slots.contains(&slot) {
+                    assert!(st.accepted.is_empty(), "retired slot {slot} moved");
+                }
+            }
+        }
+    });
+}
+
 /// The equality property above has teeth: the deliberate stale-cache bug
 /// knob (`SimSession::cached_stale` skips the volatile invalidation, so
 /// proposal tokens rejected and replaced in earlier steps keep

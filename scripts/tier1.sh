@@ -16,7 +16,21 @@
 #                          profile registered in python/tests/conftest.py
 #                          (no effect when hypothesis is not installed).
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+cd "$(dirname "$0")/.."
+
+# Hygiene gate: build artifacts must never be tracked (five committed
+# __pycache__/*.pyc files once rode along with a PR because nothing
+# checked). Fails fast so they cannot come back.
+if command -v git >/dev/null 2>&1 && git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
+    tracked_junk=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$|^rust/target/' || true)
+    if [ -n "$tracked_junk" ]; then
+        echo "tier1: tracked build artifacts found (git rm them):" >&2
+        echo "$tracked_junk" >&2
+        exit 1
+    fi
+fi
+
+cd rust
 
 export BLOCKDECODE_PROP_SEED="${BLOCKDECODE_PROP_SEED:-0xBD00}"
 export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-tier1}"
