@@ -1,6 +1,8 @@
 //! Latency sweep: single-sentence decode latency and invocation counts
 //! across block sizes k and acceptance criteria — the Figure 4 companion
-//! that shows where wall-clock gains peak even as iteration gains grow.
+//! that shows where wall-clock gains peak even as iteration gains grow —
+//! plus a shard-count sweep of the sim-backed engine pool (how the
+//! serving topology itself scales, independent of the device model).
 //!
 //! ```sh
 //! cargo run --release --example latency_sweep -- [n_sentences]
@@ -10,6 +12,7 @@ use anyhow::Result;
 use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
 use blockdecode::harness::common::Table;
 use blockdecode::harness::Ctx;
+use blockdecode::testing::sim::sim_pool_burst;
 use blockdecode::util::stats::summarize;
 use blockdecode::util::tensor::{TensorF32, TensorI32};
 use std::time::Instant;
@@ -131,5 +134,32 @@ fn main() -> Result<()> {
         ]);
     }
     println!("{}", table.render());
+
+    // pool sharding: requests/s through a sim-backed EnginePool as the
+    // shard count grows — the serving-topology half of the latency story
+    // (the device rows above are per-sequence; this is fleet throughput)
+    let pool_reqs = 96usize;
+    let mut pt = Table::new(&["shards", "req/s", "speedup"]);
+    let mut base_rps = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let rps = sim_pool_rps(shards, pool_reqs)?;
+        if shards == 1 {
+            base_rps = rps;
+        }
+        pt.row(vec![
+            shards.to_string(),
+            format!("{rps:.1}"),
+            format!("{:.2}x", rps / base_rps),
+        ]);
+    }
+    println!("pool sharding (sim backend, {pool_reqs} requests):\n{}", pt.render());
     Ok(())
+}
+
+/// Serve `n` requests through a `shards`-shard sim pool; returns req/s
+/// (spawn + decode + drain, the full per-burst serving cost).
+fn sim_pool_rps(shards: usize, n: usize) -> Result<f64> {
+    let t0 = Instant::now();
+    sim_pool_burst(shards, n)?;
+    Ok(n as f64 / t0.elapsed().as_secs_f64().max(1e-9))
 }

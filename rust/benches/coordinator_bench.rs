@@ -1,7 +1,11 @@
 //! Coordinator-layer benchmarks: the pure-rust hot path *around* the model
 //! invocation — verify/accept state machine, batch assembly, JSON wire
-//! codec, queue operations. The coordinator must stay far below the model
-//! invocation cost (DESIGN.md §8 target: <10% of end-to-end time).
+//! codec, queue operations — plus the shard-count axis of the engine pool
+//! (end-to-end requests through a sim-backed `EnginePool` at 1 vs 2
+//! shards; the one shared queue is the load balancer, so throughput
+//! should scale with shards until the hardware runs out of cores). The
+//! pure-rust coordinator must stay far below the model invocation cost
+//! (DESIGN.md §8 target: <10% of end-to-end time).
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -12,6 +16,7 @@ use blockdecode::bench::Bench;
 use blockdecode::decoding::state::BlockState;
 use blockdecode::decoding::Criterion;
 use blockdecode::model::WindowScores;
+use blockdecode::testing::sim::sim_pool_burst;
 use blockdecode::util::json::Json;
 use blockdecode::util::rng::Rng;
 use blockdecode::util::tensor::{TensorF32, TensorI32};
@@ -120,6 +125,30 @@ fn main() {
         }
         1000
     });
+
+    // multi-engine sharding axis: the same request burst through a
+    // sim-backed EnginePool at 1 vs 2 shards — spawn, decode, drain per
+    // iteration, so the measured unit is end-to-end served requests.
+    // Acceptance gate for the sharding PR: the printed scaling line
+    // should show > 1.5x at 2 shards on any multi-core box.
+    const POOL_REQS: usize = 48;
+    let case_name = |shards: usize| format!("pool/sim_{shards}shard_{POOL_REQS}req");
+    for shards in [1usize, 2] {
+        b.case(&case_name(shards), "req", || {
+            sim_pool_burst(shards, POOL_REQS).unwrap();
+            POOL_REQS
+        });
+    }
+    let tput = |name: &str| {
+        b.results()
+            .iter()
+            .find(|m| m.name == name)
+            .and_then(|m| m.throughput)
+            .map(|(v, _)| v)
+    };
+    if let (Some(one), Some(two)) = (tput(&case_name(1)), tput(&case_name(2))) {
+        println!("pool scaling: 2-shard = {:.2}x 1-shard throughput", two / one);
+    }
 
     println!("\n== summary ==\n{}", b.report());
 }

@@ -1,9 +1,15 @@
 //! Request types and the dynamic batching queue.
 //!
-//! The queue implements the classic dynamic-batching policy: the engine
+//! The queue implements the classic dynamic-batching policy: an engine
 //! asks for up to `max_batch` requests and the queue returns as soon as
 //! either (a) that many are waiting, or (b) `max_wait` has elapsed since
 //! the oldest waiting request — trading a little latency for batch fill.
+//!
+//! One queue feeds **all** engine shards (`scheduler::pool`): it is the
+//! pool's load balancer, so the multi-consumer contract is load-bearing —
+//! concurrent `pop_batch`/`try_pop` callers must never drop, duplicate,
+//! or starve a request (`rust/tests/queue_concurrency.rs` stress-tests
+//! exactly that under the seeded property harness).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
@@ -68,6 +74,14 @@ impl RequestQueue {
     pub fn close(&self) {
         self.q.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Has [`RequestQueue::close`] been called? Closing the queue is the
+    /// drain signal for every engine shard consuming it: a shard exits
+    /// once the queue is closed *and* drained *and* its own slots are
+    /// empty, so in-flight work always completes.
+    pub fn is_closed(&self) -> bool {
+        self.q.lock().unwrap().closed
     }
 
     pub fn len(&self) -> usize {
@@ -219,6 +233,14 @@ mod tests {
         q.close();
         let (r, _k) = req(1);
         assert!(!q.push(r));
+    }
+
+    #[test]
+    fn is_closed_reflects_close() {
+        let q = RequestQueue::new();
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
     }
 
     #[test]

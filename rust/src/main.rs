@@ -1,29 +1,44 @@
 //! `repro` — the blockdecode CLI: serving coordinator, one-off decoding,
-//! and the paper-reproduction harnesses.
+//! a load generator, and the paper-reproduction harnesses.
 //!
 //! ```text
-//! repro serve   --variant mt_k8_both --addr 127.0.0.1:7700
+//! repro serve   --variant mt_k8_both --addr 127.0.0.1:7700 --engines 4
+//! repro serve   --backend sim --engines 2      # no artifacts needed
+//! repro loadgen --addr 127.0.0.1:7700 --n 300 --conns 4
 //! repro decode  --variant mt_k8_both --criterion top2 --n 8 --trace
 //! repro table1 | table1-topk | table2 | table3 | table4 | figure4
 //! repro ablation-minblock
 //! repro selftest
 //! ```
+//!
+//! `serve` runs an [`EnginePool`]: `--engines N` shard threads (each with
+//! its own PJRT runtime and device-resident session) pulling from one
+//! shared request queue. SIGINT drains gracefully — the queue closes, all
+//! in-flight slots decode to completion, every shard joins, and the
+//! fleet + per-shard metrics report is printed.
 
+use std::path::Path;
+use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use blockdecode::batching::RequestQueue;
 use blockdecode::decoding::{self, BlockwiseConfig};
 use blockdecode::harness::{self, Ctx};
-use blockdecode::metrics::Metrics;
-use blockdecode::scheduler::{Engine, EngineConfig};
-use blockdecode::server::{parse_criterion, Server};
-use blockdecode::tokenizer::Vocab;
+use blockdecode::model::ScoringModel;
+use blockdecode::runtime::{Manifest, Runtime};
+use blockdecode::scheduler::pool::{EnginePool, PoolReport};
+use blockdecode::scheduler::{EngineConfig, ModelBackend};
+use blockdecode::server::{parse_criterion, Client, Server};
+use blockdecode::testing::sim::{SimBackend, SimModel};
+use blockdecode::tokenizer::{Vocab, EOS};
 use blockdecode::util::argparse::{ArgError, ArgSpec};
 use blockdecode::util::logging;
+use blockdecode::util::rng::Rng;
+use blockdecode::util::stats::summarize;
 
 fn main() {
     logging::init();
@@ -48,6 +63,7 @@ fn run(argv: &[String]) -> Result<()> {
     let rest = &argv[1.min(argv.len())..];
     match cmd {
         "serve" => serve(rest),
+        "loadgen" => loadgen(rest),
         "decode" => decode(rest),
         "selftest" => selftest(rest),
         "table1" => harness_cmd(rest, |ctx, l| harness::table1::run(ctx, l)),
@@ -60,7 +76,7 @@ fn run(argv: &[String]) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "repro — blockwise parallel decoding serving stack\n\n\
-                 subcommands:\n  serve, decode, selftest,\n  \
+                 subcommands:\n  serve, loadgen, decode, selftest,\n  \
                  table1, table1-topk, table2, table3, table4, figure4,\n  \
                  ablation-minblock\n\nEach takes --help."
             );
@@ -90,26 +106,81 @@ fn harness_cmd(
     Ok(())
 }
 
-/// Serve a variant over TCP with the continuous-batching engine.
+/// Serve over TCP with a pool of continuous-batching engine shards.
 fn serve(rest: &[String]) -> Result<()> {
     let spec = ArgSpec::new("serve", "start the serving coordinator")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("variant", "mt_k8_both", "model variant to serve")
         .opt("addr", "127.0.0.1:7700", "listen address")
         .opt("criterion", "exact", "default acceptance criterion")
-        .opt("min-block", "1", "§5.3 minimum accepted block size");
+        .opt("min-block", "1", "§5.3 minimum accepted block size")
+        .opt("engines", "1", "engine shards — one thread + one PJRT runtime each")
+        .opt(
+            "backend",
+            "device",
+            "scoring backend: 'device' (PJRT over the artifacts) or 'sim' \
+             (deterministic simulator; no artifacts needed — the CI smoke target)",
+        );
     let a = spec.parse(rest)?;
 
-    let ctx = Ctx::load(&a.str("artifacts"))?;
+    let n_engines = a.usize("engines")?;
+    anyhow::ensure!(n_engines >= 1, "--engines must be >= 1");
+    let cfg = EngineConfig {
+        criterion: parse_criterion(&a.str("criterion"))
+            .ok_or_else(|| anyhow::anyhow!("bad criterion"))?,
+        min_block: a.usize("min-block")?,
+        ..Default::default()
+    };
+
     let queue = Arc::new(RequestQueue::new());
-    let metrics = Arc::new(Metrics::new());
     let stop = Arc::new(AtomicBool::new(false));
-
     let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?;
-    println!("serving {} on {}", a.str("variant"), server.local_addr());
+    let t0 = Instant::now();
 
-    // engine owns the (non-Send) PJRT state on this thread; the server
-    // accept loop runs on its own thread.
+    // each shard constructs its backend on its own thread (the PJRT
+    // runtime is not Send); the shared queue is the load balancer
+    let backend = a.str("backend");
+    let (label, pool) = match backend.as_str() {
+        "sim" => {
+            let pool = EnginePool::spawn(
+                n_engines,
+                move |_shard| Ok(SimBackend::new(sim_serve_model(), 4, 25)),
+                cfg,
+                queue.clone(),
+                stop.clone(),
+            )?;
+            ("sim".to_string(), pool)
+        }
+        "device" => {
+            let manifest = Arc::new(Manifest::load(Path::new(&a.str("artifacts")))?);
+            let variant = a.str("variant");
+            let label = variant.clone();
+            let pool = EnginePool::spawn(
+                n_engines,
+                move |shard| -> Result<ModelBackend> {
+                    let rt = Rc::new(Runtime::cpu()?);
+                    let model = ScoringModel::load(rt, &manifest, &variant)?;
+                    log::info!("shard {shard}: loaded {variant}");
+                    ModelBackend::new(model)
+                },
+                cfg,
+                queue.clone(),
+                stop.clone(),
+            )?;
+            (label, pool)
+        }
+        other => anyhow::bail!("unknown backend '{other}' (expected 'device' or 'sim')"),
+    };
+    println!(
+        "serving {} ({} engine shard{}) on {}",
+        label,
+        n_engines,
+        if n_engines == 1 { "" } else { "s" },
+        server.local_addr()
+    );
+
+    // accept loop on its own thread; engines on the pool threads; this
+    // thread supervises shutdown (SIGINT, or the accept loop dying)
     let stop2 = stop.clone();
     let srv = std::thread::spawn(move || {
         if let Err(e) = server.serve() {
@@ -118,19 +189,161 @@ fn serve(rest: &[String]) -> Result<()> {
         stop2.store(true, Ordering::Relaxed);
     });
 
-    let model = ctx.model(&a.str("variant"))?;
-    let cfg = EngineConfig {
-        criterion: parse_criterion(&a.str("criterion"))
-            .ok_or_else(|| anyhow::anyhow!("bad criterion"))?,
-        min_block: a.usize("min-block")?,
-        ..Default::default()
-    };
-    let mut engine = Engine::new(model, cfg, queue.clone(), metrics.clone(), stop.clone())?;
-    let t0 = Instant::now();
-    engine.run()?;
+    sigint::install();
+    // supervise: exit on SIGINT, on the accept loop dying, or on any
+    // shard dying early (drain below surfaces the shard's error)
+    while !sigint::triggered() && !stop.load(Ordering::Relaxed) && !pool.any_finished() {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    log::info!("shutdown requested; draining {n_engines} engine shard(s)");
+    // close the queue *before* raising the stop flag: a request already
+    // enqueued keeps the queue non-empty, so no shard can exit until a
+    // shard has served it, and one arriving after the close is rejected
+    // at push — its waiter gets an error reply instead of a silent hang
+    // (shards exit only once stopped/closed *and* drained *and* idle)
+    queue.close();
+    stop.store(true, Ordering::Relaxed); // stops the accept loop + readers
+
+    // graceful drain: let every shard finish its slots, join all threads
+    // — then report fleet + per-shard metrics
+    let shards = pool.shard_metrics().to_vec();
+    pool.drain()?;
     let _ = srv.join();
-    println!("{}", metrics.report(t0).render());
+    println!("{}", PoolReport::from_shards(&shards, t0).render());
+    println!(
+        "drained {} engine shard{} cleanly",
+        n_engines,
+        if n_engines == 1 { "" } else { "s" }
+    );
     Ok(())
+}
+
+/// The fixed simulator the `--backend sim` shards serve: deterministic,
+/// so a given source + criterion always decodes to the same tokens no
+/// matter which shard picks it up (what the pool integration tests and
+/// the CI smoke run rely on).
+fn sim_serve_model() -> SimModel {
+    SimModel::new(64, 8, 0.85, 12, 0xB10C)
+}
+
+/// Drive a running server with concurrent `Client` connections and mixed
+/// acceptance criteria — the CI serve-smoke driver and a quick local load
+/// generator. Exits nonzero if any request fails its sanity checks.
+fn loadgen(rest: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("loadgen", "drive a running server with mixed-criterion load")
+        .req("addr", "server address (host:port)")
+        .opt("n", "300", "total requests")
+        .opt("conns", "4", "concurrent client connections")
+        .opt("src-len", "6", "tokens per synthetic source (EOS appended)")
+        .opt("vocab", "64", "source token id range");
+    let a = spec.parse(rest)?;
+    let addr = a.str("addr");
+    anyhow::ensure!(!addr.is_empty(), "--addr is required");
+    let n = a.usize("n")?;
+    let conns = a.usize("conns")?.max(1).min(n.max(1));
+    let src_len = a.usize("src-len")?.max(1);
+    let vocab = a.usize("vocab")?.max(8);
+
+    // mixed criteria: the server default plus every wire-named criterion
+    const CRITERIA: [Option<&str>; 4] = [None, Some("exact"), Some("top2"), Some("dist2")];
+
+    let t0 = Instant::now();
+    let mut lanes = Vec::new();
+    for lane in 0..conns {
+        let addr = addr.clone();
+        lanes.push(std::thread::spawn(move || -> Result<(usize, Vec<f64>)> {
+            let mut client = Client::connect(&addr)?;
+            let mut rng = Rng::new(0x10AD + lane as u64);
+            let mut lat = Vec::new();
+            let mut done = 0usize;
+            for i in 0..n {
+                if i % conns != lane {
+                    continue;
+                }
+                let mut src: Vec<i32> =
+                    (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
+                src.push(EOS);
+                // lane-local alternation: with i % conns fixed per lane,
+                // indexing by i would pin one criterion per connection
+                // whenever conns divides CRITERIA.len()
+                let crit = CRITERIA[(i / conns) % CRITERIA.len()];
+                let sent = Instant::now();
+                let r = client.decode(&src, crit)?;
+                lat.push(sent.elapsed().as_secs_f64() * 1000.0);
+                anyhow::ensure!(!r.tokens.is_empty(), "request {i}: empty decode");
+                anyhow::ensure!(r.invocations >= 1, "request {i}: zero invocations");
+                anyhow::ensure!(
+                    r.blocks.iter().sum::<usize>() == r.tokens.len(),
+                    "request {i}: accepted blocks do not sum to the token count"
+                );
+                done += 1;
+            }
+            Ok((done, lat))
+        }));
+    }
+    let mut done = 0usize;
+    let mut lat = Vec::new();
+    for (lane, h) in lanes.into_iter().enumerate() {
+        let (d, ls) = h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
+        done += d;
+        lat.extend(ls);
+    }
+    anyhow::ensure!(done == n, "only {done}/{n} requests completed");
+    let s = summarize(&lat);
+    println!(
+        "loadgen: {} requests over {} connection{} in {:.2}s — \
+         p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
+        n,
+        conns,
+        if conns == 1 { "" } else { "s" },
+        t0.elapsed().as_secs_f64(),
+        s.p50,
+        s.p90,
+        s.p99
+    );
+    Ok(())
+}
+
+/// SIGINT → graceful drain, without a signal-handling crate: the handler
+/// only flips an atomic the supervise loop polls. Installed for `serve`.
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_sig: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        /// libc `signal(2)`; the return value (previous handler) is a
+        /// pointer-sized opaque we never read.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix fallback: no SIGINT hook; `serve` stops when the accept loop
+/// exits (or the process is killed).
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
 }
 
 /// One-off decoding of dev-set sentences with a step trace (§7.4).

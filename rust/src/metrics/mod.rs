@@ -1,6 +1,11 @@
 //! Serving metrics: counters, latency histograms, accepted-block-size
 //! tracking, and text report rendering. Shared (thread-safe) so server
-//! worker threads and the engine thread update one registry.
+//! worker threads and an engine thread update one registry.
+//!
+//! Under multi-engine sharding each shard owns a private registry (no
+//! cross-shard lock contention on the serving path) and the pool folds
+//! them into one fleet view with [`Metrics::merge`] at report time —
+//! see `scheduler::pool::PoolReport`.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -13,7 +18,7 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 struct Inner {
     requests: u64,
     completed: u64,
@@ -74,6 +79,25 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.accept_steps += 1;
         m.accept_tokens += block as u64;
+    }
+
+    /// Fold `other`'s counters and latency samples into this registry —
+    /// the engine pool aggregates its per-shard registries into one fleet
+    /// view. `other` is copied out under its own lock first, so the two
+    /// registries are never locked at once (no ordering to deadlock on).
+    pub fn merge(&self, other: &Metrics) {
+        let o = other.inner.lock().unwrap().clone();
+        let mut m = self.inner.lock().unwrap();
+        m.requests += o.requests;
+        m.completed += o.completed;
+        m.failed += o.failed;
+        m.tokens_out += o.tokens_out;
+        m.invocations += o.invocations;
+        m.accept_steps += o.accept_steps;
+        m.accept_tokens += o.accept_tokens;
+        m.queue_us.extend(o.queue_us);
+        m.e2e_us.extend(o.e2e_us);
+        m.batch_fill.extend(o.batch_fill);
     }
 
     pub fn report(&self, since: Instant) -> Report {
@@ -150,6 +174,36 @@ mod tests {
         assert!((r.mean_accepted_block - 2.0).abs() < 1e-9);
         assert!((r.mean_batch_fill - 0.75).abs() < 1e-9);
         assert!(r.render().contains("k̂ = 2.00"));
+    }
+
+    #[test]
+    fn merge_folds_counters_and_samples() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.on_request();
+        a.on_invocation(2, 8);
+        a.on_accept(4);
+        a.on_complete(Duration::from_millis(1), Duration::from_millis(4), 5);
+        b.on_request();
+        b.on_request();
+        b.on_invocation(8, 8);
+        b.on_accept(2);
+        b.on_complete(Duration::from_millis(3), Duration::from_millis(8), 7);
+        let fleet = Metrics::new();
+        fleet.merge(&a);
+        fleet.merge(&b);
+        let r = fleet.report(Instant::now());
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.tokens_out, 12);
+        assert_eq!(r.invocations, 2);
+        // sample sets concatenate: fill (0.25 + 1.0)/2, k̂ (4+2)/2
+        assert!((r.mean_batch_fill - 0.625).abs() < 1e-9);
+        assert!((r.mean_accepted_block - 3.0).abs() < 1e-9);
+        assert_eq!(r.e2e_us.n, 2);
+        // the source registries are untouched
+        assert_eq!(a.report(Instant::now()).requests, 1);
+        assert_eq!(b.report(Instant::now()).requests, 2);
     }
 
     #[test]

@@ -1,30 +1,51 @@
 //! The continuous-batching decode engine — the serving coordinator's core
 //! loop (vLLM-style iteration-level scheduling, specialized to blockwise
-//! parallel decoding).
+//! parallel decoding) — and the sharding layer that multiplies it across
+//! cores ([`pool::EnginePool`]).
 //!
-//! One engine thread owns the PJRT runtime and the loaded model (the
-//! `xla` client is not `Send`). Every loop iteration:
+//! **Topology.** One engine thread owns one PJRT runtime and one loaded
+//! model (the `xla` client is not `Send`). A deployment runs `n_engines`
+//! such shards (`repro serve --engines N`), each constructed *on its own
+//! thread* and all pulling from the **single shared** [`RequestQueue`] —
+//! the queue is the load balancer: an idle shard's `pop_batch`/`try_pop`
+//! naturally drains what busy shards cannot take, so work-stealing falls
+//! out of the construction with no routing layer. Each shard updates its
+//! own [`Metrics`] registry; the pool merges them into a fleet view
+//! ([`crate::metrics::Metrics::merge`]).
+//!
+//! **Loop.** Every engine iteration:
 //!
 //! 1. **refill** — admit queued requests into free slots of the batch
-//!    bucket; new sources are batch-encoded and their memory rows are
-//!    scattered into the *device-resident* decode session — on manifests
-//!    with `scatter_b*` entries the admission runs device-side and
-//!    uploads only the admitted rows (O(rows·S·D) bytes), otherwise one
-//!    host-mirror re-pin per refill — see
+//!    bucket; the backend encodes the new sources and scatters their
+//!    memory rows into the *device-resident* decode session — on
+//!    manifests with `scatter_b*` entries the admission runs device-side
+//!    and uploads only the admitted rows (O(rows·S·D) bytes), otherwise
+//!    one host-mirror re-pin per refill — see
 //!    [`DecodeSession::scatter_rows`](crate::model::DecodeSession);
 //! 2. **step** — one combined scoring/proposal invocation advances *every*
 //!    active slot (each by its own k̂ ≥ 1 tokens); a steady-state step
 //!    uploads only the `[B,T]` decoder input plus the `[B]` frontier
 //!    vector, downloads only the `[B,k+1,K,topt]` score window at each
 //!    slot's frontier, and on KV-cached manifests re-runs the decoder
-//!    over only those k+1 positions per slot (`scatter_rows` invalidates
-//!    an admitted slot's cache rows; older manifests fall back tier by
-//!    tier);
+//!    over only those k+1 positions per slot;
 //! 3. **complete** — finished slots respond to their waiters and free up.
 //!
 //! Because sequences join and leave at iteration granularity, a slot never
 //! waits for its batch-mates to finish (continuous batching), and the
 //! invocation count per sequence stays ~len/k̂ + 1.
+//!
+//! **Drain.** Closing the queue is the shutdown signal: each shard exits
+//! once the queue is closed *and* drained *and* its own slots are empty,
+//! so in-flight requests always complete ([`pool::EnginePool::drain`]
+//! closes the queue and joins every shard).
+//!
+//! The loop is generic over [`EngineBackend`]: production shards wrap a
+//! `ScoringModel` + device-resident `DecodeSession` ([`ModelBackend`]);
+//! tests and the CI serve-smoke run the *same* loop over the simulated
+//! model ([`crate::testing::sim::SimBackend`]), so the multi-shard path
+//! is exercised end-to-end without PJRT or artifacts.
+
+pub mod pool;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
@@ -37,7 +58,7 @@ use crate::batching::{Request, RequestQueue, Response};
 use crate::decoding::criteria::Criterion;
 use crate::decoding::state::BlockState;
 use crate::metrics::Metrics;
-use crate::model::{DecodeSession, ScoringModel};
+use crate::model::{DecodeSession, ScoringModel, WindowScores};
 use crate::tokenizer::PAD;
 use crate::util::tensor::{TensorF32, TensorI32};
 
@@ -66,6 +87,115 @@ impl Default for EngineConfig {
     }
 }
 
+/// What the engine loop needs from a scoring backend: batch geometry,
+/// admission of newly-arrived sources into slots of the resident batch,
+/// and one combined scoring/proposal step. A backend is constructed on
+/// the thread that will run it (the production one owns a non-`Send`
+/// PJRT runtime) and is owned by exactly one [`Engine`].
+pub trait EngineBackend {
+    /// Rows in the resident batch — the engine's slot count.
+    fn bucket(&self) -> usize;
+    /// Decoder-input width T.
+    fn t_len(&self) -> usize;
+    /// Proposal block size k.
+    fn k(&self) -> usize;
+    /// Hard cap on generated tokens (excluding BOS).
+    fn max_len(&self) -> usize;
+    /// Encode `srcs[i]` and land it in resident slot `slots[i]`
+    /// (admission; `slots` and `srcs` have equal length).
+    fn admit(&mut self, slots: &[usize], srcs: &[&[i32]]) -> Result<()>;
+    /// One combined scoring/proposal invocation over the resident batch.
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores>;
+}
+
+/// The production [`EngineBackend`]: a loaded [`ScoringModel`] plus the
+/// device-resident [`DecodeSession`] it steps. Boots with an all-PAD
+/// resident batch (no encode invocation); real rows are scattered in as
+/// requests are admitted.
+pub struct ModelBackend {
+    model: ScoringModel,
+    session: DecodeSession,
+    bucket: usize,
+}
+
+impl ModelBackend {
+    pub fn new(model: ScoringModel) -> Result<Self> {
+        let bucket = *model
+            .buckets()
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("model has no batch buckets"))?;
+        let s_len = model.max_src();
+        let d = model.spec.config.d_model;
+        let session = model.begin_session_with(
+            TensorI32::zeros(&[bucket, s_len]),
+            TensorF32::zeros(&[bucket, s_len, d]),
+        )?;
+        Ok(ModelBackend { model, session, bucket })
+    }
+
+    /// The device-resident decode session — read-only observability
+    /// (tests and diagnostics inspect the admission mode via
+    /// [`DecodeSession::device_scatter`]).
+    pub fn session(&self) -> &DecodeSession {
+        &self.session
+    }
+
+    pub fn model(&self) -> &ScoringModel {
+        &self.model
+    }
+}
+
+impl EngineBackend for ModelBackend {
+    fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    fn t_len(&self) -> usize {
+        self.model.max_tgt()
+    }
+
+    fn k(&self) -> usize {
+        self.model.k()
+    }
+
+    fn max_len(&self) -> usize {
+        self.model.max_tgt() - 1
+    }
+
+    /// Batch-encode the new sources in one invocation (rows beyond the
+    /// incoming count stay PAD, so the encode batch is well-formed) and
+    /// scatter encoded row i into resident slot `slots[i]` — device-side
+    /// (only the admitted rows travel) on manifests with `scatter_b*`
+    /// entries, one host-mirror re-pin per refill otherwise. Either cost
+    /// is amortized over every subsequent step.
+    fn admit(&mut self, slots: &[usize], srcs: &[&[i32]]) -> Result<()> {
+        let s_len = self.model.max_src();
+        let mut enc_src = TensorI32::zeros(&[self.bucket, s_len]);
+        for (i, src) in srcs.iter().enumerate() {
+            let n = src.len().min(s_len);
+            enc_src.row_mut(i)[..n].copy_from_slice(&src[..n]);
+        }
+        let enc_memory = self.model.encode(&enc_src)?;
+
+        // the session's admission contract is strict — exactly one encode
+        // row per slot — so the bucket-shaped encode batch is sliced down
+        // to the admitted prefix (its rows are contiguous and first): on
+        // the device-scatter path only these rows travel to the device
+        let n = slots.len();
+        let row_elems = enc_memory.data.len() / self.bucket;
+        let rows_src = TensorI32::from_vec(&[n, s_len], enc_src.data[..n * s_len].to_vec());
+        let rows_mem = TensorF32::from_vec(
+            &[n, s_len, enc_memory.dims[2]],
+            enc_memory.data[..n * row_elems].to_vec(),
+        );
+        self.session.scatter_rows(slots, &rows_src, &rows_mem)
+    }
+
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        self.session.step_at(tgt_in, frontiers)
+    }
+}
+
 struct Slot {
     request: Request,
     state: BlockState,
@@ -76,18 +206,16 @@ struct Slot {
     written: usize,
 }
 
-/// The engine. Construct with a loaded model, then `run` on the owning
-/// thread; submit via the shared [`RequestQueue`]; stop via the flag.
-pub struct Engine {
-    model: ScoringModel,
+/// One engine shard. Construct with a backend (or a loaded model via
+/// [`Engine::new`]), then `run` on the owning thread; submit via the
+/// shared [`RequestQueue`]; stop via the flag or by closing the queue.
+pub struct Engine<B: EngineBackend = ModelBackend> {
+    backend: B,
     cfg: EngineConfig,
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     bucket: usize,
-    /// device-resident decode state (pinned src ids + encoder memory);
-    /// self-contained `Rc` handles, so it lives happily next to `model`
-    session: DecodeSession,
     /// resident decoder-input batch; rows of free slots stay PAD
     tgt_in: TensorI32,
     /// per-slot frontier indices passed to every windowed step; free and
@@ -96,7 +224,9 @@ pub struct Engine {
     slots: Vec<Option<Slot>>,
 }
 
-impl Engine {
+impl Engine<ModelBackend> {
+    /// Model-backed engine (the single-shard production constructor; the
+    /// pool uses [`Engine::with_backend`] through its factory).
     pub fn new(
         model: ScoringModel,
         cfg: EngineConfig,
@@ -104,30 +234,38 @@ impl Engine {
         metrics: Arc<Metrics>,
         stop: Arc<AtomicBool>,
     ) -> Result<Self> {
-        let bucket = *model
-            .buckets()
-            .last()
-            .ok_or_else(|| anyhow::anyhow!("model has no batch buckets"))?;
-        let s_len = model.max_src();
-        let t_len = model.max_tgt();
-        let d = model.spec.config.d_model;
-        // boot with an all-PAD resident batch — no encode invocation; real
-        // rows are scattered in as requests are admitted
-        let session = model.begin_session_with(
-            TensorI32::zeros(&[bucket, s_len]),
-            TensorF32::zeros(&[bucket, s_len, d]),
-        )?;
+        Engine::with_backend(ModelBackend::new(model)?, cfg, queue, metrics, stop)
+    }
+
+    /// The engine's device-resident decode session — read-only
+    /// observability (tests and diagnostics inspect the admission mode
+    /// via [`DecodeSession::device_scatter`]).
+    pub fn session(&self) -> &DecodeSession {
+        self.backend.session()
+    }
+}
+
+impl<B: EngineBackend> Engine<B> {
+    pub fn with_backend(
+        backend: B,
+        cfg: EngineConfig,
+        queue: Arc<RequestQueue>,
+        metrics: Arc<Metrics>,
+        stop: Arc<AtomicBool>,
+    ) -> Result<Self> {
+        let bucket = backend.bucket();
+        anyhow::ensure!(bucket >= 1, "engine backend has no batch slots");
+        let t_len = backend.t_len();
         Ok(Engine {
             cfg,
             queue,
             metrics,
             stop,
             bucket,
-            session,
             tgt_in: TensorI32::zeros(&[bucket, t_len]),
             frontiers: vec![0; bucket],
             slots: (0..bucket).map(|_| None).collect(),
-            model,
+            backend,
         })
     }
 
@@ -135,18 +273,8 @@ impl Engine {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// The engine's device-resident decode session — read-only
-    /// observability (tests and diagnostics inspect the admission mode
-    /// via [`DecodeSession::device_scatter`]).
-    pub fn session(&self) -> &DecodeSession {
-        &self.session
-    }
-
-    /// Admit new requests into free slots; batch-encode their sources and
-    /// scatter the rows into the device-resident session — device-side
-    /// (only the admitted rows travel) on manifests with `scatter_b*`
-    /// entries, one host-mirror re-pin per refill otherwise. Either cost
-    /// is amortized over every subsequent step.
+    /// Admit new requests into free slots; the backend encodes their
+    /// sources and lands the rows in the resident batch state.
     fn refill(&mut self) -> Result<()> {
         let free: Vec<usize> =
             (0..self.bucket).filter(|&i| self.slots[i].is_none()).collect();
@@ -166,41 +294,22 @@ impl Engine {
             return Ok(());
         }
 
-        // batch-encode the new sources in one invocation (rows are PAD
-        // beyond the incoming count, so the encode batch is well-formed)
-        let s_len = self.model.max_src();
-        let mut enc_src = TensorI32::zeros(&[self.bucket, s_len]);
-        for (i, r) in incoming.iter().enumerate() {
-            let n = r.src.len().min(s_len);
-            enc_src.row_mut(i)[..n].copy_from_slice(&r.src[..n]);
-        }
-        let enc_memory = self.model.encode(&enc_src)?;
-
-        // scatter encoded row i into resident slot free[i]. The session's
-        // admission contract is strict — exactly one encode row per slot —
-        // so the bucket-shaped encode batch is sliced down to the admitted
-        // prefix (its rows are contiguous and first): on the device-scatter
-        // path only these rows travel to the device.
         let n = incoming.len();
         let slots = &free[..n];
-        let row_elems = enc_memory.data.len() / self.bucket;
-        let rows_src = TensorI32::from_vec(&[n, s_len], enc_src.data[..n * s_len].to_vec());
-        let rows_mem = TensorF32::from_vec(
-            &[n, s_len, enc_memory.dims[2]],
-            enc_memory.data[..n * row_elems].to_vec(),
-        );
-        self.session.scatter_rows(slots, &rows_src, &rows_mem)?;
+        let srcs: Vec<&[i32]> = incoming.iter().map(|r| r.src.as_slice()).collect();
+        self.backend.admit(slots, &srcs)?;
 
         let max_len = self
             .cfg
             .max_len
-            .unwrap_or(self.model.max_tgt() - 1)
-            .min(self.model.max_tgt() - 1);
+            .unwrap_or(self.backend.max_len())
+            .min(self.backend.max_len());
+        let k = self.backend.k();
         for (i, r) in incoming.into_iter().enumerate() {
             let slot = free[i];
             let criterion = r.criterion.unwrap_or(self.cfg.criterion);
-            let state = BlockState::new(self.model.k(), criterion, max_len)
-                .with_min_block(self.cfg.min_block.max(1).min(self.model.k()));
+            let state = BlockState::new(k, criterion, max_len)
+                .with_min_block(self.cfg.min_block.max(1).min(k));
             self.metrics.on_request();
             // committed/written start at 0: the first patch_row does a
             // full rebuild of the (PAD-retired) row
@@ -216,12 +325,14 @@ impl Engine {
     }
 
     /// One engine iteration. Returns false when fully idle and the queue
-    /// is closed (time to exit).
+    /// is closed or the stop flag is set (time to exit) — in-flight slots
+    /// always decode to completion first, so a drain never drops work.
     pub fn step(&mut self) -> Result<bool> {
         self.refill()?;
         let active = self.active();
         if active == 0 {
-            if self.stop.load(Ordering::Relaxed) && self.queue.is_empty() {
+            let stopping = self.stop.load(Ordering::Relaxed) || self.queue.is_closed();
+            if stopping && self.queue.is_empty() {
                 return Ok(false);
             }
             // idle — wait for work (pop_batch blocks inside refill next turn)
@@ -244,7 +355,7 @@ impl Engine {
 
         // steady-state host->device transfer: [B,T] i32 decoder input plus
         // the [B] i32 frontier vector; device->host is the frontier window
-        let scores = self.session.step_at(&self.tgt_in, &self.frontiers)?;
+        let scores = self.backend.step_at(&self.tgt_in, &self.frontiers)?;
         self.metrics.on_invocation(active, self.bucket);
 
         for i in 0..self.bucket {
@@ -281,10 +392,9 @@ impl Engine {
     /// Run until stopped and drained.
     pub fn run(&mut self) -> Result<()> {
         log::info!(
-            "engine up: variant={} k={} bucket={} criterion={}",
-            self.model.spec.name,
-            self.model.k(),
+            "engine up: bucket={} k={} criterion={}",
             self.bucket,
+            self.backend.k(),
             self.cfg.criterion.label()
         );
         while self.step()? {}

@@ -1,0 +1,178 @@
+//! Multi-engine sharding: N engine threads, N runtimes, one queue.
+//!
+//! [`EnginePool::spawn`] starts `n_engines` shard threads. Each thread
+//! calls the backend factory *on the shard thread* — the production
+//! backend owns a non-`Send` PJRT runtime, so every shard loads the
+//! manifest and constructs its own `Runtime` + `ScoringModel` +
+//! device-resident session independently — and then runs the standard
+//! [`Engine`] loop over the **single shared** [`RequestQueue`].
+//!
+//! The queue is the load balancer: there is no routing layer and no
+//! per-shard queue to get imbalanced. An idle shard blocks in
+//! `pop_batch`, a busy shard `try_pop`s whatever fits its free slots, so
+//! work-stealing is the default behaviour rather than a recovery path —
+//! no request can starve while any shard has a free slot, because that
+//! shard's next refill pops it.
+//!
+//! Each shard owns a private [`Metrics`] registry (no cross-thread lock
+//! contention on the serving path); [`PoolReport`] merges them into one
+//! fleet view via [`Metrics::merge`] and keeps the per-shard reports for
+//! imbalance triage.
+//!
+//! **Drain protocol** ([`EnginePool::drain`]): close the queue → every
+//! shard finishes the slots it already admitted (responses still flow) →
+//! join all threads. The first shard error or panic is reported after
+//! *all* threads have been joined, so one bad shard cannot leak the rest.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::batching::RequestQueue;
+use crate::metrics::{Metrics, Report};
+
+use super::{Engine, EngineBackend, EngineConfig};
+
+/// A running fleet of engine shards over one shared request queue.
+pub struct EnginePool {
+    queue: Arc<RequestQueue>,
+    handles: Vec<JoinHandle<Result<()>>>,
+    shards: Vec<Arc<Metrics>>,
+}
+
+impl EnginePool {
+    /// Spawn `n_engines` shard threads. `factory(shard)` runs on the
+    /// shard's own thread and builds its backend (for the production
+    /// backend: its own PJRT runtime + model + session); a construction
+    /// failure surfaces from [`EnginePool::drain`] with the shard index.
+    pub fn spawn<B, F>(
+        n_engines: usize,
+        factory: F,
+        cfg: EngineConfig,
+        queue: Arc<RequestQueue>,
+        stop: Arc<AtomicBool>,
+    ) -> Result<Self>
+    where
+        B: EngineBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(n_engines >= 1, "pool needs at least one engine shard");
+        let factory = Arc::new(factory);
+        let mut handles = Vec::with_capacity(n_engines);
+        let mut shards = Vec::with_capacity(n_engines);
+        for shard in 0..n_engines {
+            let metrics = Arc::new(Metrics::new());
+            shards.push(metrics.clone());
+            let factory = factory.clone();
+            let cfg = cfg.clone();
+            let queue = queue.clone();
+            let stop = stop.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("engine-{shard}"))
+                .spawn(move || -> Result<()> {
+                    let backend = factory(shard)
+                        .with_context(|| format!("constructing engine shard {shard}"))?;
+                    let mut engine = Engine::with_backend(backend, cfg, queue, metrics, stop)?;
+                    engine.run()
+                })
+                .with_context(|| format!("spawning engine shard {shard}"))?;
+            handles.push(handle);
+        }
+        Ok(EnginePool { queue, handles, shards })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Has any shard thread already exited? Before a drain this means a
+    /// shard died early (construction failure or engine error) — the
+    /// supervisor should initiate shutdown and let [`EnginePool::drain`]
+    /// surface the error instead of serving with a silently smaller fleet.
+    pub fn any_finished(&self) -> bool {
+        self.handles.iter().any(|h| h.is_finished())
+    }
+
+    /// The per-shard metric registries (shard order). Clone the slice
+    /// before [`EnginePool::drain`] to report on a finished fleet.
+    pub fn shard_metrics(&self) -> &[Arc<Metrics>] {
+        &self.shards
+    }
+
+    /// Fleet-wide + per-shard serving reports.
+    pub fn report(&self, since: Instant) -> PoolReport {
+        PoolReport::from_shards(&self.shards, since)
+    }
+
+    /// Graceful drain: close the queue (no new work is accepted), let
+    /// every shard decode its in-flight slots to completion, and join all
+    /// threads. Returns the first shard error/panic, after joining all.
+    pub fn drain(self) -> Result<()> {
+        self.queue.close();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (shard, handle) in self.handles.into_iter().enumerate() {
+            let outcome = match handle.join() {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(e.context(format!("engine shard {shard}"))),
+                Err(_) => Some(anyhow::anyhow!("engine shard {shard} panicked")),
+            };
+            if let Some(e) = outcome {
+                log::error!("{e:#}");
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// The pool's serving report: the fleet view (per-shard registries merged
+/// via [`Metrics::merge`]) plus each shard's own report for imbalance
+/// triage — a shard whose batch fill or completion count trails the
+/// others is visible at a glance.
+pub struct PoolReport {
+    pub fleet: Report,
+    pub shards: Vec<Report>,
+}
+
+impl PoolReport {
+    pub fn from_shards(shards: &[Arc<Metrics>], since: Instant) -> Self {
+        let fleet = Metrics::new();
+        for m in shards {
+            fleet.merge(m);
+        }
+        PoolReport {
+            fleet: fleet.report(since),
+            shards: shards.iter().map(|m| m.report(since)).collect(),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet ({} engine shard{}):\n{}",
+            self.shards.len(),
+            if self.shards.len() == 1 { "" } else { "s" },
+            self.fleet.render()
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "\nshard {i}: completed={} invocations={} fill={:.2} k̂={:.2} \
+                 queue p50={:.1}ms e2e p50={:.1}ms",
+                s.completed,
+                s.invocations,
+                s.mean_batch_fill,
+                s.mean_accepted_block,
+                s.queue_us.p50 / 1000.0,
+                s.e2e_us.p50 / 1000.0,
+            ));
+        }
+        out
+    }
+}

@@ -9,7 +9,17 @@
 //! ```
 //!
 //! Each connection gets a reader thread; responses are delivered through
-//! the per-request channel and written back in completion order.
+//! the per-request channel and written back in completion order. Finished
+//! connection threads are reaped every accept iteration (a long-lived
+//! server once accumulated one `JoinHandle` per connection for the life
+//! of the process), and the remainder are joined at shutdown — readers
+//! poll with a finite socket timeout so an idle open connection cannot
+//! wedge that join when the stop flag asks them to wind down.
+//!
+//! The server is topology-agnostic: it only pushes into the shared
+//! [`RequestQueue`], so it feeds one engine or an N-shard
+//! `scheduler::pool::EnginePool` identically — requests submitted here
+//! are picked up by whichever shard next has a free slot.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -83,12 +93,23 @@ impl Server {
             if self.stop.load(Ordering::Relaxed) {
                 break;
             }
+            // reap finished connection threads so `handles` tracks only
+            // live connections instead of growing for the process lifetime
+            let mut i = 0;
+            while i < handles.len() {
+                if handles[i].is_finished() {
+                    let _ = handles.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
             match self.listener.accept() {
                 Ok((stream, peer)) => {
                     log::debug!("connection from {peer}");
                     let submitter = self.submitter.clone();
+                    let stop = self.stop.clone();
                     handles.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, submitter) {
+                        if let Err(e) = handle_conn(stream, submitter, stop) {
                             log::debug!("connection ended: {e:#}");
                         }
                     }));
@@ -106,22 +127,67 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, submitter: Arc<Submitter>) -> Result<()> {
+fn handle_conn(stream: TcpStream, submitter: Arc<Submitter>, stop: Arc<AtomicBool>) -> Result<()> {
+    // finite read timeout so this thread can notice shutdown: a reader
+    // parked forever on an idle connection used to wedge `serve`'s handle
+    // join at drain time. Clear nonblocking first — on some platforms the
+    // accepted socket inherits the listener's nonblocking flag, which
+    // would turn the timeout into an instant-WouldBlock busy loop.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                // EOF — answer a final unterminated line first (the
+                // lines()-based loop this replaced delivered it too)
+                let msg = line.trim();
+                if !msg.is_empty() {
+                    reply_line(&mut writer, &submitter, msg)?;
+                }
+                break;
+            }
+            Ok(_) => {
+                let msg = line.trim();
+                if !msg.is_empty() {
+                    reply_line(&mut writer, &submitter, msg)?;
+                }
+                line.clear();
+                // shutdown: the queue is closed and every further request
+                // would get an error reply — stop reading here too, or a
+                // chatty client could hold the drain's handle join open
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e) => {
+                // timeout tick: bytes read so far stay buffered in `line`
+                // (read_line appends before erroring), so nothing is lost
+                // by retrying — unless the server is winding down
+                use std::io::ErrorKind;
+                if !matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+                    return Err(e.into());
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
         }
-        let reply = match serve_line(&line, &submitter) {
-            Ok(resp) => response_json(&resp),
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
     }
+    Ok(())
+}
+
+/// Serve one request line and write the JSON reply (or an error object).
+fn reply_line(writer: &mut TcpStream, submitter: &Submitter, msg: &str) -> Result<()> {
+    let reply = match serve_line(msg, submitter) {
+        Ok(resp) => response_json(&resp),
+        Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+    };
+    writer.write_all(reply.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
     Ok(())
 }
 

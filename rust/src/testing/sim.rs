@@ -8,7 +8,10 @@
 //! agreement rate with p1 is tunable, which lets property tests sweep the
 //! whole accept/reject spectrum without touching PJRT.
 
+use anyhow::Result;
+
 use crate::model::{BlockStepper, WindowScores};
+use crate::scheduler::EngineBackend;
 use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::tensor::{TensorF32, TensorI32};
 
@@ -290,6 +293,13 @@ impl<'a> SimSession<'a> {
         self.rows.iter().map(|r| r.trusted).sum()
     }
 
+    /// Tear down, returning the per-row sources. [`SimBackend`] round-
+    /// trips its slot sources through a transient session every step;
+    /// this gives them back without cloning.
+    pub fn into_srcs(self) -> Vec<Vec<i32>> {
+        self.srcs
+    }
+
     /// Sim analogue of `DecodeSession::scatter_rows` admission: replace
     /// slot `slots[i]`'s source with `new_srcs[i]` and reset that row's
     /// cache state — the sim equivalent of the device path scattering the
@@ -378,6 +388,101 @@ impl BlockStepper for SimSession<'_> {
         }
         Ok(WindowScores { topv, topi, base, k, topt })
     }
+}
+
+/// An owning, `Send` sim-backed [`EngineBackend`]: the engine/pool
+/// analogue of [`SimSession`]. Slot sources play the pinned encoder
+/// memory rows of the device session (`admit` is the sim analogue of
+/// encode + `scatter_rows`), and each `step_at` plays the windowed
+/// device contract — so `scheduler::pool::EnginePool` tests and the CI
+/// serve-smoke drive the *exact* production engine loop, with scoring
+/// identical to the offline [`sim_blockwise`] reference, without PJRT
+/// or artifacts.
+pub struct SimBackend {
+    model: SimModel,
+    /// per-slot resident sources; empty = free/PAD slot (inert rows)
+    srcs: Vec<Vec<i32>>,
+    t_len: usize,
+}
+
+impl SimBackend {
+    pub fn new(model: SimModel, bucket: usize, t_len: usize) -> Self {
+        assert!(bucket >= 1 && t_len >= 2);
+        SimBackend { model, srcs: vec![Vec::new(); bucket], t_len }
+    }
+}
+
+impl EngineBackend for SimBackend {
+    fn bucket(&self) -> usize {
+        self.srcs.len()
+    }
+
+    fn t_len(&self) -> usize {
+        self.t_len
+    }
+
+    fn k(&self) -> usize {
+        self.model.k
+    }
+
+    fn max_len(&self) -> usize {
+        self.t_len - 1
+    }
+
+    fn admit(&mut self, slots: &[usize], srcs: &[&[i32]]) -> Result<()> {
+        anyhow::ensure!(
+            slots.len() == srcs.len(),
+            "one source per admitted slot (row counts must match exactly)"
+        );
+        for (i, &slot) in slots.iter().enumerate() {
+            let bucket = self.srcs.len();
+            anyhow::ensure!(slot < bucket, "slot {slot} out of bucket {bucket}");
+            self.srcs[slot] = srcs[i].to_vec();
+        }
+        Ok(())
+    }
+
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        // the windowed sim mode keeps no cross-step state, so a transient
+        // session over the current slot sources is exactly the device
+        // session's windowed step contract; the sources are moved in and
+        // back out (no per-step clone on the engine hot loop)
+        let mut session = SimSession::new(&self.model, std::mem::take(&mut self.srcs));
+        let scores = session.step_at(tgt_in, frontiers);
+        self.srcs = session.into_srcs();
+        scores
+    }
+}
+
+/// Drive `n` deterministic requests through a fresh `shards`-shard
+/// sim-backed engine pool and drain it — the shared burst harness behind
+/// `coordinator_bench`'s shard-count axis and `latency_sweep`'s pool
+/// sweep (the coordinator integration tests keep their own richer
+/// harness: mixed criteria, concurrent producers, metrics capture).
+pub fn sim_pool_burst(shards: usize, n: usize) -> anyhow::Result<()> {
+    use crate::batching::RequestQueue;
+    use crate::scheduler::pool::EnginePool;
+    use crate::scheduler::{EngineConfig, Submitter};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let pool = EnginePool::spawn(
+        shards,
+        |_| Ok(SimBackend::new(SimModel::new(64, 6, 0.6, 14, 0xBE7C), 4, 25)),
+        EngineConfig::default(),
+        queue.clone(),
+        stop,
+    )?;
+    let submitter = Submitter::new(queue);
+    let rxs: Vec<_> =
+        (0..n).map(|i| submitter.submit(vec![3 + (i % 37) as i32, 11, 2], None)).collect();
+    for rx in rxs {
+        let resp = rx.recv()?;
+        anyhow::ensure!(resp.error.is_none(), "pool request failed: {:?}", resp.error);
+    }
+    pool.drain()
 }
 
 /// Drive a full blockwise decode against the simulated model; returns
@@ -591,6 +696,28 @@ mod tests {
             assert_eq!(a.topi.data, b.topi.data, "step {step}");
             assert_eq!(a.topv.data, b.topv.data, "step {step}");
         }
+    }
+
+    #[test]
+    fn sim_backend_steps_like_a_windowed_session() {
+        // the engine-pool backend must score exactly like the windowed
+        // SimSession over the same (admitted) slot sources
+        let m = SimModel::new(60, 3, 0.6, 9, 17);
+        let src0 = vec![5, 9, EOS];
+        let src1 = vec![8, EOS];
+        let mut be = SimBackend::new(m.clone(), 2, 12);
+        be.admit(&[0, 1], &[src0.as_slice(), src1.as_slice()]).unwrap();
+        let mut tgt = TensorI32::zeros(&[2, 12]);
+        tgt.row_mut(0)[..3].copy_from_slice(&[BOS, 11, 12]);
+        tgt.row_mut(1)[0] = BOS;
+        let a = be.step_at(&tgt, &[1, 0]).unwrap();
+        let b = SimSession::new(&m, vec![src0, src1]).step_at(&tgt, &[1, 0]).unwrap();
+        assert_eq!(a.base, b.base);
+        assert_eq!(a.topi.data, b.topi.data);
+        assert_eq!(a.topv.data, b.topv.data);
+        // strict admission contract, like the device session
+        assert!(be.admit(&[0, 1], &[[4, EOS].as_slice()]).is_err());
+        assert!(be.admit(&[7], &[[4, EOS].as_slice()]).is_err());
     }
 
     #[test]

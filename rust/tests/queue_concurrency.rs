@@ -1,0 +1,144 @@
+//! Multi-consumer [`RequestQueue`] coverage: the queue is the engine
+//! pool's load balancer, so N shard threads calling `pop_batch`/`try_pop`
+//! concurrently must never drop, duplicate, or starve a request — and
+//! every consumer must terminate once the queue is closed and drained
+//! (the pool's drain protocol).
+//!
+//! Seeded through the `testing::check` property harness: a failure
+//! reports its seed, and `BLOCKDECODE_PROP_SEED` replays it exactly
+//! (thread *interleavings* still vary run to run — the assertions hold
+//! for every interleaving, the seed pins the workload shape).
+
+use std::collections::HashSet;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blockdecode::batching::{Request, RequestQueue};
+use blockdecode::testing::check;
+
+fn req(id: u64) -> Request {
+    // the response channel is irrelevant here; the receiver is dropped
+    let (tx, _rx) = channel();
+    Request { id, src: vec![3, 4, 2], criterion: None, arrived: Instant::now(), respond: tx }
+}
+
+/// Run `consumers` shard-like threads against `producers` pushers and
+/// return every id delivered, in delivery order per consumer. Consumers
+/// alternate blocking `pop_batch` and non-blocking `try_pop` (both refill
+/// paths of the engine) and exit on the closed-and-drained signal.
+fn run_contended(
+    consumers: usize,
+    producers: usize,
+    per_producer: usize,
+    max_batch: usize,
+) -> Vec<u64> {
+    let q = Arc::new(RequestQueue::new());
+    // consumers first, so pops race the pushes from the very start
+    let consumer_handles: Vec<_> = (0..consumers)
+        .map(|c| {
+            let q = q.clone();
+            std::thread::spawn(move || -> Vec<u64> {
+                let mut got = Vec::new();
+                let mut turn = c; // stagger which path each thread starts on
+                loop {
+                    let batch = if turn % 2 == 0 {
+                        match q.pop_batch(max_batch, Duration::from_millis(2)) {
+                            Some(v) => v,
+                            None => break, // closed and drained: clean exit
+                        }
+                    } else {
+                        q.try_pop(max_batch)
+                    };
+                    turn += 1;
+                    got.extend(batch.iter().map(|r| r.id));
+                }
+                got
+            })
+        })
+        .collect();
+    let producer_handles: Vec<_> = (0..producers)
+        .map(|p| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    assert!(q.push(req((p * per_producer + i) as u64)), "push into open queue");
+                }
+            })
+        })
+        .collect();
+    for h in producer_handles {
+        h.join().unwrap();
+    }
+    q.close();
+    let mut all = Vec::new();
+    for h in consumer_handles {
+        // a hang here would be a starvation/lost-wakeup bug; the harness
+        // timeout turns it into a visible failure
+        all.extend(h.join().unwrap());
+    }
+    all
+}
+
+#[test]
+fn multi_consumer_pop_never_drops_or_duplicates() {
+    check("queue/multi_consumer", 6, |rng| {
+        let consumers = rng.range(2, 6) as usize; // 2..=5 engine shards
+        let producers = rng.range(1, 4) as usize;
+        let per_producer = rng.range(30, 80) as usize;
+        let max_batch = rng.range(1, 9) as usize; // mixed free-slot counts
+        let total = producers * per_producer;
+        let all = run_contended(consumers, producers, per_producer, max_batch);
+        assert_eq!(all.len(), total, "requests dropped or duplicated under contention");
+        let distinct: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(distinct.len(), total, "a request was delivered to two consumers");
+        assert!(
+            distinct.iter().all(|&id| (id as usize) < total),
+            "a consumer received an id that was never pushed"
+        );
+    });
+}
+
+#[test]
+fn blocked_consumers_all_wake_on_close() {
+    // liveness of the drain protocol: consumers parked in pop_batch with a
+    // long timeout must all wake and exit when the queue closes empty
+    let q = Arc::new(RequestQueue::new());
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let q = q.clone();
+            std::thread::spawn(move || q.pop_batch(8, Duration::from_secs(30)))
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    q.close();
+    for h in handles {
+        assert!(h.join().unwrap().is_none(), "closed+empty queue must return None");
+    }
+}
+
+#[test]
+fn close_with_backlog_still_delivers_everything() {
+    // drain semantics: close() stops *admission*, not delivery — a backlog
+    // present at close time is still handed out to the consumers
+    let q = Arc::new(RequestQueue::new());
+    for i in 0..40 {
+        assert!(q.push(req(i)));
+    }
+    q.close();
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let q = q.clone();
+            std::thread::spawn(move || -> Vec<u64> {
+                let mut got = Vec::new();
+                while let Some(batch) = q.pop_batch(4, Duration::from_millis(2)) {
+                    got.extend(batch.iter().map(|r| r.id));
+                }
+                got
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    all.sort_unstable();
+    assert_eq!(all, (0..40).collect::<Vec<u64>>());
+}

@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Serve smoke: boot `repro serve` with a multi-engine pool on the
+# simulator backend (no artifacts, no PJRT compilation), drive it with
+# the `Client`-based load generator through a few hundred mixed-criterion
+# requests, then SIGINT it and assert a clean graceful drain — the
+# server/engine path used to be code CI never executed.
+#
+# Used as a CI step after the tier-1 build (the release binary is already
+# present there); runs standalone too and builds the binary if missing.
+#
+# Knobs:
+#   SMOKE_ENGINES   engine shards to boot        (default 2)
+#   SMOKE_REQUESTS  requests the loadgen drives  (default 300)
+#   SMOKE_LOG       serve output capture         (default serve-smoke.log,
+#                   uploaded as a CI artifact for perf triage)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/repro
+if [ ! -x "$BIN" ]; then
+    (cd rust && cargo build --release)
+fi
+
+ENGINES="${SMOKE_ENGINES:-2}"
+REQUESTS="${SMOKE_REQUESTS:-300}"
+LOG="${SMOKE_LOG:-serve-smoke.log}"
+
+"$BIN" serve --backend sim --engines "$ENGINES" --addr 127.0.0.1:0 >"$LOG" 2>&1 &
+SERVE_PID=$!
+# on every exit path: never leak the server, always surface its log (the
+# `set -e` aborts included — a failing loadgen used to leave the server
+# running and the log unseen)
+cleanup() {
+    kill "$SERVE_PID" 2>/dev/null || true
+    echo "---- serve log ----"
+    cat "$LOG" 2>/dev/null || true
+}
+trap cleanup EXIT
+
+# the listen line carries the ephemeral port
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(awk '/^serving / {print $NF; exit}' "$LOG" 2>/dev/null || true)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "serve-smoke: server died during startup" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "serve-smoke: no listen address after 10s" >&2
+    exit 1
+fi
+echo "serve-smoke: $ENGINES-shard pool on $ADDR, driving $REQUESTS requests"
+
+"$BIN" loadgen --addr "$ADDR" --n "$REQUESTS" --conns 4
+
+# SIGINT must drain gracefully: queue closes, in-flight slots finish,
+# every shard joins, metrics render, exit 0
+kill -INT "$SERVE_PID"
+RC=0
+wait "$SERVE_PID" || RC=$?
+
+if [ "$RC" -ne 0 ]; then
+    echo "serve-smoke: serve exited rc=$RC after SIGINT (expected clean drain)" >&2
+    exit 1
+fi
+PLURAL="s"
+[ "$ENGINES" -eq 1 ] && PLURAL=""
+grep -q "drained $ENGINES engine shard$PLURAL cleanly" "$LOG" || {
+    echo "serve-smoke: missing clean-drain line in serve output" >&2
+    exit 1
+}
+# the fleet report must show every request completed and per-shard lines
+grep -q "fleet ($ENGINES engine shard$PLURAL):" "$LOG" || {
+    echo "serve-smoke: missing fleet metrics render" >&2
+    exit 1
+}
+if [ "$ENGINES" -ge 2 ]; then
+    grep -q "^shard 1:" "$LOG" || {
+        echo "serve-smoke: missing per-shard metrics render" >&2
+        exit 1
+    }
+fi
+grep -q "completed=$REQUESTS " "$LOG" || {
+    echo "serve-smoke: fleet report does not show $REQUESTS completed" >&2
+    exit 1
+}
+echo "serve-smoke: OK ($ENGINES shards, $REQUESTS requests, clean SIGINT drain)"
