@@ -7,11 +7,9 @@
 //! pure-rust coordinator must stay far below the model invocation cost
 //! (DESIGN.md §8 target: <10% of end-to-end time).
 
-use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Instant;
 
-use blockdecode::batching::{Request, RequestQueue};
+use blockdecode::batching::{response_channel, Request, RequestQueue};
 use blockdecode::bench::Bench;
 use blockdecode::decoding::state::BlockState;
 use blockdecode::decoding::Criterion;
@@ -100,14 +98,8 @@ fn main() {
     let q = Arc::new(RequestQueue::new());
     b.case("queue/push_pop_256", "req", || {
         for i in 0..256u64 {
-            let (tx, _rx) = channel();
-            q.push(Request {
-                id: i,
-                src: vec![4, 5, 2],
-                criterion: None,
-                arrived: Instant::now(),
-                respond: tx,
-            });
+            let (tx, _rx) = response_channel();
+            q.push(Request::new(i, vec![4, 5, 2], None, tx));
         }
         let mut n = 0;
         while n < 256 {

@@ -10,14 +10,85 @@
 //! concurrent `pop_batch`/`try_pop` callers must never drop, duplicate,
 //! or starve a request (`rust/tests/queue_concurrency.rs` stress-tests
 //! exactly that under the seeded property harness).
+//!
+//! Production-traffic survival hooks live here too:
+//! - the queue is optionally **capacity-bounded** ([`RequestQueue::with_capacity`])
+//!   and [`RequestQueue::push`] reports [`Push::Shed`] when full, so the
+//!   front door can reject with `{"error":"overloaded"}` instead of
+//!   queueing unboundedly;
+//! - every [`Request`] carries an optional **deadline** and a cooperative
+//!   **cancel** flag, and its [`ResponseSender`] knows whether the paired
+//!   [`ResponseReceiver`] was dropped (client gone), so engines can retire
+//!   dead work instead of decoding into the void;
+//! - [`RequestQueue::requeue`] hands a crashed shard's in-flight requests
+//!   back to the front of the queue (capacity-exempt: they were already
+//!   admitted once) so another shard can finish them.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvError, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::decoding::criteria::Criterion;
 use crate::decoding::state::BlockStats;
+
+/// Sender half of a response channel that also tracks whether the
+/// receiving side is still listening. Engines use
+/// [`ResponseSender::is_disconnected`] to retire slots whose client
+/// abandoned the request (dropped the receiver) instead of spending
+/// model invocations on a reply nobody will read.
+#[derive(Debug, Clone)]
+pub struct ResponseSender {
+    tx: mpsc::Sender<Response>,
+    alive: Arc<AtomicBool>,
+}
+
+/// Receiver half; dropping it marks the request abandoned for the engine.
+#[derive(Debug)]
+pub struct ResponseReceiver {
+    rx: mpsc::Receiver<Response>,
+    alive: Arc<AtomicBool>,
+}
+
+/// A one-shot response channel with liveness tracking.
+pub fn response_channel() -> (ResponseSender, ResponseReceiver) {
+    let (tx, rx) = mpsc::channel();
+    let alive = Arc::new(AtomicBool::new(true));
+    (ResponseSender { tx, alive: alive.clone() }, ResponseReceiver { rx, alive })
+}
+
+impl ResponseSender {
+    /// Deliver the terminal reply; false if the receiver is already gone.
+    pub fn send(&self, r: Response) -> bool {
+        self.tx.send(r).is_ok()
+    }
+
+    /// Has the client dropped its [`ResponseReceiver`]?
+    pub fn is_disconnected(&self) -> bool {
+        !self.alive.load(Ordering::Acquire)
+    }
+}
+
+impl ResponseReceiver {
+    pub fn recv(&self) -> Result<Response, RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<Response, RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+
+    pub fn try_recv(&self) -> Result<Response, TryRecvError> {
+        self.rx.try_recv()
+    }
+}
+
+impl Drop for ResponseReceiver {
+    fn drop(&mut self) {
+        self.alive.store(false, Ordering::Release);
+    }
+}
 
 /// A decode request entering the coordinator.
 #[derive(Debug)]
@@ -27,7 +98,48 @@ pub struct Request {
     /// per-request criterion override (server protocol allows it)
     pub criterion: Option<Criterion>,
     pub arrived: Instant,
-    pub respond: Sender<Response>,
+    /// absolute point after which the engine must reply `timeout` instead
+    /// of admitting or continuing to decode this request
+    pub deadline: Option<Instant>,
+    /// cooperative cancellation: the server raises it when the client
+    /// connection goes away mid-decode
+    pub cancel: Arc<AtomicBool>,
+    /// how many times a crashing shard handed this request back to the
+    /// queue (the engine allows at most one requeue, then errors out)
+    pub requeues: u32,
+    pub respond: ResponseSender,
+}
+
+impl Request {
+    /// A fresh request: arrival stamped now, no deadline, not cancelled.
+    pub fn new(id: u64, src: Vec<i32>, criterion: Option<Criterion>, respond: ResponseSender) -> Self {
+        Request {
+            id,
+            src,
+            criterion,
+            arrived: Instant::now(),
+            deadline: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            requeues: 0,
+            respond,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Deadline passed (a request with no deadline never expires).
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Cancelled explicitly or abandoned (receiver dropped) — either way
+    /// no one is waiting for tokens any more.
+    pub fn abandoned(&self) -> bool {
+        self.cancel.load(Ordering::Acquire) || self.respond.is_disconnected()
+    }
 }
 
 /// The coordinator's answer.
@@ -38,14 +150,36 @@ pub struct Response {
     pub stats: BlockStats,
     pub queued: Duration,
     pub e2e: Duration,
+    /// times a crashed shard handed the request back before this reply
+    pub requeues: u32,
     pub error: Option<String>,
 }
 
-/// Thread-safe dynamic batching queue.
+/// Outcome of [`RequestQueue::push`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Push {
+    /// admitted into the queue
+    Accepted,
+    /// queue at capacity: load-shed. Carries the queue depth observed at
+    /// rejection time so the front door can size its `retry_after_ms` hint.
+    Shed { depth: usize },
+    /// queue closed (server draining) — no new work accepted
+    Closed,
+}
+
+impl Push {
+    pub fn accepted(&self) -> bool {
+        matches!(self, Push::Accepted)
+    }
+}
+
+/// Thread-safe dynamic batching queue, optionally capacity-bounded.
 #[derive(Debug, Default)]
 pub struct RequestQueue {
     q: Mutex<QueueInner>,
     cv: Condvar,
+    /// 0 = unbounded
+    capacity: usize,
 }
 
 #[derive(Debug, Default)]
@@ -55,19 +189,52 @@ struct QueueInner {
 }
 
 impl RequestQueue {
+    /// Unbounded queue (tests, offline tools).
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Enqueue; returns false if the queue is closed.
-    pub fn push(&self, r: Request) -> bool {
+    /// Capacity-bounded queue; `capacity == 0` means unbounded. When full,
+    /// [`RequestQueue::push`] sheds instead of queueing — overload degrades
+    /// to fast rejections, not unbounded memory and multi-second waits.
+    pub fn with_capacity(capacity: usize) -> Self {
+        RequestQueue { capacity, ..Self::default() }
+    }
+
+    /// Admission-time bound (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue; reports shed (at capacity) and closed outcomes so the
+    /// caller can synthesize the right terminal reply.
+    pub fn push(&self, r: Request) -> Push {
         let mut q = self.q.lock().unwrap();
         if q.closed {
-            return false;
+            return Push::Closed;
+        }
+        if self.capacity != 0 && q.items.len() >= self.capacity {
+            return Push::Shed { depth: q.items.len() };
         }
         q.items.push_back(r);
         self.cv.notify_all();
-        true
+        Push::Accepted
+    }
+
+    /// Hand back a request from a crashed shard, at the *front* of the
+    /// queue (it has been waiting longest). Exempt from the capacity bound
+    /// — the request was already admitted once — but still refused when
+    /// closed: during drain no consumer may remain to pick it up, so the
+    /// caller must send an error reply instead of requeueing into a void —
+    /// refusal hands the request back so the caller still owns its channel.
+    pub fn requeue(&self, r: Request) -> Result<(), Request> {
+        let mut q = self.q.lock().unwrap();
+        if q.closed {
+            return Err(r);
+        }
+        q.items.push_front(r);
+        self.cv.notify_all();
+        Ok(())
     }
 
     /// No more producers: wake all consumers.
@@ -158,16 +325,12 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
     use std::sync::Arc;
     use std::thread;
 
-    fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
-        let (tx, rx) = channel();
-        (
-            Request { id, src: vec![4, 2], criterion: None, arrived: Instant::now(), respond: tx },
-            rx,
-        )
+    fn req(id: u64) -> (Request, ResponseReceiver) {
+        let (tx, rx) = response_channel();
+        (Request::new(id, vec![4, 2], None, tx), rx)
     }
 
     #[test]
@@ -228,11 +391,11 @@ mod tests {
     }
 
     #[test]
-    fn push_after_close_fails() {
+    fn push_after_close_reports_closed() {
         let q = RequestQueue::new();
         q.close();
         let (r, _k) = req(1);
-        assert!(!q.push(r));
+        assert_eq!(q.push(r), Push::Closed);
     }
 
     #[test]
@@ -268,5 +431,79 @@ mod tests {
         let (r, _k) = req(1);
         q.push(r);
         assert_eq!(q.try_pop(4).len(), 1);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_capacity() {
+        let q = RequestQueue::with_capacity(2);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        let (r3, _k3) = req(3);
+        assert_eq!(q.push(r1), Push::Accepted);
+        assert_eq!(q.push(r2), Push::Accepted);
+        assert_eq!(q.push(r3), Push::Shed { depth: 2 });
+        assert_eq!(q.len(), 2);
+        // draining frees admission capacity again
+        assert_eq!(q.try_pop(1).len(), 1);
+        let (r4, _k4) = req(4);
+        assert_eq!(q.push(r4), Push::Accepted);
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded() {
+        let q = RequestQueue::with_capacity(0);
+        let mut keep = vec![];
+        for i in 0..64 {
+            let (r, k) = req(i);
+            assert!(q.push(r).accepted());
+            keep.push(k);
+        }
+        assert_eq!(q.len(), 64);
+    }
+
+    #[test]
+    fn requeue_bypasses_capacity_and_goes_first() {
+        let q = RequestQueue::with_capacity(1);
+        let (r1, _k1) = req(1);
+        assert!(q.push(r1).accepted());
+        // capacity full, but a crashed shard's handback still lands —
+        // and at the front, since it has been waiting longest
+        let (r2, _k2) = req(2);
+        assert!(q.requeue(r2).is_ok());
+        let batch = q.try_pop(8);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1]);
+    }
+
+    #[test]
+    fn requeue_into_closed_queue_hands_the_request_back() {
+        let q = RequestQueue::new();
+        q.close();
+        let (r, _k) = req(7);
+        let back = q.requeue(r).expect_err("requeue after close would strand the request");
+        assert_eq!(back.id, 7);
+    }
+
+    #[test]
+    fn receiver_drop_flips_disconnected() {
+        let (tx, rx) = response_channel();
+        assert!(!tx.is_disconnected());
+        drop(rx);
+        assert!(tx.is_disconnected());
+    }
+
+    #[test]
+    fn request_expiry_and_abandonment() {
+        let (r, _k) = req(1);
+        let now = Instant::now();
+        assert!(!r.expired(now), "no deadline: never expires");
+        let r = r.with_deadline(Some(now));
+        assert!(r.expired(now + Duration::from_millis(1)));
+        assert!(!r.abandoned());
+        r.cancel.store(true, Ordering::Release);
+        assert!(r.abandoned());
+        // dropping the receiver is the other abandonment path
+        let (r2, k2) = req(2);
+        drop(k2);
+        assert!(r2.abandoned());
     }
 }

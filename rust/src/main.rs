@@ -32,7 +32,7 @@ use blockdecode::model::ScoringModel;
 use blockdecode::runtime::{Manifest, Runtime};
 use blockdecode::scheduler::pool::{EnginePool, PoolReport};
 use blockdecode::scheduler::{EngineConfig, ModelBackend};
-use blockdecode::server::{parse_criterion, Client, Server};
+use blockdecode::server::{parse_criterion, Client, Decoded, Server};
 use blockdecode::testing::sim::{SimBackend, SimModel};
 use blockdecode::tokenizer::{Vocab, EOS};
 use blockdecode::util::argparse::{ArgError, ArgSpec};
@@ -120,6 +120,24 @@ fn serve(rest: &[String]) -> Result<()> {
             "device",
             "scoring backend: 'device' (PJRT over the artifacts) or 'sim' \
              (deterministic simulator; no artifacts needed — the CI smoke target)",
+        )
+        .opt(
+            "deadline-ms",
+            "0",
+            "default per-request deadline in ms (0 = none; a request's own \
+             deadline_ms field overrides)",
+        )
+        .opt(
+            "queue-cap",
+            "0",
+            "request queue capacity (0 = unbounded); when full, requests are \
+             shed with an 'overloaded' reply + retry_after_ms hint",
+        )
+        .opt(
+            "restart-budget",
+            "2",
+            "times the pool supervisor respawns a crashed engine shard before \
+             declaring it dead",
         );
     let a = spec.parse(rest)?;
 
@@ -129,12 +147,22 @@ fn serve(rest: &[String]) -> Result<()> {
         criterion: parse_criterion(&a.str("criterion"))
             .ok_or_else(|| anyhow::anyhow!("bad criterion"))?,
         min_block: a.usize("min-block")?,
+        restart_budget: a.usize("restart-budget")?,
         ..Default::default()
     };
+    let deadline = match a.usize("deadline-ms")? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
 
-    let queue = Arc::new(RequestQueue::new());
+    let queue = Arc::new(RequestQueue::with_capacity(a.usize("queue-cap")?));
     let stop = Arc::new(AtomicBool::new(false));
-    let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?;
+    // front-door registry: load sheds are counted here (a shed request
+    // never reaches any shard) and folded into the fleet report
+    let door = Arc::new(blockdecode::metrics::Metrics::new());
+    let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?
+        .with_default_deadline(deadline)
+        .with_door(door.clone());
     let t0 = Instant::now();
 
     // each shard constructs its backend on its own thread (the PJRT
@@ -209,7 +237,7 @@ fn serve(rest: &[String]) -> Result<()> {
     let shards = pool.shard_metrics().to_vec();
     pool.drain()?;
     let _ = srv.join();
-    println!("{}", PoolReport::from_shards(&shards, t0).render());
+    println!("{}", PoolReport::from_shards_with_door(&shards, Some(&door), t0).render());
     println!(
         "drained {} engine shard{} cleanly",
         n_engines,
@@ -229,13 +257,23 @@ fn sim_serve_model() -> SimModel {
 /// Drive a running server with concurrent `Client` connections and mixed
 /// acceptance criteria — the CI serve-smoke driver and a quick local load
 /// generator. Exits nonzero if any request fails its sanity checks.
+/// `--allow-shed` turns 'overloaded' replies from a failure into a count
+/// (the overload-drill mode the smoke script's chaos phase uses), and
+/// `--timeout-ms` bounds every reply wait so a wedged server surfaces as
+/// a clean error instead of a hang.
 fn loadgen(rest: &[String]) -> Result<()> {
     let spec = ArgSpec::new("loadgen", "drive a running server with mixed-criterion load")
         .req("addr", "server address (host:port)")
         .opt("n", "300", "total requests")
         .opt("conns", "4", "concurrent client connections")
         .opt("src-len", "6", "tokens per synthetic source (EOS appended)")
-        .opt("vocab", "64", "source token id range");
+        .opt("vocab", "64", "source token id range")
+        .opt("timeout-ms", "30000", "client read deadline per reply (0 = wait forever)")
+        .flag(
+            "allow-shed",
+            "tolerate 'overloaded' replies: count them instead of failing \
+             (overload drills against a capacity-bounded queue)",
+        );
     let a = spec.parse(rest)?;
     let addr = a.str("addr");
     anyhow::ensure!(!addr.is_empty(), "--addr is required");
@@ -243,6 +281,11 @@ fn loadgen(rest: &[String]) -> Result<()> {
     let conns = a.usize("conns")?.max(1).min(n.max(1));
     let src_len = a.usize("src-len")?.max(1);
     let vocab = a.usize("vocab")?.max(8);
+    let timeout = match a.usize("timeout-ms")? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let allow_shed = a.flag("allow-shed");
 
     // mixed criteria: the server default plus every wire-named criterion
     const CRITERIA: [Option<&str>; 4] = [None, Some("exact"), Some("top2"), Some("dist2")];
@@ -251,56 +294,85 @@ fn loadgen(rest: &[String]) -> Result<()> {
     let mut lanes = Vec::new();
     for lane in 0..conns {
         let addr = addr.clone();
-        lanes.push(std::thread::spawn(move || -> Result<(usize, Vec<f64>)> {
-            let mut client = Client::connect(&addr)?;
-            let mut rng = Rng::new(0x10AD + lane as u64);
-            let mut lat = Vec::new();
-            let mut done = 0usize;
-            for i in 0..n {
-                if i % conns != lane {
-                    continue;
+        lanes.push(std::thread::spawn(
+            move || -> Result<(usize, usize, Vec<f64>, Vec<f64>)> {
+                let mut client = Client::connect(&addr)?;
+                client.set_read_timeout(timeout)?;
+                let mut rng = Rng::new(0x10AD + lane as u64);
+                let mut lat = Vec::new();
+                let mut queued = Vec::new();
+                let mut done = 0usize;
+                let mut shed = 0usize;
+                for i in 0..n {
+                    if i % conns != lane {
+                        continue;
+                    }
+                    let mut src: Vec<i32> =
+                        (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
+                    src.push(EOS);
+                    // lane-local alternation: with i % conns fixed per lane,
+                    // indexing by i would pin one criterion per connection
+                    // whenever conns divides CRITERIA.len()
+                    let crit = CRITERIA[(i / conns) % CRITERIA.len()];
+                    let sent = Instant::now();
+                    match client.try_decode(&src, crit, None)? {
+                        Decoded::Ok(r) => {
+                            lat.push(sent.elapsed().as_secs_f64() * 1000.0);
+                            queued.push(r.queued_ms);
+                            anyhow::ensure!(!r.tokens.is_empty(), "request {i}: empty decode");
+                            anyhow::ensure!(r.invocations >= 1, "request {i}: zero invocations");
+                            anyhow::ensure!(
+                                r.blocks.iter().sum::<usize>() == r.tokens.len(),
+                                "request {i}: accepted blocks do not sum to the token count"
+                            );
+                            done += 1;
+                        }
+                        Decoded::Overloaded { .. } => {
+                            anyhow::ensure!(
+                                allow_shed,
+                                "request {i}: shed by the server \
+                                 (rerun with --allow-shed for overload drills)"
+                            );
+                            shed += 1;
+                        }
+                    }
                 }
-                let mut src: Vec<i32> =
-                    (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
-                src.push(EOS);
-                // lane-local alternation: with i % conns fixed per lane,
-                // indexing by i would pin one criterion per connection
-                // whenever conns divides CRITERIA.len()
-                let crit = CRITERIA[(i / conns) % CRITERIA.len()];
-                let sent = Instant::now();
-                let r = client.decode(&src, crit)?;
-                lat.push(sent.elapsed().as_secs_f64() * 1000.0);
-                anyhow::ensure!(!r.tokens.is_empty(), "request {i}: empty decode");
-                anyhow::ensure!(r.invocations >= 1, "request {i}: zero invocations");
-                anyhow::ensure!(
-                    r.blocks.iter().sum::<usize>() == r.tokens.len(),
-                    "request {i}: accepted blocks do not sum to the token count"
-                );
-                done += 1;
-            }
-            Ok((done, lat))
-        }));
+                Ok((done, shed, lat, queued))
+            },
+        ));
     }
     let mut done = 0usize;
+    let mut shed = 0usize;
     let mut lat = Vec::new();
+    let mut queued = Vec::new();
     for (lane, h) in lanes.into_iter().enumerate() {
-        let (d, ls) = h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
+        let (d, sh, ls, qs) =
+            h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
         done += d;
+        shed += sh;
         lat.extend(ls);
+        queued.extend(qs);
     }
-    anyhow::ensure!(done == n, "only {done}/{n} requests completed");
+    // every request resolved exactly once: decoded or (tolerated) shed
+    anyhow::ensure!(done + shed == n, "only {done} decoded + {shed} shed of {n} requests");
     let s = summarize(&lat);
+    let q = summarize(&queued);
     println!(
-        "loadgen: {} requests over {} connection{} in {:.2}s — \
-         p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms",
-        n,
+        "loadgen: {} decoded over {} connection{} in {:.2}s — \
+         e2e p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms; queue-wait p50 {:.1}ms p99 {:.1}ms",
+        done,
         conns,
         if conns == 1 { "" } else { "s" },
         t0.elapsed().as_secs_f64(),
         s.p50,
         s.p90,
-        s.p99
+        s.p99,
+        q.p50,
+        q.p99
     );
+    if shed > 0 {
+        println!("loadgen: shed replies: {shed}");
+    }
     Ok(())
 }
 

@@ -23,6 +23,11 @@ struct Inner {
     requests: u64,
     completed: u64,
     failed: u64,
+    shed: u64,
+    expired: u64,
+    cancelled: u64,
+    requeued: u64,
+    restarts: u64,
     tokens_out: u64,
     invocations: u64,
     accept_steps: u64,
@@ -38,6 +43,16 @@ pub struct Report {
     pub requests: u64,
     pub completed: u64,
     pub failed: u64,
+    /// admission rejected at the front door (queue at capacity)
+    pub shed: u64,
+    /// deadline passed before or during decode — timeout reply sent
+    pub expired: u64,
+    /// client cancelled or disconnected — slot retired, no reply needed
+    pub cancelled: u64,
+    /// in-flight requests a crashed shard handed back to the queue
+    pub requeued: u64,
+    /// supervisor respawns of a crashed engine shard
+    pub restarts: u64,
     pub tokens_out: u64,
     pub invocations: u64,
     /// paper's k̂: tokens accepted / accept substeps
@@ -59,6 +74,31 @@ impl Metrics {
 
     pub fn on_fail(&self) {
         self.inner.lock().unwrap().failed += 1;
+    }
+
+    /// Load-shed at admission: queue at capacity, request rejected fast.
+    pub fn on_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Deadline expired (queued or mid-decode); a timeout reply was sent.
+    pub fn on_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// Client cancelled or disconnected; the slot was retired silently.
+    pub fn on_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// A crashed shard handed an in-flight request back to the queue.
+    pub fn on_requeue(&self) {
+        self.inner.lock().unwrap().requeued += 1;
+    }
+
+    /// The pool supervisor respawned this shard after a crash.
+    pub fn on_restart(&self) {
+        self.inner.lock().unwrap().restarts += 1;
     }
 
     pub fn on_complete(&self, queued: Duration, e2e: Duration, tokens: usize) {
@@ -91,6 +131,11 @@ impl Metrics {
         m.requests += o.requests;
         m.completed += o.completed;
         m.failed += o.failed;
+        m.shed += o.shed;
+        m.expired += o.expired;
+        m.cancelled += o.cancelled;
+        m.requeued += o.requeued;
+        m.restarts += o.restarts;
         m.tokens_out += o.tokens_out;
         m.invocations += o.invocations;
         m.accept_steps += o.accept_steps;
@@ -106,6 +151,11 @@ impl Metrics {
             requests: m.requests,
             completed: m.completed,
             failed: m.failed,
+            shed: m.shed,
+            expired: m.expired,
+            cancelled: m.cancelled,
+            requeued: m.requeued,
+            restarts: m.restarts,
             tokens_out: m.tokens_out,
             invocations: m.invocations,
             mean_accepted_block: if m.accept_steps == 0 {
@@ -130,6 +180,7 @@ impl Report {
         let secs = self.wall.as_secs_f64().max(1e-9);
         format!(
             "requests={} completed={} failed={}\n\
+             robustness: shed={} expired={} cancelled={} requeued={} restarts={}\n\
              throughput: {:.2} req/s, {:.1} tok/s\n\
              invocations={} (mean batch fill {:.2})\n\
              mean accepted block size k̂ = {:.2}\n\
@@ -138,6 +189,11 @@ impl Report {
             self.requests,
             self.completed,
             self.failed,
+            self.shed,
+            self.expired,
+            self.cancelled,
+            self.requeued,
+            self.restarts,
             self.completed as f64 / secs,
             self.tokens_out as f64 / secs,
             self.invocations,
@@ -204,6 +260,27 @@ mod tests {
         // the source registries are untouched
         assert_eq!(a.report(Instant::now()).requests, 1);
         assert_eq!(b.report(Instant::now()).requests, 2);
+    }
+
+    #[test]
+    fn robustness_counters_fold_and_render() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.on_shed();
+        a.on_shed();
+        a.on_expired();
+        a.on_requeue();
+        b.on_cancelled();
+        b.on_restart();
+        b.on_expired();
+        let fleet = Metrics::new();
+        fleet.merge(&a);
+        fleet.merge(&b);
+        let r = fleet.report(Instant::now());
+        assert_eq!((r.shed, r.expired, r.cancelled, r.requeued, r.restarts), (2, 2, 1, 1, 1));
+        assert!(r
+            .render()
+            .contains("robustness: shed=2 expired=2 cancelled=1 requeued=1 restarts=1"));
     }
 
     #[test]

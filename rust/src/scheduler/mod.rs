@@ -39,6 +39,19 @@
 //! so in-flight requests always complete ([`pool::EnginePool::drain`]
 //! closes the queue and joins every shard).
 //!
+//! **Survival.** Production traffic brings deadlines, abandonment, and
+//! crashes, and the loop handles all three: refill *expires* queued
+//! requests whose deadline already passed (timeout reply, no admission)
+//! and drops abandoned ones (cancel flag raised or response receiver
+//! gone); every iteration re-checks each occupied slot and retires it
+//! mid-decode on expiry/abandonment so dead work never holds a batch row;
+//! and both backend entry points (`admit`, `step_at`) run under
+//! `catch_unwind`, so a panicking or erroring backend *hands its in-flight
+//! requests back to the shared queue* (at most one requeue per request,
+//! then an error reply — no crash loops) before surfacing the error to the
+//! pool supervisor, which respawns the shard within a bounded restart
+//! budget ([`EngineConfig::restart_budget`]).
+//!
 //! The loop is generic over [`EngineBackend`]: production shards wrap a
 //! `ScoringModel` + device-resident `DecodeSession` ([`ModelBackend`]);
 //! tests and the CI serve-smoke run the *same* loop over the simulated
@@ -47,16 +60,18 @@
 
 pub mod pool;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::batching::{Request, RequestQueue, Response};
+use crate::batching::{
+    response_channel, Push, Request, RequestQueue, Response, ResponseReceiver, ResponseSender,
+};
 use crate::decoding::criteria::Criterion;
-use crate::decoding::state::BlockState;
+use crate::decoding::state::{BlockState, BlockStats};
 use crate::metrics::Metrics;
 use crate::model::{DecodeSession, ScoringModel, WindowScores};
 use crate::tokenizer::PAD;
@@ -74,6 +89,9 @@ pub struct EngineConfig {
     pub admit_wait: Duration,
     /// cap on generated tokens (None = model max)
     pub max_len: Option<usize>,
+    /// how many times the pool supervisor may respawn a crashed shard
+    /// before declaring it dead (`pool::EnginePool`)
+    pub restart_budget: usize,
 }
 
 impl Default for EngineConfig {
@@ -83,6 +101,7 @@ impl Default for EngineConfig {
             min_block: 1,
             admit_wait: Duration::from_millis(2),
             max_len: None,
+            restart_budget: 2,
         }
     }
 }
@@ -275,6 +294,12 @@ impl<B: EngineBackend> Engine<B> {
 
     /// Admit new requests into free slots; the backend encodes their
     /// sources and lands the rows in the resident batch state.
+    ///
+    /// Requests that are dead on arrival are triaged out before the encode
+    /// is spent: an already-expired deadline gets a timeout reply, an
+    /// abandoned request (cancelled or receiver dropped) is dropped
+    /// silently. A backend admit failure — error *or* panic — hands the
+    /// live requests back to the queue before surfacing to the supervisor.
     fn refill(&mut self) -> Result<()> {
         let free: Vec<usize> =
             (0..self.bucket).filter(|&i| self.slots[i].is_none()).collect();
@@ -294,10 +319,39 @@ impl<B: EngineBackend> Engine<B> {
             return Ok(());
         }
 
-        let n = incoming.len();
+        // triage before the encode: abandonment wins over expiry (there is
+        // no one left to read a timeout reply)
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(incoming.len());
+        for r in incoming {
+            if r.abandoned() {
+                self.metrics.on_cancelled();
+            } else if r.expired(now) {
+                self.metrics.on_expired();
+                send_timeout(&r, vec![], BlockStats::default(), r.arrived.elapsed());
+            } else {
+                live.push(r);
+            }
+        }
+        if live.is_empty() {
+            return Ok(());
+        }
+
+        let n = live.len();
         let slots = &free[..n];
-        let srcs: Vec<&[i32]> = incoming.iter().map(|r| r.src.as_slice()).collect();
-        self.backend.admit(slots, &srcs)?;
+        let srcs: Vec<&[i32]> = live.iter().map(|r| r.src.as_slice()).collect();
+        let admitted = match catch_unwind(AssertUnwindSafe(|| self.backend.admit(slots, &srcs)))
+        {
+            Ok(res) => res,
+            Err(p) => Err(anyhow::anyhow!(
+                "backend panicked during admit: {}",
+                panic_message(p.as_ref())
+            )),
+        };
+        if let Err(e) = admitted {
+            self.hand_back(live, "shard failed during admit");
+            return Err(e);
+        }
 
         let max_len = self
             .cfg
@@ -305,7 +359,7 @@ impl<B: EngineBackend> Engine<B> {
             .unwrap_or(self.backend.max_len())
             .min(self.backend.max_len());
         let k = self.backend.k();
-        for (i, r) in incoming.into_iter().enumerate() {
+        for (i, r) in live.into_iter().enumerate() {
             let slot = free[i];
             let criterion = r.criterion.unwrap_or(self.cfg.criterion);
             let state = BlockState::new(k, criterion, max_len)
@@ -324,11 +378,95 @@ impl<B: EngineBackend> Engine<B> {
         Ok(())
     }
 
+    /// Per-iteration slot triage: an occupied slot whose client cancelled
+    /// or disconnected is retired silently (nobody is listening); one
+    /// whose deadline passed gets a timeout reply carrying the prefix
+    /// accepted so far. Either way the row is PAD-retired immediately, so
+    /// a dead request never spends another model invocation.
+    fn retire_dead_slots(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.bucket {
+            // abandonment wins over expiry: no reader for a timeout reply
+            let expired = match self.slots[i].as_ref() {
+                Some(s) if s.request.abandoned() => false,
+                Some(s) if s.request.expired(now) => true,
+                _ => continue,
+            };
+            let slot = self.slots[i].take().unwrap();
+            self.tgt_in.row_mut(i).fill(PAD);
+            self.frontiers[i] = 0;
+            if expired {
+                self.metrics.on_expired();
+                let queued = slot.admitted.duration_since(slot.request.arrived);
+                send_timeout(
+                    &slot.request,
+                    slot.state.accepted.clone(),
+                    slot.state.stats.clone(),
+                    queued,
+                );
+            } else {
+                self.metrics.on_cancelled();
+            }
+        }
+    }
+
+    /// The backend failed mid-decode (error or panic): evacuate every
+    /// occupied slot back to the shared queue — another shard, or this one
+    /// respawned, restarts them from scratch (decoding is deterministic,
+    /// so a requeued survivor still produces identical tokens) — then
+    /// surface the error to the pool supervisor.
+    fn fail_step(&mut self, e: anyhow::Error) -> Result<bool> {
+        let mut evicted = Vec::new();
+        for i in 0..self.bucket {
+            if let Some(slot) = self.slots[i].take() {
+                self.tgt_in.row_mut(i).fill(PAD);
+                self.frontiers[i] = 0;
+                evicted.push(slot.request);
+            }
+        }
+        self.hand_back(evicted, "shard failed mid-decode");
+        Err(e)
+    }
+
+    /// Crashed-shard handback: each request goes back to the *front* of
+    /// the shared queue so another shard finishes it — at most one requeue
+    /// per request, then a terminal error reply (no crash loops). A closed
+    /// queue refuses the handback (drain may leave no consumer alive), and
+    /// that refusal also becomes an error reply.
+    fn hand_back(&mut self, reqs: Vec<Request>, why: &str) {
+        for mut r in reqs {
+            if r.requeues == 0 {
+                r.requeues = 1;
+                match self.queue.requeue(r) {
+                    Ok(()) => self.metrics.on_requeue(),
+                    Err(back) => self.send_shard_error(back, why),
+                }
+            } else {
+                self.send_shard_error(r, why);
+            }
+        }
+    }
+
+    fn send_shard_error(&self, r: Request, why: &str) {
+        self.metrics.on_fail();
+        let e2e = r.arrived.elapsed();
+        let _ = r.respond.send(Response {
+            id: r.id,
+            tokens: vec![],
+            stats: BlockStats::default(),
+            queued: e2e,
+            e2e,
+            requeues: r.requeues,
+            error: Some(why.to_string()),
+        });
+    }
+
     /// One engine iteration. Returns false when fully idle and the queue
     /// is closed or the stop flag is set (time to exit) — in-flight slots
     /// always decode to completion first, so a drain never drops work.
     pub fn step(&mut self) -> Result<bool> {
         self.refill()?;
+        self.retire_dead_slots();
         let active = self.active();
         if active == 0 {
             let stopping = self.stop.load(Ordering::Relaxed) || self.queue.is_closed();
@@ -355,7 +493,18 @@ impl<B: EngineBackend> Engine<B> {
 
         // steady-state host->device transfer: [B,T] i32 decoder input plus
         // the [B] i32 frontier vector; device->host is the frontier window
-        let scores = self.backend.step_at(&self.tgt_in, &self.frontiers)?;
+        let scores = match catch_unwind(AssertUnwindSafe(|| {
+            self.backend.step_at(&self.tgt_in, &self.frontiers)
+        })) {
+            Ok(Ok(s)) => s,
+            Ok(Err(e)) => return self.fail_step(e),
+            Err(p) => {
+                return self.fail_step(anyhow::anyhow!(
+                    "backend panicked during step: {}",
+                    panic_message(p.as_ref())
+                ))
+            }
+        };
         self.metrics.on_invocation(active, self.bucket);
 
         for i in 0..self.bucket {
@@ -380,6 +529,7 @@ impl<B: EngineBackend> Engine<B> {
                     stats: slot.state.stats.clone(),
                     queued,
                     e2e,
+                    requeues: slot.request.requeues,
                     error: None,
                 };
                 self.metrics.on_complete(queued, e2e, resp.tokens.len());
@@ -404,23 +554,42 @@ impl<B: EngineBackend> Engine<B> {
 }
 
 /// Handle used by producers to submit work and await the response.
+///
+/// Every submission gets **exactly one terminal reply** on its response
+/// channel: tokens on success, a timeout/error reply from the engine, or —
+/// synthesized right here, before the request ever reaches a shard — an
+/// `"overloaded"` reply when the bounded queue sheds and a
+/// `"shutting down"` reply when the queue is closed. Callers never hang
+/// on a rejected submission.
 pub struct Submitter {
     queue: Arc<RequestQueue>,
+    /// front-door registry: sheds are counted here, because a shed request
+    /// never reaches any engine shard's registry
+    door: Option<Arc<Metrics>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
 impl Submitter {
     pub fn new(queue: Arc<RequestQueue>) -> Self {
-        Submitter { queue, next_id: std::sync::atomic::AtomicU64::new(1) }
+        Submitter { queue, door: None, next_id: std::sync::atomic::AtomicU64::new(1) }
     }
 
-    /// Submit one source; returns a receiver for the response.
-    pub fn submit(
-        &self,
-        src: Vec<i32>,
-        criterion: Option<Criterion>,
-    ) -> std::sync::mpsc::Receiver<Response> {
-        let (tx, rx) = std::sync::mpsc::channel();
+    /// Attach a front-door metrics registry (merged into the fleet view by
+    /// [`pool::PoolReport::from_shards_with_door`]).
+    pub fn with_door(mut self, door: Arc<Metrics>) -> Self {
+        self.door = Some(door);
+        self
+    }
+
+    /// Current queue depth — the front door's overload signal, used to
+    /// size `retry_after_ms` hints.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Submit one source; returns a receiver for the terminal reply.
+    pub fn submit(&self, src: Vec<i32>, criterion: Option<Criterion>) -> ResponseReceiver {
+        let (tx, rx) = response_channel();
         self.submit_with(src, criterion, tx);
         rx
     }
@@ -430,16 +599,73 @@ impl Submitter {
         &self,
         src: Vec<i32>,
         criterion: Option<Criterion>,
-        respond: Sender<Response>,
+        respond: ResponseSender,
     ) -> u64 {
+        self.submit_request(src, criterion, None, respond).0
+    }
+
+    /// Full-control submission: optional absolute deadline, with the push
+    /// outcome and the request's cancel handle returned — the server uses
+    /// the outcome to shape its `overloaded` wire reply and raises the
+    /// cancel flag when the client disconnects mid-decode.
+    pub fn submit_request(
+        &self,
+        src: Vec<i32>,
+        criterion: Option<Criterion>,
+        deadline: Option<Instant>,
+        respond: ResponseSender,
+    ) -> (u64, Push, Arc<AtomicBool>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.queue.push(Request {
-            id,
-            src,
-            criterion,
-            arrived: Instant::now(),
-            respond,
-        });
-        id
+        let r = Request::new(id, src, criterion, respond.clone()).with_deadline(deadline);
+        let cancel = r.cancel.clone();
+        let push = self.queue.push(r);
+        match push {
+            Push::Accepted => {}
+            Push::Shed { .. } => {
+                if let Some(door) = &self.door {
+                    door.on_shed();
+                }
+                send_rejection(id, &respond, "overloaded");
+            }
+            Push::Closed => send_rejection(id, &respond, "shutting down"),
+        }
+        (id, push, cancel)
+    }
+}
+
+/// Terminal reply for a request rejected at the front door (shed/closed).
+fn send_rejection(id: u64, respond: &ResponseSender, why: &str) {
+    let _ = respond.send(Response {
+        id,
+        tokens: vec![],
+        stats: BlockStats::default(),
+        queued: Duration::ZERO,
+        e2e: Duration::ZERO,
+        requeues: 0,
+        error: Some(why.to_string()),
+    });
+}
+
+/// Terminal timeout reply: the accepted-so-far prefix plus `"timeout"`.
+fn send_timeout(r: &Request, tokens: Vec<i32>, stats: BlockStats, queued: Duration) {
+    let _ = r.respond.send(Response {
+        id: r.id,
+        tokens,
+        stats,
+        queued,
+        e2e: r.arrived.elapsed(),
+        requeues: r.requeues,
+        error: Some("timeout".to_string()),
+    });
+}
+
+/// Best-effort rendering of a `catch_unwind` payload for logs and replies.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }

@@ -23,6 +23,17 @@
 //! shard finishes the slots it already admitted (responses still flow) →
 //! join all threads. The first shard error or panic is reported after
 //! *all* threads have been joined, so one bad shard cannot leak the rest.
+//!
+//! **Supervision.** A shard whose engine loop fails — a backend panic
+//! caught by the engine's `catch_unwind`, or a terminal backend error —
+//! has already handed its in-flight requests back to the shared queue, so
+//! the shard thread simply respawns a fresh backend via the factory and
+//! re-enters the loop, up to [`EngineConfig::restart_budget`] times
+//! (counted in the shard's [`Metrics`] as `restarts`). Budget exhausted,
+//! or a factory construction failure, is terminal: the thread exits, the
+//! serve supervisor notices via [`EnginePool::any_finished`] and initiates
+//! shutdown — the remaining shards still drain the queue, so no request
+//! is stranded.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -73,10 +84,42 @@ impl EnginePool {
             let handle = std::thread::Builder::new()
                 .name(format!("engine-{shard}"))
                 .spawn(move || -> Result<()> {
-                    let backend = factory(shard)
-                        .with_context(|| format!("constructing engine shard {shard}"))?;
-                    let mut engine = Engine::with_backend(backend, cfg, queue, metrics, stop)?;
-                    engine.run()
+                    // supervisor loop: a crashed engine already handed its
+                    // in-flight requests back to the queue, so respawning a
+                    // fresh backend is safe. Factory failures are terminal
+                    // (a missing artifact won't appear by retrying), and a
+                    // clean drain exits without touching the budget.
+                    let mut restarts = 0usize;
+                    loop {
+                        let backend = factory(shard).with_context(|| {
+                            format!("constructing engine shard {shard} (incarnation {restarts})")
+                        })?;
+                        let mut engine = Engine::with_backend(
+                            backend,
+                            cfg.clone(),
+                            queue.clone(),
+                            metrics.clone(),
+                            stop.clone(),
+                        )?;
+                        match engine.run() {
+                            Ok(()) => return Ok(()),
+                            Err(e) if restarts >= cfg.restart_budget => {
+                                return Err(e.context(format!(
+                                    "engine shard {shard}: restart budget ({}) exhausted",
+                                    cfg.restart_budget
+                                )));
+                            }
+                            Err(e) => {
+                                restarts += 1;
+                                metrics.on_restart();
+                                log::warn!(
+                                    "engine shard {shard} crashed ({e:#}); \
+                                     respawning ({restarts}/{})",
+                                    cfg.restart_budget
+                                );
+                            }
+                        }
+                    }
                 })
                 .with_context(|| format!("spawning engine shard {shard}"))?;
             handles.push(handle);
@@ -144,7 +187,22 @@ pub struct PoolReport {
 
 impl PoolReport {
     pub fn from_shards(shards: &[Arc<Metrics>], since: Instant) -> Self {
+        Self::from_shards_with_door(shards, None, since)
+    }
+
+    /// Fleet view including the front door's registry: load sheds happen
+    /// at admission (before any shard sees the request), so the
+    /// [`super::Submitter`]'s door registry folds into the fleet totals
+    /// here — the fleet line accounts for *every* request outcome.
+    pub fn from_shards_with_door(
+        shards: &[Arc<Metrics>],
+        door: Option<&Metrics>,
+        since: Instant,
+    ) -> Self {
         let fleet = Metrics::new();
+        if let Some(d) = door {
+            fleet.merge(d);
+        }
         for m in shards {
             fleet.merge(m);
         }
@@ -163,9 +221,10 @@ impl PoolReport {
         );
         for (i, s) in self.shards.iter().enumerate() {
             out.push_str(&format!(
-                "\nshard {i}: completed={} invocations={} fill={:.2} k̂={:.2} \
+                "\nshard {i}: completed={} restarts={} invocations={} fill={:.2} k̂={:.2} \
                  queue p50={:.1}ms e2e p50={:.1}ms",
                 s.completed,
+                s.restarts,
                 s.invocations,
                 s.mean_batch_fill,
                 s.mean_accepted_block,

@@ -4,17 +4,46 @@
 //! Wire format (one JSON object per line):
 //!
 //! ```text
-//! -> {"src":[14,5,2], "criterion":"exact"}          // or "top2", "dist2"
-//! <- {"id":1, "tokens":[77,61,2], "invocations":3, "blocks":[2,1], "ms":4.2}
+//! -> {"src":[14,5,2], "criterion":"exact", "deadline_ms":500}
+//! <- {"id":1, "tokens":[77,61,2], "invocations":3, "blocks":[2,1],
+//!     "queued_ms":0.4, "ms":4.2}
 //! ```
 //!
+//! Request fields: `src` (required, non-empty, bounded by
+//! [`MAX_SRC_TOKENS`]), `criterion` (optional: `"exact"`, `"topK"`,
+//! `"distE"` with K,E ≥ 1), `deadline_ms` (optional: per-request deadline;
+//! `0` opts out of the server's `--deadline-ms` default). Unknown fields
+//! are ignored.
+//!
+//! **Error vocabulary** (the `error` field of a reply):
+//! - `"overloaded"` — the bounded request queue is full; the reply carries
+//!   a `retry_after_ms` backoff hint sized from the observed queue depth.
+//!   Sent immediately (load shedding): 10x overload degrades to fast
+//!   rejections, not unbounded queueing.
+//! - `"timeout"` — the deadline passed while queued or mid-decode; the
+//!   reply still carries whatever token prefix was accepted before expiry.
+//! - `"shard failed during admit"` / `"shard failed mid-decode"` — a
+//!   crashed engine shard held this request and it had *already* been
+//!   requeued once (each request is handed back to the queue at most once
+//!   before erroring; the pool supervisor separately respawns the shard
+//!   within its restart budget).
+//! - `"shutting down"` — the queue is closed; the server is draining.
+//! - anything else — a request parse/validation error.
+//!
+//! Retry semantics: `"overloaded"` and `"shutting down"` are safe to
+//! retry (the request never reached an engine); `"timeout"` retries are
+//! the client's latency-budget call; shard-failure errors mean the
+//! request already consumed its one automatic requeue.
+//!
 //! Each connection gets a reader thread; responses are delivered through
-//! the per-request channel and written back in completion order. Finished
-//! connection threads are reaped every accept iteration (a long-lived
-//! server once accumulated one `JoinHandle` per connection for the life
-//! of the process), and the remainder are joined at shutdown — readers
-//! poll with a finite socket timeout so an idle open connection cannot
-//! wedge that join when the stop flag asks them to wind down.
+//! the per-request channel and written back in completion order. While a
+//! request is in flight the handler probes the connection between waits —
+//! a client that disconnects mid-decode gets its request cancelled (the
+//! engine retires the slot instead of decoding into the void). Finished
+//! connection threads are reaped every accept iteration, and the
+//! remainder are joined at shutdown — readers poll with a finite socket
+//! timeout so an idle open connection cannot wedge that join when the
+//! stop flag asks them to wind down.
 //!
 //! The server is topology-agnostic: it only pushes into the shared
 //! [`RequestQueue`], so it feeds one engine or an N-shard
@@ -24,27 +53,40 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::batching::{RequestQueue, Response};
+use crate::batching::{response_channel, Push, RequestQueue, Response};
 use crate::decoding::criteria::Criterion;
+use crate::metrics::Metrics;
 use crate::scheduler::Submitter;
 use crate::util::json::Json;
 
+/// Admission cap on `src` length: an absurdly long source is rejected at
+/// the front door instead of being silently truncated by the backend.
+pub const MAX_SRC_TOKENS: usize = 4096;
+
+/// How often an in-flight request's handler re-probes its client (and how
+/// long a response wait can lag a disconnect before the slot is retired).
+const PROBE_INTERVAL: Duration = Duration::from_millis(100);
+
 /// Parse the wire name of a criterion ("exact", "topK", "distE").
+/// Degenerate parameters are rejected: `top0` could never accept a token
+/// and `dist0`/negative distances are at best a confusing spelling of
+/// `exact`, so K and E must be ≥ 1.
 pub fn parse_criterion(s: &str) -> Option<Criterion> {
     if s == "exact" {
         return Some(Criterion::Exact);
     }
     if let Some(k) = s.strip_prefix("top") {
-        return k.parse().ok().map(Criterion::TopK);
+        return k.parse().ok().filter(|&k: &usize| k >= 1).map(Criterion::TopK);
     }
     if let Some(e) = s.strip_prefix("dist") {
-        return e.parse().ok().map(Criterion::Distance);
+        return e.parse().ok().filter(|&e: &i32| e >= 1).map(Criterion::Distance);
     }
     None
 }
@@ -59,6 +101,7 @@ pub fn response_json(r: &Response) -> String {
             "blocks",
             Json::Arr(r.stats.accepted_blocks.iter().map(|&b| Json::Num(b as f64)).collect()),
         ),
+        ("queued_ms", Json::Num(r.queued.as_secs_f64() * 1000.0)),
         ("ms", Json::Num(r.e2e.as_secs_f64() * 1000.0)),
     ];
     if let Some(e) = &r.error {
@@ -67,18 +110,55 @@ pub fn response_json(r: &Response) -> String {
     Json::obj(obj).to_string()
 }
 
+/// Fast-rejection reply for a shed request: the queue was full, nothing
+/// was enqueued, and `retry_after_ms` hints a client backoff sized from
+/// the queue depth observed at rejection time.
+pub fn overloaded_json(id: u64, retry_after_ms: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str("overloaded".to_string())),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+    .to_string()
+}
+
 /// The TCP front end. Binds immediately; `serve` loops on accept.
 pub struct Server {
     listener: TcpListener,
+    queue: Arc<RequestQueue>,
     submitter: Arc<Submitter>,
     stop: Arc<AtomicBool>,
+    /// applied when a request line carries no `deadline_ms` field
+    default_deadline: Option<Duration>,
 }
 
 impl Server {
     pub fn bind(addr: &str, queue: Arc<RequestQueue>, stop: Arc<AtomicBool>) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         listener.set_nonblocking(true)?;
-        Ok(Server { listener, submitter: Arc::new(Submitter::new(queue)), stop })
+        Ok(Server {
+            listener,
+            submitter: Arc::new(Submitter::new(queue.clone())),
+            queue,
+            stop,
+            default_deadline: None,
+        })
+    }
+
+    /// Default per-request deadline for lines without a `deadline_ms`
+    /// field (`--deadline-ms`; `None` = no deadline).
+    pub fn with_default_deadline(mut self, d: Option<Duration>) -> Self {
+        self.default_deadline = d;
+        self
+    }
+
+    /// Attach a front-door metrics registry: load sheds happen at
+    /// admission, before any engine shard sees the request, so they are
+    /// counted here and folded into the fleet view by
+    /// `PoolReport::from_shards_with_door`.
+    pub fn with_door(mut self, door: Arc<Metrics>) -> Self {
+        self.submitter = Arc::new(Submitter::new(self.queue.clone()).with_door(door));
+        self
     }
 
     pub fn local_addr(&self) -> String {
@@ -108,8 +188,9 @@ impl Server {
                     log::debug!("connection from {peer}");
                     let submitter = self.submitter.clone();
                     let stop = self.stop.clone();
+                    let deadline = self.default_deadline;
                     handles.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, submitter, stop) {
+                        if let Err(e) = handle_conn(stream, submitter, deadline, stop) {
                             log::debug!("connection ended: {e:#}");
                         }
                     }));
@@ -127,7 +208,12 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, submitter: Arc<Submitter>, stop: Arc<AtomicBool>) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    submitter: Arc<Submitter>,
+    default_deadline: Option<Duration>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     // finite read timeout so this thread can notice shutdown: a reader
     // parked forever on an idle connection used to wedge `serve`'s handle
     // join at drain time. Clear nonblocking first — on some platforms the
@@ -145,14 +231,14 @@ fn handle_conn(stream: TcpStream, submitter: Arc<Submitter>, stop: Arc<AtomicBoo
                 // lines()-based loop this replaced delivered it too)
                 let msg = line.trim();
                 if !msg.is_empty() {
-                    reply_line(&mut writer, &submitter, msg)?;
+                    reply_line(&mut writer, &submitter, default_deadline, msg)?;
                 }
                 break;
             }
             Ok(_) => {
                 let msg = line.trim();
                 if !msg.is_empty() {
-                    reply_line(&mut writer, &submitter, msg)?;
+                    reply_line(&mut writer, &submitter, default_deadline, msg)?;
                 }
                 line.clear();
                 // shutdown: the queue is closed and every further request
@@ -179,11 +265,40 @@ fn handle_conn(stream: TcpStream, submitter: Arc<Submitter>, stop: Arc<AtomicBoo
     Ok(())
 }
 
+/// Liveness probe between response waits: a nonblocking one-byte peek.
+/// `Ok(0)` is EOF (the peer closed); buffered bytes or `WouldBlock` both
+/// mean the peer is still there. Probe errors count as gone.
+fn client_alive(stream: &TcpStream) -> bool {
+    let mut b = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let alive = match stream.peek(&mut b) {
+        Ok(0) => false,
+        Ok(_) => true,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => true,
+        Err(_) => false,
+    };
+    let _ = stream.set_nonblocking(false);
+    alive
+}
+
 /// Serve one request line and write the JSON reply (or an error object).
-fn reply_line(writer: &mut TcpStream, submitter: &Submitter, msg: &str) -> Result<()> {
-    let reply = match serve_line(msg, submitter) {
-        Ok(resp) => response_json(&resp),
-        Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+fn reply_line(
+    writer: &mut TcpStream,
+    submitter: &Submitter,
+    default_deadline: Option<Duration>,
+    msg: &str,
+) -> Result<()> {
+    let reply = {
+        let mut probe = || client_alive(writer);
+        match serve_line(msg, submitter, default_deadline, &mut probe) {
+            Ok(Some(s)) => s,
+            // client gone mid-decode: the request was cancelled and there
+            // is no one to write to
+            Ok(None) => return Ok(()),
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+        }
     };
     writer.write_all(reply.as_bytes())?;
     writer.write_all(b"\n")?;
@@ -191,11 +306,24 @@ fn reply_line(writer: &mut TcpStream, submitter: &Submitter, msg: &str) -> Resul
     Ok(())
 }
 
-/// Handle one request line synchronously (submit + await).
-fn serve_line(line: &str, submitter: &Submitter) -> Result<Response> {
+/// Handle one request line synchronously (submit + await). `probe` is
+/// polled between response waits; when it reports the client gone, the
+/// request's cancel flag is raised, the receiver dropped (the engine
+/// retires the slot), and `Ok(None)` says there is nothing to write.
+fn serve_line(
+    line: &str,
+    submitter: &Submitter,
+    default_deadline: Option<Duration>,
+    probe: &mut dyn FnMut() -> bool,
+) -> Result<Option<String>> {
     let j = Json::parse(line).context("request json")?;
     let src = j.get("src")?.as_ids()?;
     anyhow::ensure!(!src.is_empty(), "empty src");
+    anyhow::ensure!(
+        src.len() <= MAX_SRC_TOKENS,
+        "src too long ({} tokens, cap {MAX_SRC_TOKENS})",
+        src.len()
+    );
     let criterion = match j.opt("criterion") {
         Some(c) => Some(
             parse_criterion(c.as_str()?)
@@ -203,9 +331,38 @@ fn serve_line(line: &str, submitter: &Submitter) -> Result<Response> {
         ),
         None => None,
     };
-    let (tx, rx) = channel();
-    submitter.submit_with(src, criterion, tx);
-    rx.recv().context("engine dropped the request")
+    // deadline_ms: absolute budget from receipt; explicit 0 opts out of
+    // the server default (a client that prefers to wait forever)
+    let deadline = match j.opt("deadline_ms") {
+        Some(ms) => match ms.as_usize().context("deadline_ms")? {
+            0 => None,
+            ms => Some(Instant::now() + Duration::from_millis(ms as u64)),
+        },
+        None => default_deadline.map(|d| Instant::now() + d),
+    };
+
+    let (tx, rx) = response_channel();
+    let (id, push, cancel) = submitter.submit_request(src, criterion, deadline, tx);
+    if let Push::Shed { depth } = push {
+        // shed: reject fast with a backoff hint sized from the backlog
+        return Ok(Some(overloaded_json(id, 50 + 2 * depth as u64)));
+    }
+    loop {
+        match rx.recv_timeout(PROBE_INTERVAL) {
+            Ok(resp) => return Ok(Some(response_json(&resp))),
+            Err(RecvTimeoutError::Timeout) => {
+                if !probe() {
+                    // disconnected mid-decode: cancel, and dropping `rx`
+                    // marks the request abandoned for the engine
+                    cancel.store(true, Ordering::Release);
+                    return Ok(None);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("engine dropped the request")
+            }
+        }
+    }
 }
 
 /// Line-protocol client (used by examples, tests, and the load generator).
@@ -220,7 +377,17 @@ pub struct ClientResult {
     pub tokens: Vec<i32>,
     pub invocations: usize,
     pub blocks: Vec<usize>,
+    /// server-side queue wait, reported separately from decode time
+    pub queued_ms: f64,
     pub ms: f64,
+}
+
+/// Outcome of [`Client::try_decode`]: a decoded reply, or a load-shed
+/// rejection surfaced as data (not an error) so callers can back off.
+#[derive(Debug, Clone)]
+pub enum Decoded {
+    Ok(ClientResult),
+    Overloaded { retry_after_ms: u64 },
 }
 
 impl Client {
@@ -229,22 +396,74 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Bound every reply wait in [`Client::decode`]; `None` restores
+    /// block-forever. A dead or wedged server then surfaces as a clean
+    /// `"timed out"` error instead of hanging the calling process. After
+    /// a timeout the connection state is unknown (a late reply may still
+    /// be in flight) — drop the client and reconnect.
+    pub fn set_read_timeout(&mut self, d: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(d)?;
+        Ok(())
+    }
+
     pub fn decode(&mut self, src: &[i32], criterion: Option<&str>) -> Result<ClientResult> {
+        match self.try_decode(src, criterion, None)? {
+            Decoded::Ok(r) => Ok(r),
+            Decoded::Overloaded { retry_after_ms } => {
+                anyhow::bail!("server error: overloaded (retry after {retry_after_ms}ms)")
+            }
+        }
+    }
+
+    /// One request/reply cycle. Shed replies come back as
+    /// [`Decoded::Overloaded`] rather than an error so load generators can
+    /// count and back off; every other `error` reply still fails. Pass
+    /// `deadline_ms` to attach a per-request deadline (`Some(0)` opts out
+    /// of the server default).
+    pub fn try_decode(
+        &mut self,
+        src: &[i32],
+        criterion: Option<&str>,
+        deadline_ms: Option<u64>,
+    ) -> Result<Decoded> {
         let mut obj = vec![("src", Json::arr_i32(src))];
         if let Some(c) = criterion {
             obj.push(("criterion", Json::Str(c.to_string())));
+        }
+        if let Some(ms) = deadline_ms {
+            obj.push(("deadline_ms", Json::Num(ms as f64)));
         }
         let line = Json::obj(obj).to_string();
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut reply = String::new();
-        self.reader.read_line(&mut reply)?;
+        match self.reader.read_line(&mut reply) {
+            Ok(0) => anyhow::bail!("server closed the connection"),
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                anyhow::bail!("timed out waiting for a reply (client read deadline)")
+            }
+            Err(e) => return Err(e.into()),
+        }
         let j = Json::parse(reply.trim()).context("response json")?;
         if let Some(e) = j.opt("error") {
-            anyhow::bail!("server error: {}", e.as_str().unwrap_or("?"));
+            let e = e.as_str().unwrap_or("?");
+            if e == "overloaded" {
+                let retry_after_ms = j
+                    .opt("retry_after_ms")
+                    .and_then(|v| v.as_usize().ok())
+                    .unwrap_or(0) as u64;
+                return Ok(Decoded::Overloaded { retry_after_ms });
+            }
+            anyhow::bail!("server error: {e}");
         }
-        Ok(ClientResult {
+        Ok(Decoded::Ok(ClientResult {
             tokens: j.get("tokens")?.as_ids()?,
             invocations: j.get("invocations")?.as_usize()?,
             blocks: j
@@ -253,14 +472,16 @@ impl Client {
                 .iter()
                 .map(|b| Ok::<usize, anyhow::Error>(b.as_usize()?))
                 .collect::<Result<_>>()?,
+            queued_ms: j.opt("queued_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
             ms: j.get("ms")?.as_f64()?,
-        })
+        }))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::decoding::state::BlockStats;
 
     #[test]
     fn criterion_names() {
@@ -269,22 +490,105 @@ mod tests {
         assert_eq!(parse_criterion("dist2"), Some(Criterion::Distance(2)));
         assert_eq!(parse_criterion("nope"), None);
         assert_eq!(parse_criterion("top"), None);
+        // degenerate parameters are rejected at parse time: top0 can never
+        // accept a token, dist0 and negatives are not a criterion
+        assert_eq!(parse_criterion("top0"), None);
+        assert_eq!(parse_criterion("dist0"), None);
+        assert_eq!(parse_criterion("dist-3"), None);
+        assert_eq!(parse_criterion("top1"), Some(Criterion::TopK(1)));
+        assert_eq!(parse_criterion("dist1"), Some(Criterion::Distance(1)));
     }
 
     #[test]
     fn response_roundtrip() {
-        use crate::decoding::state::BlockStats;
         let r = Response {
             id: 3,
             tokens: vec![5, 6, 2],
             stats: BlockStats { accepted_blocks: vec![2, 1], invocations: 3 },
             queued: std::time::Duration::from_millis(1),
             e2e: std::time::Duration::from_millis(7),
+            requeues: 0,
             error: None,
         };
         let j = Json::parse(&response_json(&r)).unwrap();
         assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("tokens").unwrap().as_ids().unwrap(), vec![5, 6, 2]);
         assert_eq!(j.get("invocations").unwrap().as_usize().unwrap(), 3);
+        // queue wait is reported separately from decode wall time
+        let queued_ms = j.get("queued_ms").unwrap().as_f64().unwrap();
+        assert!((queued_ms - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overloaded_reply_carries_retry_hint() {
+        let j = Json::parse(&overloaded_json(9, 70)).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize().unwrap(), 70);
+    }
+
+    // Fuzz-style front-door coverage: garbage JSON, degenerate src, bad
+    // field types — every line must produce an error *reply* (never a
+    // panic, never a hang). The submitter runs over a closed queue so
+    // well-formed submissions get the synthesized "shutting down" reply
+    // without any engine: the test can never block on a decode.
+    #[test]
+    fn malformed_lines_error_without_panic_or_wedge() {
+        let queue = Arc::new(RequestQueue::new());
+        queue.close();
+        let submitter = Submitter::new(queue);
+        let mut probe = || true;
+        let huge_src = format!("{{\"src\":[{}]}}", vec!["7"; 100_000].join(","));
+        let cases: Vec<String> = vec![
+            String::new(),
+            "{".to_string(),
+            "not json at all".to_string(),
+            "42".to_string(),
+            "[1,2,3]".to_string(),
+            "{}".to_string(),
+            "{\"src\":[]}".to_string(),
+            "{\"src\":\"nope\"}".to_string(),
+            "{\"src\":[1,\"x\",3]}".to_string(),
+            "{\"src\":[1,2],\"criterion\":\"top0\"}".to_string(),
+            "{\"src\":[1,2],\"criterion\":\"warp9\"}".to_string(),
+            "{\"src\":[1,2],\"deadline_ms\":\"soon\"}".to_string(),
+            huge_src,
+            // unknown fields and a non-integer id are tolerated (the
+            // server assigns ids) — still an error reply here only
+            // because the queue is closed
+            "{\"id\":\"abc\",\"src\":[1,2],\"unknown\":{\"nested\":[true,null]}}".to_string(),
+        ];
+        for line in &cases {
+            let reply = match serve_line(line, &submitter, None, &mut probe) {
+                Ok(Some(s)) => s,
+                Ok(None) => unreachable!("probe never reports the client gone"),
+                // what reply_line writes for a parse/validation error
+                Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+            };
+            let j = Json::parse(&reply)
+                .unwrap_or_else(|_| panic!("reply to {line:?} must be valid json: {reply}"));
+            assert!(
+                j.opt("error").is_some(),
+                "line {line:?} must produce an error reply, got {reply}"
+            );
+        }
+    }
+
+    // A line with deadline_ms=0 must parse as "no deadline" and a positive
+    // value as a real deadline; both reach the submitter (closed queue ->
+    // synthesized reply), proving the field is accepted on the wire.
+    #[test]
+    fn deadline_field_accepted_on_the_wire() {
+        let queue = Arc::new(RequestQueue::new());
+        queue.close();
+        let submitter = Submitter::new(queue);
+        let mut probe = || true;
+        for line in ["{\"src\":[1,2],\"deadline_ms\":0}", "{\"src\":[1,2],\"deadline_ms\":250}"] {
+            let reply = serve_line(line, &submitter, None, &mut probe)
+                .expect("well-formed line")
+                .expect("probe alive");
+            let j = Json::parse(&reply).unwrap();
+            assert_eq!(j.get("error").unwrap().as_str().unwrap(), "shutting down");
+        }
     }
 }

@@ -390,6 +390,32 @@ impl BlockStepper for SimSession<'_> {
     }
 }
 
+/// Deterministic, seedable fault-injection plan for [`SimBackend`] — the
+/// chaos harness's crash and latency source (`rust/tests/chaos.rs`).
+/// Call counts are per backend *instance*, so a shard respawned by the
+/// pool supervisor (fresh backend from the factory) starts with clean
+/// counters: a plan built for incarnation 0 fires exactly once.
+///
+/// Injected panics carry the `"injected fault"` prefix so test panic
+/// hooks can tell planned crashes from real bugs.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// panic at the start of the Nth `step_at` call (1-based)
+    pub panic_on_steps: Vec<usize>,
+    /// return `Err` from the Nth `admit` call (1-based)
+    pub error_on_admits: Vec<usize>,
+    /// sleep for the duration on every Nth `step_at` (slow-shard latency)
+    pub slow_every: Option<(usize, std::time::Duration)>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.panic_on_steps.is_empty()
+            && self.error_on_admits.is_empty()
+            && self.slow_every.is_none()
+    }
+}
+
 /// An owning, `Send` sim-backed [`EngineBackend`]: the engine/pool
 /// analogue of [`SimSession`]. Slot sources play the pinned encoder
 /// memory rows of the device session (`admit` is the sim analogue of
@@ -397,18 +423,34 @@ impl BlockStepper for SimSession<'_> {
 /// device contract — so `scheduler::pool::EnginePool` tests and the CI
 /// serve-smoke drive the *exact* production engine loop, with scoring
 /// identical to the offline [`sim_blockwise`] reference, without PJRT
-/// or artifacts.
+/// or artifacts. An optional [`FaultPlan`] injects deterministic panics,
+/// admit errors, and slow steps for the chaos harness.
 pub struct SimBackend {
     model: SimModel,
     /// per-slot resident sources; empty = free/PAD slot (inert rows)
     srcs: Vec<Vec<i32>>,
     t_len: usize,
+    faults: FaultPlan,
+    steps_seen: usize,
+    admits_seen: usize,
 }
 
 impl SimBackend {
     pub fn new(model: SimModel, bucket: usize, t_len: usize) -> Self {
+        Self::with_faults(model, bucket, t_len, FaultPlan::default())
+    }
+
+    /// A backend with a fault plan attached (counters start at zero).
+    pub fn with_faults(model: SimModel, bucket: usize, t_len: usize, faults: FaultPlan) -> Self {
         assert!(bucket >= 1 && t_len >= 2);
-        SimBackend { model, srcs: vec![Vec::new(); bucket], t_len }
+        SimBackend {
+            model,
+            srcs: vec![Vec::new(); bucket],
+            t_len,
+            faults,
+            steps_seen: 0,
+            admits_seen: 0,
+        }
     }
 }
 
@@ -430,6 +472,10 @@ impl EngineBackend for SimBackend {
     }
 
     fn admit(&mut self, slots: &[usize], srcs: &[&[i32]]) -> Result<()> {
+        self.admits_seen += 1;
+        if self.faults.error_on_admits.contains(&self.admits_seen) {
+            anyhow::bail!("injected fault: admit {} errored by plan", self.admits_seen);
+        }
         anyhow::ensure!(
             slots.len() == srcs.len(),
             "one source per admitted slot (row counts must match exactly)"
@@ -443,6 +489,17 @@ impl EngineBackend for SimBackend {
     }
 
     fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        // faults fire before any state is touched: a panicking backend is
+        // discarded whole by the supervisor, never stepped again
+        self.steps_seen += 1;
+        if self.faults.panic_on_steps.contains(&self.steps_seen) {
+            panic!("injected fault: step {} panicked by plan", self.steps_seen);
+        }
+        if let Some((every, dur)) = self.faults.slow_every {
+            if every > 0 && self.steps_seen % every == 0 {
+                std::thread::sleep(dur);
+            }
+        }
         // the windowed sim mode keeps no cross-step state, so a transient
         // session over the current slot sources is exactly the device
         // session's windowed step contract; the sources are moved in and

@@ -1,0 +1,368 @@
+//! Chaos harness for the serving front door: a multi-shard sim pool is
+//! driven through overload, dead-on-arrival deadlines, client
+//! abandonment, and planned shard crashes, and must give every submitted
+//! request **exactly one** terminal reply — tokens, timeout, overloaded,
+//! or shard error; never a hang, a loss, or a duplicate — while the
+//! merged `PoolReport` accounts for every shed / expired / cancelled /
+//! requeued / restart event exactly, and every successfully decoded
+//! request stays byte-identical to the offline `sim_blockwise` reference
+//! (crash-recovery requeues included: decoding is deterministic, so a
+//! survivor that moved shards mid-flight produces the same tokens).
+//!
+//! Workload shapes come from the seeded `testing::check` harness
+//! (`BLOCKDECODE_PROP_SEED` replays a failure). Injected crashes carry an
+//! `"injected fault"` marker in their panic payload, which the test
+//! panic hook silences so planned crashes don't spray backtraces over
+//! the test output — any *other* panic still prints normally.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blockdecode::batching::{response_channel, Push, RequestQueue, ResponseReceiver};
+use blockdecode::decoding::Criterion;
+use blockdecode::metrics::Metrics;
+use blockdecode::scheduler::pool::{EnginePool, PoolReport};
+use blockdecode::scheduler::{EngineConfig, Submitter};
+use blockdecode::testing::check;
+use blockdecode::testing::sim::{sim_blockwise, FaultPlan, SimBackend, SimModel};
+use blockdecode::tokenizer::EOS;
+
+const SIM_BUCKET: usize = 4;
+const SIM_TLEN: usize = 21;
+
+fn sim_model() -> SimModel {
+    SimModel::new(60, 6, 0.7, 9, 0x5EED)
+}
+
+/// Deterministic per-request source, so every run decodes the same
+/// workload and the offline reference is reproducible per index.
+fn sim_src(i: usize) -> Vec<i32> {
+    vec![3 + (i % 40) as i32, 4 + ((i * 7) % 40) as i32, 5 + ((i * 13) % 40) as i32, EOS]
+}
+
+/// Mixed per-request criteria across every criterion family.
+fn sim_criterion(i: usize) -> Option<Criterion> {
+    match i % 4 {
+        0 => None,
+        1 => Some(Criterion::Exact),
+        2 => Some(Criterion::TopK(2)),
+        _ => Some(Criterion::Distance(2)),
+    }
+}
+
+fn offline(i: usize) -> Vec<i32> {
+    let crit = sim_criterion(i).unwrap_or(Criterion::Exact);
+    sim_blockwise(&sim_model(), &sim_src(i), crit, SIM_TLEN - 1).0
+}
+
+/// Silence panic payloads from planned crashes (they carry the
+/// `"injected fault"` marker) while delegating every other panic —
+/// assertion failures included — to the previous hook.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// (request index, reply receiver, had a deadline) — one entry per
+/// submission, so the exactly-one-terminal-reply invariant is checked
+/// over *everything* that entered the front door.
+type Entry = (usize, ResponseReceiver, bool);
+
+#[test]
+fn chaos_pool_gives_every_request_exactly_one_terminal_reply() {
+    quiet_injected_panics();
+    check("chaos/pool_survives_crashes_and_overload", 2, |rng| {
+        let n_shards = 3usize;
+        let cap = rng.range(4, 8) as usize; // queue capacity (bounded)
+        let e = rng.range(1, 3) as usize; // dead-on-arrival deadlines
+        let extra = rng.range(2, 5) as usize; // deterministic pre-spawn sheds
+        let per_lane = rng.range(18, 36) as usize; // per-producer live load
+
+        let t0 = Instant::now();
+        let queue = Arc::new(RequestQueue::with_capacity(cap));
+        let stop = Arc::new(AtomicBool::new(false));
+        let door = Arc::new(Metrics::new());
+        let submitter = Arc::new(Submitter::new(queue.clone()).with_door(door.clone()));
+
+        let mut entries: Vec<Entry> = Vec::new();
+
+        // --- pre-spawn, single-threaded, so the push outcomes are exact:
+        // `e` requests whose deadline has already passed (they must be
+        // expired at refill triage, never admitted), live fill up to the
+        // capacity bound, then `extra` guaranteed sheds into the full queue
+        for i in 0..cap + extra {
+            let (tx, rx) = response_channel();
+            let deadline = (i < e).then(Instant::now);
+            let (_, push, _) =
+                submitter.submit_request(sim_src(i), sim_criterion(i), deadline, tx);
+            if i < cap {
+                assert!(push.accepted(), "request {i} should fit under capacity {cap}");
+            } else {
+                assert!(
+                    matches!(push, Push::Shed { .. }),
+                    "request {i} should shed at capacity {cap}, got {push:?}"
+                );
+            }
+            entries.push((i, rx, deadline.is_some()));
+        }
+
+        // --- spawn the fleet with every shard's FIRST incarnation faulted
+        // (shard 0 errors on its first admit, the rest panic on their first
+        // step), so any shard that touches live work crashes exactly once
+        // and respawns clean. The factory counts incarnations, which makes
+        // the restart accounting exact: restarts == spawns - shards.
+        let spawns: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+        let spawns_f = spawns.clone();
+        let pool = EnginePool::spawn(
+            n_shards,
+            move |shard| {
+                let incarnation = spawns_f[shard].fetch_add(1, Ordering::SeqCst);
+                let faults = match (incarnation, shard) {
+                    (0, 0) => FaultPlan { error_on_admits: vec![1], ..FaultPlan::default() },
+                    (0, _) => FaultPlan { panic_on_steps: vec![1], ..FaultPlan::default() },
+                    _ => FaultPlan::default(),
+                };
+                Ok(SimBackend::with_faults(sim_model(), SIM_BUCKET, SIM_TLEN, faults))
+            },
+            EngineConfig::default(),
+            queue.clone(),
+            stop,
+        )
+        .unwrap();
+
+        // --- concurrent producers racing the crashes and the shedding
+        let base = cap + extra;
+        let producers: Vec<_> = (0..3usize)
+            .map(|lane| {
+                let submitter = submitter.clone();
+                std::thread::spawn(move || -> Vec<Entry> {
+                    (0..per_lane)
+                        .map(|j| {
+                            let i = base + lane * per_lane + j;
+                            let (tx, rx) = response_channel();
+                            submitter.submit_request(sim_src(i), sim_criterion(i), None, tx);
+                            (i, rx, false)
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        for p in producers {
+            entries.extend(p.join().unwrap());
+        }
+        let total = entries.len();
+
+        // --- exactly one terminal reply per submission, classified
+        let (mut ok, mut shed_replies, mut timeouts, mut shard_errs) = (0usize, 0usize, 0, 0);
+        let mut requeue_sum = 0u64;
+        for (i, rx, had_deadline) in entries {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|_| panic!("request {i} never got a terminal reply"));
+            requeue_sum += resp.requeues as u64;
+            match resp.error.as_deref() {
+                None => {
+                    assert_eq!(
+                        resp.tokens,
+                        offline(i),
+                        "request {i}: served tokens differ from the offline reference \
+                         (requeues={})",
+                        resp.requeues
+                    );
+                    ok += 1;
+                }
+                Some("overloaded") => {
+                    assert!(resp.tokens.is_empty(), "request {i}: shed reply carries tokens");
+                    shed_replies += 1;
+                }
+                Some("timeout") => {
+                    assert!(had_deadline, "request {i} timed out without a deadline");
+                    timeouts += 1;
+                }
+                Some(err) if err.contains("shard failed") => shard_errs += 1,
+                Some(err) => panic!("request {i}: unexpected terminal error {err:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "request {i} received a second terminal reply");
+        }
+        assert_eq!(
+            ok + shed_replies + timeouts + shard_errs,
+            total,
+            "terminal replies don't cover every submission"
+        );
+
+        // --- drain and reconcile the merged report against what the
+        // producers actually observed: every robustness event, exactly
+        let shard_metrics = pool.shard_metrics().to_vec();
+        pool.drain().unwrap();
+        let report = PoolReport::from_shards_with_door(&shard_metrics, Some(&door), t0);
+        let f = &report.fleet;
+        assert_eq!(f.shed as usize, shed_replies, "door shed count != overloaded replies");
+        assert!(shed_replies >= extra, "the {extra} guaranteed pre-spawn sheds went missing");
+        assert_eq!(f.expired as usize, timeouts, "expired count != timeout replies");
+        assert_eq!(timeouts, e, "every dead-on-arrival deadline must expire, exactly once");
+        assert_eq!(f.cancelled, 0, "nothing was abandoned in this scenario");
+        assert_eq!(f.requeued, requeue_sum, "requeue count != sum of per-reply requeues");
+        assert!(f.requeued >= 1, "a crashing shard must hand its in-flight work back");
+        let spawned: usize = spawns.iter().map(|a| a.load(Ordering::SeqCst)).sum();
+        assert_eq!(f.restarts as usize, spawned - n_shards, "restarts != extra incarnations");
+        assert!(f.restarts >= 1, "at least one faulted shard must have crashed");
+        assert_eq!(f.completed as usize, ok, "completed count != ok replies");
+        assert_eq!(f.failed as usize, shard_errs, "failed count != shard-error replies");
+        assert!(report.render().contains("robustness:"), "fleet render lost the event line");
+    });
+}
+
+#[test]
+fn abandoned_requests_are_retired_silently_and_counted() {
+    quiet_injected_panics();
+    let t0 = Instant::now();
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let door = Arc::new(Metrics::new());
+    let submitter = Submitter::new(queue.clone()).with_door(door.clone());
+
+    // abandonment path 1: the client dropped its receiver before the
+    // engine ever saw the request
+    let dropped = 3usize;
+    for i in 0..dropped {
+        let (tx, rx) = response_channel();
+        drop(rx);
+        submitter.submit_with(sim_src(i), sim_criterion(i), tx);
+    }
+    // abandonment path 2: cooperative cancel flag raised while queued
+    let cancelled = 2usize;
+    let mut cancelled_rxs = Vec::new();
+    for i in dropped..dropped + cancelled {
+        let (tx, rx) = response_channel();
+        let (_, push, cancel) = submitter.submit_request(sim_src(i), sim_criterion(i), None, tx);
+        assert!(push.accepted());
+        cancel.store(true, Ordering::Release);
+        cancelled_rxs.push((i, rx));
+    }
+    // live requests riding alongside the dead ones
+    let live = 4usize;
+    let live_rxs: Vec<_> = (dropped + cancelled..dropped + cancelled + live)
+        .map(|i| (i, submitter.submit(sim_src(i), sim_criterion(i))))
+        .collect();
+
+    // spawn AFTER submitting, so the refill triage provably sees every
+    // abandoned request (nothing raced ahead into a slot)
+    let pool = EnginePool::spawn(
+        1,
+        |_| Ok(SimBackend::new(sim_model(), SIM_BUCKET, SIM_TLEN)),
+        EngineConfig::default(),
+        queue.clone(),
+        stop,
+    )
+    .unwrap();
+
+    for (i, rx) in live_rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("live request {i} starved behind abandoned ones"));
+        assert!(resp.error.is_none(), "live request {i}: {:?}", resp.error);
+        assert_eq!(resp.tokens, offline(i), "live request {i} decoded wrong");
+    }
+    let shard_metrics = pool.shard_metrics().to_vec();
+    pool.drain().unwrap();
+
+    // abandoned requests get NO reply — nobody is listening — and after
+    // the drain the senders are gone, so a buffered reply would show here
+    for (i, rx) in cancelled_rxs {
+        assert!(rx.try_recv().is_err(), "cancelled request {i} received a reply");
+    }
+    let f = PoolReport::from_shards_with_door(&shard_metrics, Some(&door), t0).fleet;
+    assert_eq!(f.cancelled as usize, dropped + cancelled, "every abandonment counted once");
+    assert_eq!(f.completed as usize, live);
+    assert_eq!((f.shed, f.expired, f.requeued, f.restarts, f.failed), (0, 0, 0, 0, 0));
+}
+
+#[test]
+fn deadline_expires_mid_decode_with_partial_progress() {
+    quiet_injected_panics();
+    let m = sim_model();
+    // a source that provably needs >= 3 invocations offline, so with a
+    // slowed shard (40ms/step) a 60ms deadline always lands mid-decode:
+    // the slot is retired by the per-iteration deadline check, not by
+    // the refill triage and not by completion
+    let (slow_i, slow_offline) = (0..64usize)
+        .find_map(|i| {
+            let (toks, inv, _) = sim_blockwise(&m, &sim_src(i), Criterion::Exact, SIM_TLEN - 1);
+            (inv >= 3).then_some((i, toks))
+        })
+        .expect("no sim source needs >= 3 invocations");
+
+    let t0 = Instant::now();
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitter = Submitter::new(queue.clone());
+
+    let (tx_a, rx_a) = response_channel();
+    submitter.submit_request(
+        sim_src(slow_i),
+        Some(Criterion::Exact),
+        Some(Instant::now() + Duration::from_millis(60)),
+        tx_a,
+    );
+    let neighbour = slow_i + 1;
+    let (tx_b, rx_b) = response_channel();
+    submitter.submit_request(sim_src(neighbour), sim_criterion(neighbour), None, tx_b);
+
+    let pool = EnginePool::spawn(
+        1,
+        |_| {
+            Ok(SimBackend::with_faults(
+                sim_model(),
+                SIM_BUCKET,
+                SIM_TLEN,
+                FaultPlan {
+                    slow_every: Some((1, Duration::from_millis(40))),
+                    ..FaultPlan::default()
+                },
+            ))
+        },
+        EngineConfig::default(),
+        queue.clone(),
+        stop,
+    )
+    .unwrap();
+
+    let a = rx_a.recv_timeout(Duration::from_secs(120)).expect("deadlined request hung");
+    assert_eq!(a.error.as_deref(), Some("timeout"), "deadline must surface as a timeout");
+    assert!(
+        slow_offline.starts_with(&a.tokens),
+        "timeout reply must carry the accepted-so-far prefix of the deterministic decode \
+         (got {:?} vs offline {:?})",
+        a.tokens,
+        slow_offline
+    );
+    // the batch-mate sharing the slowed shard is untouched by the
+    // mid-decode retirement of its neighbour's row
+    let b = rx_b.recv_timeout(Duration::from_secs(120)).expect("batch-mate hung");
+    assert!(b.error.is_none(), "batch-mate failed: {:?}", b.error);
+    assert_eq!(b.tokens, offline(neighbour), "retiring a neighbour corrupted a live row");
+
+    let shard_metrics = pool.shard_metrics().to_vec();
+    pool.drain().unwrap();
+    let f = PoolReport::from_shards(&shard_metrics, t0).fleet;
+    assert_eq!(f.expired, 1, "exactly one deadline expired");
+    assert_eq!(f.completed, 1);
+    assert_eq!((f.cancelled, f.requeued, f.restarts, f.failed), (0, 0, 0, 0));
+}

@@ -12,11 +12,10 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use blockdecode::batching::RequestQueue;
+use blockdecode::batching::{response_channel, RequestQueue};
 use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
 use blockdecode::metrics::Metrics;
 use blockdecode::model::ScoringModel;
@@ -80,7 +79,7 @@ fn run_sim_pool(n_shards: usize, n_requests: usize) -> (Vec<Vec<i32>>, Vec<Arc<M
                 let rxs: Vec<_> = (0..n_requests)
                     .filter(|i| i % 3 == lane)
                     .map(|i| {
-                        let (tx, rx) = channel();
+                        let (tx, rx) = response_channel();
                         submitter.submit_with(sim_src(i), sim_criterion(i), tx);
                         (i, rx)
                     })

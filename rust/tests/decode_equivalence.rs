@@ -11,11 +11,9 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::atomic::AtomicBool;
-use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Instant;
 
-use blockdecode::batching::{Request, RequestQueue};
+use blockdecode::batching::{response_channel, Request, RequestQueue};
 use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
 use blockdecode::metrics::Metrics;
 use blockdecode::model::ScoringModel;
@@ -181,14 +179,8 @@ fn run_two_waves(
         Engine::new(model, EngineConfig::default(), queue.clone(), metrics, stop).unwrap();
 
     let push = |i: usize| {
-        let (tx, rx) = channel();
-        assert!(queue.push(Request {
-            id: i as u64,
-            src: srcs[i].clone(),
-            criterion: None,
-            arrived: Instant::now(),
-            respond: tx,
-        }));
+        let (tx, rx) = response_channel();
+        assert!(queue.push(Request::new(i as u64, srcs[i].clone(), None, tx)).accepted());
         rx
     };
     let mut rxs: Vec<_> = (0..first_wave).map(&push).collect();

@@ -10,17 +10,16 @@
 //! for every interleaving, the seed pins the workload shape).
 
 use std::collections::HashSet;
-use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use blockdecode::batching::{Request, RequestQueue};
+use blockdecode::batching::{response_channel, Request, RequestQueue};
 use blockdecode::testing::check;
 
 fn req(id: u64) -> Request {
     // the response channel is irrelevant here; the receiver is dropped
-    let (tx, _rx) = channel();
-    Request { id, src: vec![3, 4, 2], criterion: None, arrived: Instant::now(), respond: tx }
+    let (tx, _rx) = response_channel();
+    Request::new(id, vec![3, 4, 2], None, tx)
 }
 
 /// Run `consumers` shard-like threads against `producers` pushers and
@@ -62,7 +61,10 @@ fn run_contended(
             let q = q.clone();
             std::thread::spawn(move || {
                 for i in 0..per_producer {
-                    assert!(q.push(req((p * per_producer + i) as u64)), "push into open queue");
+                    assert!(
+                        q.push(req((p * per_producer + i) as u64)).accepted(),
+                        "push into open queue"
+                    );
                 }
             })
         })
@@ -123,7 +125,7 @@ fn close_with_backlog_still_delivers_everything() {
     // present at close time is still handed out to the consumers
     let q = Arc::new(RequestQueue::new());
     for i in 0..40 {
-        assert!(q.push(req(i)));
+        assert!(q.push(req(i)).accepted());
     }
     q.close();
     let handles: Vec<_> = (0..3)

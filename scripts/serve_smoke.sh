@@ -1,9 +1,19 @@
 #!/usr/bin/env bash
-# Serve smoke: boot `repro serve` with a multi-engine pool on the
-# simulator backend (no artifacts, no PJRT compilation), drive it with
-# the `Client`-based load generator through a few hundred mixed-criterion
-# requests, then SIGINT it and assert a clean graceful drain — the
-# server/engine path used to be code CI never executed.
+# Serve smoke, two phases:
+#
+# 1. Happy path — boot `repro serve` with a multi-engine pool on the
+#    simulator backend (no artifacts, no PJRT compilation), drive it with
+#    the `Client`-based load generator through a few hundred
+#    mixed-criterion requests, then SIGINT it and assert a clean graceful
+#    drain — the server/engine path used to be code CI never executed.
+#
+# 2. Overload drill — reboot with a tiny queue capacity and ~10x the
+#    concurrency the slots can absorb, drive it with `loadgen
+#    --allow-shed`, and assert the front door actually shed (fast
+#    `overloaded` replies, counted in the fleet report) instead of
+#    queueing unboundedly; then SIGINT *under load* and assert the drain
+#    is still clean — in-flight requests finish, late arrivals get
+#    rejection replies, every shard joins.
 #
 # Used as a CI step after the tier-1 build (the release binary is already
 # present there); runs standalone too and builds the binary if missing.
@@ -12,7 +22,8 @@
 #   SMOKE_ENGINES   engine shards to boot        (default 2)
 #   SMOKE_REQUESTS  requests the loadgen drives  (default 300)
 #   SMOKE_LOG       serve output capture         (default serve-smoke.log,
-#                   uploaded as a CI artifact for perf triage)
+#                   uploaded as a CI artifact for perf triage; the overload
+#                   phase writes ${SMOKE_LOG%.log}-overload.log)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,33 +36,48 @@ ENGINES="${SMOKE_ENGINES:-2}"
 REQUESTS="${SMOKE_REQUESTS:-300}"
 LOG="${SMOKE_LOG:-serve-smoke.log}"
 
-"$BIN" serve --backend sim --engines "$ENGINES" --addr 127.0.0.1:0 >"$LOG" 2>&1 &
-SERVE_PID=$!
-# on every exit path: never leak the server, always surface its log (the
-# `set -e` aborts included — a failing loadgen used to leave the server
-# running and the log unseen)
+OVERLOAD_LOG="${LOG%.log}-overload.log"
+LOADGEN_LOG="${LOG%.log}-loadgen.log"
+
+SERVE_PID=""
+BG_PID=""
+# on every exit path: never leak a server or a background loadgen, always
+# surface the logs (the `set -e` aborts included — a failing loadgen used
+# to leave the server running and the log unseen)
 cleanup() {
-    kill "$SERVE_PID" 2>/dev/null || true
+    [ -n "$BG_PID" ] && kill "$BG_PID" 2>/dev/null || true
+    [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null || true
     echo "---- serve log ----"
     cat "$LOG" 2>/dev/null || true
+    echo "---- overload serve log ----"
+    cat "$OVERLOAD_LOG" 2>/dev/null || true
 }
 trap cleanup EXIT
 
-# the listen line carries the ephemeral port
-ADDR=""
-for _ in $(seq 1 100); do
-    ADDR=$(awk '/^serving / {print $NF; exit}' "$LOG" 2>/dev/null || true)
-    [ -n "$ADDR" ] && break
-    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
-        echo "serve-smoke: server died during startup" >&2
+# boot a server in the background (extra args pass through to `serve`)
+# and wait for its listen line, which carries the ephemeral port
+boot_server() { # <log> [serve args...]
+    local log=$1
+    shift
+    "$BIN" serve --backend sim --addr 127.0.0.1:0 "$@" >"$log" 2>&1 &
+    SERVE_PID=$!
+    ADDR=""
+    for _ in $(seq 1 100); do
+        ADDR=$(awk '/^serving / {print $NF; exit}' "$log" 2>/dev/null || true)
+        [ -n "$ADDR" ] && break
+        if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+            echo "serve-smoke: server died during startup" >&2
+            exit 1
+        fi
+        sleep 0.1
+    done
+    if [ -z "$ADDR" ]; then
+        echo "serve-smoke: no listen address after 10s" >&2
         exit 1
     fi
-    sleep 0.1
-done
-if [ -z "$ADDR" ]; then
-    echo "serve-smoke: no listen address after 10s" >&2
-    exit 1
-fi
+}
+
+boot_server "$LOG" --engines "$ENGINES"
 echo "serve-smoke: $ENGINES-shard pool on $ADDR, driving $REQUESTS requests"
 
 "$BIN" loadgen --addr "$ADDR" --n "$REQUESTS" --conns 4
@@ -87,4 +113,50 @@ grep -q "completed=$REQUESTS " "$LOG" || {
     echo "serve-smoke: fleet report does not show $REQUESTS completed" >&2
     exit 1
 }
-echo "serve-smoke: OK ($ENGINES shards, $REQUESTS requests, clean SIGINT drain)"
+echo "serve-smoke: phase 1 OK ($ENGINES shards, $REQUESTS requests, clean SIGINT drain)"
+
+# ---- phase 2: overload + chaos drill ----
+# A queue capacity of 1 against 32 synchronous connections (~10x what the
+# 2x4 engine slots plus the queue can hold) forces the front door to shed:
+# whenever more connections have a request outstanding than the fleet can
+# absorb, the excess gets an instant `overloaded` reply instead of an
+# unbounded queue. `--deadline-ms` is set (generously) so the deadline
+# plumbing is exercised end-to-end without producing timeouts.
+SERVE_PID=""
+boot_server "$OVERLOAD_LOG" --engines 2 --queue-cap 1 --deadline-ms 30000
+echo "serve-smoke: overload drill on $ADDR (queue-cap 1, 32 conns)"
+
+"$BIN" loadgen --addr "$ADDR" --n 960 --conns 32 --allow-shed | tee "$LOADGEN_LOG"
+grep -q "loadgen: shed replies: " "$LOADGEN_LOG" || {
+    echo "serve-smoke: overload drive produced zero shed replies" >&2
+    exit 1
+}
+
+# SIGINT *under load*: a fresh loadgen is mid-flight when the drain starts.
+# Its in-flight requests must finish (or get rejection replies — the
+# background loadgen itself is allowed to fail), the queue must close, and
+# every shard must still join cleanly.
+"$BIN" loadgen --addr "$ADDR" --n 100000 --conns 32 --allow-shed >/dev/null 2>&1 &
+BG_PID=$!
+sleep 0.3
+kill -INT "$SERVE_PID"
+RC=0
+wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+wait "$BG_PID" 2>/dev/null || true
+BG_PID=""
+
+if [ "$RC" -ne 0 ]; then
+    echo "serve-smoke: overload serve exited rc=$RC after SIGINT (expected clean drain)" >&2
+    exit 1
+fi
+grep -q "drained 2 engine shards cleanly" "$OVERLOAD_LOG" || {
+    echo "serve-smoke: missing clean-drain line after overload SIGINT" >&2
+    exit 1
+}
+# the fleet report must account for the shedding (nonzero shed counter)
+grep -Eq "robustness: shed=[1-9]" "$OVERLOAD_LOG" || {
+    echo "serve-smoke: fleet report shows no shed requests under overload" >&2
+    exit 1
+}
+echo "serve-smoke: OK (phase 1 drain + phase 2 overload shed and drain-under-load)"
