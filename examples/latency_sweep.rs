@@ -1,27 +1,189 @@
 //! Latency sweep: single-sentence decode latency and invocation counts
 //! across block sizes k and acceptance criteria — the Figure 4 companion
 //! that shows where wall-clock gains peak even as iteration gains grow —
-//! plus a shard-count sweep of the sim-backed engine pool (how the
-//! serving topology itself scales, independent of the device model).
+//! plus the serving-side sim sweeps: the acceptance-adaptive k-policy
+//! trajectory (written to `BENCH_adaptive_k.json` at the repo root) and a
+//! shard-count sweep of the sim-backed engine pool.
+//!
+//! The sim sections run first and need no artifacts, so CI produces the
+//! BENCH snapshot on every run; the device section is skipped (with a
+//! note) when `artifacts/` is absent.
 //!
 //! ```sh
 //! cargo run --release --example latency_sweep -- [n_sentences]
 //! ```
 
 use anyhow::Result;
+use blockdecode::bench::{round4, write_snapshot};
 use blockdecode::decoding::{self, BlockwiseConfig, Criterion};
 use blockdecode::harness::common::Table;
 use blockdecode::harness::Ctx;
-use blockdecode::testing::sim::sim_pool_burst;
+use blockdecode::scheduler::KPolicy;
+use blockdecode::testing::sim::{sim_policy_run, sim_pool_burst, SimModel, HARD_MARKER};
+use blockdecode::util::json::Json;
 use blockdecode::util::stats::summarize;
 use blockdecode::util::tensor::{TensorF32, TensorI32};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 fn main() -> Result<()> {
     blockdecode::util::logging::init();
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(24);
 
-    let ctx = Ctx::load("artifacts")?;
+    adaptive_k_sweep()?;
+    pool_sweep()?;
+
+    match Ctx::load("artifacts") {
+        Ok(ctx) => device_sweep(&ctx, n),
+        Err(e) => {
+            println!("device sweep skipped (artifacts unavailable: {e:#})");
+            Ok(())
+        }
+    }
+}
+
+/// Acceptance-adaptive block size: one mixed easy/hard sim workload
+/// through every pinned static k in the compiled family and the EWMA
+/// policy. Every field is deterministic (FNV sim, pure policy
+/// arithmetic, no wall clock), so the `BENCH_adaptive_k.json` snapshot
+/// this writes is committed at the repo root and diffs only when the
+/// decode or policy semantics change. The acceptance gate (enforced
+/// here, so CI re-proves it on every run): the ewma row must
+/// Pareto-dominate at least one static k — steps/request no worse AND
+/// scored positions/request (the per-step compute, Σ k+1) no worse.
+/// Raw step counts alone can't be the gate: advance-per-step is
+/// monotone in k, so the largest static k always wins that axis by
+/// burning k proposal positions on rows that accept one token.
+fn adaptive_k_sweep() -> Result<()> {
+    const KS: [usize; 4] = [1, 2, 4, 8];
+    const MAX_LEN: usize = 24;
+    const REQUESTS: usize = 32;
+    let model = SimModel::new(64, 8, 0.95, 14, 0xADA9).with_hard_agreement(0.05);
+    // mixed workload: every other request carries the hard marker, like
+    // `loadgen --mix 1:1`
+    let srcs: Vec<Vec<i32>> = (0..REQUESTS)
+        .map(|i| {
+            let mut s = vec![3 + (i % 7) as i32, 11 + (i % 5) as i32, 4 + (i % 3) as i32, 2];
+            if i % 2 == 1 {
+                s.insert(0, HARD_MARKER);
+            }
+            s
+        })
+        .collect();
+
+    let mut policies: Vec<KPolicy> = KS.iter().map(|&k| KPolicy::Static(Some(k))).collect();
+    policies.push(KPolicy::Ewma { alpha: 0.5 });
+
+    let mut table = Table::new(&["policy", "steps/req", "pos/req", "mean k̂", "per-k invocations"]);
+    let mut rows = Vec::new();
+    let mut summary: Vec<(String, f64, f64)> = Vec::new();
+    for policy in &policies {
+        let rep = sim_policy_run(&model, &srcs, policy, &KS, MAX_LEN);
+        // scored decoder positions: every step at k pays k+1 window
+        // positions regardless of how many proposals get accepted
+        let positions: u64 = rep.k_invocations.iter().map(|(k, n)| (*k as u64 + 1) * n).sum();
+        let ppr = positions as f64 / REQUESTS as f64;
+        let perk: Vec<String> =
+            rep.k_invocations.iter().map(|(k, n)| format!("k{k}={n}")).collect();
+        table.row(vec![
+            policy.label(),
+            format!("{:.2}", rep.steps_per_request()),
+            format!("{ppr:.2}"),
+            format!("{:.2}", rep.khat()),
+            perk.join(" "),
+        ]);
+        summary.push((policy.label(), rep.steps_per_request(), ppr));
+        let mut ki = BTreeMap::new();
+        for (k, n) in &rep.k_invocations {
+            ki.insert(k.to_string(), Json::Num(*n as f64));
+        }
+        let mut kbk = BTreeMap::new();
+        for (k, (s, t)) in &rep.khat_by_k {
+            kbk.insert(k.to_string(), Json::arr_i32(&[*s as i32, *t as i32]));
+        }
+        rows.push(Json::obj(vec![
+            ("policy", Json::Str(policy.label())),
+            ("steps", Json::Num(rep.steps as f64)),
+            ("steps_per_request", Json::Num(round4(rep.steps_per_request()))),
+            ("positions", Json::Num(positions as f64)),
+            ("positions_per_request", Json::Num(round4(ppr))),
+            ("khat", Json::Num(round4(rep.khat()))),
+            ("k_invocations", Json::Obj(ki)),
+            ("khat_by_k", Json::Obj(kbk)),
+        ]));
+    }
+    println!(
+        "adaptive k policy (sim backend, {REQUESTS} requests, 1:1 easy:hard, ks {KS:?}):\n{}",
+        table.render()
+    );
+
+    let (ewma_spr, ewma_ppr) = {
+        let last = summary.last().expect("at least one policy");
+        (last.1, last.2)
+    };
+    let dominated: Vec<String> = summary
+        .iter()
+        .take(KS.len())
+        .filter(|(_, spr, ppr)| ewma_spr <= *spr && ewma_ppr <= *ppr)
+        .map(|(label, _, _)| label.clone())
+        .collect();
+    anyhow::ensure!(
+        !dominated.is_empty(),
+        "adaptive gate: ewma ({ewma_spr:.4} steps/req, {ewma_ppr:.4} pos/req) \
+         Pareto-dominates no static k"
+    );
+    println!("adaptive gate: ewma dominates {dominated:?} on steps/request and positions/request");
+
+    let ks_i32: Vec<i32> = KS.iter().map(|&k| k as i32).collect();
+    let model_json = Json::obj(vec![
+        ("vocab", Json::Num(model.vocab as f64)),
+        ("k", Json::Num(model.k as f64)),
+        ("agreement", Json::Num(model.agreement)),
+        ("hard_agreement", Json::Num(model.hard_agreement)),
+        ("mean_len", Json::Num(model.mean_len as f64)),
+        ("seed", Json::Num(model.seed as f64)),
+    ]);
+    let dom_json: Vec<Json> = dominated.iter().cloned().map(Json::Str).collect();
+    let gate = Json::obj(vec![("dominated_statics", Json::Arr(dom_json))]);
+    let snapshot = Json::obj(vec![
+        ("bench", Json::Str("adaptive_k".into())),
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("max_len", Json::Num(MAX_LEN as f64)),
+        ("ks", Json::arr_i32(&ks_i32)),
+        ("model", model_json),
+        ("policies", Json::Arr(rows)),
+        ("gate", gate),
+        // no wall-clock fields: this snapshot is deterministic by design
+        ("wall_clock", Json::Null),
+    ]);
+    let path = write_snapshot("adaptive_k", &snapshot)?;
+    println!("wrote {}\n", path.display());
+    Ok(())
+}
+
+/// Pool sharding: requests/s through a sim-backed EnginePool as the
+/// shard count grows — the serving-topology half of the latency story
+/// (the device rows are per-sequence; this is fleet throughput).
+fn pool_sweep() -> Result<()> {
+    let pool_reqs = 96usize;
+    let mut pt = Table::new(&["shards", "req/s", "speedup"]);
+    let mut base_rps = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let rps = sim_pool_rps(shards, pool_reqs)?;
+        if shards == 1 {
+            base_rps = rps;
+        }
+        pt.row(vec![
+            shards.to_string(),
+            format!("{rps:.1}"),
+            format!("{:.2}x", rps / base_rps),
+        ]);
+    }
+    println!("pool sharding (sim backend, {pool_reqs} requests):\n{}", pt.render());
+    Ok(())
+}
+
+fn device_sweep(ctx: &Ctx, n: usize) -> Result<()> {
     let ds = ctx.dataset("mt_dev.json")?;
     let n = n.min(ds.len());
 
@@ -134,25 +296,6 @@ fn main() -> Result<()> {
         ]);
     }
     println!("{}", table.render());
-
-    // pool sharding: requests/s through a sim-backed EnginePool as the
-    // shard count grows — the serving-topology half of the latency story
-    // (the device rows above are per-sequence; this is fleet throughput)
-    let pool_reqs = 96usize;
-    let mut pt = Table::new(&["shards", "req/s", "speedup"]);
-    let mut base_rps = 0.0f64;
-    for shards in [1usize, 2, 4] {
-        let rps = sim_pool_rps(shards, pool_reqs)?;
-        if shards == 1 {
-            base_rps = rps;
-        }
-        pt.row(vec![
-            shards.to_string(),
-            format!("{rps:.1}"),
-            format!("{:.2}x", rps / base_rps),
-        ]);
-    }
-    println!("pool sharding (sim backend, {pool_reqs} requests):\n{}", pt.render());
     Ok(())
 }
 

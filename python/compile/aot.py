@@ -139,14 +139,26 @@ def make_decode_fn(cfg: M.ModelConfig):
     return fn
 
 
-def window_len(cfg: M.ModelConfig) -> int:
+def window_len(cfg: M.ModelConfig, k: int | None = None) -> int:
     """Positions per row the frontier-windowed decode entry returns: the
     k+1 decoder positions (verify window + re-predict slot) the blockwise
-    accept logic reads each step."""
-    return min(cfg.k + 1, cfg.max_tgt)
+    accept logic reads each step. `k` overrides the trained block size for
+    the multi-k entries (`export_ks`)."""
+    return min((cfg.k if k is None else k) + 1, cfg.max_tgt)
 
 
-def make_decode_window_fn(cfg: M.ModelConfig):
+def export_ks(k: int) -> list:
+    """Block sizes the decode-entry families are compiled at: powers of two
+    below the trained k, plus k itself (e.g. k=8 -> [1,2,4,8]). Small
+    enough to bound export time, geometric so the adaptive policy always
+    has a roughly-halving step down when drafts are being rejected. Every
+    k2 < k entry reuses the SAME weights and scores all K heads — only the
+    gathered window narrows — so acceptance at k2 is byte-identical to
+    truncating a k-wide step."""
+    return sorted({k} | {x for x in (1, 2, 4, 8) if x < k})
+
+
+def make_decode_window_fn(cfg: M.ModelConfig, k: int | None = None):
     """Frontier-windowed decode entry: same combined forward pass as
     `make_decode_fn`, but gathers, per batch row, only the `k+1`-position
     logit window starting at that row's frontier index before the top-k —
@@ -155,8 +167,9 @@ def make_decode_window_fn(cfg: M.ModelConfig):
     instead of all T (per-position top-k commutes with the gather).
     `frontier` is an i32 [B] vector; the per-row start is clamped to
     [0, T-(k+1)] by dynamic_slice (the rust session applies the identical
-    clamp so its host-side `base` matches the gather)."""
-    w = window_len(cfg)
+    clamp so its host-side `base` matches the gather). `k` overrides the
+    window's block size for the multi-k entries."""
+    w = window_len(cfg, k)
 
     def fn(params, memory, src, tgt_in, frontier):
         logits = M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True)
@@ -171,7 +184,7 @@ def make_decode_window_fn(cfg: M.ModelConfig):
     return fn
 
 
-def make_decode_cached_fn(cfg: M.ModelConfig):
+def make_decode_cached_fn(cfg: M.ModelConfig, k: int | None = None):
     """KV-cached decode entry: the decoder runs only over the `k+1`
     frontier window (`decode_heads_cached`), reading the stacked
     [2*n_dec,B,T,H,Dh] self-attention caches for positions below each
@@ -180,12 +193,17 @@ def make_decode_cached_fn(cfg: M.ModelConfig):
     plus the updated caches — per-step decoder FLOPs drop from O(T) to
     O(k+1). The rust session guards the cache-validity contract (see
     `decode_heads_cached`) and falls back to the windowed entry when a
-    caller rewrites history."""
+    caller rewrites history. `k` overrides the window's block size for
+    the multi-k entries; the cache layout is k-independent, so one K/V
+    buffer chains through steps of any compiled block size."""
+    w = window_len(cfg, k)
+
     def fn(params, memory, src, tgt_in, frontier, kv):
         logits, kv_new = M.decode_heads_cached(
-            params, cfg, memory, src, tgt_in, frontier, kv, use_pallas=True
+            params, cfg, memory, src, tgt_in, frontier, kv, use_pallas=True,
+            window=w,
         )
-        topv, topi = manual_topk(logits, TOPT)     # [B,k+1,K,TOPT]
+        topv, topi = manual_topk(logits, TOPT)     # [B,w,K,TOPT]
         return topv, topi.astype(jnp.int32), kv_new
     return fn
 
@@ -436,6 +454,31 @@ class Builder:
                             export_fn(mk, args, path)
                         self.manifest["entries"][e] = {"file": f"hlo/{e}.hlo.txt", "batch": b}
                     entry_names[f"{kind}_b{b}"] = e
+                # multi-k decode families: the same windowed/cached steps
+                # compiled at every block size in export_ks(k). The trained
+                # k keeps the legacy un-suffixed logical name above; the
+                # others get the (B,k) grammar `decode_window_b{b}_k{k2}`
+                # (`manifest.rs::bucketed_k`) so the engine's KPolicy can
+                # pick a step's window at runtime.
+                for k2 in export_ks(k):
+                    if k2 == k:
+                        continue
+                    for kind, mk, args in (
+                        ("decode_window", make_decode_window_fn(cfg, k2),
+                         (params, mem, src, tgt, fro)),
+                        ("decode_cached", make_decode_cached_fn(cfg, k2),
+                         (params, mem, src, tgt, fro, kv0)),
+                    ):
+                        e = f"{sig}_b{b}_{kind}_k{k2}"
+                        if e not in self.manifest["entries"]:
+                            path = os.path.join(self.out, "hlo", f"{e}.hlo.txt")
+                            if self.force or not os.path.exists(path):
+                                print(f"  export {e}", flush=True)
+                                export_fn(mk, args, path)
+                            self.manifest["entries"][e] = {
+                                "file": f"hlo/{e}.hlo.txt", "batch": b,
+                            }
+                        entry_names[f"{kind}_b{b}_k{k2}"] = e
         self.manifest["variants"][name] = {
             "task": task,
             "k": k,
@@ -452,6 +495,9 @@ class Builder:
                 # loader sizes the [2*n_dec,B,T,H,Dh] K/V buffers from this
                 # (absent in old manifests -> cached path stays disabled)
                 "n_dec": cfg.n_dec,
+                # compiled block sizes of the decode families (absent in
+                # old manifests -> only the trained k, adaptive tier off)
+                "ks": ([] if is_nat else export_ks(k)),
             },
         }
 

@@ -143,6 +143,7 @@ def decode_heads_cached(
     frontier: jnp.ndarray,
     kv: jnp.ndarray,
     use_pallas: bool = False,
+    window: int | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """KV-cached causal decode over the k+1-position frontier window.
 
@@ -153,6 +154,13 @@ def decode_heads_cached(
     window K/V back in, so per-step decoder FLOPs are O(k+1) instead of
     O(T). Returns ([B,k+1,K,V] window logits, updated caches).
 
+    `window` overrides the window length (default: the trained cfg.k+1) —
+    the multi-k export lowers this same function once per compiled block
+    size, sharing weights and head count: heads always score all K
+    proposal positions, only the gathered window narrows. The cache
+    contract is window-length-agnostic, so one K/V buffer serves every
+    compiled k and steps may change block size freely.
+
     The contract the Rust session enforces host-side: cache entries below
     a row's frontier must have been written by earlier windows of the SAME
     (append-only) prefix — callers that rewrite history (beam repacking)
@@ -160,7 +168,7 @@ def decode_heads_cached(
     """
     t = params["trunk"]
     b, t_len = tgt_in.shape
-    w = min(cfg.k + 1, cfg.max_tgt)
+    w = min(cfg.k + 1, cfg.max_tgt) if window is None else min(window, cfg.max_tgt)
     start = jnp.clip(frontier, 0, t_len - w)                 # [B], like dynamic_slice
     tok_win = jax.vmap(
         lambda row, s: jax.lax.dynamic_slice_in_dim(row, s, w, axis=0)

@@ -103,6 +103,77 @@ def test_decode_window_matches_full(small):
         )
 
 
+def test_multi_k_window_matches_full(small):
+    """Multi-k numerics: a `decode_window_b*_k{k2}` entry compiled at a
+    narrower block size must return exactly the clamped
+    [frontier : frontier+k2+1] slice of the full-length top-k tensors —
+    same weights, all K heads scored, only the gathered window narrows."""
+    v, cfg, params = small
+    src, tgt = D.gen_mt_dataset(v, 2, seed=6)
+    src, tgt = jnp.asarray(src[:, : cfg.max_src]), jnp.asarray(tgt[:, : cfg.max_tgt])
+    mem = M.encode(params, cfg, src)
+    bos = jnp.ones((2, 1), jnp.int32)
+    tgt_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    topv, topi = jax.jit(aot.make_decode_fn(cfg))(params, mem, src, tgt_in)
+
+    for k2 in aot.export_ks(cfg.k):
+        w = aot.window_len(cfg, k2)
+        assert w == k2 + 1
+        frontier = jnp.asarray([3, cfg.max_tgt - 1], jnp.int32)
+        wv, wi = jax.jit(aot.make_decode_window_fn(cfg, k2))(
+            params, mem, src, tgt_in, frontier
+        )
+        # head axis stays the trained K regardless of the entry's k2
+        assert wv.shape == (2, w, cfg.k, aot.TOPT)
+        for b, start in enumerate([3, cfg.max_tgt - w]):
+            np.testing.assert_array_equal(
+                np.asarray(wi[b]), np.asarray(topi[b, start : start + w])
+            )
+            np.testing.assert_allclose(
+                np.asarray(wv[b]), np.asarray(topv[b, start : start + w])
+            )
+
+
+def test_multi_k_cached_chains_across_block_sizes(small):
+    """The K/V cache layout is k-independent: chaining one cache buffer
+    through steps of DIFFERENT compiled block sizes (the adaptive policy's
+    runtime behavior) must reproduce the from-scratch full forward at
+    every step."""
+    v, cfg, params = small
+    b, t_len = 1, cfg.max_tgt
+    src_np, tgt_np = D.gen_mt_dataset(v, 1, seed=7)
+    src = jnp.asarray(src_np[:b, : cfg.max_src])
+    ref = [int(x) for x in tgt_np[0, : t_len - 1] if x != 0]
+    mem = M.encode(params, cfg, src)
+    bos_row = np.zeros((b, t_len), np.int32)
+    bos_row[0, 0] = 1
+    bos_row[0, 1 : 1 + len(ref)] = ref
+    tgt_in = jnp.asarray(bos_row)
+    full = M.decode_heads(params, cfg, mem, src, tgt_in)
+
+    kv = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
+    frontier = 0
+    ks = aot.export_ks(cfg.k)
+    # alternate block sizes step over step, like the ewma policy does
+    for step in range(6):
+        k2 = ks[step % len(ks)]
+        w = aot.window_len(cfg, k2)
+        start = min(frontier, t_len - w)
+        win, kv = M.decode_heads_cached(
+            params, cfg, mem, src, tgt_in,
+            jnp.asarray([frontier], jnp.int32), kv, window=w,
+        )
+        assert win.shape == (b, w, cfg.k, cfg.vocab)
+        np.testing.assert_allclose(
+            np.asarray(win[0]),
+            np.asarray(full[0, start : start + w]),
+            rtol=1e-5,
+            atol=1e-5,
+            err_msg=f"step {step} k2={k2} frontier={frontier}",
+        )
+        frontier = min(frontier + w, t_len - 1)
+
+
 def test_decode_cached_matches_full_multistep(small):
     """Tentpole numerics: the KV-cached entry's window logits must match
     the from-scratch full forward to within fp32 tolerance after multi-step

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use blockdecode::batching::{response_channel, Request, RequestQueue};
-use blockdecode::bench::Bench;
+use blockdecode::bench::{round4, write_snapshot, Bench};
 use blockdecode::decoding::state::BlockState;
 use blockdecode::decoding::Criterion;
 use blockdecode::model::WindowScores;
@@ -140,6 +140,34 @@ fn main() {
     };
     if let (Some(one), Some(two)) = (tput(&case_name(1)), tput(&case_name(2))) {
         println!("pool scaling: 2-shard = {:.2}x 1-shard throughput", two / one);
+    }
+
+    // machine-readable snapshot (CI uploads BENCH_*.json as artifacts):
+    // wall-clock numbers, so this one is gitignored — unlike the
+    // deterministic BENCH_adaptive_k.json trajectory latency_sweep commits
+    let mut cases = Vec::new();
+    for m in b.results() {
+        let mut fields = vec![
+            ("name", Json::Str(m.name.clone())),
+            ("iters", Json::Num(m.iters as f64)),
+            ("mean_us", Json::Num(round4(m.mean_us))),
+            ("p50_us", Json::Num(round4(m.p50_us))),
+            ("p90_us", Json::Num(round4(m.p90_us))),
+        ];
+        if let Some((v, unit)) = m.throughput {
+            fields.push(("throughput", Json::Num(round4(v))));
+            fields.push(("unit", Json::Str(unit.to_string())));
+        }
+        cases.push(Json::obj(fields));
+    }
+    let snapshot = Json::obj(vec![
+        ("bench", Json::Str("pool".into())),
+        ("pool_requests", Json::Num(POOL_REQS as f64)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    match write_snapshot("pool", &snapshot) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_pool.json write failed: {e}"),
     }
 
     println!("\n== summary ==\n{}", b.report());

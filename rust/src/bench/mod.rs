@@ -1,10 +1,34 @@
 //! Micro-benchmark framework (no `criterion` offline): warmup, timed
 //! iterations with robust statistics, and aligned text reports. Used by
 //! the `cargo bench` targets under `rust/benches/` (harness = false).
+//! Also home of the machine-readable `BENCH_*.json` snapshot writer the
+//! bench/example targets share.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::{percentile, std_dev};
+
+/// Write a machine-readable benchmark snapshot to `BENCH_<name>.json` at
+/// the repo root (one JSON object, trailing newline) and return the path.
+/// CI uploads these as workflow artifacts; snapshots whose fields are
+/// fully deterministic (sim-backed trajectories) are also committed so
+/// the bench trajectory diffs with the code.
+pub fn write_snapshot(name: &str, body: &Json) -> std::io::Result<PathBuf> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ lives under the repo root")
+        .join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, body.to_string() + "\n")?;
+    Ok(path)
+}
+
+/// Round to 4 decimal places for snapshot stability: committed snapshots
+/// must not churn on the 17th significant digit of a float division.
+pub fn round4(x: f64) -> f64 {
+    (x * 1e4).round() / 1e4
+}
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]

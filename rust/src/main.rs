@@ -31,9 +31,9 @@ use blockdecode::harness::{self, Ctx};
 use blockdecode::model::ScoringModel;
 use blockdecode::runtime::{Manifest, Runtime};
 use blockdecode::scheduler::pool::{EnginePool, PoolReport};
-use blockdecode::scheduler::{EngineConfig, ModelBackend};
+use blockdecode::scheduler::{EngineConfig, KPolicy, ModelBackend};
 use blockdecode::server::{parse_criterion, Client, Decoded, Server};
-use blockdecode::testing::sim::{SimBackend, SimModel};
+use blockdecode::testing::sim::{SimBackend, SimModel, HARD_MARKER};
 use blockdecode::tokenizer::{Vocab, EOS};
 use blockdecode::util::argparse::{ArgError, ArgSpec};
 use blockdecode::util::logging;
@@ -138,6 +138,19 @@ fn serve(rest: &[String]) -> Result<()> {
             "2",
             "times the pool supervisor respawns a crashed engine shard before \
              declaring it dead",
+        )
+        .opt(
+            "k-policy",
+            "static",
+            "per-row block-size policy over the compiled (B,k) entry family: \
+             'static' (always the trained k), 'static:K' (pin one compiled k), \
+             or 'ewma[:ALPHA]' (adapt each row's k to its acceptance EWMA)",
+        )
+        .opt(
+            "sim-hard-agreement",
+            "0.15",
+            "sim backend only: proposal-agreement rate for sources carrying \
+             the hard marker token (easy sources keep the base 0.85)",
         );
     let a = spec.parse(rest)?;
 
@@ -148,6 +161,7 @@ fn serve(rest: &[String]) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("bad criterion"))?,
         min_block: a.usize("min-block")?,
         restart_budget: a.usize("restart-budget")?,
+        k_policy: KPolicy::parse(&a.str("k-policy"))?,
         ..Default::default()
     };
     let deadline = match a.usize("deadline-ms")? {
@@ -170,9 +184,18 @@ fn serve(rest: &[String]) -> Result<()> {
     let backend = a.str("backend");
     let (label, pool) = match backend.as_str() {
         "sim" => {
+            let hard = a.str("sim-hard-agreement").parse::<f64>().ok();
+            anyhow::ensure!(
+                hard.is_some_and(|h| (0.0..=1.0).contains(&h)),
+                "--sim-hard-agreement must be a rate in [0,1]"
+            );
+            let hard = hard.unwrap();
             let pool = EnginePool::spawn(
                 n_engines,
-                move |_shard| Ok(SimBackend::new(sim_serve_model(), 4, 25)),
+                move |_shard| {
+                    Ok(SimBackend::new(sim_serve_model().with_hard_agreement(hard), 4, 25)
+                        .with_ks(&[1, 2, 4, 8]))
+                },
                 cfg,
                 queue.clone(),
                 stop.clone(),
@@ -269,6 +292,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
         .opt("src-len", "6", "tokens per synthetic source (EOS appended)")
         .opt("vocab", "64", "source token id range")
         .opt("timeout-ms", "30000", "client read deadline per reply (0 = wait forever)")
+        .opt(
+            "mix",
+            "1:0",
+            "easy:hard workload ratio — the hard fraction of requests is \
+             prefixed with the sim hard-marker token, so a sim server's \
+             proposal agreement (and k̂) drops on those rows",
+        )
         .flag(
             "allow-shed",
             "tolerate 'overloaded' replies: count them instead of failing \
@@ -286,6 +316,18 @@ fn loadgen(rest: &[String]) -> Result<()> {
         ms => Some(Duration::from_millis(ms as u64)),
     };
     let allow_shed = a.flag("allow-shed");
+    // --mix easy:hard — request i is hard when its residue mod (easy+hard)
+    // falls in the hard band, a deterministic interleave every lane agrees
+    // on (lanes partition requests by i % conns)
+    let mix = a.str("mix");
+    let (mix_easy, mix_hard) = match mix.split_once(':') {
+        Some((e, h)) => (
+            e.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --mix '{mix}'"))?,
+            h.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --mix '{mix}'"))?,
+        ),
+        None => anyhow::bail!("bad --mix '{mix}' (want EASY:HARD, e.g. 3:1)"),
+    };
+    anyhow::ensure!(mix_easy + mix_hard >= 1, "--mix needs a nonzero ratio");
 
     // mixed criteria: the server default plus every wire-named criterion
     const CRITERIA: [Option<&str>; 4] = [None, Some("exact"), Some("top2"), Some("dist2")];
@@ -295,12 +337,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
     for lane in 0..conns {
         let addr = addr.clone();
         lanes.push(std::thread::spawn(
-            move || -> Result<(usize, usize, Vec<f64>, Vec<f64>)> {
+            move || -> Result<(usize, usize, Vec<f64>, Vec<f64>, Vec<f64>)> {
                 let mut client = Client::connect(&addr)?;
                 client.set_read_timeout(timeout)?;
                 let mut rng = Rng::new(0x10AD + lane as u64);
                 let mut lat = Vec::new();
                 let mut queued = Vec::new();
+                let mut khats = Vec::new();
                 let mut done = 0usize;
                 let mut shed = 0usize;
                 for i in 0..n {
@@ -309,6 +352,9 @@ fn loadgen(rest: &[String]) -> Result<()> {
                     }
                     let mut src: Vec<i32> =
                         (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
+                    if i % (mix_easy + mix_hard) >= mix_easy {
+                        src.insert(0, HARD_MARKER);
+                    }
                     src.push(EOS);
                     // lane-local alternation: with i % conns fixed per lane,
                     // indexing by i would pin one criterion per connection
@@ -319,11 +365,19 @@ fn loadgen(rest: &[String]) -> Result<()> {
                         Decoded::Ok(r) => {
                             lat.push(sent.elapsed().as_secs_f64() * 1000.0);
                             queued.push(r.queued_ms);
+                            khats.push(r.khat);
                             anyhow::ensure!(!r.tokens.is_empty(), "request {i}: empty decode");
                             anyhow::ensure!(r.invocations >= 1, "request {i}: zero invocations");
                             anyhow::ensure!(
                                 r.blocks.iter().sum::<usize>() == r.tokens.len(),
                                 "request {i}: accepted blocks do not sum to the token count"
+                            );
+                            let want_khat = r.blocks.iter().sum::<usize>() as f64
+                                / r.blocks.len().max(1) as f64;
+                            anyhow::ensure!(
+                                (r.khat - want_khat).abs() < 1e-6,
+                                "request {i}: khat {} disagrees with blocks (want {want_khat})",
+                                r.khat
                             );
                             done += 1;
                         }
@@ -337,7 +391,7 @@ fn loadgen(rest: &[String]) -> Result<()> {
                         }
                     }
                 }
-                Ok((done, shed, lat, queued))
+                Ok((done, shed, lat, queued, khats))
             },
         ));
     }
@@ -345,21 +399,25 @@ fn loadgen(rest: &[String]) -> Result<()> {
     let mut shed = 0usize;
     let mut lat = Vec::new();
     let mut queued = Vec::new();
+    let mut khats = Vec::new();
     for (lane, h) in lanes.into_iter().enumerate() {
-        let (d, sh, ls, qs) =
+        let (d, sh, ls, qs, ks) =
             h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
         done += d;
         shed += sh;
         lat.extend(ls);
         queued.extend(qs);
+        khats.extend(ks);
     }
     // every request resolved exactly once: decoded or (tolerated) shed
     anyhow::ensure!(done + shed == n, "only {done} decoded + {shed} shed of {n} requests");
     let s = summarize(&lat);
     let q = summarize(&queued);
+    let kh = summarize(&khats);
     println!(
         "loadgen: {} decoded over {} connection{} in {:.2}s — \
-         e2e p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms; queue-wait p50 {:.1}ms p99 {:.1}ms",
+         e2e p50 {:.1}ms p90 {:.1}ms p99 {:.1}ms; queue-wait p50 {:.1}ms p99 {:.1}ms; \
+         k̂ mean {:.2} p50 {:.2} p90 {:.2}",
         done,
         conns,
         if conns == 1 { "" } else { "s" },
@@ -368,7 +426,10 @@ fn loadgen(rest: &[String]) -> Result<()> {
         s.p90,
         s.p99,
         q.p50,
-        q.p99
+        q.p99,
+        kh.mean,
+        kh.p50,
+        kh.p90
     );
     if shed > 0 {
         println!("loadgen: shed replies: {shed}");

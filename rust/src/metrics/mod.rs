@@ -7,6 +7,7 @@
 //! them into one fleet view with [`Metrics::merge`] at report time —
 //! see `scheduler::pool::PoolReport`.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -32,6 +33,13 @@ struct Inner {
     invocations: u64,
     accept_steps: u64,
     accept_tokens: u64,
+    /// accepted-block-size histogram: k̂ value -> accept substeps
+    accept_hist: BTreeMap<usize, u64>,
+    /// invocations by the step's chosen block size (adaptive-k engines)
+    k_invocations: BTreeMap<usize, u64>,
+    /// acceptance attributed to the k that generated the verified
+    /// proposals: k -> (accept substeps, tokens accepted)
+    khat_by_k: BTreeMap<usize, (u64, u64)>,
     queue_us: Vec<f64>,
     e2e_us: Vec<f64>,
     batch_fill: Vec<f64>,
@@ -57,6 +65,16 @@ pub struct Report {
     pub invocations: u64,
     /// paper's k̂: tokens accepted / accept substeps
     pub mean_accepted_block: f64,
+    /// full accepted-block-size distribution: k̂ value -> accept substeps
+    /// (the mean above hides the easy/hard bimodality the adaptive-k
+    /// policy exploits)
+    pub accept_hist: BTreeMap<usize, u64>,
+    /// invocations by chosen block size; single-k engines record
+    /// everything under the trained k
+    pub k_invocations: BTreeMap<usize, u64>,
+    /// k -> (accept substeps, tokens accepted) attributed to the k the
+    /// verified proposals were generated at
+    pub khat_by_k: BTreeMap<usize, (u64, u64)>,
     pub queue_us: Summary,
     pub e2e_us: Summary,
     pub mean_batch_fill: f64,
@@ -115,10 +133,35 @@ impl Metrics {
         m.batch_fill.push(batch_rows_active as f64 / bucket.max(1) as f64);
     }
 
+    /// An invocation whose step ran at block size `k` — the adaptive-k
+    /// engine's accounting ([`Metrics::on_invocation`] plus the per-k
+    /// breakdown the fleet render and BENCH snapshots report).
+    pub fn on_invocation_k(&self, batch_rows_active: usize, bucket: usize, k: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.invocations += 1;
+        m.batch_fill.push(batch_rows_active as f64 / bucket.max(1) as f64);
+        *m.k_invocations.entry(k).or_insert(0) += 1;
+    }
+
     pub fn on_accept(&self, block: usize) {
         let mut m = self.inner.lock().unwrap();
         m.accept_steps += 1;
         m.accept_tokens += block as u64;
+        *m.accept_hist.entry(block).or_insert(0) += 1;
+    }
+
+    /// An accept substep whose verified proposals were generated at block
+    /// size `k` — [`Metrics::on_accept`] plus the k̂-by-chosen-k
+    /// attribution that shows whether the policy's large-k picks actually
+    /// absorb large blocks.
+    pub fn on_accept_at(&self, block: usize, k: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.accept_steps += 1;
+        m.accept_tokens += block as u64;
+        *m.accept_hist.entry(block).or_insert(0) += 1;
+        let e = m.khat_by_k.entry(k).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += block as u64;
     }
 
     /// Fold `other`'s counters and latency samples into this registry —
@@ -140,6 +183,17 @@ impl Metrics {
         m.invocations += o.invocations;
         m.accept_steps += o.accept_steps;
         m.accept_tokens += o.accept_tokens;
+        for (k, n) in o.accept_hist {
+            *m.accept_hist.entry(k).or_insert(0) += n;
+        }
+        for (k, n) in o.k_invocations {
+            *m.k_invocations.entry(k).or_insert(0) += n;
+        }
+        for (k, (s, t)) in o.khat_by_k {
+            let e = m.khat_by_k.entry(k).or_insert((0, 0));
+            e.0 += s;
+            e.1 += t;
+        }
         m.queue_us.extend(o.queue_us);
         m.e2e_us.extend(o.e2e_us);
         m.batch_fill.extend(o.batch_fill);
@@ -163,6 +217,9 @@ impl Metrics {
             } else {
                 m.accept_tokens as f64 / m.accept_steps as f64
             },
+            accept_hist: m.accept_hist.clone(),
+            k_invocations: m.k_invocations.clone(),
+            khat_by_k: m.khat_by_k.clone(),
             queue_us: summarize(&m.queue_us),
             e2e_us: summarize(&m.e2e_us),
             mean_batch_fill: if m.batch_fill.is_empty() {
@@ -176,9 +233,18 @@ impl Metrics {
 }
 
 impl Report {
+    /// Mean k̂ of accept substeps whose proposals were generated at `k`
+    /// (0.0 when that k never served a step).
+    pub fn khat_at(&self, k: usize) -> f64 {
+        match self.khat_by_k.get(&k) {
+            Some(&(steps, tokens)) if steps > 0 => tokens as f64 / steps as f64,
+            _ => 0.0,
+        }
+    }
+
     pub fn render(&self) -> String {
         let secs = self.wall.as_secs_f64().max(1e-9);
-        format!(
+        let mut out = format!(
             "requests={} completed={} failed={}\n\
              robustness: shed={} expired={} cancelled={} requeued={} restarts={}\n\
              throughput: {:.2} req/s, {:.1} tok/s\n\
@@ -205,7 +271,27 @@ impl Report {
             self.e2e_us.p50 / 1000.0,
             self.e2e_us.p90 / 1000.0,
             self.e2e_us.p99 / 1000.0,
-        )
+        );
+        if !self.accept_hist.is_empty() {
+            out.push_str("\naccepted-block histogram:");
+            for (k, n) in &self.accept_hist {
+                out.push_str(&format!(" {k}×{n}"));
+            }
+        }
+        if !self.k_invocations.is_empty() {
+            out.push_str("\nper-k invocations:");
+            for (k, n) in &self.k_invocations {
+                out.push_str(&format!(" k{k}={n}"));
+            }
+            if !self.khat_by_k.is_empty() {
+                out.push_str(" (k̂ by chosen k:");
+                for k in self.khat_by_k.keys() {
+                    out.push_str(&format!(" k{k}={:.2}", self.khat_at(*k)));
+                }
+                out.push(')');
+            }
+        }
+        out
     }
 }
 
@@ -288,6 +374,36 @@ mod tests {
         let m = Metrics::new();
         let r = m.report(Instant::now());
         assert_eq!(r.mean_accepted_block, 0.0);
+        assert!(r.accept_hist.is_empty() && r.k_invocations.is_empty());
         r.render();
+    }
+
+    #[test]
+    fn histogram_and_per_k_breakdown_fold_and_render() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        a.on_invocation_k(4, 4, 8);
+        a.on_accept_at(8, 8);
+        a.on_accept_at(1, 8);
+        b.on_invocation_k(4, 4, 2);
+        b.on_invocation_k(4, 4, 8);
+        b.on_accept_at(2, 2);
+        b.on_accept(1); // legacy call: histogram only, no k attribution
+        let fleet = Metrics::new();
+        fleet.merge(&a);
+        fleet.merge(&b);
+        let r = fleet.report(Instant::now());
+        assert_eq!(r.accept_hist.get(&1), Some(&2));
+        assert_eq!(r.accept_hist.get(&2), Some(&1));
+        assert_eq!(r.accept_hist.get(&8), Some(&1));
+        assert_eq!(r.k_invocations.get(&2), Some(&1));
+        assert_eq!(r.k_invocations.get(&8), Some(&2));
+        assert!((r.khat_at(8) - 4.5).abs() < 1e-9);
+        assert!((r.khat_at(2) - 2.0).abs() < 1e-9);
+        assert_eq!(r.khat_at(4), 0.0);
+        let text = r.render();
+        assert!(text.contains("accepted-block histogram: 1×2 2×1 8×1"), "{text}");
+        assert!(text.contains("per-k invocations: k2=1 k8=2"), "{text}");
+        assert!(text.contains("k̂ by chosen k: k2=2.00 k8=4.50"), "{text}");
     }
 }

@@ -6,22 +6,40 @@
 //! batch **once** and pins the encoder memory `[B,S,D]` and source ids
 //! `[B,S]` on device; every [`DecodeSession::step_at`] then uploads only
 //! the `[B,T]` i32 decoder input plus a `[B]` i32 vector of per-row
-//! frontier indices and returns the `[B,k+1,K,topt]` score window at each
-//! row's frontier. Three entry tiers serve that contract, best-available
-//! first:
+//! frontier indices and returns the score window at each row's frontier.
+//! Three entry tiers serve that contract, best-available first:
 //!
-//! 1. **KV-cached** (`decode_cached_b*`): the decoder runs only over the
-//!    k+1 frontier window — causal self-attention reads per-layer K/V
-//!    caches `[2·n_dec,B,T,H,Dh]` for positions below the window and
-//!    scatters the freshly-computed window K/V back in — so per-step
-//!    decoder FLOPs are O(k+1), not O(T). The session chains the updated
-//!    caches from step to step (device-resident when the runtime's result
-//!    layout allows; host-mirrored otherwise).
-//! 2. **Windowed** (`decode_window_b*`): full-length decoder pass, but
-//!    only the frontier window is gathered and downloaded.
+//! 1. **KV-cached** (`decode_cached_b{B}[_k{k}]`): the decoder runs only
+//!    over the k+1 frontier window — causal self-attention reads
+//!    per-layer K/V caches `[2·n_dec,B,T,H,Dh]` for positions below the
+//!    window and scatters the freshly-computed window K/V back in — so
+//!    per-step decoder FLOPs are O(k+1), not O(T). The session chains the
+//!    updated caches from step to step (device-resident when the
+//!    runtime's result layout allows; host-mirrored otherwise).
+//! 2. **Windowed** (`decode_window_b{B}[_k{k}]`): full-length decoder
+//!    pass, but only the frontier window is gathered and downloaded.
 //! 3. **Full** ([`DecodeSession::step`]): the complete `[B,T,K,topt]`
 //!    tensors — the fallback for the oldest manifests and the reference
 //!    path both newer tiers are property-tested against.
+//!
+//! **Adaptive block size.** Multi-k manifests compile the windowed and
+//! cached entry families at several block sizes per batch bucket — the
+//! `(B,k)` grammar, e.g. `decode_cached_b8_k4`; the un-suffixed name is
+//! the trained-k member, so single-k manifests still load with
+//! [`ScoringModel::ks`] `== [k]` and the adaptive tier off. Every entry
+//! shares the same weights and the same K trained proposal heads — only
+//! the gathered window width `w = k+1` differs — so a step at any
+//! compiled k returns `[B,k+1,K,topt]` windows with the head axis still
+//! the trained K. [`DecodeSession::step_at_k`] dispatches to the step's
+//! `(B,k)` entry through the same cached → windowed → full tier order
+//! ([`DecodeSession::step_at`] is its `k = spec.k` special case, so
+//! single-k callers never see the axis). The cached-tier validity
+//! contract below is **k-agnostic**: one K/V buffer serves every
+//! compiled k, and per-row coverage advances by whatever window the
+//! serving step actually wrote, so consecutive steps may use different
+//! k's against the same cache. The engine's `KPolicy` picks each step's
+//! k from the compiled set using the measured acceptance k̂ (see the
+//! scheduler module docs).
 //!
 //! **Admission contract.** A session's resident state (encoder memory,
 //! source ids, K/V caches) is batch-shaped, and the continuous-batching
@@ -170,12 +188,16 @@ pub struct ScoringModel {
     weights: Rc<DeviceWeights>,
     encode: BTreeMap<usize, Rc<Executable>>,
     decode: BTreeMap<usize, Rc<Executable>>,
-    /// frontier-windowed decode entries; empty for manifests that predate
-    /// the `decode_window_b*` export (those fall back to full-length steps)
-    decode_window: BTreeMap<usize, Rc<Executable>>,
-    /// KV-cached decode entries; empty for manifests that predate the
-    /// `decode_cached_b*` export (those fall back to the windowed tier)
-    decode_cached: BTreeMap<usize, Rc<Executable>>,
+    /// frontier-windowed decode entries keyed `(bucket, k)`; the legacy
+    /// un-suffixed `decode_window_b{B}` name registers at `k = spec.k`,
+    /// multi-k manifests add `decode_window_b{B}_k{k}` siblings. Empty
+    /// for manifests that predate the windowed export (those fall back
+    /// to full-length steps).
+    decode_window: BTreeMap<(usize, usize), Rc<Executable>>,
+    /// KV-cached decode entries keyed `(bucket, k)` like `decode_window`;
+    /// empty for manifests that predate the `decode_cached_b*` export
+    /// (those fall back to the windowed tier)
+    decode_cached: BTreeMap<(usize, usize), Rc<Executable>>,
     /// device-side admission scatter entries; empty for manifests that
     /// predate the `scatter_b*` export (those re-pin the host mirror on
     /// every `scatter_rows` admission)
@@ -194,17 +216,31 @@ impl ScoringModel {
                 .map(|(b, key)| Ok((b, rt.load(key, &manifest.entries[key].file)?)))
                 .collect()
         };
+        // the windowed/cached families carry a block-size axis: the legacy
+        // un-suffixed name is the trained-k member, `_k{k}` names add the
+        // rest of the compiled set
+        let load_bucketed_k = |prefix: &str| -> Result<BTreeMap<(usize, usize), Rc<Executable>>> {
+            let mut out = BTreeMap::new();
+            for (b, key) in spec.bucketed(prefix) {
+                out.insert((b, spec.k), rt.load(key, &manifest.entries[key].file)?);
+            }
+            for ((b, k), key) in spec.bucketed_k(prefix) {
+                out.insert((b, k), rt.load(key, &manifest.entries[key].file)?);
+            }
+            Ok(out)
+        };
         let encode = load_bucketed("encode_b")?;
         let decode = load_bucketed("decode_b")?;
-        let decode_window = load_bucketed("decode_window_b")?;
-        let decode_cached = load_bucketed("decode_cached_b")?;
+        let decode_window = load_bucketed_k("decode_window_b")?;
+        let decode_cached = load_bucketed_k("decode_cached_b")?;
         let scatter = load_bucketed("scatter_b")?;
         if encode.is_empty() || decode.is_empty() {
             bail!("variant {variant} lacks encode/decode entries");
         }
         log::info!(
-            "loaded {variant}: k={} {} params, buckets {:?}{}{}{}",
+            "loaded {variant}: k={} ks={:?} {} params, buckets {:?}{}{}{}",
             spec.k,
+            spec.config.ks,
             weights.total_params,
             encode.keys().collect::<Vec<_>>(),
             if decode_window.is_empty() { " (no windowed decode entries)" } else { "" },
@@ -239,6 +275,29 @@ impl ScoringModel {
     /// Available batch buckets (ascending).
     pub fn buckets(&self) -> Vec<usize> {
         self.encode.keys().copied().collect()
+    }
+
+    /// Block sizes the loaded entry set can step at (ascending; always
+    /// contains the trained `spec.k`). A non-trained k is only advertised
+    /// when **every** batch bucket loaded a windowed or cached entry for
+    /// it — the adaptive policy must be free to pick any advertised k
+    /// regardless of which bucket a session was begun at. Single-k
+    /// manifests yield `[spec.k]`, which disables the adaptive tier.
+    pub fn ks(&self) -> Vec<usize> {
+        let buckets = self.buckets();
+        self.spec
+            .config
+            .ks
+            .iter()
+            .copied()
+            .filter(|&k| {
+                k == self.spec.k
+                    || buckets.iter().all(|&b| {
+                        self.decode_window.contains_key(&(b, k))
+                            || self.decode_cached.contains_key(&(b, k))
+                    })
+            })
+            .collect()
     }
 
     /// Does this variant ship frontier-windowed decode entries?
@@ -335,19 +394,26 @@ impl ScoringModel {
             .get(&b)
             .ok_or_else(|| anyhow::anyhow!("no decode bucket {b} (have {:?})", self.buckets()))?
             .clone();
-        let window_exe = self.decode_window.get(&b).cloned();
-        // cached tier: entry + a zeroed cache (first step uploads it once;
-        // afterwards the updated cache chains from step to step)
-        let cached = self.decode_cached.get(&b).and_then(|exe| {
+        let per_bucket = |m: &BTreeMap<(usize, usize), Rc<Executable>>| -> BTreeMap<usize, Rc<Executable>> {
+            m.iter().filter(|((bb, _), _)| *bb == b).map(|(&(_, k), e)| (k, e.clone())).collect()
+        };
+        let window_exes = per_bucket(&self.decode_window);
+        // cached tier: per-k entries + ONE zeroed cache shared by all of
+        // them (first step uploads it once; afterwards the updated cache
+        // chains from step to step, whichever k each step runs at)
+        let cached_exes = per_bucket(&self.decode_cached);
+        let cached = if cached_exes.is_empty() {
+            None
+        } else {
             self.kv_dims(b).map(|dims| CachedDecode {
-                exe: exe.clone(),
+                exes: cached_exes,
                 state: RefCell::new(KvCacheState {
                     kv: KvStore::Host(TensorF32::zeros(&dims)),
                     cached_upto: vec![0; b],
                     seen: TensorI32::zeros(&[b, self.max_tgt()]),
                 }),
             })
-        });
+        };
         let src_dev = self.rt.upload_i32(&src)?;
         let mem_dev = self.rt.upload_f32(&memory)?;
         let s_len = src.dims[1];
@@ -362,9 +428,11 @@ impl ScoringModel {
             rt: self.rt.clone(),
             weights: self.weights.clone(),
             exe,
-            window_exe,
+            window_exes,
             cached,
             resident,
+            k_spec: self.spec.k,
+            ks: self.ks(),
             window: (self.spec.k + 1).min(self.max_tgt()),
             bucket: b,
             t_len: self.max_tgt(),
@@ -395,13 +463,21 @@ pub struct DecodeSession {
     weights: Rc<DeviceWeights>,
     /// full-length decode entry (fallback + reference path)
     exe: Rc<Executable>,
-    /// frontier-windowed decode entry, when the manifest exports one
-    window_exe: Option<Rc<Executable>>,
-    /// KV-cached decode entry + cache state, when the manifest exports one
+    /// frontier-windowed decode entries by block size; the trained k is
+    /// the only key on single-k manifests, empty when the manifest
+    /// predates the windowed export
+    window_exes: BTreeMap<usize, Rc<Executable>>,
+    /// KV-cached decode entries + cache state, when the manifest exports
+    /// them
     cached: Option<CachedDecode>,
     /// admission path (device-side scatter vs host-mirror re-pin)
     resident: ResidentState,
-    /// positions gathered per row by the windowed/cached entries (k + 1)
+    /// the trained block size — `step_at`'s k and the policy's ceiling
+    k_spec: usize,
+    /// block sizes steppable through compiled windowed/cached entries
+    ks: Vec<usize>,
+    /// positions gathered per row at the default `k_spec` (k + 1); steps
+    /// at another k gather `k + 1` instead
     window: usize,
     bucket: usize,
     t_len: usize,
@@ -432,11 +508,13 @@ enum ResidentState {
     Mirror { src_host: TensorI32, memory_host: TensorF32 },
 }
 
-/// The KV-cached decode tier of a session: the compiled entry plus the
-/// chained cache. `RefCell` because stepping is logically `&self` (the
-/// scores are the output; the cache is an internal carry).
+/// The KV-cached decode tier of a session: the compiled entries (one per
+/// block size) plus the chained cache they all share — the K/V buffer
+/// layout is k-independent, so consecutive steps at different k's chain
+/// through the same carry. `RefCell` because stepping is logically
+/// `&self` (the scores are the output; the cache is an internal carry).
 struct CachedDecode {
-    exe: Rc<Executable>,
+    exes: BTreeMap<usize, Rc<Executable>>,
     state: RefCell<KvCacheState>,
 }
 
@@ -485,7 +563,7 @@ impl DecodeSession {
     /// Does `step_at` run the frontier-windowed entry point (when the
     /// cached tier is absent or does not admit)?
     pub fn windowed(&self) -> bool {
-        self.window_exe.is_some()
+        self.window_exes.contains_key(&self.k_spec)
     }
 
     /// Does this session have the KV-cached entry point?
@@ -493,11 +571,29 @@ impl DecodeSession {
         self.cached.is_some()
     }
 
+    /// Block sizes [`DecodeSession::step_at_k`] can serve through compiled
+    /// windowed/cached entries (ascending; always contains the trained k).
+    /// `[k]` alone on single-k manifests — the adaptive tier is then off.
+    pub fn ks(&self) -> &[usize] {
+        &self.ks
+    }
+
     /// Positions of scores each `step_at` returns per row: k+1 on the
-    /// cached/windowed paths, the full decoder length on the fallback path.
+    /// cached/windowed paths, the full decoder length on the fallback
+    /// path. Steps through [`DecodeSession::step_at_k`] answer to
+    /// [`DecodeSession::window_len_at`] instead.
     pub fn window_len(&self) -> usize {
-        if self.cached.is_some() || self.window_exe.is_some() {
-            self.window
+        self.window_len_at(self.k_spec)
+    }
+
+    /// Positions of scores a `step_at_k(.., k)` step returns per row:
+    /// k+1 when a compiled `(bucket, k)` windowed or cached entry exists,
+    /// the full decoder length on the full-step fallback.
+    pub fn window_len_at(&self, k: usize) -> usize {
+        let compiled = self.window_exes.contains_key(&k)
+            || self.cached.as_ref().is_some_and(|cd| cd.exes.contains_key(&k));
+        if compiled {
+            (k + 1).min(self.t_len)
         } else {
             self.t_len
         }
@@ -509,7 +605,7 @@ impl DecodeSession {
     /// assertions about that tier use this instead of re-deriving the
     /// formula (`window_len` answers for whichever tier `step_at` picks).
     pub fn windowed_len(&self) -> usize {
-        if self.window_exe.is_some() {
+        if self.window_exes.contains_key(&self.k_spec) {
             self.window
         } else {
             self.t_len
@@ -550,8 +646,25 @@ impl DecodeSession {
     /// One scoring invocation at the given per-row frontiers, through the
     /// best tier the session has: KV-cached when the cache admits (see the
     /// module docs), else frontier-windowed, else the full-length
-    /// [`DecodeSession::step`].
+    /// [`DecodeSession::step`]. Equivalent to `step_at_k` at the trained k.
     pub fn step_at(&self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        self.step_at_k(tgt_in, frontiers, self.k_spec)
+    }
+
+    /// One scoring invocation at block size `k`: dispatches to the
+    /// `(bucket, k)` entry of the best tier that has one — KV-cached when
+    /// the cache admits, else frontier-windowed, else the full-length
+    /// fallback (which scores every position and therefore serves any k).
+    /// The returned window covers positions `frontiers[b] ..= frontiers[b]
+    /// + k` per row (clamped); the head axis is always the trained K
+    /// regardless of the step's k. The cache carry is shared across k's —
+    /// see the module docs' adaptive-block-size contract.
+    pub fn step_at_k(
+        &self,
+        tgt_in: &TensorI32,
+        frontiers: &[usize],
+        k: usize,
+    ) -> Result<WindowScores> {
         // enforce the frontier contract on every path, so a caller bug
         // cannot hide behind a manifest without windowed/cached entries
         anyhow::ensure!(
@@ -560,6 +673,7 @@ impl DecodeSession {
             frontiers.len(),
             self.bucket
         );
+        anyhow::ensure!(k >= 1, "step_at_k needs k >= 1");
         if let Some(cd) = &self.cached {
             anyhow::ensure!(
                 tgt_in.dims == [self.bucket, self.t_len],
@@ -568,11 +682,16 @@ impl DecodeSession {
                 self.bucket,
                 self.t_len
             );
+            // run the admission guard even when this k has no cached
+            // entry: it is what invalidates rewritten rows, and the
+            // bookkeeping must not depend on which k the policy picked
             if self.cache_admits(cd, tgt_in, frontiers) {
-                return self.step_cached(cd, tgt_in, frontiers);
+                if let Some(exe) = cd.exes.get(&k) {
+                    return self.step_cached(cd, exe.clone(), tgt_in, frontiers, k);
+                }
             }
         }
-        self.step_windowed(tgt_in, frontiers)
+        self.step_windowed_k(tgt_in, frontiers, k)
     }
 
     /// One frontier-windowed invocation: the decoder still recomputes all
@@ -583,17 +702,30 @@ impl DecodeSession {
     /// full-length [`DecodeSession::step`] when the loaded manifest has no
     /// `decode_window_b*` entry.
     pub fn step_windowed(&self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        self.step_windowed_k(tgt_in, frontiers, self.k_spec)
+    }
+
+    /// The windowed tier at block size `k`: runs the `(bucket, k)`
+    /// windowed entry when compiled, else the full-length fallback (whose
+    /// degenerate window covers any k).
+    pub fn step_windowed_k(
+        &self,
+        tgt_in: &TensorI32,
+        frontiers: &[usize],
+        k: usize,
+    ) -> Result<WindowScores> {
         anyhow::ensure!(
             frontiers.len() == self.bucket,
             "{} frontiers for bucket {}",
             frontiers.len(),
             self.bucket
         );
-        let Some(exe) = &self.window_exe else {
+        let Some(exe) = self.window_exes.get(&k) else {
             return self.step(tgt_in);
         };
+        let w = (k + 1).min(self.t_len);
         let mut args = self.base_args(tgt_in)?;
-        let (base, f_host) = self.clamp_frontiers(frontiers);
+        let (base, f_host) = self.clamp_frontiers(frontiers, w);
         let tgt_buf = self.rt.upload_i32(tgt_in)?;
         let f_buf = self.rt.upload_i32(&f_host)?;
         args.push(tgt_buf.buffer());
@@ -602,21 +734,20 @@ impl DecodeSession {
         self.rt.note_positions((self.bucket * self.t_len) as u64);
         let mut scores = window_scores_from(&out)?;
         anyhow::ensure!(
-            scores.window() == self.window,
-            "windowed decode returned {} positions, expected {}",
-            scores.window(),
-            self.window
+            scores.window() == w,
+            "windowed decode (k={k}) returned {} positions, expected {w}",
+            scores.window()
         );
         scores.base = base;
         Ok(scores)
     }
 
     /// Clamp per-row frontiers exactly like the device-side dynamic_slice
-    /// does — so `base` reflects the window the gather actually returns on
-    /// both the windowed and cached tiers — and build the `[B]` i32
-    /// frontier tensor those entries take.
-    fn clamp_frontiers(&self, frontiers: &[usize]) -> (Vec<usize>, TensorI32) {
-        let hi = self.t_len - self.window;
+    /// does for a `w`-wide gather — so `base` reflects the window the
+    /// entry actually returns on both the windowed and cached tiers — and
+    /// build the `[B]` i32 frontier tensor those entries take.
+    fn clamp_frontiers(&self, frontiers: &[usize], w: usize) -> (Vec<usize>, TensorI32) {
+        let hi = self.t_len - w;
         let base: Vec<usize> = frontiers.iter().map(|&f| f.min(hi)).collect();
         let f_host =
             TensorI32::from_vec(&[self.bucket], base.iter().map(|&s| s as i32).collect());
@@ -652,15 +783,20 @@ impl DecodeSession {
     /// step could not leave it on device), runs the decoder over only the
     /// k+1 frontier window against the chained K/V caches, and downloads
     /// the same `[B,k+1,K,topt]` window tensors as the windowed tier.
-    /// Scored decoder positions per step: B·(k+1) instead of B·T.
+    /// Scored decoder positions per step: B·(k+1) instead of B·T. `exe`
+    /// is the `(bucket, k)` entry for this step's k; per-row cache
+    /// coverage advances by the window this step actually wrote.
     fn step_cached(
         &self,
         cd: &CachedDecode,
+        exe: Rc<Executable>,
         tgt_in: &TensorI32,
         frontiers: &[usize],
+        k: usize,
     ) -> Result<WindowScores> {
+        let w = (k + 1).min(self.t_len);
         let mut args = self.base_args(tgt_in)?;
-        let (base, f_host) = self.clamp_frontiers(frontiers);
+        let (base, f_host) = self.clamp_frontiers(frontiers, w);
         let tgt_buf = self.rt.upload_i32(tgt_in)?;
         let f_buf = self.rt.upload_i32(&f_host)?;
         let mut state = cd.state.borrow_mut();
@@ -675,14 +811,13 @@ impl DecodeSession {
         args.push(tgt_buf.buffer());
         args.push(f_buf.buffer());
         args.push(kv_arg);
-        let (host, trailing) = self.rt.execute_split(&cd.exe, &args, 2)?;
-        self.rt.note_positions((self.bucket * self.window) as u64);
+        let (host, trailing) = self.rt.execute_split(&exe, &args, 2)?;
+        self.rt.note_positions((self.bucket * w) as u64);
         let mut scores = window_scores_from(&host)?;
         anyhow::ensure!(
-            scores.window() == self.window,
-            "cached decode returned {} positions, expected {}",
-            scores.window(),
-            self.window
+            scores.window() == w,
+            "cached decode (k={k}) returned {} positions, expected {w}",
+            scores.window()
         );
         // chain the updated cache into the next step
         state.kv = match trailing {
@@ -704,7 +839,7 @@ impl DecodeSession {
             }
         };
         for (upto, &b0) in state.cached_upto.iter_mut().zip(&base) {
-            *upto = b0 + self.window;
+            *upto = b0 + w;
         }
         state.seen.data.copy_from_slice(&tgt_in.data);
         scores.base = base;

@@ -30,6 +30,12 @@ pub struct VariantConfig {
     /// `decode_cached_b*` entries take. 0 in manifests from before the
     /// cached export, which keeps the cached path disabled there.
     pub n_dec: usize,
+    /// block sizes the decode-entry families were compiled at (sorted
+    /// ascending, always containing the variant's trained `k`). Manifests
+    /// from before the multi-k export omit the field; it then defaults to
+    /// `[k]`, which keeps the acceptance-adaptive tier off — there is only
+    /// one window width to dispatch to.
+    pub ks: Vec<usize>,
 }
 
 /// One trained model variant.
@@ -58,13 +64,38 @@ impl VariantSpec {
     /// they are absent (full-length steps; full host-mirror re-pin per
     /// admission) — and `nat_b*` is the NAT entry. Names whose suffix is
     /// not a bucket number never match, so prefix `decode_b` does not
-    /// swallow `decode_window_b8` or `decode_cached_b8`.
+    /// swallow `decode_window_b8` or `decode_cached_b8`, and the multi-k
+    /// grammar below (`decode_window_b8_k4`) never matches here either.
     pub fn bucketed(&self, prefix: &str) -> BTreeMap<usize, &str> {
         let mut out = BTreeMap::new();
         for (logical, key) in &self.entries {
             if let Some(rest) = logical.strip_prefix(prefix) {
                 if let Ok(b) = rest.parse::<usize>() {
                     out.insert(b, key.as_str());
+                }
+            }
+        }
+        out
+    }
+
+    /// Entries of the multi-k grammar `<prefix><bucket>_k<k>` (e.g.
+    /// `decode_cached_b8_k4` for prefix `decode_cached_b`), keyed by
+    /// `(bucket, k)`. These are the acceptance-adaptive block-size entries:
+    /// the same decode family compiled at window width `k+1` instead of the
+    /// variant's trained `config.k+1`, sharing weights and head count (the
+    /// heads always score all K proposal positions; only the gathered
+    /// window narrows). The trained-k member of the family keeps its legacy
+    /// un-suffixed name (`decode_cached_b8`) so pre-multi-k loaders keep
+    /// working — callers union this map with [`VariantSpec::bucketed`] at
+    /// `k = spec.k`. `config.ks` lists the compiled set.
+    pub fn bucketed_k(&self, prefix: &str) -> BTreeMap<(usize, usize), &str> {
+        let mut out = BTreeMap::new();
+        for (logical, key) in &self.entries {
+            if let Some(rest) = logical.strip_prefix(prefix) {
+                if let Some((b, k)) = rest.split_once("_k") {
+                    if let (Ok(b), Ok(k)) = (b.parse::<usize>(), k.parse::<usize>()) {
+                        out.insert((b, k), key.as_str());
+                    }
                 }
             }
         }
@@ -136,6 +167,24 @@ impl Manifest {
                         n_heads: c.get("n_heads")?.as_usize()?,
                         // optional: absent in pre-cached-decode manifests
                         n_dec: c.opt("n_dec").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+                        // optional: absent in pre-multi-k manifests, where
+                        // the only compiled block size is the trained k
+                        ks: {
+                            let mut ks = match c.opt("ks") {
+                                Some(v) => v
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|x| Ok::<usize, anyhow::Error>(x.as_usize()?))
+                                    .collect::<Result<Vec<_>>>()?,
+                                None => vec![],
+                            };
+                            // the trained k is always a member: its entries
+                            // are the legacy un-suffixed ones
+                            ks.push(v.get("k")?.as_usize()?);
+                            ks.sort_unstable();
+                            ks.dedup();
+                            ks
+                        },
                     },
                 },
             );
@@ -178,6 +227,8 @@ mod tests {
         "mt_k2_b1_decode": {"file": "hlo/mt_k2_b1_decode.hlo.txt", "batch": 1},
         "mt_k2_b1_decode_window": {"file": "hlo/mt_k2_b1_decode_window.hlo.txt", "batch": 1},
         "mt_k2_b1_decode_cached": {"file": "hlo/mt_k2_b1_decode_cached.hlo.txt", "batch": 1},
+        "mt_k2_b1_decode_window_k1": {"file": "hlo/mt_k2_b1_decode_window_k1.hlo.txt", "batch": 1},
+        "mt_k2_b1_decode_cached_k1": {"file": "hlo/mt_k2_b1_decode_cached_k1.hlo.txt", "batch": 1},
         "mt_k2_b1_scatter": {"file": "hlo/mt_k2_b1_scatter.hlo.txt", "batch": 1}
       },
       "variants": {
@@ -188,9 +239,11 @@ mod tests {
           "entries": {"encode_b1": "mt_k2_b1_encode", "decode_b1": "mt_k2_b1_decode",
                       "decode_window_b1": "mt_k2_b1_decode_window",
                       "decode_cached_b1": "mt_k2_b1_decode_cached",
+                      "decode_window_b1_k1": "mt_k2_b1_decode_window_k1",
+                      "decode_cached_b1_k1": "mt_k2_b1_decode_cached_k1",
                       "scatter_b1": "mt_k2_b1_scatter"},
           "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4,
-                     "n_dec": 2}
+                     "n_dec": 2, "ks": [1, 2]}
         }
       }
     }"#;
@@ -210,6 +263,7 @@ mod tests {
         assert_eq!(v.k, 2);
         assert_eq!(v.config.vocab, 127);
         assert_eq!(v.config.n_dec, 2);
+        assert_eq!(v.config.ks, vec![1, 2]);
         assert!(m.variant("nope").is_err());
         assert_eq!(m.task_variants("mt").len(), 1);
     }
@@ -229,6 +283,8 @@ mod tests {
         let dec = v.bucketed("decode_b");
         assert_eq!(dec.len(), 1);
         assert_eq!(dec[&1], "mt_k2_b1_decode");
+        // and the single-k accessors must not swallow the multi-k names
+        // ("1_k1" is not a bucket number)
         let win = v.bucketed("decode_window_b");
         assert_eq!(win.len(), 1);
         assert_eq!(win[&1], "mt_k2_b1_decode_window");
@@ -242,6 +298,69 @@ mod tests {
     }
 
     #[test]
+    fn multi_k_entries_by_bucket_and_k() {
+        let dir = std::env::temp_dir().join("bd_manifest_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(SAMPLE.as_bytes())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("mt_k2_regular").unwrap();
+        let win = v.bucketed_k("decode_window_b");
+        assert_eq!(win.len(), 1);
+        assert_eq!(win[&(1, 1)], "mt_k2_b1_decode_window_k1");
+        let cached = v.bucketed_k("decode_cached_b");
+        assert_eq!(cached.len(), 1);
+        assert_eq!(cached[&(1, 1)], "mt_k2_b1_decode_cached_k1");
+        // the (B,k) grammar never matches the legacy un-suffixed names
+        assert!(v.bucketed_k("decode_b").is_empty());
+        assert!(v.bucketed_k("scatter_b").is_empty());
+    }
+
+    /// Strip SAMPLE back to the pre-multi-k grammar: no `_k`-suffixed
+    /// entries, no `config.ks`.
+    fn strip_multi_k(s: &str) -> String {
+        let out = s
+            .replace(
+                ",\n        \"mt_k2_b1_decode_window_k1\": {\"file\": \"hlo/mt_k2_b1_decode_window_k1.hlo.txt\", \"batch\": 1}",
+                "",
+            )
+            .replace(
+                ",\n        \"mt_k2_b1_decode_cached_k1\": {\"file\": \"hlo/mt_k2_b1_decode_cached_k1.hlo.txt\", \"batch\": 1}",
+                "",
+            )
+            .replace(",\n                      \"decode_window_b1_k1\": \"mt_k2_b1_decode_window_k1\"", "")
+            .replace(",\n                      \"decode_cached_b1_k1\": \"mt_k2_b1_decode_cached_k1\"", "")
+            .replace(", \"ks\": [1, 2]", "");
+        assert!(!out.contains("_k1"), "replacement failed: {out}");
+        assert!(!out.contains("\"ks\""), "replacement failed: {out}");
+        out
+    }
+
+    #[test]
+    fn old_single_k_manifest_disables_adaptive_tier() {
+        // a manifest stripped to the old single-k grammar must still load,
+        // with `ks` defaulting to the trained k alone and the (B,k)
+        // accessor empty — the adaptive tier is off and every step
+        // dispatches through the static (legacy-named) entries
+        let dir = std::env::temp_dir().join("bd_manifest_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(strip_multi_k(SAMPLE).as_bytes())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("mt_k2_regular").unwrap();
+        assert_eq!(v.config.ks, vec![2], "missing ks must default to [k]");
+        assert!(v.bucketed_k("decode_window_b").is_empty());
+        assert!(v.bucketed_k("decode_cached_b").is_empty());
+        // the static path is intact: legacy names still resolve
+        assert_eq!(v.bucketed("decode_window_b")[&1], "mt_k2_b1_decode_window");
+        assert_eq!(v.bucketed("decode_cached_b")[&1], "mt_k2_b1_decode_cached");
+    }
+
+    #[test]
     fn old_manifest_without_window_entries_parses() {
         // manifests from before the frontier-windowed, KV-cached, and
         // device-scatter exports must keep loading (the runtime then
@@ -249,7 +368,7 @@ mod tests {
         // admission, and the missing n_dec pins the cache size to 0)
         let dir = std::env::temp_dir().join("bd_manifest_test4");
         std::fs::create_dir_all(&dir).unwrap();
-        let old = SAMPLE
+        let old = strip_multi_k(SAMPLE)
             .replace(
                 ",\n        \"mt_k2_b1_decode_window\": {\"file\": \"hlo/mt_k2_b1_decode_window.hlo.txt\", \"batch\": 1}",
                 "",
@@ -281,6 +400,7 @@ mod tests {
         assert!(v.bucketed("scatter_b").is_empty());
         assert_eq!(v.bucketed("decode_b").len(), 1);
         assert_eq!(v.config.n_dec, 0, "missing n_dec must default to 0");
+        assert_eq!(v.config.ks, vec![2], "missing ks must default to [k]");
     }
 
     #[test]

@@ -52,6 +52,21 @@
 //! pool supervisor, which respawns the shard within a bounded restart
 //! budget ([`EngineConfig::restart_budget`]).
 //!
+//! **Adaptive block size.** On multi-k manifests (see the model module's
+//! `(B,k)` entry grammar) the block size itself is a per-step decision: a
+//! [`KPolicy`] picks each slot's proposal width from the compiled set
+//! ([`EngineBackend::ks`]) using a per-slot acceptance EWMA seeded from
+//! the shard's recent k̂ — small k while drafts are being rejected (k
+//! wasted proposal positions per rejection), large k while they sail
+//! through (up to k tokens per invocation). The pick drives the *next*
+//! re-prediction's width (`BlockState::k`), the batched step runs at the
+//! max width any slot needs this iteration, and the exact-match
+//! criterion keeps the output byte-identical across policies (the
+//! paper's losslessness makes tokens k-invariant —
+//! `prop_adaptive_equals_static` proves it). Per-k invocation counts and
+//! the k̂-by-chosen-k breakdown land in [`Metrics`] so the policy's
+//! behavior is visible in the fleet render.
+//!
 //! The loop is generic over [`EngineBackend`]: production shards wrap a
 //! `ScoringModel` + device-resident `DecodeSession` ([`ModelBackend`]);
 //! tests and the CI serve-smoke run the *same* loop over the simulated
@@ -92,6 +107,8 @@ pub struct EngineConfig {
     /// how many times the pool supervisor may respawn a crashed shard
     /// before declaring it dead (`pool::EnginePool`)
     pub restart_budget: usize,
+    /// how each step's block size is picked from the compiled set
+    pub k_policy: KPolicy,
 }
 
 impl Default for EngineConfig {
@@ -102,6 +119,103 @@ impl Default for EngineConfig {
             admit_wait: Duration::from_millis(2),
             max_len: None,
             restart_budget: 2,
+            k_policy: KPolicy::default(),
+        }
+    }
+}
+
+/// How the engine picks each step's block size from the compiled set
+/// ([`EngineBackend::ks`]). Policies are stateless; the engine owns the
+/// per-slot acceptance EWMA and pick counter they read. Under the
+/// exact-match criterion every policy produces byte-identical tokens —
+/// only the invocation count differs — which is what makes the adaptive
+/// pick safe to deploy (`prop_adaptive_equals_static`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum KPolicy {
+    /// every step at one fixed k: the trained k (`None`) or a specific
+    /// compiled k (`Some`) — the pre-adaptive behaviour, bit-for-bit
+    Static(Option<usize>),
+    /// pick the smallest compiled k with 1.5x headroom over the slot's
+    /// acceptance EWMA (`ceil(1.5 * ewma)`), falling back to the largest;
+    /// `alpha` is the EWMA's new-sample weight. The headroom factor is
+    /// load-bearing: k̂ is capped by the chosen k, so a rule that only
+    /// aims "one past the estimate" can never escalate a slot back up
+    /// after it shrank
+    Ewma { alpha: f64 },
+    /// scripted pick sequence, cycled per slot — oracle replay for
+    /// deterministic tests
+    Replay(Vec<usize>),
+}
+
+impl Default for KPolicy {
+    fn default() -> Self {
+        KPolicy::Static(None)
+    }
+}
+
+impl KPolicy {
+    /// Parse a CLI spelling: `static`, `static:K`, `ewma`, `ewma:ALPHA`.
+    pub fn parse(s: &str) -> Result<KPolicy> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match (head, arg) {
+            ("static", None) => Ok(KPolicy::Static(None)),
+            ("static", Some(a)) => {
+                let k: usize = a.parse().map_err(|_| anyhow::anyhow!("bad static k {a:?}"))?;
+                anyhow::ensure!(k >= 1, "static k must be >= 1");
+                Ok(KPolicy::Static(Some(k)))
+            }
+            ("ewma", None) => Ok(KPolicy::Ewma { alpha: 0.5 }),
+            ("ewma", Some(a)) => {
+                let alpha: f64 = a.parse().map_err(|_| anyhow::anyhow!("bad ewma alpha {a:?}"))?;
+                anyhow::ensure!(alpha > 0.0 && alpha <= 1.0, "ewma alpha must be in (0, 1]");
+                Ok(KPolicy::Ewma { alpha })
+            }
+            _ => anyhow::bail!("unknown k policy {s:?} (want static[:K] or ewma[:ALPHA])"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            KPolicy::Static(None) => "static".to_string(),
+            KPolicy::Static(Some(k)) => format!("static:{k}"),
+            KPolicy::Ewma { alpha } => format!("ewma:{alpha}"),
+            KPolicy::Replay(_) => "replay".to_string(),
+        }
+    }
+
+    /// EWMA new-sample weight (how the engine folds each observed k̂ into
+    /// the per-slot and shard estimates); 0.5 for non-EWMA policies,
+    /// where the estimate is tracked but never read by `pick`.
+    pub fn alpha(&self) -> f64 {
+        match self {
+            KPolicy::Ewma { alpha } => *alpha,
+            _ => 0.5,
+        }
+    }
+
+    /// Pick the block size for a slot's next re-prediction. `ks` is the
+    /// compiled set (ascending, non-empty), `k_default` the trained k,
+    /// `ewma` the slot's acceptance estimate, and `n` how many picks this
+    /// slot has consumed (the replay cursor). The caller clamps the
+    /// result to its min-block floor.
+    pub fn pick(&self, ks: &[usize], k_default: usize, ewma: f64, n: usize) -> usize {
+        debug_assert!(!ks.is_empty());
+        match self {
+            KPolicy::Static(None) => k_default,
+            KPolicy::Static(Some(k)) => *k,
+            KPolicy::Ewma { .. } => {
+                // aim for 1.5x headroom over what the EWMA says gets
+                // accepted: a slot absorbing full blocks escalates (k̂ is
+                // capped by the chosen k, so without headroom it never
+                // could), a thrashing slot de-escalates to stop paying k
+                // wasted positions per step
+                let target = ((ewma.max(0.0) * 1.5).ceil() as usize).max(1);
+                ks.iter().copied().find(|&k| k >= target).unwrap_or(*ks.last().unwrap())
+            }
+            KPolicy::Replay(seq) => seq.get(n % seq.len().max(1)).copied().unwrap_or(k_default),
         }
     }
 }
@@ -116,15 +230,25 @@ pub trait EngineBackend {
     fn bucket(&self) -> usize;
     /// Decoder-input width T.
     fn t_len(&self) -> usize;
-    /// Proposal block size k.
+    /// Proposal block size k (the trained k — the largest the backend can
+    /// propose, and the ceiling for every adaptive pick).
     fn k(&self) -> usize;
+    /// Block sizes the backend can step at (ascending, containing
+    /// [`EngineBackend::k`]). Single-k backends keep this default; the
+    /// adaptive policy only engages when it returns more than one k.
+    fn ks(&self) -> Vec<usize> {
+        vec![self.k()]
+    }
     /// Hard cap on generated tokens (excluding BOS).
     fn max_len(&self) -> usize;
     /// Encode `srcs[i]` and land it in resident slot `slots[i]`
     /// (admission; `slots` and `srcs` have equal length).
     fn admit(&mut self, slots: &[usize], srcs: &[&[i32]]) -> Result<()>;
-    /// One combined scoring/proposal invocation over the resident batch.
-    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores>;
+    /// One combined scoring/proposal invocation over the resident batch
+    /// at block size `k` — the returned scores must cover positions
+    /// `frontiers[b] ..= frontiers[b] + k` per row (clamped).
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize], k: usize)
+        -> Result<WindowScores>;
 }
 
 /// The production [`EngineBackend`]: a loaded [`ScoringModel`] plus the
@@ -210,8 +334,17 @@ impl EngineBackend for ModelBackend {
         self.session.scatter_rows(slots, &rows_src, &rows_mem)
     }
 
-    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
-        self.session.step_at(tgt_in, frontiers)
+    fn ks(&self) -> Vec<usize> {
+        self.model.ks()
+    }
+
+    fn step_at(
+        &mut self,
+        tgt_in: &TensorI32,
+        frontiers: &[usize],
+        k: usize,
+    ) -> Result<WindowScores> {
+        self.session.step_at_k(tgt_in, frontiers, k)
     }
 }
 
@@ -223,6 +356,14 @@ struct Slot {
     /// accepted tokens already written, meaningful cells written
     committed: usize,
     written: usize,
+    /// block size the in-flight proposals were generated at — the k the
+    /// next observed k̂ is attributed to ([`Metrics::on_accept_at`])
+    k_gen: usize,
+    /// acceptance EWMA the adaptive policy reads; seeded from the shard's
+    /// running estimate at admission
+    ewma: f64,
+    /// picks consumed (the [`KPolicy::Replay`] cursor)
+    picks: usize,
 }
 
 /// One engine shard. Construct with a backend (or a loaded model via
@@ -241,6 +382,11 @@ pub struct Engine<B: EngineBackend = ModelBackend> {
     /// retired slots stay at 0 (their scores are never read)
     frontiers: Vec<usize>,
     slots: Vec<Option<Slot>>,
+    /// compiled block sizes the backend can step at (ascending)
+    ks: Vec<usize>,
+    /// shard-level running acceptance EWMA — the seed for each newly
+    /// admitted slot's estimate (optimistic at boot: the largest k)
+    shard_ewma: f64,
 }
 
 impl Engine<ModelBackend> {
@@ -275,6 +421,17 @@ impl<B: EngineBackend> Engine<B> {
         let bucket = backend.bucket();
         anyhow::ensure!(bucket >= 1, "engine backend has no batch slots");
         let t_len = backend.t_len();
+        let ks = backend.ks();
+        anyhow::ensure!(!ks.is_empty(), "engine backend advertises no block sizes");
+        anyhow::ensure!(
+            ks.windows(2).all(|w| w[0] < w[1]) && ks.contains(&backend.k()),
+            "backend ks {ks:?} must be ascending and contain k={}",
+            backend.k()
+        );
+        if let KPolicy::Static(Some(k)) = cfg.k_policy {
+            anyhow::ensure!(ks.contains(&k), "static k {k} not in compiled set {ks:?}");
+        }
+        let shard_ewma = *ks.last().unwrap() as f64;
         Ok(Engine {
             cfg,
             queue,
@@ -284,6 +441,8 @@ impl<B: EngineBackend> Engine<B> {
             tgt_in: TensorI32::zeros(&[bucket, t_len]),
             frontiers: vec![0; bucket],
             slots: (0..bucket).map(|_| None).collect(),
+            ks,
+            shard_ewma,
             backend,
         })
     }
@@ -358,12 +517,17 @@ impl<B: EngineBackend> Engine<B> {
             .max_len
             .unwrap_or(self.backend.max_len())
             .min(self.backend.max_len());
-        let k = self.backend.k();
+        let k_max = self.backend.k();
+        let floor = self.cfg.min_block.max(1).min(k_max);
         for (i, r) in live.into_iter().enumerate() {
             let slot = free[i];
             let criterion = r.criterion.unwrap_or(self.cfg.criterion);
-            let state = BlockState::new(k, criterion, max_len)
-                .with_min_block(self.cfg.min_block.max(1).min(k));
+            // first pick: the policy chooses the bootstrap proposal width
+            // from the slot's seed estimate (the shard's running k̂)
+            let ewma = self.shard_ewma;
+            let k0 = self.cfg.k_policy.pick(&self.ks, k_max, ewma, 0).clamp(floor, k_max);
+            let state =
+                BlockState::new(k0, criterion, max_len).with_min_block(floor.min(k0));
             self.metrics.on_request();
             // committed/written start at 0: the first patch_row does a
             // full rebuild of the (PAD-retired) row
@@ -373,6 +537,9 @@ impl<B: EngineBackend> Engine<B> {
                 admitted: Instant::now(),
                 committed: 0,
                 written: 0,
+                k_gen: k0,
+                ewma,
+                picks: 1,
             });
         }
         Ok(())
@@ -481,20 +648,29 @@ impl<B: EngineBackend> Engine<B> {
         // patch decoder-input rows for occupied slots only — the accepted
         // prefix is append-only, so only cells past the previous frontier
         // are rewritten; a freed slot's row was PAD-filled at completion
-        // and stays inert
+        // and stays inert. While walking the slots, work out the step's
+        // block size: the window must cover every slot's in-flight
+        // proposals (generated at that slot's previous pick) and its
+        // current pick's re-prediction, so the batched step runs at the
+        // smallest compiled k that covers the largest demand.
+        let k_max = self.backend.k();
+        let mut needed = 1usize;
         for i in 0..self.bucket {
             if let Some(s) = self.slots[i].as_mut() {
                 self.frontiers[i] = s.state.frontier();
                 let (c, w) = s.state.patch_row(self.tgt_in.row_mut(i), s.committed, s.written);
                 s.committed = c;
                 s.written = w;
+                needed = needed.max(s.state.proposals.len()).max(s.state.k);
             }
         }
+        let step_k =
+            self.ks.iter().copied().find(|&k| k >= needed.min(k_max)).unwrap_or(k_max);
 
         // steady-state host->device transfer: [B,T] i32 decoder input plus
         // the [B] i32 frontier vector; device->host is the frontier window
         let scores = match catch_unwind(AssertUnwindSafe(|| {
-            self.backend.step_at(&self.tgt_in, &self.frontiers)
+            self.backend.step_at(&self.tgt_in, &self.frontiers, step_k)
         })) {
             Ok(Ok(s)) => s,
             Ok(Err(e)) => return self.fail_step(e),
@@ -505,15 +681,31 @@ impl<B: EngineBackend> Engine<B> {
                 ))
             }
         };
-        self.metrics.on_invocation(active, self.bucket);
+        self.metrics.on_invocation_k(active, self.bucket, step_k);
 
         for i in 0..self.bucket {
             let finished = {
                 let Some(s) = self.slots[i].as_mut() else { continue };
                 let had_proposals = !s.state.proposals.is_empty();
+                let k_gen = s.k_gen;
+                // the pick applies to the re-prediction this absorb is
+                // about to do: proposals generated now are verified next
+                // step, so the policy reads k̂ with a one-step lag
+                let pick = self
+                    .cfg
+                    .k_policy
+                    .pick(&self.ks, k_max, s.ewma, s.picks)
+                    .clamp(s.state.min_block, k_max);
+                s.picks += 1;
+                s.state.k = pick;
+                s.k_gen = pick;
                 let k_hat = s.state.absorb(&scores, i);
                 if had_proposals {
-                    self.metrics.on_accept(k_hat);
+                    self.metrics.on_accept_at(k_hat, k_gen);
+                    let alpha = self.cfg.k_policy.alpha();
+                    s.ewma = alpha * k_hat as f64 + (1.0 - alpha) * s.ewma;
+                    self.shard_ewma =
+                        alpha * k_hat as f64 + (1.0 - alpha) * self.shard_ewma;
                 }
                 s.state.done
             };
@@ -542,9 +734,11 @@ impl<B: EngineBackend> Engine<B> {
     /// Run until stopped and drained.
     pub fn run(&mut self) -> Result<()> {
         log::info!(
-            "engine up: bucket={} k={} criterion={}",
+            "engine up: bucket={} k={} ks={:?} policy={} criterion={}",
             self.bucket,
             self.backend.k(),
+            self.ks,
+            self.cfg.k_policy.label(),
             self.cfg.criterion.label()
         );
         while self.step()? {}
@@ -667,5 +861,46 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         s.clone()
     } else {
         "opaque panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::KPolicy;
+
+    #[test]
+    fn k_policy_parse_spellings() {
+        assert_eq!(KPolicy::parse("static").unwrap(), KPolicy::Static(None));
+        assert_eq!(KPolicy::parse("static:4").unwrap(), KPolicy::Static(Some(4)));
+        assert_eq!(KPolicy::parse("ewma").unwrap(), KPolicy::Ewma { alpha: 0.5 });
+        assert_eq!(KPolicy::parse("ewma:0.25").unwrap(), KPolicy::Ewma { alpha: 0.25 });
+        assert!(KPolicy::parse("static:0").is_err());
+        assert!(KPolicy::parse("ewma:1.5").is_err());
+        assert!(KPolicy::parse("oracle").is_err());
+    }
+
+    #[test]
+    fn k_policy_picks() {
+        let ks = [1usize, 2, 4, 8];
+        assert_eq!(KPolicy::Static(None).pick(&ks, 8, 3.0, 0), 8);
+        assert_eq!(KPolicy::Static(Some(2)).pick(&ks, 8, 7.5, 3), 2);
+        let e = KPolicy::Ewma { alpha: 0.5 };
+        // thrashing slot (k̂ ~ 0.4) de-escalates to the smallest k
+        assert_eq!(e.pick(&ks, 8, 0.4, 0), 1);
+        // k̂ ~ 1.2 -> target ceil(1.8) = 2
+        assert_eq!(e.pick(&ks, 8, 1.2, 0), 2);
+        // a slot filling its k=2 blocks escalates: target ceil(3.0) = 3
+        // -> 4 — the 1.5x headroom is what lets it climb past k̂'s cap
+        assert_eq!(e.pick(&ks, 8, 2.0, 0), 4);
+        // k̂ ~ 2.9 -> target ceil(4.35) = 5 -> smallest compiled >= 5 is 8
+        assert_eq!(e.pick(&ks, 8, 2.9, 0), 8);
+        // sailing through at the max: falls back to the largest compiled k
+        assert_eq!(e.pick(&ks, 8, 8.0, 0), 8);
+        // replay cycles its script and never consults the estimate
+        let r = KPolicy::Replay(vec![4, 1, 2]);
+        assert_eq!(r.pick(&ks, 8, 0.0, 0), 4);
+        assert_eq!(r.pick(&ks, 8, 0.0, 1), 1);
+        assert_eq!(r.pick(&ks, 8, 0.0, 5), 2);
+        assert_eq!(KPolicy::Replay(vec![]).pick(&ks, 8, 0.0, 2), 8);
     }
 }

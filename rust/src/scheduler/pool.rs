@@ -231,6 +231,16 @@ impl PoolReport {
                 s.queue_us.p50 / 1000.0,
                 s.e2e_us.p50 / 1000.0,
             ));
+            if !s.k_invocations.is_empty() {
+                out.push_str(" ks=[");
+                for (j, (k, n)) in s.k_invocations.iter().enumerate() {
+                    if j > 0 {
+                        out.push(' ');
+                    }
+                    out.push_str(&format!("k{k}={n}"));
+                }
+                out.push(']');
+            }
         }
         out
     }

@@ -6,7 +6,7 @@
 //! ```text
 //! -> {"src":[14,5,2], "criterion":"exact", "deadline_ms":500}
 //! <- {"id":1, "tokens":[77,61,2], "invocations":3, "blocks":[2,1],
-//!     "queued_ms":0.4, "ms":4.2}
+//!     "khat":1.5, "queued_ms":0.4, "ms":4.2}
 //! ```
 //!
 //! Request fields: `src` (required, non-empty, bounded by
@@ -91,6 +91,15 @@ pub fn parse_criterion(s: &str) -> Option<Criterion> {
     None
 }
 
+/// Mean accepted block size of a blocks list (0 when no blocks landed).
+fn mean_block(blocks: &[usize]) -> f64 {
+    if blocks.is_empty() {
+        0.0
+    } else {
+        blocks.iter().sum::<usize>() as f64 / blocks.len() as f64
+    }
+}
+
 /// Serialize a response line.
 pub fn response_json(r: &Response) -> String {
     let mut obj = vec![
@@ -101,6 +110,7 @@ pub fn response_json(r: &Response) -> String {
             "blocks",
             Json::Arr(r.stats.accepted_blocks.iter().map(|&b| Json::Num(b as f64)).collect()),
         ),
+        ("khat", Json::Num(mean_block(&r.stats.accepted_blocks))),
         ("queued_ms", Json::Num(r.queued.as_secs_f64() * 1000.0)),
         ("ms", Json::Num(r.e2e.as_secs_f64() * 1000.0)),
     ];
@@ -377,6 +387,8 @@ pub struct ClientResult {
     pub tokens: Vec<i32>,
     pub invocations: usize,
     pub blocks: Vec<usize>,
+    /// mean accepted block size k̂ for this request (0 if no blocks)
+    pub khat: f64,
     /// server-side queue wait, reported separately from decode time
     pub queued_ms: f64,
     pub ms: f64,
@@ -463,15 +475,22 @@ impl Client {
             }
             anyhow::bail!("server error: {e}");
         }
+        let blocks: Vec<usize> = j
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| Ok::<usize, anyhow::Error>(b.as_usize()?))
+            .collect::<Result<_>>()?;
+        // pre-khat servers omit the field; derive it from blocks
+        let khat = j
+            .opt("khat")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or_else(|| mean_block(&blocks));
         Ok(Decoded::Ok(ClientResult {
             tokens: j.get("tokens")?.as_ids()?,
             invocations: j.get("invocations")?.as_usize()?,
-            blocks: j
-                .get("blocks")?
-                .as_arr()?
-                .iter()
-                .map(|b| Ok::<usize, anyhow::Error>(b.as_usize()?))
-                .collect::<Result<_>>()?,
+            blocks,
+            khat,
             queued_ms: j.opt("queued_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
             ms: j.get("ms")?.as_f64()?,
         }))
@@ -514,6 +533,9 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 3);
         assert_eq!(j.get("tokens").unwrap().as_ids().unwrap(), vec![5, 6, 2]);
         assert_eq!(j.get("invocations").unwrap().as_usize().unwrap(), 3);
+        // per-request k̂ = mean of the accepted blocks [2,1]
+        let khat = j.get("khat").unwrap().as_f64().unwrap();
+        assert!((khat - 1.5).abs() < 1e-9);
         // queue wait is reported separately from decode wall time
         let queued_ms = j.get("queued_ms").unwrap().as_f64().unwrap();
         assert!((queued_ms - 1.0).abs() < 1e-6);

@@ -8,12 +8,22 @@
 //! agreement rate with p1 is tunable, which lets property tests sweep the
 //! whole accept/reject spectrum without touching PJRT.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::model::{BlockStepper, WindowScores};
-use crate::scheduler::EngineBackend;
+use crate::scheduler::{EngineBackend, KPolicy};
 use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::tensor::{TensorF32, TensorI32};
+
+/// Source-side sentinel marking a *hard* request: any src containing this
+/// token scores proposal heads with [`SimModel::hard_agreement`] instead
+/// of the base agreement rate. `loadgen --mix easy:hard` prefixes it to
+/// the hard fraction of requests, giving the k̂ policy a genuinely mixed
+/// workload (the marker participates in the conditioning hash like any
+/// other token, so easy/hard trajectories stay deterministic).
+pub const HARD_MARKER: i32 = 9999;
 
 /// Simulated model configuration.
 #[derive(Debug, Clone)]
@@ -24,6 +34,10 @@ pub struct SimModel {
     /// probability (per position) that a proposal head agrees with what
     /// p1 would predict at that position — drives mean block size
     pub agreement: f64,
+    /// agreement rate for requests whose src contains [`HARD_MARKER`]
+    /// (defaults to `agreement`; lower it to simulate hard inputs whose
+    /// proposals rarely survive verification)
+    pub hard_agreement: f64,
     /// average output length before EOS
     pub mean_len: usize,
     pub seed: u64,
@@ -31,7 +45,30 @@ pub struct SimModel {
 
 impl SimModel {
     pub fn new(vocab: usize, k: usize, agreement: f64, mean_len: usize, seed: u64) -> Self {
-        SimModel { vocab, k, topt: 8.min(vocab - 3), agreement, mean_len, seed }
+        SimModel {
+            vocab,
+            k,
+            topt: 8.min(vocab - 3),
+            agreement,
+            hard_agreement: agreement,
+            mean_len,
+            seed,
+        }
+    }
+
+    /// Set the agreement rate used for [`HARD_MARKER`]-tagged sources.
+    pub fn with_hard_agreement(mut self, hard: f64) -> Self {
+        self.hard_agreement = hard;
+        self
+    }
+
+    /// Per-request agreement rate: hard-marked sources use the hard knob.
+    pub fn agreement_of(&self, src: &[i32]) -> f64 {
+        if src.contains(&HARD_MARKER) {
+            self.hard_agreement
+        } else {
+            self.agreement
+        }
     }
 
     fn hash(&self, data: &[i32], salt: u64) -> u64 {
@@ -76,7 +113,7 @@ impl SimModel {
         cond.push(-9);
         cond.extend_from_slice(prefix);
         let hh = self.hash(&cond, 100 + h as u64);
-        let agree = (hh % 10_000) as f64 / 10_000.0 < self.agreement;
+        let agree = (hh % 10_000) as f64 / 10_000.0 < self.agreement_of(src);
         if agree || truth == EOS {
             truth
         } else {
@@ -324,8 +361,21 @@ impl<'a> SimSession<'a> {
     }
 }
 
-impl BlockStepper for SimSession<'_> {
-    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> anyhow::Result<WindowScores> {
+impl SimSession<'_> {
+    /// One scoring step at an explicit block size `k_step`: the sim
+    /// analogue of the device session's `step_at_k` dispatch across the
+    /// `(B,k)` entry family. Only the gather window width `k_step+1`
+    /// varies — the head axis of the returned tensors stays the trained
+    /// `model.k`, exactly like the multi-k compiled entries, which share
+    /// one set of weights and heads. The [`BlockStepper`] impl delegates
+    /// here at the trained k.
+    pub fn step_at_k(
+        &mut self,
+        tgt_in: &TensorI32,
+        frontiers: &[usize],
+        k_step: usize,
+    ) -> anyhow::Result<WindowScores> {
+        anyhow::ensure!(k_step >= 1, "block size must be >= 1, got {k_step}");
         self.steps += 1;
         let b = tgt_in.dims[0];
         let t_len = tgt_in.dims[1];
@@ -333,7 +383,7 @@ impl BlockStepper for SimSession<'_> {
         let (k, topt) = (self.model.k, self.model.topt);
         let w = match self.mode {
             SimMode::Full => t_len,
-            _ => (k + 1).min(t_len),
+            _ => (k_step + 1).min(t_len),
         };
         let scored_per_row = match self.mode {
             SimMode::Cached { .. } => w,
@@ -390,6 +440,13 @@ impl BlockStepper for SimSession<'_> {
     }
 }
 
+impl BlockStepper for SimSession<'_> {
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> anyhow::Result<WindowScores> {
+        let k = self.model.k;
+        self.step_at_k(tgt_in, frontiers, k)
+    }
+}
+
 /// Deterministic, seedable fault-injection plan for [`SimBackend`] — the
 /// chaos harness's crash and latency source (`rust/tests/chaos.rs`).
 /// Call counts are per backend *instance*, so a shard respawned by the
@@ -430,6 +487,10 @@ pub struct SimBackend {
     /// per-slot resident sources; empty = free/PAD slot (inert rows)
     srcs: Vec<Vec<i32>>,
     t_len: usize,
+    /// compiled block sizes advertised to the engine (ascending, always
+    /// containing the trained `model.k`); defaults to `[model.k]`, the
+    /// single-k manifest shape
+    ks: Vec<usize>,
     faults: FaultPlan,
     steps_seen: usize,
     admits_seen: usize,
@@ -443,14 +504,26 @@ impl SimBackend {
     /// A backend with a fault plan attached (counters start at zero).
     pub fn with_faults(model: SimModel, bucket: usize, t_len: usize, faults: FaultPlan) -> Self {
         assert!(bucket >= 1 && t_len >= 2);
+        let ks = vec![model.k];
         SimBackend {
             model,
             srcs: vec![Vec::new(); bucket],
             t_len,
+            ks,
             faults,
             steps_seen: 0,
             admits_seen: 0,
         }
+    }
+
+    /// Advertise a multi-k entry family, like a manifest whose `config.ks`
+    /// lists several compiled block sizes. Must be ascending, distinct,
+    /// and contain the trained `model.k`.
+    pub fn with_ks(mut self, ks: &[usize]) -> Self {
+        assert!(!ks.is_empty() && ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
+        assert!(ks.contains(&self.model.k), "ks must contain the trained k");
+        self.ks = ks.to_vec();
+        self
     }
 }
 
@@ -465,6 +538,10 @@ impl EngineBackend for SimBackend {
 
     fn k(&self) -> usize {
         self.model.k
+    }
+
+    fn ks(&self) -> Vec<usize> {
+        self.ks.clone()
     }
 
     fn max_len(&self) -> usize {
@@ -488,7 +565,7 @@ impl EngineBackend for SimBackend {
         Ok(())
     }
 
-    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize], k: usize) -> Result<WindowScores> {
         // faults fire before any state is touched: a panicking backend is
         // discarded whole by the supervisor, never stepped again
         self.steps_seen += 1;
@@ -502,10 +579,11 @@ impl EngineBackend for SimBackend {
         }
         // the windowed sim mode keeps no cross-step state, so a transient
         // session over the current slot sources is exactly the device
-        // session's windowed step contract; the sources are moved in and
-        // back out (no per-step clone on the engine hot loop)
+        // session's windowed step contract at the requested block size;
+        // the sources are moved in and back out (no per-step clone on the
+        // engine hot loop)
         let mut session = SimSession::new(&self.model, std::mem::take(&mut self.srcs));
-        let scores = session.step_at(tgt_in, frontiers);
+        let scores = session.step_at_k(tgt_in, frontiers, k);
         self.srcs = session.into_srcs();
         scores
     }
@@ -568,6 +646,112 @@ pub fn sim_blockwise(
         invocations += 1;
     }
     (st.accepted.clone(), invocations, st.stats.accepted_blocks)
+}
+
+/// What a [`sim_policy_run`] measured: the accounting the equality
+/// property, the BENCH sweep, and the committed `BENCH_adaptive_k.json`
+/// transcription all share.
+#[derive(Debug, Clone, Default)]
+pub struct PolicyRunReport {
+    /// decoded tokens per request, in input order (byte-identity checks)
+    pub outputs: Vec<Vec<i32>>,
+    /// total model invocations across all requests
+    pub steps: usize,
+    /// invocations by the step's dispatched entry k
+    pub k_invocations: BTreeMap<usize, u64>,
+    /// per generated-at-k (accept substeps, tokens accepted) — k̂ broken
+    /// down by the block size the proposals were generated at
+    pub khat_by_k: BTreeMap<usize, (u64, u64)>,
+}
+
+impl PolicyRunReport {
+    /// Mean accepted block size over all accept substeps.
+    pub fn khat(&self) -> f64 {
+        let (steps, toks) = self
+            .khat_by_k
+            .values()
+            .fold((0u64, 0u64), |(s, t), &(a, b)| (s + a, t + b));
+        if steps == 0 {
+            0.0
+        } else {
+            toks as f64 / steps as f64
+        }
+    }
+
+    /// Mean invocations per request.
+    pub fn steps_per_request(&self) -> f64 {
+        if self.outputs.is_empty() {
+            0.0
+        } else {
+            self.steps as f64 / self.outputs.len() as f64
+        }
+    }
+}
+
+/// Decode `srcs` sequentially under a [`KPolicy`], mirroring the engine's
+/// pick timing exactly: the initial k comes from the policy seeded with
+/// the running shard EWMA (pick 0, at admission), and each subsequent
+/// pick lands immediately before `absorb` so it drives that absorb's
+/// re-prediction — with k̂ attributed to the k the in-flight proposals
+/// were *generated* at, one pick earlier. Scoring uses the full-length
+/// tensors, which are a byte-identical superset of every `(B,k)` window
+/// (`windowed_scores_match_full_slice`), so the run is exact for any k
+/// mix while staying trivially transcribable offline. Under
+/// `Criterion::Exact` the outputs must equal greedy regardless of policy
+/// — that invariance is what `prop_adaptive_equals_static` pins.
+pub fn sim_policy_run(
+    model: &SimModel,
+    srcs: &[Vec<i32>],
+    policy: &KPolicy,
+    ks: &[usize],
+    max_len: usize,
+) -> PolicyRunReport {
+    use crate::decoding::state::BlockState;
+    use crate::decoding::Criterion;
+    assert!(!ks.is_empty() && ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
+    assert!(ks.contains(&model.k), "ks must contain the trained k");
+    let k_max = model.k;
+    let alpha = policy.alpha();
+    let mut shard_ewma = k_max as f64;
+    let mut report = PolicyRunReport::default();
+    let t_len = max_len + 1;
+    for src in srcs {
+        let mut ewma = shard_ewma;
+        let mut picks = 1usize;
+        let k0 = policy.pick(ks, k_max, ewma, 0).clamp(1, k_max);
+        let mut st = BlockState::new(k0, Criterion::Exact, max_len);
+        let mut k_gen = k0;
+        while !st.done {
+            let mut row = vec![0i32; t_len];
+            st.build_row(&mut row);
+            let used = 1 + st.accepted.len() + st.proposals.len();
+            let rows = vec![row[..used.min(t_len)].to_vec()];
+            // the entry the engine would dispatch: smallest compiled k
+            // covering both the in-flight proposals and this row's pick
+            let needed = st.proposals.len().max(st.k).max(1);
+            let step_k =
+                ks.iter().copied().find(|&k| k >= needed.min(k_max)).unwrap_or(k_max);
+            *report.k_invocations.entry(step_k).or_insert(0) += 1;
+            report.steps += 1;
+            let scores = model.score_rows(src, &rows, t_len);
+            let had_proposals = !st.proposals.is_empty();
+            let generated_at = k_gen;
+            let pick = policy.pick(ks, k_max, ewma, picks).clamp(st.min_block, k_max);
+            picks += 1;
+            st.k = pick;
+            k_gen = pick;
+            let k_hat = st.absorb(&scores, 0);
+            if had_proposals {
+                let e = report.khat_by_k.entry(generated_at).or_insert((0, 0));
+                e.0 += 1;
+                e.1 += k_hat as u64;
+                ewma = alpha * k_hat as f64 + (1.0 - alpha) * ewma;
+                shard_ewma = alpha * k_hat as f64 + (1.0 - alpha) * shard_ewma;
+            }
+        }
+        report.outputs.push(st.accepted.clone());
+    }
+    report
 }
 
 #[cfg(test)]
@@ -762,16 +946,27 @@ mod tests {
         let m = SimModel::new(60, 3, 0.6, 9, 17);
         let src0 = vec![5, 9, EOS];
         let src1 = vec![8, EOS];
-        let mut be = SimBackend::new(m.clone(), 2, 12);
+        let mut be = SimBackend::new(m.clone(), 2, 12).with_ks(&[2, 3]);
+        assert_eq!(EngineBackend::ks(&be), vec![2, 3]);
         be.admit(&[0, 1], &[src0.as_slice(), src1.as_slice()]).unwrap();
         let mut tgt = TensorI32::zeros(&[2, 12]);
         tgt.row_mut(0)[..3].copy_from_slice(&[BOS, 11, 12]);
         tgt.row_mut(1)[0] = BOS;
-        let a = be.step_at(&tgt, &[1, 0]).unwrap();
-        let b = SimSession::new(&m, vec![src0, src1]).step_at(&tgt, &[1, 0]).unwrap();
+        let a = be.step_at(&tgt, &[1, 0], m.k).unwrap();
+        let b = SimSession::new(&m, vec![src0.clone(), src1.clone()])
+            .step_at(&tgt, &[1, 0])
+            .unwrap();
         assert_eq!(a.base, b.base);
         assert_eq!(a.topi.data, b.topi.data);
         assert_eq!(a.topv.data, b.topv.data);
+        // a smaller-k step narrows the gather window, matching the sim
+        // session stepped at the same explicit k
+        let a2 = be.step_at(&tgt, &[1, 0], 2).unwrap();
+        let b2 = SimSession::new(&m, vec![src0, src1]).step_at_k(&tgt, &[1, 0], 2).unwrap();
+        assert_eq!(a2.window(), 3);
+        assert_eq!(a2.base, b2.base);
+        assert_eq!(a2.topi.data, b2.topi.data);
+        assert_eq!(a2.topv.data, b2.topv.data);
         // strict admission contract, like the device session
         assert!(be.admit(&[0, 1], &[[4, EOS].as_slice()]).is_err());
         assert!(be.admit(&[7], &[[4, EOS].as_slice()]).is_err());
@@ -785,5 +980,75 @@ mod tests {
         // every step should accept k tokens (except near EOS/cap)
         assert!(inv <= out.len() / m.k + 3, "inv {inv} out {}", out.len());
         assert!(blocks.iter().take(blocks.len().saturating_sub(1)).all(|&b| b == m.k));
+    }
+
+    #[test]
+    fn hard_marker_selects_hard_agreement() {
+        // hard-marked sources get the hard agreement rate (worse blocks),
+        // and exact-criterion blockwise still equals greedy on them
+        let m = SimModel::new(64, 6, 0.95, 40, 0xBE7C).with_hard_agreement(0.05);
+        let easy = vec![7, 11, EOS];
+        let hard = vec![HARD_MARKER, 7, 11, EOS];
+        assert_eq!(m.agreement_of(&easy), 0.95);
+        assert_eq!(m.agreement_of(&hard), 0.05);
+        let mut mean = [0.0f64; 2];
+        for (i, src) in [&easy, &hard].into_iter().enumerate() {
+            let greedy = m.greedy(src, 30);
+            let (out, _, blocks) = sim_blockwise(&m, src, Criterion::Exact, 30);
+            assert_eq!(out, greedy);
+            mean[i] = blocks.iter().sum::<usize>() as f64 / blocks.len().max(1) as f64;
+        }
+        assert!(
+            mean[0] > mean[1] + 1.0,
+            "easy k̂ {} should clearly beat hard k̂ {}",
+            mean[0],
+            mean[1]
+        );
+    }
+
+    #[test]
+    fn policy_run_static_matches_oneshot_reference() {
+        // Static(None) policy run == the plain sim_blockwise loop, step
+        // for step: same outputs, same invocation count, all at k_max
+        let m = SimModel::new(64, 6, 0.6, 14, 0xBE7C);
+        let srcs: Vec<Vec<i32>> = (0..6).map(|s| vec![3 + s, 11, EOS]).collect();
+        let rep = sim_policy_run(&m, &srcs, &KPolicy::Static(None), &[2, 4, 6], 24);
+        let mut steps = 0usize;
+        for (i, src) in srcs.iter().enumerate() {
+            let (out, inv, _) = sim_blockwise(&m, src, Criterion::Exact, 24);
+            assert_eq!(rep.outputs[i], out, "request {i}");
+            steps += inv;
+        }
+        assert_eq!(rep.steps, steps);
+        assert_eq!(rep.k_invocations.keys().copied().collect::<Vec<_>>(), vec![6]);
+    }
+
+    #[test]
+    fn policy_run_ewma_adapts_and_preserves_outputs() {
+        // mixed easy/hard workload: the EWMA policy must dispatch more
+        // than one distinct k, spend fewer steps per request than it
+        // would pay re-proposing k_max tokens on hard rows... and still
+        // produce byte-identical outputs (the §3 exact-criterion
+        // guarantee is k-invariant)
+        let m = SimModel::new(64, 6, 0.95, 18, 0x5EED).with_hard_agreement(0.05);
+        let srcs: Vec<Vec<i32>> = (0..10)
+            .map(|s| {
+                if s % 2 == 0 {
+                    vec![3 + s, 11, EOS]
+                } else {
+                    vec![HARD_MARKER, 3 + s, 11, EOS]
+                }
+            })
+            .collect();
+        let ks = [1usize, 2, 4, 6];
+        let stat = sim_policy_run(&m, &srcs, &KPolicy::Static(None), &ks, 24);
+        let ewma = sim_policy_run(&m, &srcs, &KPolicy::Ewma { alpha: 0.5 }, &ks, 24);
+        assert_eq!(stat.outputs, ewma.outputs, "outputs must be policy-invariant");
+        assert!(
+            ewma.k_invocations.len() > 1,
+            "ewma should dispatch >1 distinct k, got {:?}",
+            ewma.k_invocations
+        );
+        assert_eq!(stat.k_invocations.keys().copied().collect::<Vec<_>>(), vec![6]);
     }
 }

@@ -161,6 +161,51 @@ fn cached_decode_falls_back_without_entries() {
     }
 }
 
+#[test]
+fn multi_k_stripped_manifest_decodes_identically() {
+    // Back-compat for the (B,k) entry grammar: a manifest stripped to the
+    // old single-k shape — no `_k`-suffixed decode entries, `config.ks`
+    // collapsed to the trained k — must still load (adaptive tier off,
+    // `ks() == [k]`) and decode byte-identically through the static path.
+    let root = require_artifacts!();
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let dev = Dataset::load(&manifest.data_file("mt_dev.json")).unwrap();
+    let srcs: Vec<Vec<i32>> = dev.rows.iter().take(4).map(|r| r.src.clone()).collect();
+
+    let model = ScoringModel::load(rt.clone(), &manifest, "mt_k8_both").unwrap();
+    let ks_before = model.ks();
+    let primary = decoding::blockwise_decode(&model, &srcs, &BlockwiseConfig::default()).unwrap();
+    drop(model);
+
+    let mut stripped = Manifest::load(&root).unwrap();
+    for v in stripped.variants.values_mut() {
+        v.entries.retain(|logical, _| {
+            !((logical.starts_with("decode_window_b") || logical.starts_with("decode_cached_b"))
+                && logical.contains("_k"))
+        });
+        v.config.ks = vec![v.k];
+    }
+    let old = ScoringModel::load(rt.clone(), &stripped, "mt_k8_both").unwrap();
+    assert_eq!(old.ks(), vec![old.k()], "stripped manifest must turn the adaptive tier off");
+    let fb = decoding::blockwise_decode(&old, &srcs, &BlockwiseConfig::default()).unwrap();
+
+    for (i, (a, b)) in primary.iter().zip(&fb).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "row {i}: multi-k and single-k paths disagree");
+        assert_eq!(
+            a.stats.invocations, b.stats.invocations,
+            "row {i}: invocation counts diverged"
+        );
+        assert_eq!(
+            a.stats.accepted_blocks, b.stats.accepted_blocks,
+            "row {i}: accept traces diverged"
+        );
+    }
+    // informational: whether these artifacts carried a multi-k family at
+    // all (both sides of the strip are exercised either way)
+    eprintln!("compiled ks before strip: {ks_before:?}");
+}
+
 /// Drive the continuous-batching engine through two admission waves by
 /// stepping it manually (no TCP): wave 1 is admitted into an empty batch,
 /// wave 2 mid-flight into the remaining free slots while wave-1 rows are

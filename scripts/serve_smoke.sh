@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Serve smoke, two phases:
+# Serve smoke, three phases:
 #
 # 1. Happy path — boot `repro serve` with a multi-engine pool on the
 #    simulator backend (no artifacts, no PJRT compilation), drive it with
@@ -14,6 +14,13 @@
 #    queueing unboundedly; then SIGINT *under load* and assert the drain
 #    is still clean — in-flight requests finish, late arrivals get
 #    rejection replies, every shard joins.
+#
+# 3. Adaptive-k drill — reboot with `--k-policy ewma` over the sim
+#    backend's multi-k entry family and drive a mixed-difficulty workload
+#    (`loadgen --mix`): hard-marked requests collapse the acceptance
+#    EWMA, so the fleet report's per-k invocation counts must show more
+#    than one distinct k — proof the policy actually dispatched different
+#    (B,k) entries end-to-end, not just tracked k̂.
 #
 # Used as a CI step after the tier-1 build (the release binary is already
 # present there); runs standalone too and builds the binary if missing.
@@ -38,6 +45,8 @@ LOG="${SMOKE_LOG:-serve-smoke.log}"
 
 OVERLOAD_LOG="${LOG%.log}-overload.log"
 LOADGEN_LOG="${LOG%.log}-loadgen.log"
+ADAPTIVE_LOG="${LOG%.log}-adaptive.log"
+ADAPTIVE_LOADGEN_LOG="${LOG%.log}-adaptive-loadgen.log"
 
 SERVE_PID=""
 BG_PID=""
@@ -51,6 +60,8 @@ cleanup() {
     cat "$LOG" 2>/dev/null || true
     echo "---- overload serve log ----"
     cat "$OVERLOAD_LOG" 2>/dev/null || true
+    echo "---- adaptive serve log ----"
+    cat "$ADAPTIVE_LOG" 2>/dev/null || true
 }
 trap cleanup EXIT
 
@@ -159,4 +170,38 @@ grep -Eq "robustness: shed=[1-9]" "$OVERLOAD_LOG" || {
     echo "serve-smoke: fleet report shows no shed requests under overload" >&2
     exit 1
 }
-echo "serve-smoke: OK (phase 1 drain + phase 2 overload shed and drain-under-load)"
+echo "serve-smoke: phase 2 OK (overload shed and drain-under-load)"
+
+# ---- phase 3: acceptance-adaptive block size ----
+# A mostly-hard workload (--mix 1:3) collapses the per-slot acceptance
+# EWMA on the sim backend's hard-marked requests, so the EWMA policy must
+# dispatch more than one distinct compiled k over the run.
+SERVE_PID=""
+boot_server "$ADAPTIVE_LOG" --engines 2 --k-policy ewma
+echo "serve-smoke: adaptive-k drill on $ADDR (ewma policy, 1:3 easy:hard mix)"
+
+"$BIN" loadgen --addr "$ADDR" --n 240 --conns 4 --mix 1:3 | tee "$ADAPTIVE_LOADGEN_LOG"
+grep -q "k̂ mean" "$ADAPTIVE_LOADGEN_LOG" || {
+    echo "serve-smoke: loadgen did not report k̂ percentiles" >&2
+    exit 1
+}
+
+kill -INT "$SERVE_PID"
+RC=0
+wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [ "$RC" -ne 0 ]; then
+    echo "serve-smoke: adaptive serve exited rc=$RC after SIGINT (expected clean drain)" >&2
+    exit 1
+fi
+PERK=$(grep -m1 "per-k invocations:" "$ADAPTIVE_LOG" || true)
+if [ -z "$PERK" ]; then
+    echo "serve-smoke: fleet report missing per-k invocation counts" >&2
+    exit 1
+fi
+DISTINCT=$(printf '%s\n' "$PERK" | grep -oE "k[0-9]+=[0-9]+" | wc -l)
+if [ "$DISTINCT" -lt 2 ]; then
+    echo "serve-smoke: ewma policy dispatched only one distinct k: $PERK" >&2
+    exit 1
+fi
+echo "serve-smoke: OK (drain + overload shed + ewma dispatched $DISTINCT distinct block sizes)"
