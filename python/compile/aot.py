@@ -223,6 +223,19 @@ def make_scatter_fn(cfg: M.ModelConfig):
     return fn
 
 
+def make_replicate_fn(cfg: M.ModelConfig, b: int):
+    """Device-side beam fan-out entry: broadcast one encoded sentence
+    ([1,S] src + [1,S,D] memory) across all `b` rows (`M.replicate_rows`).
+    The rust runtime keeps the replicated buffers device-resident via
+    `execute_split`, so a beam session encodes the sentence once and
+    uploads one row instead of a host-replicated batch. The weight bundle
+    is threaded through untouched (`keep_unused=True` export convention)."""
+    def fn(params, row_src, row_memory):
+        del params
+        return M.replicate_rows(cfg, b, row_src, row_memory)
+    return fn
+
+
 def make_logits_fn(cfg: M.ModelConfig):
     def fn(params, memory, src, tgt_in):
         return (M.decode_heads(params, cfg, memory, src, tgt_in, use_pallas=True),)
@@ -235,6 +248,25 @@ def make_nat_fn(cfg: M.ModelConfig):
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         length = jnp.argmax(len_logits, axis=-1).astype(jnp.int32)
         return toks, length
+    return fn
+
+
+def make_nat_refine_fn(cfg: M.ModelConfig):
+    """Canvas-chaining refinement entry: rebuild the PAD→BOS canvas from
+    the previous pass's token buffer **on device**, run `nat_forward`, and
+    return (lengths, tokens) — lengths FIRST, so the rust session's
+    `execute_split(.., n_host=1)` downloads only the [B] length vector
+    while the [B,T] token buffer chains device-to-device into the next
+    pass, the way `decode_cached_b*` chains its K/V cache. An all-PAD
+    input rebuilds to the all-BOS shot-1 canvas, so this one entry serves
+    every pass of a NAT / iterative-refinement decode
+    (rust/src/model/mod.rs `NatSession::decode`)."""
+    def fn(params, src, toks_prev):
+        canvas = jnp.where(toks_prev == 0, 1, toks_prev)
+        logits, len_logits = M.nat_forward(params, cfg, src, canvas)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        length = jnp.argmax(len_logits, axis=-1).astype(jnp.int32)
+        return length, toks
     return fn
 
 
@@ -422,14 +454,21 @@ class Builder:
         for b in BUCKETS:
             src, tgt, mem = _example_io(cfg, b)
             if is_nat:
-                e = f"{sig}_b{b}_nat"
-                if e not in self.manifest["entries"]:
-                    path = os.path.join(self.out, "hlo", f"{e}.hlo.txt")
-                    if self.force or not os.path.exists(path):
-                        print(f"  export {e}", flush=True)
-                        export_fn(make_nat_fn(cfg), (params, src, tgt), path)
-                    self.manifest["entries"][e] = {"file": f"hlo/{e}.hlo.txt", "batch": b}
-                entry_names[f"nat_b{b}"] = e
+                # `nat` is the single-shot entry; `nat_refine` adds the
+                # device-side PAD→BOS canvas rebuild so multi-pass decodes
+                # chain the token buffer device-to-device between passes
+                for kind, mk in (
+                    ("nat", make_nat_fn(cfg)),
+                    ("nat_refine", make_nat_refine_fn(cfg)),
+                ):
+                    e = f"{sig}_b{b}_{kind}"
+                    if e not in self.manifest["entries"]:
+                        path = os.path.join(self.out, "hlo", f"{e}.hlo.txt")
+                        if self.force or not os.path.exists(path):
+                            print(f"  export {e}", flush=True)
+                            export_fn(mk, (params, src, tgt), path)
+                        self.manifest["entries"][e] = {"file": f"hlo/{e}.hlo.txt", "batch": b}
+                    entry_names[f"{kind}_b{b}"] = e
             else:
                 fro = jnp.zeros((b,), jnp.int32)
                 kv0 = jnp.zeros(M.kv_cache_shape(cfg, b), jnp.float32)
@@ -445,6 +484,8 @@ class Builder:
                      (params, mem, src, tgt, fro, kv0)),
                     ("scatter", make_scatter_fn(cfg),
                      (params, mem, src, kv0, slot, row_src, row_mem)),
+                    ("replicate", make_replicate_fn(cfg, b),
+                     (params, row_src, row_mem)),
                 ):
                     e = f"{sig}_b{b}_{kind}"
                     if e not in self.manifest["entries"]:

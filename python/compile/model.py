@@ -227,6 +227,29 @@ def admit_rows(
     return memory, src, kv
 
 
+def replicate_rows(
+    cfg: ModelConfig,
+    b: int,
+    row_src: jnp.ndarray,
+    row_memory: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-side beam fan-out: broadcast one encoded sentence ([1,S] src
+    ids + [1,S,D] encoder memory) across all `b` rows of a batch bucket.
+
+    Beam search packs its hypotheses into the batch axis over a single
+    replicated source; with this entry the serving runtime encodes the
+    sentence **once**, uploads the one encoded row, and the replicated
+    buffers stay device-resident via `execute_split` — instead of encoding
+    a host-replicated [b,S] batch b times over (rust/src/model/mod.rs
+    `ScoringModel::begin_session_replicated`). The encoder is
+    row-independent under the padding mask, so the broadcast is
+    byte-identical to the replicated encode."""
+    del cfg
+    src = jnp.broadcast_to(row_src, (b,) + row_src.shape[1:])
+    memory = jnp.broadcast_to(row_memory, (b,) + row_memory.shape[1:])
+    return src, memory
+
+
 # --------------------------------------------------------------------------
 # Training loss (§6: one uniformly-sampled head per minibatch)
 # --------------------------------------------------------------------------

@@ -90,12 +90,46 @@ impl Drop for ResponseReceiver {
     }
 }
 
+/// Which decoder family serves a request. The pool mixes all three in
+/// one queue: blockwise rides the batched slot loop, beam and NAT are
+/// served whole by the same shard backends. Wire field `"mode"`; every
+/// [`Response`] echoes it so per-family metrics and clients can segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum DecodeMode {
+    #[default]
+    Blockwise,
+    Beam,
+    Nat,
+}
+
+impl DecodeMode {
+    pub const ALL: [DecodeMode; 3] = [DecodeMode::Blockwise, DecodeMode::Beam, DecodeMode::Nat];
+
+    /// Wire-field value (serve protocol `"mode"`) and metrics label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DecodeMode::Blockwise => "blockwise",
+            DecodeMode::Beam => "beam",
+            DecodeMode::Nat => "nat",
+        }
+    }
+
+    /// Parse a wire-field value; `None` for unknown strings — the server
+    /// replies with an error instead of guessing a family.
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.label() == s)
+    }
+}
+
 /// A decode request entering the coordinator.
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub src: Vec<i32>,
-    /// per-request criterion override (server protocol allows it)
+    /// decoder family serving this request
+    pub mode: DecodeMode,
+    /// per-request criterion override (server protocol allows it;
+    /// blockwise only — beam/NAT ignore it)
     pub criterion: Option<Criterion>,
     pub arrived: Instant,
     /// absolute point after which the engine must reply `timeout` instead
@@ -112,10 +146,16 @@ pub struct Request {
 
 impl Request {
     /// A fresh request: arrival stamped now, no deadline, not cancelled.
-    pub fn new(id: u64, src: Vec<i32>, criterion: Option<Criterion>, respond: ResponseSender) -> Self {
+    pub fn new(
+        id: u64,
+        src: Vec<i32>,
+        criterion: Option<Criterion>,
+        respond: ResponseSender,
+    ) -> Self {
         Request {
             id,
             src,
+            mode: DecodeMode::default(),
             criterion,
             arrived: Instant::now(),
             deadline: None,
@@ -127,6 +167,11 @@ impl Request {
 
     pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
         self.deadline = deadline;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: DecodeMode) -> Self {
+        self.mode = mode;
         self
     }
 
@@ -146,6 +191,8 @@ impl Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// decoder family that served (or refused) the request
+    pub mode: DecodeMode,
     pub tokens: Vec<i32>,
     pub stats: BlockStats,
     pub queued: Duration,
@@ -481,6 +528,18 @@ mod tests {
         let (r, _k) = req(7);
         let back = q.requeue(r).expect_err("requeue after close would strand the request");
         assert_eq!(back.id, 7);
+    }
+
+    #[test]
+    fn decode_mode_wire_round_trip() {
+        for m in DecodeMode::ALL {
+            assert_eq!(DecodeMode::parse(m.label()), Some(m));
+        }
+        assert_eq!(DecodeMode::parse("greedy"), None);
+        assert_eq!(DecodeMode::default(), DecodeMode::Blockwise);
+        let (r, _k) = req(1);
+        assert_eq!(r.mode, DecodeMode::Blockwise);
+        assert_eq!(r.with_mode(DecodeMode::Beam).mode, DecodeMode::Beam);
     }
 
     #[test]

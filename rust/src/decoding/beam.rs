@@ -5,10 +5,16 @@
 //! row over the same replicated source), so one invocation scores the
 //! whole beam. Expansion uses the exported top-t candidates (t = 8 ≥ any
 //! practical beam width here); GNMT length normalization ((5+len)/6)^α.
+//!
+//! The search loop itself ([`decode_core`]) is generic over
+//! [`BlockStepper`], exactly like `blockwise::decode_rows`: the device
+//! session and the simulator (`testing::sim::sim_beam`) drive the same
+//! code, so a pool-served sim beam decode is byte-identical to this
+//! offline reference by construction.
 
 use anyhow::Result;
 
-use crate::model::ScoringModel;
+use crate::model::{BlockStepper, ScoringModel};
 use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::tensor::TensorI32;
 
@@ -30,18 +36,32 @@ pub fn decode_one(
     anyhow::ensure!(beam >= 1);
     let bucket = model.pick_bucket(beam)?;
     let max_len = max_len.unwrap_or(model.max_tgt() - 1).min(model.max_tgt() - 1);
+    // encode the sentence once; the session fans the encoded row across
+    // the bucket (device-side on manifests with `replicate_b*` entries,
+    // host-replicated fallback otherwise) and scores the whole beam per
+    // invocation
+    let mut session = model.begin_session_replicated(src_ids, bucket)?;
+    decode_core(&mut session, bucket, model.max_tgt(), beam, alpha, max_len)
+}
 
-    let s_len = model.max_src();
-    let mut src = TensorI32::zeros(&[bucket, s_len]);
-    for b in 0..bucket {
-        src.row_mut(b)[..src_ids.len()].copy_from_slice(src_ids);
-    }
-    // encode the replicated source once; one pinned session scores the
-    // whole beam every iteration
-    let session = model.begin_session(&src)?;
+/// The beam-search loop over any [`BlockStepper`]. `bucket` rows are
+/// stepped per invocation (hypothesis `i` packed into row `i`); the
+/// stepper's rows must all condition on the same source. Returns the
+/// best hypothesis (always ending in a terminal EOS — appended when the
+/// `max_len` cap, not an emitted EOS, terminated it) and the invocation
+/// count.
+pub fn decode_core<S: BlockStepper>(
+    session: &mut S,
+    bucket: usize,
+    t_len: usize,
+    beam: usize,
+    alpha: f32,
+    max_len: usize,
+) -> Result<(Vec<i32>, usize)> {
+    anyhow::ensure!(beam >= 1 && beam <= bucket, "beam {beam} exceeds bucket {bucket}");
+    let max_len = max_len.min(t_len - 1);
 
     let mut hyps = vec![Hyp { tokens: vec![], score: 0.0, done: false }];
-    let t_len = model.max_tgt();
     let mut invocations = 0usize;
 
     for pos in 0..max_len {
@@ -77,10 +97,9 @@ pub fn decode_one(
                 cand.push(h.clone());
                 continue;
             }
-            let denom: f32 = (0..scores.topt)
-                .map(|r| scores.logit(b, pos, 0, r).exp())
-                .sum::<f32>()
-                .ln();
+            let logits: Vec<f32> =
+                (0..scores.topt).map(|r| scores.logit(b, pos, 0, r)).collect();
+            let denom = logsumexp(&logits);
             for r in 0..beam.min(scores.topt) {
                 let tok = scores.token(b, pos, 0, r);
                 let lp = scores.logit(b, pos, 0, r) - denom;
@@ -90,11 +109,10 @@ pub fn decode_one(
                 cand.push(Hyp { tokens: t2, score: h.score + lp, done });
             }
         }
-        // keep the best `beam` by length-normalized score
+        // keep the best `beam` by length-normalized score; total_cmp so a
+        // NaN score yields a deterministic order instead of a panic
         cand.sort_by(|a, b| {
-            norm(b.score, b.tokens.len(), alpha)
-                .partial_cmp(&norm(a.score, a.tokens.len(), alpha))
-                .unwrap()
+            norm(b.score, b.tokens.len(), alpha).total_cmp(&norm(a.score, a.tokens.len(), alpha))
         });
         cand.truncate(beam);
         hyps = cand;
@@ -103,12 +121,27 @@ pub fn decode_one(
     let best = hyps
         .into_iter()
         .max_by(|a, b| {
-            norm(a.score, a.tokens.len(), alpha)
-                .partial_cmp(&norm(b.score, b.tokens.len(), alpha))
-                .unwrap()
+            norm(a.score, a.tokens.len(), alpha).total_cmp(&norm(b.score, b.tokens.len(), alpha))
         })
         .unwrap();
-    Ok((best.tokens, invocations))
+    let mut tokens = best.tokens;
+    // a hypothesis terminated by the length cap never emitted EOS; append
+    // one so every decoder family shares the terminal-EOS contract
+    if tokens.last() != Some(&EOS) {
+        tokens.push(EOS);
+    }
+    Ok((tokens, invocations))
+}
+
+/// Max-subtracted logsumexp: `m + ln(Σ exp(x - m))`. The naive
+/// `ln(Σ exp(x))` overflows f32 `exp` to `inf` for logits ≳ 88, poisoning
+/// every downstream hypothesis score to `-inf`/NaN.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m; // empty or all -inf (or a NaN/inf poisoned input)
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
 }
 
 fn norm(score: f32, len: usize, alpha: f32) -> f32 {
@@ -117,7 +150,11 @@ fn norm(score: f32, len: usize, alpha: f32) -> f32 {
 
 #[cfg(test)]
 mod tests {
-    use super::norm;
+    use super::{decode_core, logsumexp, norm};
+    use crate::model::{BlockStepper, WindowScores};
+    use crate::tokenizer::EOS;
+    use crate::util::tensor::{TensorF32, TensorI32};
+    use anyhow::Result;
 
     #[test]
     fn norm_prefers_longer_at_equal_score() {
@@ -128,5 +165,110 @@ mod tests {
     #[test]
     fn norm_alpha_zero_is_identity() {
         assert_eq!(norm(-3.0, 7, 0.0), -3.0);
+    }
+
+    #[test]
+    fn logsumexp_survives_large_logits() {
+        // pre-fix denominator: exp(1000) = inf, ln(inf) = inf, lp = -inf
+        let d = logsumexp(&[1000.0, 999.0, 998.0]);
+        assert!(d.is_finite(), "got {d}");
+        let expect = 1000.0 + (1.0f32 + (-1.0f32).exp() + (-2.0f32).exp()).ln();
+        assert!((d - expect).abs() < 1e-3, "{d} vs {expect}");
+        // and it still matches the naive formula where that one is safe
+        let naive = (0.5f32.exp() + 0.25f32.exp()).ln();
+        assert!((logsumexp(&[0.5, 0.25]) - naive).abs() < 1e-6);
+    }
+
+    /// Scripted stepper: full-length `[bucket, t_len, 1, topt]` scores from
+    /// a `(row, pos, rank) -> (token, logit)` closure, like the sim but
+    /// with test-controlled numerics (overflow logits, NaN).
+    struct Stub<F: Fn(usize, usize, usize) -> (i32, f32)> {
+        bucket: usize,
+        t_len: usize,
+        topt: usize,
+        f: F,
+    }
+
+    impl<F: Fn(usize, usize, usize) -> (i32, f32)> BlockStepper for Stub<F> {
+        fn step_at(&mut self, _tgt_in: &TensorI32, _frontiers: &[usize]) -> Result<WindowScores> {
+            let dims = [self.bucket, self.t_len, 1, self.topt];
+            let mut topv = vec![0.0f32; self.bucket * self.t_len * self.topt];
+            let mut topi = vec![0i32; topv.len()];
+            for b in 0..self.bucket {
+                for t in 0..self.t_len {
+                    for r in 0..self.topt {
+                        let (tok, logit) = (self.f)(b, t, r);
+                        let idx = (b * self.t_len + t) * self.topt + r;
+                        topi[idx] = tok;
+                        topv[idx] = logit;
+                    }
+                }
+            }
+            Ok(WindowScores::full(
+                TensorF32::from_vec(&dims, topv),
+                TensorI32::from_vec(&dims, topi),
+                1,
+                self.topt,
+            ))
+        }
+    }
+
+    #[test]
+    fn overflow_logits_keep_scores_finite_and_cap_appends_eos() {
+        // logits around +1000 used to overflow the softmax denominator to
+        // inf, turning every hypothesis score into -inf; rank 0 must still
+        // win cleanly. No EOS is ever emitted, so the length cap
+        // terminates every hypothesis — the result must still end in EOS.
+        let mut s = Stub {
+            bucket: 4,
+            t_len: 8,
+            topt: 4,
+            f: |_b, _t, r| (5 + r as i32, 1000.0 - r as f32),
+        };
+        let (tokens, invocations) = decode_core(&mut s, 4, 8, 2, 0.6, 4).unwrap();
+        assert_eq!(tokens, vec![5, 5, 5, 5, EOS]);
+        assert_eq!(invocations, 4);
+    }
+
+    #[test]
+    fn eos_termination_keeps_single_terminal_eos() {
+        // rank 0 emits EOS at position 2: the emitted EOS terminates the
+        // hypothesis and no second EOS is appended
+        let mut s = Stub {
+            bucket: 4,
+            t_len: 8,
+            topt: 4,
+            f: |_b, t, r| {
+                let tok = if t >= 2 && r == 0 { EOS } else { 5 + r as i32 };
+                (tok, 10.0 - r as f32)
+            },
+        };
+        let (tokens, _) = decode_core(&mut s, 4, 8, 2, 0.6, 6).unwrap();
+        assert_eq!(tokens.iter().filter(|&&t| t == EOS).count(), 1);
+        assert_eq!(tokens, vec![5, 5, EOS]);
+    }
+
+    #[test]
+    fn nan_scores_order_deterministically_instead_of_panicking() {
+        // a NaN logit poisons candidate scores; the old
+        // partial_cmp().unwrap() sort panicked on the first comparison —
+        // total_cmp must produce the same (arbitrary but deterministic)
+        // winner on every run
+        let run = || {
+            let mut s = Stub {
+                bucket: 4,
+                t_len: 8,
+                topt: 4,
+                f: |_b, t, r| {
+                    let logit = if t == 1 && r == 1 { f32::NAN } else { 8.0 - r as f32 };
+                    (5 + r as i32, logit)
+                },
+            };
+            decode_core(&mut s, 4, 8, 3, 0.6, 4).unwrap()
+        };
+        let (a, _) = run();
+        let (b, _) = run();
+        assert_eq!(a, b);
+        assert_eq!(a.last(), Some(&EOS));
     }
 }

@@ -5,13 +5,48 @@
 //! * NAT: one parallel shot over an all-BOS canvas; the model also
 //!   predicts the output length, which truncates the canvas.
 //! * Iterative refinement: feed the previous output back as the canvas
-//!   `i_dec` times; each pass is one model invocation.
+//!   `i_dec` times; each pass is one model invocation. The **final**
+//!   pass's length prediction truncates the output (an earlier bug kept
+//!   shot 1's, so refinement could never change output length).
+//!
+//! The per-pass canvas rebuild and the truncate-to-length/terminal-EOS
+//! finish are pure helpers shared with the simulator
+//! (`testing::sim::sim_nat`), so a pool-served sim NAT decode finishes
+//! rows exactly like this device path. On manifests with `nat_refine_b*`
+//! entries the canvas chains device-to-device across passes (see
+//! `model::NatSession::decode`); the helper here is the host fallback
+//! and the reference semantics.
 
 use anyhow::Result;
 
 use crate::model::NatModel;
 use crate::tokenizer::{BOS, EOS, PAD};
 use crate::util::tensor::TensorI32;
+
+/// Rebuild a refinement canvas row from the previous output row: PAD
+/// slots become BOS (the model treats BOS as "unfilled"), everything
+/// else feeds back verbatim. An all-PAD input therefore yields the
+/// all-BOS shot-1 canvas — one rule serves every pass.
+pub fn refine_canvas_row(prev: &[i32], out: &mut [i32]) {
+    for (o, &tok) in out.iter_mut().zip(prev) {
+        *o = if tok == PAD { BOS } else { tok };
+    }
+}
+
+/// Finish one decoded row: truncate to the predicted length (clamped to
+/// `[1, t_len-1]`), then to the first emitted EOS — appending one when
+/// the model never emitted it, so every decoder family shares the
+/// terminal-EOS contract.
+pub fn finish_row(toks: &[i32], len_pred: usize, t_len: usize) -> Vec<i32> {
+    let len = len_pred.clamp(1, t_len - 1);
+    let mut row: Vec<i32> = toks[..len.min(toks.len())].to_vec();
+    if let Some(p) = row.iter().position(|&t| t == EOS) {
+        row.truncate(p + 1);
+    } else {
+        row.push(EOS);
+    }
+    row
+}
 
 /// Decode a batch with `i_dec` refinement passes (0 = pure NAT one-shot).
 /// Returns (token rows, invocations per row).
@@ -29,41 +64,53 @@ pub fn decode_batch(
         src.row_mut(i)[..s.len()].copy_from_slice(s);
     }
 
-    // pin the source batch once; every shot uploads only the canvas
+    // pin the source batch once; the session runs all passes, chaining
+    // the canvas device-to-device when the manifest exports the refine
+    // entry (each pass uploads nothing but the canvas otherwise)
     let session = model.begin_session(&src)?;
+    let (toks, lens, invocations) = session.decode(i_dec)?;
 
-    // shot 1: all-BOS canvas
-    let mut canvas = TensorI32::zeros(&[b, t_len]);
-    canvas.data.fill(BOS);
-    let (mut toks, lens) = session.shot(&canvas)?;
-    let mut invocations = 1usize;
-
-    // refinement passes: previous output becomes the canvas
-    for _ in 0..i_dec {
-        let mut c = TensorI32::zeros(&[b, t_len]);
-        for i in 0..b {
-            let row = c.row_mut(i);
-            for t in 0..t_len {
-                let tok = toks.get(&[i, t]);
-                row[t] = if tok == PAD { BOS } else { tok };
-            }
-        }
-        let (t2, _) = session.shot(&c)?;
-        toks = t2;
-        invocations += 1;
-    }
-
-    // truncate to predicted length (and at any emitted EOS)
+    // truncate each row to the final pass's predicted length (and at any
+    // emitted EOS)
     let mut out = Vec::with_capacity(b);
     for i in 0..b {
-        let len = (lens.get(&[i]) as usize).clamp(1, t_len - 1);
-        let mut row: Vec<i32> = (0..len).map(|t| toks.get(&[i, t])).collect();
-        if let Some(p) = row.iter().position(|&t| t == EOS) {
-            row.truncate(p + 1);
-        } else {
-            row.push(EOS);
-        }
-        out.push((row, invocations));
+        let row: Vec<i32> = (0..t_len).map(|t| toks.get(&[i, t])).collect();
+        out.push((finish_row(&row, lens.get(&[i]) as usize, t_len), invocations));
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{finish_row, refine_canvas_row};
+    use crate::tokenizer::{BOS, EOS};
+
+    #[test]
+    fn canvas_rebuild_maps_pad_to_bos() {
+        let prev = [0, 5, 0, 7];
+        let mut out = [99; 4];
+        refine_canvas_row(&prev, &mut out);
+        assert_eq!(out, [BOS, 5, BOS, 7]);
+        // all-PAD previous output is exactly the shot-1 all-BOS canvas
+        let mut first = [0; 4];
+        refine_canvas_row(&[0; 4], &mut first);
+        assert_eq!(first, [BOS; 4]);
+    }
+
+    #[test]
+    fn finish_row_truncates_at_emitted_eos() {
+        assert_eq!(finish_row(&[5, EOS, 7, 8], 4, 10), vec![5, EOS]);
+    }
+
+    #[test]
+    fn finish_row_appends_eos_when_never_emitted() {
+        assert_eq!(finish_row(&[5, 6, 7, 8], 3, 10), vec![5, 6, 7, EOS]);
+    }
+
+    #[test]
+    fn finish_row_clamps_length_prediction() {
+        // wildly long/short predictions clamp to [1, t_len-1]
+        assert_eq!(finish_row(&[5, 6, 7, 8], 0, 10), vec![5, EOS]);
+        assert_eq!(finish_row(&[5, 6, 7], 99, 4), vec![5, 6, 7, EOS]);
+    }
 }

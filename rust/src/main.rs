@@ -151,6 +151,17 @@ fn serve(rest: &[String]) -> Result<()> {
             "0.15",
             "sim backend only: proposal-agreement rate for sources carrying \
              the hard marker token (easy sources keep the base 0.85)",
+        )
+        .opt(
+            "beam-width",
+            "4",
+            "beam width for mode=beam requests (clamped to the shard's batch \
+             bucket at decode time)",
+        )
+        .opt(
+            "nat-passes",
+            "1",
+            "refinement passes after the initial shot for mode=nat requests",
         );
     let a = spec.parse(rest)?;
 
@@ -162,6 +173,8 @@ fn serve(rest: &[String]) -> Result<()> {
         min_block: a.usize("min-block")?,
         restart_budget: a.usize("restart-budget")?,
         k_policy: KPolicy::parse(&a.str("k-policy"))?,
+        beam_width: a.usize("beam-width")?,
+        nat_passes: a.usize("nat-passes")?,
         ..Default::default()
     };
     let deadline = match a.usize("deadline-ms")? {
@@ -299,6 +312,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
              prefixed with the sim hard-marker token, so a sim server's \
              proposal agreement (and k̂) drops on those rows",
         )
+        .opt(
+            "mix-mode",
+            "blockwise",
+            "decoder-family mix: comma list cycled lane-locally, e.g. \
+             'blockwise,beam,nat' interleaves all three families through the \
+             same queue (families the deployment lacks fail the run)",
+        )
         .flag(
             "allow-shed",
             "tolerate 'overloaded' replies: count them instead of failing \
@@ -328,46 +348,71 @@ fn loadgen(rest: &[String]) -> Result<()> {
         None => anyhow::bail!("bad --mix '{mix}' (want EASY:HARD, e.g. 3:1)"),
     };
     anyhow::ensure!(mix_easy + mix_hard >= 1, "--mix needs a nonzero ratio");
+    // --mix-mode blockwise,beam,nat — validated here, cycled lane-locally
+    let mode_names: Vec<String> =
+        a.str("mix-mode").split(',').map(|s| s.trim().to_string()).collect();
+    for m in &mode_names {
+        anyhow::ensure!(
+            blockdecode::batching::DecodeMode::parse(m).is_some(),
+            "bad --mix-mode entry '{m}' (want blockwise, beam, or nat)"
+        );
+    }
 
     // mixed criteria: the server default plus every wire-named criterion
     const CRITERIA: [Option<&str>; 4] = [None, Some("exact"), Some("top2"), Some("dist2")];
+
+    /// One client lane's tallies, folded across lanes after the join.
+    #[derive(Default)]
+    struct LaneStats {
+        done: usize,
+        shed: usize,
+        lat: Vec<f64>,
+        queued: Vec<f64>,
+        khats: Vec<f64>,
+        by_mode: std::collections::BTreeMap<String, usize>,
+    }
 
     let t0 = Instant::now();
     let mut lanes = Vec::new();
     for lane in 0..conns {
         let addr = addr.clone();
-        lanes.push(std::thread::spawn(
-            move || -> Result<(usize, usize, Vec<f64>, Vec<f64>, Vec<f64>)> {
-                let mut client = Client::connect(&addr)?;
-                client.set_read_timeout(timeout)?;
-                let mut rng = Rng::new(0x10AD + lane as u64);
-                let mut lat = Vec::new();
-                let mut queued = Vec::new();
-                let mut khats = Vec::new();
-                let mut done = 0usize;
-                let mut shed = 0usize;
-                for i in 0..n {
-                    if i % conns != lane {
-                        continue;
-                    }
-                    let mut src: Vec<i32> =
-                        (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
-                    if i % (mix_easy + mix_hard) >= mix_easy {
-                        src.insert(0, HARD_MARKER);
-                    }
-                    src.push(EOS);
-                    // lane-local alternation: with i % conns fixed per lane,
-                    // indexing by i would pin one criterion per connection
-                    // whenever conns divides CRITERIA.len()
-                    let crit = CRITERIA[(i / conns) % CRITERIA.len()];
-                    let sent = Instant::now();
-                    match client.try_decode(&src, crit, None)? {
-                        Decoded::Ok(r) => {
-                            lat.push(sent.elapsed().as_secs_f64() * 1000.0);
-                            queued.push(r.queued_ms);
-                            khats.push(r.khat);
-                            anyhow::ensure!(!r.tokens.is_empty(), "request {i}: empty decode");
-                            anyhow::ensure!(r.invocations >= 1, "request {i}: zero invocations");
+        let mode_names = mode_names.clone();
+        lanes.push(std::thread::spawn(move || -> Result<LaneStats> {
+            let mut client = Client::connect(&addr)?;
+            client.set_read_timeout(timeout)?;
+            let mut rng = Rng::new(0x10AD + lane as u64);
+            let mut out = LaneStats::default();
+            for i in 0..n {
+                if i % conns != lane {
+                    continue;
+                }
+                let mut src: Vec<i32> =
+                    (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
+                if i % (mix_easy + mix_hard) >= mix_easy {
+                    src.insert(0, HARD_MARKER);
+                }
+                src.push(EOS);
+                // lane-local alternation: with i % conns fixed per lane,
+                // indexing by i would pin one criterion per connection
+                // whenever conns divides CRITERIA.len()
+                let crit = CRITERIA[(i / conns) % CRITERIA.len()];
+                let mode = mode_names[(i / conns) % mode_names.len()].as_str();
+                let sent = Instant::now();
+                match client.try_decode(&src, Some(mode), crit, None)? {
+                    Decoded::Ok(r) => {
+                        out.lat.push(sent.elapsed().as_secs_f64() * 1000.0);
+                        out.queued.push(r.queued_ms);
+                        anyhow::ensure!(
+                            r.mode == mode,
+                            "request {i}: asked for mode {mode}, reply says {}",
+                            r.mode
+                        );
+                        anyhow::ensure!(!r.tokens.is_empty(), "request {i}: empty decode");
+                        anyhow::ensure!(r.invocations >= 1, "request {i}: zero invocations");
+                        if r.mode == "blockwise" {
+                            // block accounting only exists for the blockwise
+                            // slot loop; beam/NAT replies carry empty blocks
+                            out.khats.push(r.khat);
                             anyhow::ensure!(
                                 r.blocks.iter().sum::<usize>() == r.tokens.len(),
                                 "request {i}: accepted blocks do not sum to the token count"
@@ -379,35 +424,45 @@ fn loadgen(rest: &[String]) -> Result<()> {
                                 "request {i}: khat {} disagrees with blocks (want {want_khat})",
                                 r.khat
                             );
-                            done += 1;
-                        }
-                        Decoded::Overloaded { .. } => {
+                        } else {
                             anyhow::ensure!(
-                                allow_shed,
-                                "request {i}: shed by the server \
-                                 (rerun with --allow-shed for overload drills)"
+                                r.blocks.is_empty(),
+                                "request {i}: {} reply carries accepted blocks",
+                                r.mode
                             );
-                            shed += 1;
                         }
+                        *out.by_mode.entry(r.mode.clone()).or_default() += 1;
+                        out.done += 1;
+                    }
+                    Decoded::Overloaded { .. } => {
+                        anyhow::ensure!(
+                            allow_shed,
+                            "request {i}: shed by the server \
+                             (rerun with --allow-shed for overload drills)"
+                        );
+                        out.shed += 1;
                     }
                 }
-                Ok((done, shed, lat, queued, khats))
-            },
-        ));
+            }
+            Ok(out)
+        }));
     }
     let mut done = 0usize;
     let mut shed = 0usize;
     let mut lat = Vec::new();
     let mut queued = Vec::new();
     let mut khats = Vec::new();
+    let mut by_mode = std::collections::BTreeMap::<String, usize>::new();
     for (lane, h) in lanes.into_iter().enumerate() {
-        let (d, sh, ls, qs, ks) =
-            h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
-        done += d;
-        shed += sh;
-        lat.extend(ls);
-        queued.extend(qs);
-        khats.extend(ks);
+        let s = h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
+        done += s.done;
+        shed += s.shed;
+        lat.extend(s.lat);
+        queued.extend(s.queued);
+        khats.extend(s.khats);
+        for (m, c) in s.by_mode {
+            *by_mode.entry(m).or_default() += c;
+        }
     }
     // every request resolved exactly once: decoded or (tolerated) shed
     anyhow::ensure!(done + shed == n, "only {done} decoded + {shed} shed of {n} requests");
@@ -431,6 +486,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
         kh.p50,
         kh.p90
     );
+    if by_mode.keys().any(|m| m != "blockwise") {
+        let mut line = String::from("loadgen: by mode:");
+        for (m, c) in &by_mode {
+            line.push_str(&format!(" {m}={c}"));
+        }
+        println!("{line}");
+    }
     if shed > 0 {
         println!("loadgen: shed replies: {shed}");
     }

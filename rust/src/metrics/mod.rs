@@ -11,7 +11,20 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::batching::DecodeMode;
 use crate::util::stats::{summarize, Summary};
+
+/// Per-decoder-family serving totals. `invocations` counts the model
+/// calls the family's completed requests consumed (for blockwise these
+/// are *attributed* invocations — the batched step is shared, so the
+/// per-mode numbers are per-request sums, not a partition of the global
+/// `invocations` counter).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ModeStats {
+    pub completed: u64,
+    pub invocations: u64,
+    pub tokens_out: u64,
+}
 
 /// Registry of serving metrics. Cheap to clone handles around (Arc it).
 #[derive(Debug, Default)]
@@ -40,6 +53,8 @@ struct Inner {
     /// acceptance attributed to the k that generated the verified
     /// proposals: k -> (accept substeps, tokens accepted)
     khat_by_k: BTreeMap<usize, (u64, u64)>,
+    /// per-decoder-family completion totals
+    modes: BTreeMap<DecodeMode, ModeStats>,
     queue_us: Vec<f64>,
     e2e_us: Vec<f64>,
     batch_fill: Vec<f64>,
@@ -75,6 +90,8 @@ pub struct Report {
     /// k -> (accept substeps, tokens accepted) attributed to the k the
     /// verified proposals were generated at
     pub khat_by_k: BTreeMap<usize, (u64, u64)>,
+    /// per-decoder-family completion totals (blockwise/beam/nat)
+    pub modes: BTreeMap<DecodeMode, ModeStats>,
     pub queue_us: Summary,
     pub e2e_us: Summary,
     pub mean_batch_fill: f64,
@@ -125,6 +142,17 @@ impl Metrics {
         m.tokens_out += tokens as u64;
         m.queue_us.push(queued.as_micros() as f64);
         m.e2e_us.push(e2e.as_micros() as f64);
+    }
+
+    /// Attribute one completed request to its decoder family
+    /// ([`Metrics::on_complete`] still carries the fleet totals; this
+    /// adds the per-family segmentation the mixed-mode pool reports).
+    pub fn on_mode_complete(&self, mode: DecodeMode, invocations: usize, tokens: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.modes.entry(mode).or_default();
+        e.completed += 1;
+        e.invocations += invocations as u64;
+        e.tokens_out += tokens as u64;
     }
 
     pub fn on_invocation(&self, batch_rows_active: usize, bucket: usize) {
@@ -194,6 +222,12 @@ impl Metrics {
             e.0 += s;
             e.1 += t;
         }
+        for (mode, s) in o.modes {
+            let e = m.modes.entry(mode).or_default();
+            e.completed += s.completed;
+            e.invocations += s.invocations;
+            e.tokens_out += s.tokens_out;
+        }
         m.queue_us.extend(o.queue_us);
         m.e2e_us.extend(o.e2e_us);
         m.batch_fill.extend(o.batch_fill);
@@ -220,6 +254,7 @@ impl Metrics {
             accept_hist: m.accept_hist.clone(),
             k_invocations: m.k_invocations.clone(),
             khat_by_k: m.khat_by_k.clone(),
+            modes: m.modes.clone(),
             queue_us: summarize(&m.queue_us),
             e2e_us: summarize(&m.e2e_us),
             mean_batch_fill: if m.batch_fill.is_empty() {
@@ -272,6 +307,20 @@ impl Report {
             self.e2e_us.p90 / 1000.0,
             self.e2e_us.p99 / 1000.0,
         );
+        // segment only when a non-blockwise family actually served — a
+        // pure blockwise deployment's render stays byte-stable
+        if self.modes.keys().any(|m| *m != DecodeMode::Blockwise) {
+            out.push_str("\nby mode:");
+            for (mode, s) in &self.modes {
+                out.push_str(&format!(
+                    " {} completed={} invocations={} tokens={}",
+                    mode.label(),
+                    s.completed,
+                    s.invocations,
+                    s.tokens_out
+                ));
+            }
+        }
         if !self.accept_hist.is_empty() {
             out.push_str("\naccepted-block histogram:");
             for (k, n) in &self.accept_hist {
@@ -367,6 +416,31 @@ mod tests {
         assert!(r
             .render()
             .contains("robustness: shed=2 expired=2 cancelled=1 requeued=1 restarts=1"));
+    }
+
+    #[test]
+    fn mode_stats_fold_and_render_only_when_mixed() {
+        let a = Metrics::new();
+        a.on_mode_complete(DecodeMode::Blockwise, 5, 12);
+        // blockwise-only: render must stay byte-stable (no mode line)
+        assert!(!a.report(Instant::now()).render().contains("by mode:"));
+        let b = Metrics::new();
+        b.on_mode_complete(DecodeMode::Beam, 20, 9);
+        b.on_mode_complete(DecodeMode::Nat, 3, 7);
+        b.on_mode_complete(DecodeMode::Beam, 10, 4);
+        let fleet = Metrics::new();
+        fleet.merge(&a);
+        fleet.merge(&b);
+        let r = fleet.report(Instant::now());
+        assert_eq!(
+            r.modes.get(&DecodeMode::Beam),
+            Some(&ModeStats { completed: 2, invocations: 30, tokens_out: 13 })
+        );
+        assert_eq!(r.modes.get(&DecodeMode::Blockwise).unwrap().completed, 1);
+        let text = r.render();
+        assert!(text.contains("by mode: blockwise completed=1 invocations=5 tokens=12"), "{text}");
+        assert!(text.contains("beam completed=2 invocations=30 tokens=13"), "{text}");
+        assert!(text.contains("nat completed=1 invocations=3 tokens=7"), "{text}");
     }
 
     #[test]

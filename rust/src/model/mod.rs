@@ -202,6 +202,11 @@ pub struct ScoringModel {
     /// predate the `scatter_b*` export (those re-pin the host mirror on
     /// every `scatter_rows` admission)
     scatter: BTreeMap<usize, Rc<Executable>>,
+    /// device-side beam fan-out entries (`replicate_b*`): broadcast one
+    /// encoded row across a bucket's rows so beam sessions encode the
+    /// sentence once instead of `beam`×; empty for manifests that predate
+    /// the export (those fall back to host replication)
+    replicate: BTreeMap<usize, Rc<Executable>>,
 }
 
 impl ScoringModel {
@@ -234,18 +239,20 @@ impl ScoringModel {
         let decode_window = load_bucketed_k("decode_window_b")?;
         let decode_cached = load_bucketed_k("decode_cached_b")?;
         let scatter = load_bucketed("scatter_b")?;
+        let replicate = load_bucketed("replicate_b")?;
         if encode.is_empty() || decode.is_empty() {
             bail!("variant {variant} lacks encode/decode entries");
         }
         log::info!(
-            "loaded {variant}: k={} ks={:?} {} params, buckets {:?}{}{}{}",
+            "loaded {variant}: k={} ks={:?} {} params, buckets {:?}{}{}{}{}",
             spec.k,
             spec.config.ks,
             weights.total_params,
             encode.keys().collect::<Vec<_>>(),
             if decode_window.is_empty() { " (no windowed decode entries)" } else { "" },
             if decode_cached.is_empty() { " (no cached decode entries)" } else { "" },
-            if scatter.is_empty() { " (no device-scatter entries)" } else { "" }
+            if scatter.is_empty() { " (no device-scatter entries)" } else { "" },
+            if replicate.is_empty() { " (no replicate entries)" } else { "" }
         );
         Ok(ScoringModel {
             spec,
@@ -257,6 +264,7 @@ impl ScoringModel {
             decode_window,
             decode_cached,
             scatter,
+            replicate,
         })
     }
 
@@ -389,6 +397,117 @@ impl ScoringModel {
             memory.dims[2],
             self.spec.config.d_model
         );
+        let src_dev = self.rt.upload_i32(&src)?;
+        let mem_dev = self.rt.upload_f32(&memory)?;
+        let s_len = src.dims[1];
+        // admission path: the device-side scatter entry needs the cached
+        // tier (its K/V argument); otherwise keep host mirrors so
+        // `scatter_rows` can fall back to the full re-pin
+        let cached =
+            self.decode_cached.keys().any(|&(bb, _)| bb == b) && self.kv_dims(b).is_some();
+        let resident = match self.scatter.get(&b) {
+            Some(exe) if cached => ResidentState::Scatter { exe: exe.clone() },
+            _ => ResidentState::Mirror { src_host: src, memory_host: memory },
+        };
+        self.assemble_session(b, s_len, src_dev, mem_dev, resident)
+    }
+
+    /// Start a beam session: encode `src_ids` **once** (at the smallest
+    /// bucket) and fan the encoded row across all `bucket` rows — on the
+    /// device through the `replicate_b*` entry when the manifest exports
+    /// it, by host-side row copies otherwise. Byte-identical to encoding
+    /// a host-replicated batch (the encoder is row-independent under the
+    /// padding mask); only the encode FLOPs (bucket× → 1×) and upload
+    /// bytes differ.
+    pub fn begin_session_replicated(
+        &self,
+        src_ids: &[i32],
+        bucket: usize,
+    ) -> Result<DecodeSession> {
+        let s_len = self.max_src();
+        anyhow::ensure!(
+            src_ids.len() <= s_len,
+            "source of {} tokens exceeds max_src {s_len}",
+            src_ids.len()
+        );
+        anyhow::ensure!(
+            self.encode.contains_key(&bucket),
+            "no bucket {bucket} to replicate into (have {:?})",
+            self.buckets()
+        );
+        let eb = self.pick_bucket(1)?;
+        let mut enc_src = TensorI32::zeros(&[eb, s_len]);
+        enc_src.row_mut(0)[..src_ids.len()].copy_from_slice(src_ids);
+        if eb >= bucket {
+            // the smallest bucket is no smaller than the target: a single
+            // bucket-wide encode of the replicated batch costs the same
+            for b in 1..bucket {
+                enc_src.row_mut(b)[..src_ids.len()].copy_from_slice(src_ids);
+            }
+            return self.begin_session(&enc_src);
+        }
+        let memory = self.encode(&enc_src)?;
+        let row_elems = s_len * self.spec.config.d_model;
+        if let Some(exe) = self.replicate.get(&bucket) {
+            // device fan-out: upload only the single encoded row; the
+            // entry broadcasts it across the bucket and the replicated
+            // buffers stay device-resident (a tuple result layout that
+            // forces them through host degrades to the mirror path below,
+            // byte-identically)
+            let row_src = TensorI32::from_vec(&[1, s_len], enc_src.row(0).to_vec());
+            let row_mem = TensorF32::from_vec(
+                &[1, s_len, self.spec.config.d_model],
+                memory.data[..row_elems].to_vec(),
+            );
+            let row_src_buf = self.rt.upload_i32(&row_src)?;
+            let row_mem_buf = self.rt.upload_f32(&row_mem)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+            args.push(row_src_buf.buffer());
+            args.push(row_mem_buf.buffer());
+            let (_, trailing) = self.rt.execute_split(exe, &args, 0)?;
+            if let TrailingOutputs::Device(mut bufs) = trailing {
+                anyhow::ensure!(
+                    bufs.len() == 2,
+                    "replicate returned {} outputs, expected 2",
+                    bufs.len()
+                );
+                let mem_dev = DeviceTensor::resident(bufs.pop().unwrap());
+                let src_dev = DeviceTensor::resident(bufs.pop().unwrap());
+                // beam sessions never admit new rows, so no mirror is kept
+                // and `scatter_rows` on this session is an error
+                return self.assemble_session(
+                    bucket,
+                    s_len,
+                    src_dev,
+                    mem_dev,
+                    ResidentState::Detached,
+                );
+            }
+        }
+        // host fan-out fallback: replicate the encoded row across the
+        // bucket and pin the batch once (still one encode, not bucket×)
+        let mut src_b = TensorI32::zeros(&[bucket, s_len]);
+        let mut mem_b = TensorF32::zeros(&[bucket, s_len, self.spec.config.d_model]);
+        for b in 0..bucket {
+            src_b.row_mut(b).copy_from_slice(enc_src.row(0));
+            mem_b.data[b * row_elems..(b + 1) * row_elems]
+                .copy_from_slice(&memory.data[..row_elems]);
+        }
+        self.begin_session_with(src_b, mem_b)
+    }
+
+    /// Assemble a [`DecodeSession`] around already-pinned device buffers:
+    /// look up the bucket's entry tiers, initialize the cache state, and
+    /// wire the admission path. Shared by every `begin_session*` entry
+    /// point.
+    fn assemble_session(
+        &self,
+        b: usize,
+        s_len: usize,
+        src_dev: DeviceTensor,
+        mem_dev: DeviceTensor,
+        resident: ResidentState,
+    ) -> Result<DecodeSession> {
         let exe = self
             .decode
             .get(&b)
@@ -413,16 +532,6 @@ impl ScoringModel {
                     seen: TensorI32::zeros(&[b, self.max_tgt()]),
                 }),
             })
-        };
-        let src_dev = self.rt.upload_i32(&src)?;
-        let mem_dev = self.rt.upload_f32(&memory)?;
-        let s_len = src.dims[1];
-        // admission path: the device-side scatter entry needs the cached
-        // tier (its K/V argument); otherwise keep host mirrors so
-        // `scatter_rows` can fall back to the full re-pin
-        let resident = match self.scatter.get(&b) {
-            Some(exe) if cached.is_some() => ResidentState::Scatter { exe: exe.clone() },
-            _ => ResidentState::Mirror { src_host: src, memory_host: memory },
         };
         Ok(DecodeSession {
             rt: self.rt.clone(),
@@ -506,6 +615,11 @@ enum ResidentState {
     /// patched row-by-row and both device buffers re-pinned once per
     /// refill — O(B·S·D) uploaded bytes per admission.
     Mirror { src_host: TensorI32, memory_host: TensorF32 },
+    /// no admission path: device-replicated beam sessions keep neither a
+    /// scatter entry nor a host mirror (their batch is one sentence fanned
+    /// across rows, never re-admitted) — `scatter_rows` on such a session
+    /// is an error.
+    Detached,
 }
 
 /// The KV-cached decode tier of a session: the compiled entries (one per
@@ -1085,6 +1199,12 @@ pub struct NatModel {
     rt: Rc<Runtime>,
     weights: Rc<DeviceWeights>,
     nat: BTreeMap<usize, Rc<Executable>>,
+    /// canvas-chaining refinement entries (`nat_refine_b*`): rebuild the
+    /// PAD→BOS canvas from the previous pass's tokens **on device**, so
+    /// multi-pass decodes chain the canvas device-to-device the way
+    /// `decode_cached_b*` chains the K/V cache. Empty for manifests that
+    /// predate the export (each pass then round-trips through the host).
+    refine: BTreeMap<usize, Rc<Executable>>,
 }
 
 impl NatModel {
@@ -1097,14 +1217,19 @@ impl NatModel {
         for (b, key) in spec.bucketed("nat_b") {
             nat.insert(b, rt.load(key, &manifest.entries[key].file)?);
         }
+        let mut refine = BTreeMap::new();
+        for (b, key) in spec.bucketed("nat_refine_b") {
+            refine.insert(b, rt.load(key, &manifest.entries[key].file)?);
+        }
         if nat.is_empty() {
             bail!("variant {variant} has no nat entries");
         }
-        Ok(NatModel { spec, rt, weights, nat })
+        Ok(NatModel { spec, rt, weights, nat, refine })
     }
 
-    /// Pin `src` [B,S] on device for a run of refinement shots; each
-    /// [`NatSession::shot`] then uploads only the canvas.
+    /// Pin `src` [B,S] on device for a run of refinement shots; each pass
+    /// of [`NatSession::decode`] then uploads at most the canvas (nothing
+    /// at all once the refine entry chains it device-to-device).
     pub fn begin_session(&self, src: &TensorI32) -> Result<NatSession> {
         let b = src.dims[0];
         let exe = self
@@ -1113,7 +1238,15 @@ impl NatModel {
             .ok_or_else(|| anyhow::anyhow!("no nat bucket {b} (have {:?})", self.nat.keys().collect::<Vec<_>>()))?
             .clone();
         let src_dev = self.rt.upload_i32(src)?;
-        Ok(NatSession { rt: self.rt.clone(), weights: self.weights.clone(), exe, src_dev })
+        Ok(NatSession {
+            rt: self.rt.clone(),
+            weights: self.weights.clone(),
+            exe,
+            refine: self.refine.get(&b).cloned(),
+            src_dev,
+            bucket: b,
+            t_len: self.max_tgt(),
+        })
     }
 
     pub fn max_tgt(&self) -> usize {
@@ -1122,12 +1255,27 @@ impl NatModel {
 }
 
 /// Device-resident state for a NAT / iterative-refinement decode: the
-/// source batch stays pinned across the `i_dec` refinement passes.
+/// source batch stays pinned across the `i_dec` refinement passes, and
+/// with a `nat_refine_b*` entry the canvas chains device-to-device
+/// between passes.
 pub struct NatSession {
     rt: Rc<Runtime>,
     weights: Rc<DeviceWeights>,
     exe: Rc<Executable>,
+    refine: Option<Rc<Executable>>,
     src_dev: DeviceTensor,
+    bucket: usize,
+    t_len: usize,
+}
+
+/// The previous pass's token buffer between refinement passes. `Device`
+/// while the runtime's result layout lets it stay resident (zero canvas
+/// traffic per pass); `Host` at the first pass and when a tuple result
+/// layout forces it through host (re-uploaded next pass — byte-identical,
+/// just O(B·T) extra bytes).
+enum CanvasCarry {
+    Device(xla::PjRtBuffer),
+    Host(TensorI32),
 }
 
 impl NatSession {
@@ -1139,6 +1287,83 @@ impl NatSession {
         args.push(canvas_buf.buffer());
         let out = self.rt.execute(&self.exe, &args)?;
         Ok((literal_to_i32(&out[0])?, literal_to_i32(&out[1])?))
+    }
+
+    /// Full multi-pass decode: shot 1 over the all-BOS canvas, then
+    /// `i_dec` refinement passes feeding each pass's tokens back as the
+    /// next canvas. Returns (tokens [B,T], predicted lengths [B],
+    /// invocations) — the lengths are the **final** pass's prediction.
+    ///
+    /// With a `nat_refine_b*` entry every pass runs on device: the entry
+    /// rebuilds the PAD→BOS canvas from the previous pass's token buffer
+    /// (an all-PAD input therefore yields the all-BOS shot-1 canvas, so
+    /// one entry serves every pass) and the token buffer chains
+    /// device-to-device — only each pass's `[B]` length vector and the
+    /// final tokens are downloaded. Without it, each pass rebuilds the
+    /// canvas host-side via `decoding::nat::refine_canvas_row` —
+    /// byte-identical by construction, O(B·T) canvas traffic per pass.
+    pub fn decode(&self, i_dec: usize) -> Result<(TensorI32, TensorI32, usize)> {
+        let total = i_dec + 1;
+        let Some(refine) = &self.refine else {
+            // host-loop fallback: explicit all-BOS first canvas, then
+            // PAD→BOS rebuilds between shots
+            let mut canvas = TensorI32::zeros(&[self.bucket, self.t_len]);
+            canvas.data.fill(crate::tokenizer::BOS);
+            let (mut toks, mut lens) = self.shot(&canvas)?;
+            for _ in 0..i_dec {
+                let mut c = TensorI32::zeros(&[self.bucket, self.t_len]);
+                for i in 0..self.bucket {
+                    crate::decoding::nat::refine_canvas_row(toks.row(i), c.row_mut(i));
+                }
+                let (t2, l2) = self.shot(&c)?;
+                toks = t2;
+                lens = l2;
+            }
+            return Ok((toks, lens, total));
+        };
+        // chained path: pass 1's "previous output" is all-PAD
+        let mut prev = CanvasCarry::Host(TensorI32::zeros(&[self.bucket, self.t_len]));
+        for pass in 0..total {
+            let prev_uploaded;
+            let prev_arg = match &prev {
+                CanvasCarry::Device(buf) => buf,
+                CanvasCarry::Host(t) => {
+                    prev_uploaded = self.rt.upload_i32(t)?;
+                    prev_uploaded.buffer()
+                }
+            };
+            let mut args: Vec<&xla::PjRtBuffer> = self.weights.buffers.iter().collect();
+            args.push(self.src_dev.buffer());
+            args.push(prev_arg);
+            if pass + 1 == total {
+                // final pass: download both outputs (lens, toks)
+                let out = self.rt.execute(refine, &args)?;
+                anyhow::ensure!(out.len() == 2, "nat_refine returned {} outputs", out.len());
+                return Ok((literal_to_i32(&out[1])?, literal_to_i32(&out[0])?, total));
+            }
+            // intermediate pass: lengths come host (superseded by the
+            // final pass), tokens chain into the next pass
+            let (_host, trailing) = self.rt.execute_split(refine, &args, 1)?;
+            prev = match trailing {
+                TrailingOutputs::Device(mut bufs) => {
+                    anyhow::ensure!(
+                        bufs.len() == 1,
+                        "nat_refine returned {} trailing outputs, expected 1",
+                        bufs.len()
+                    );
+                    CanvasCarry::Device(bufs.swap_remove(0))
+                }
+                TrailingOutputs::Host(lits) => {
+                    anyhow::ensure!(
+                        lits.len() == 1,
+                        "nat_refine returned {} trailing outputs, expected 1",
+                        lits.len()
+                    );
+                    CanvasCarry::Host(literal_to_i32(&lits[0])?)
+                }
+            };
+        }
+        unreachable!("decode loop always returns on the final pass")
     }
 }
 

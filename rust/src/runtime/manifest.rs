@@ -57,15 +57,21 @@ impl VariantSpec {
     /// grammar is the aot.py ↔ runtime contract: `encode_b*` and
     /// `decode_b*` are mandatory for scoring variants; `decode_window_b*`
     /// (frontier-windowed download), `decode_cached_b*` (KV-cached
-    /// frontier-window compute, paired with `config.n_dec`), and
-    /// `scatter_b*` (device-side admission scatter of one encoded row into
-    /// the resident batch + K/V state) are optional entries newer
-    /// manifests export — loaders must fall back to the older paths when
-    /// they are absent (full-length steps; full host-mirror re-pin per
-    /// admission) — and `nat_b*` is the NAT entry. Names whose suffix is
-    /// not a bucket number never match, so prefix `decode_b` does not
-    /// swallow `decode_window_b8` or `decode_cached_b8`, and the multi-k
-    /// grammar below (`decode_window_b8_k4`) never matches here either.
+    /// frontier-window compute, paired with `config.n_dec`), `scatter_b*`
+    /// (device-side admission scatter of one encoded row into the
+    /// resident batch + K/V state), and `replicate_b*` (device-side beam
+    /// fan-out of one encoded row across a bucket) are optional entries
+    /// newer manifests export — loaders must fall back to the older paths
+    /// when they are absent (full-length steps; full host-mirror re-pin
+    /// per admission; host-side beam replication). `nat_b*` is the NAT
+    /// single-shot entry and `nat_refine_b*` its optional canvas-chaining
+    /// sibling (device-side PAD→BOS rebuild, outputs ordered
+    /// `(lengths, tokens)` so the token buffer can chain device-resident;
+    /// absent → each refinement pass round-trips the canvas through
+    /// host). Names whose suffix is not a bucket number never match, so
+    /// prefix `decode_b` does not swallow `decode_window_b8`, `nat_b`
+    /// does not swallow `nat_refine_b8`, and the multi-k grammar below
+    /// (`decode_window_b8_k4`) never matches here either.
     pub fn bucketed(&self, prefix: &str) -> BTreeMap<usize, &str> {
         let mut out = BTreeMap::new();
         for (logical, key) in &self.entries {
@@ -229,7 +235,8 @@ mod tests {
         "mt_k2_b1_decode_cached": {"file": "hlo/mt_k2_b1_decode_cached.hlo.txt", "batch": 1},
         "mt_k2_b1_decode_window_k1": {"file": "hlo/mt_k2_b1_decode_window_k1.hlo.txt", "batch": 1},
         "mt_k2_b1_decode_cached_k1": {"file": "hlo/mt_k2_b1_decode_cached_k1.hlo.txt", "batch": 1},
-        "mt_k2_b1_scatter": {"file": "hlo/mt_k2_b1_scatter.hlo.txt", "batch": 1}
+        "mt_k2_b1_scatter": {"file": "hlo/mt_k2_b1_scatter.hlo.txt", "batch": 1},
+        "mt_k2_b1_replicate": {"file": "hlo/mt_k2_b1_replicate.hlo.txt", "batch": 1}
       },
       "variants": {
         "mt_k2_regular": {
@@ -241,7 +248,8 @@ mod tests {
                       "decode_cached_b1": "mt_k2_b1_decode_cached",
                       "decode_window_b1_k1": "mt_k2_b1_decode_window_k1",
                       "decode_cached_b1_k1": "mt_k2_b1_decode_cached_k1",
-                      "scatter_b1": "mt_k2_b1_scatter"},
+                      "scatter_b1": "mt_k2_b1_scatter",
+                      "replicate_b1": "mt_k2_b1_replicate"},
           "config": {"vocab": 127, "max_src": 20, "max_tgt": 28, "d_model": 64, "n_heads": 4,
                      "n_dec": 2, "ks": [1, 2]}
         }
@@ -294,7 +302,37 @@ mod tests {
         let scatter = v.bucketed("scatter_b");
         assert_eq!(scatter.len(), 1);
         assert_eq!(scatter[&1], "mt_k2_b1_scatter");
+        let replicate = v.bucketed("replicate_b");
+        assert_eq!(replicate.len(), 1);
+        assert_eq!(replicate[&1], "mt_k2_b1_replicate");
         assert!(v.bucketed("nat_b").is_empty());
+        assert!(v.bucketed("nat_refine_b").is_empty());
+    }
+
+    #[test]
+    fn nat_prefix_does_not_swallow_refine_entries() {
+        // a NAT variant carrying both `nat_b8` and `nat_refine_b8` must
+        // keep the families separate: the single-shot accessor must not
+        // pick up the refine sibling (whose outputs are ordered
+        // differently) and vice versa
+        let dir = std::env::temp_dir().join("bd_manifest_test7");
+        std::fs::create_dir_all(&dir).unwrap();
+        let nat = SAMPLE.replace(
+            "\"encode_b1\": \"mt_k2_b1_encode\"",
+            "\"encode_b1\": \"mt_k2_b1_encode\", \"nat_b8\": \"mt_k2_b1_scatter\", \"nat_refine_b8\": \"mt_k2_b1_replicate\"",
+        );
+        std::fs::File::create(dir.join("manifest.json"))
+            .unwrap()
+            .write_all(nat.as_bytes())
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("mt_k2_regular").unwrap();
+        let nat = v.bucketed("nat_b");
+        assert_eq!(nat.len(), 1);
+        assert_eq!(nat[&8], "mt_k2_b1_scatter");
+        let refine = v.bucketed("nat_refine_b");
+        assert_eq!(refine.len(), 1);
+        assert_eq!(refine[&8], "mt_k2_b1_replicate");
     }
 
     #[test]

@@ -83,7 +83,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::batching::{
-    response_channel, Push, Request, RequestQueue, Response, ResponseReceiver, ResponseSender,
+    response_channel, DecodeMode, Push, Request, RequestQueue, Response, ResponseReceiver,
+    ResponseSender,
 };
 use crate::decoding::criteria::Criterion;
 use crate::decoding::state::{BlockState, BlockStats};
@@ -109,6 +110,14 @@ pub struct EngineConfig {
     pub restart_budget: usize,
     /// how each step's block size is picked from the compiled set
     pub k_policy: KPolicy,
+    /// beam width for [`DecodeMode::Beam`] requests (clamped to the
+    /// backend's bucket — the beam packs into the resident batch rows)
+    pub beam_width: usize,
+    /// GNMT length-normalization alpha for beam requests
+    pub beam_alpha: f32,
+    /// refinement passes beyond the first shot for [`DecodeMode::Nat`]
+    /// requests (`i_dec`; 0 = pure one-shot NAT)
+    pub nat_passes: usize,
 }
 
 impl Default for EngineConfig {
@@ -120,6 +129,9 @@ impl Default for EngineConfig {
             max_len: None,
             restart_budget: 2,
             k_policy: KPolicy::default(),
+            beam_width: 4,
+            beam_alpha: 0.6,
+            nat_passes: 1,
         }
     }
 }
@@ -249,6 +261,32 @@ pub trait EngineBackend {
     /// `frontiers[b] ..= frontiers[b] + k` per row (clamped).
     fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize], k: usize)
         -> Result<WindowScores>;
+    /// Decoder families this backend serves. Blockwise rides the slot
+    /// loop; beam and NAT requests are decoded whole per request via
+    /// [`EngineBackend::decode_beam`] / [`EngineBackend::decode_nat`].
+    /// A request for an unadvertised mode gets an immediate error reply
+    /// — the engine never calls an unadvertised entry point.
+    fn modes(&self) -> Vec<DecodeMode> {
+        vec![DecodeMode::Blockwise]
+    }
+    /// Beam-decode one source to completion; returns (tokens,
+    /// invocations). Only called when [`EngineBackend::modes`] advertises
+    /// [`DecodeMode::Beam`].
+    fn decode_beam(
+        &mut self,
+        _src: &[i32],
+        _beam: usize,
+        _alpha: f32,
+        _max_len: usize,
+    ) -> Result<(Vec<i32>, usize)> {
+        anyhow::bail!("this backend does not serve beam decode")
+    }
+    /// NAT decode one source with `i_dec` refinement passes; returns
+    /// (tokens, invocations). Only called when [`EngineBackend::modes`]
+    /// advertises [`DecodeMode::Nat`].
+    fn decode_nat(&mut self, _src: &[i32], _i_dec: usize) -> Result<(Vec<i32>, usize)> {
+        anyhow::bail!("this backend does not serve NAT decode")
+    }
 }
 
 /// The production [`EngineBackend`]: a loaded [`ScoringModel`] plus the
@@ -345,6 +383,25 @@ impl EngineBackend for ModelBackend {
         k: usize,
     ) -> Result<WindowScores> {
         self.session.step_at_k(tgt_in, frontiers, k)
+    }
+
+    /// The scoring model serves beam too (NAT needs the separate NAT
+    /// manifest family, so blockwise deployments don't advertise it).
+    fn modes(&self) -> Vec<DecodeMode> {
+        vec![DecodeMode::Blockwise, DecodeMode::Beam]
+    }
+
+    /// One whole beam decode: its own replicated session (encode once,
+    /// fan device-side on `replicate_b*` manifests), independent of the
+    /// resident blockwise session — slot rows are untouched.
+    fn decode_beam(
+        &mut self,
+        src: &[i32],
+        beam: usize,
+        alpha: f32,
+        max_len: usize,
+    ) -> Result<(Vec<i32>, usize)> {
+        crate::decoding::beam::decode_one(&self.model, src, beam, alpha, Some(max_len))
     }
 }
 
@@ -496,6 +553,38 @@ impl<B: EngineBackend> Engine<B> {
             return Ok(());
         }
 
+        // route non-blockwise families before slot admission: each beam/NAT
+        // request decodes whole on this shard's backend and never occupies
+        // a batch row. A failure mid-direct-decode evacuates everything the
+        // shard holds — the not-yet-served arrivals and every occupied slot
+        // — back to the queue, then surfaces to the supervisor like any
+        // backend crash (the failing request was already handed back by
+        // `serve_direct`).
+        let (direct, live): (Vec<_>, Vec<_>) =
+            live.into_iter().partition(|r| r.mode != DecodeMode::Blockwise);
+        if !direct.is_empty() {
+            let supported = self.backend.modes();
+            let mut pending: std::collections::VecDeque<Request> = direct.into();
+            while let Some(r) = pending.pop_front() {
+                if let Err(e) = self.serve_direct(r, &supported) {
+                    let mut evicted: Vec<Request> = pending.into_iter().collect();
+                    evicted.extend(live);
+                    for i in 0..self.bucket {
+                        if let Some(slot) = self.slots[i].take() {
+                            self.tgt_in.row_mut(i).fill(PAD);
+                            self.frontiers[i] = 0;
+                            evicted.push(slot.request);
+                        }
+                    }
+                    self.hand_back(evicted, "shard failed mid-decode");
+                    return Err(e);
+                }
+            }
+        }
+        if live.is_empty() {
+            return Ok(());
+        }
+
         let n = live.len();
         let slots = &free[..n];
         let srcs: Vec<&[i32]> = live.iter().map(|r| r.src.as_slice()).collect();
@@ -543,6 +632,76 @@ impl<B: EngineBackend> Engine<B> {
             });
         }
         Ok(())
+    }
+
+    /// Serve one beam/NAT request whole on this shard's backend. An
+    /// unadvertised mode gets an immediate error reply (no crash, no
+    /// restart-budget burn); a backend error or panic hands the request
+    /// back to the queue (at most one requeue, like any mid-decode crash)
+    /// and surfaces the error to the caller.
+    fn serve_direct(&mut self, r: Request, supported: &[DecodeMode]) -> Result<()> {
+        self.metrics.on_request();
+        if !supported.contains(&r.mode) {
+            self.metrics.on_fail();
+            let e2e = r.arrived.elapsed();
+            let _ = r.respond.send(Response {
+                id: r.id,
+                mode: r.mode,
+                tokens: vec![],
+                stats: BlockStats::default(),
+                queued: e2e,
+                e2e,
+                requeues: r.requeues,
+                error: Some(format!("mode {} unsupported by this deployment", r.mode.label())),
+            });
+            return Ok(());
+        }
+        let admitted = Instant::now();
+        let max_len = self
+            .cfg
+            .max_len
+            .unwrap_or(self.backend.max_len())
+            .min(self.backend.max_len());
+        // the beam packs into the backend's batch rows, so it can never
+        // exceed the bucket
+        let beam = self.cfg.beam_width.clamp(1, self.bucket);
+        let (alpha, passes) = (self.cfg.beam_alpha, self.cfg.nat_passes);
+        let out = match catch_unwind(AssertUnwindSafe(|| match r.mode {
+            DecodeMode::Beam => self.backend.decode_beam(&r.src, beam, alpha, max_len),
+            DecodeMode::Nat => self.backend.decode_nat(&r.src, passes),
+            DecodeMode::Blockwise => unreachable!("blockwise rides the slot loop"),
+        })) {
+            Ok(res) => res,
+            Err(p) => Err(anyhow::anyhow!(
+                "backend panicked during {} decode: {}",
+                r.mode.label(),
+                panic_message(p.as_ref())
+            )),
+        };
+        match out {
+            Ok((tokens, invocations)) => {
+                let e2e = r.arrived.elapsed();
+                let queued = admitted.duration_since(r.arrived);
+                self.metrics.on_complete(queued, e2e, tokens.len());
+                self.metrics.on_mode_complete(r.mode, invocations, tokens.len());
+                let stats = BlockStats { invocations, ..Default::default() };
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    mode: r.mode,
+                    tokens,
+                    stats,
+                    queued,
+                    e2e,
+                    requeues: r.requeues,
+                    error: None,
+                });
+                Ok(())
+            }
+            Err(e) => {
+                self.hand_back(vec![r], "shard failed mid-decode");
+                Err(e)
+            }
+        }
     }
 
     /// Per-iteration slot triage: an occupied slot whose client cancelled
@@ -619,6 +778,7 @@ impl<B: EngineBackend> Engine<B> {
         let e2e = r.arrived.elapsed();
         let _ = r.respond.send(Response {
             id: r.id,
+            mode: r.mode,
             tokens: vec![],
             stats: BlockStats::default(),
             queued: e2e,
@@ -717,6 +877,7 @@ impl<B: EngineBackend> Engine<B> {
                 let queued = slot.admitted.duration_since(slot.request.arrived);
                 let resp = Response {
                     id: slot.request.id,
+                    mode: DecodeMode::Blockwise,
                     tokens: slot.state.accepted.clone(),
                     stats: slot.state.stats.clone(),
                     queued,
@@ -725,6 +886,11 @@ impl<B: EngineBackend> Engine<B> {
                     error: None,
                 };
                 self.metrics.on_complete(queued, e2e, resp.tokens.len());
+                self.metrics.on_mode_complete(
+                    DecodeMode::Blockwise,
+                    resp.stats.invocations,
+                    resp.tokens.len(),
+                );
                 let _ = slot.request.respond.send(resp);
             }
         }
@@ -788,6 +954,13 @@ impl Submitter {
         rx
     }
 
+    /// Submit one source under an explicit decoder family.
+    pub fn submit_mode(&self, src: Vec<i32>, mode: DecodeMode) -> ResponseReceiver {
+        let (tx, rx) = response_channel();
+        self.submit_request(src, mode, None, None, tx);
+        rx
+    }
+
     /// Submit with an externally-owned response channel.
     pub fn submit_with(
         &self,
@@ -795,22 +968,26 @@ impl Submitter {
         criterion: Option<Criterion>,
         respond: ResponseSender,
     ) -> u64 {
-        self.submit_request(src, criterion, None, respond).0
+        self.submit_request(src, DecodeMode::Blockwise, criterion, None, respond).0
     }
 
-    /// Full-control submission: optional absolute deadline, with the push
-    /// outcome and the request's cancel handle returned — the server uses
-    /// the outcome to shape its `overloaded` wire reply and raises the
-    /// cancel flag when the client disconnects mid-decode.
+    /// Full-control submission: decoder family, optional absolute
+    /// deadline, with the push outcome and the request's cancel handle
+    /// returned — the server uses the outcome to shape its `overloaded`
+    /// wire reply and raises the cancel flag when the client disconnects
+    /// mid-decode.
     pub fn submit_request(
         &self,
         src: Vec<i32>,
+        mode: DecodeMode,
         criterion: Option<Criterion>,
         deadline: Option<Instant>,
         respond: ResponseSender,
     ) -> (u64, Push, Arc<AtomicBool>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let r = Request::new(id, src, criterion, respond.clone()).with_deadline(deadline);
+        let r = Request::new(id, src, criterion, respond.clone())
+            .with_mode(mode)
+            .with_deadline(deadline);
         let cancel = r.cancel.clone();
         let push = self.queue.push(r);
         match push {
@@ -819,18 +996,19 @@ impl Submitter {
                 if let Some(door) = &self.door {
                     door.on_shed();
                 }
-                send_rejection(id, &respond, "overloaded");
+                send_rejection(id, mode, &respond, "overloaded");
             }
-            Push::Closed => send_rejection(id, &respond, "shutting down"),
+            Push::Closed => send_rejection(id, mode, &respond, "shutting down"),
         }
         (id, push, cancel)
     }
 }
 
 /// Terminal reply for a request rejected at the front door (shed/closed).
-fn send_rejection(id: u64, respond: &ResponseSender, why: &str) {
+fn send_rejection(id: u64, mode: DecodeMode, respond: &ResponseSender, why: &str) {
     let _ = respond.send(Response {
         id,
+        mode,
         tokens: vec![],
         stats: BlockStats::default(),
         queued: Duration::ZERO,
@@ -844,6 +1022,7 @@ fn send_rejection(id: u64, respond: &ResponseSender, why: &str) {
 fn send_timeout(r: &Request, tokens: Vec<i32>, stats: BlockStats, queued: Duration) {
     let _ = r.respond.send(Response {
         id: r.id,
+        mode: r.mode,
         tokens,
         stats,
         queued,

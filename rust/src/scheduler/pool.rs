@@ -241,6 +241,18 @@ impl PoolReport {
                 }
                 out.push(']');
             }
+            // per-family completions, only for shards that actually served
+            // a non-blockwise request (pure blockwise lines stay stable)
+            if s.modes.keys().any(|m| *m != crate::batching::DecodeMode::Blockwise) {
+                out.push_str(" modes=[");
+                for (j, (mode, st)) in s.modes.iter().enumerate() {
+                    if j > 0 {
+                        out.push(' ');
+                    }
+                    out.push_str(&format!("{}={}", mode.label(), st.completed));
+                }
+                out.push(']');
+            }
         }
         out
     }

@@ -5,15 +5,18 @@
 //!
 //! ```text
 //! -> {"src":[14,5,2], "criterion":"exact", "deadline_ms":500}
-//! <- {"id":1, "tokens":[77,61,2], "invocations":3, "blocks":[2,1],
-//!     "khat":1.5, "queued_ms":0.4, "ms":4.2}
+//! <- {"id":1, "mode":"blockwise", "tokens":[77,61,2], "invocations":3,
+//!     "blocks":[2,1], "khat":1.5, "queued_ms":0.4, "ms":4.2}
 //! ```
 //!
 //! Request fields: `src` (required, non-empty, bounded by
-//! [`MAX_SRC_TOKENS`]), `criterion` (optional: `"exact"`, `"topK"`,
-//! `"distE"` with K,E ≥ 1), `deadline_ms` (optional: per-request deadline;
-//! `0` opts out of the server's `--deadline-ms` default). Unknown fields
-//! are ignored.
+//! [`MAX_SRC_TOKENS`]), `mode` (optional: `"blockwise"` (default),
+//! `"beam"`, `"nat"` — the decoder family; every reply echoes it),
+//! `criterion` (optional: `"exact"`, `"topK"`, `"distE"` with K,E ≥ 1;
+//! blockwise only), `deadline_ms` (optional: per-request deadline; `0`
+//! opts out of the server's `--deadline-ms` default). Unknown fields are
+//! ignored. Beam/NAT replies carry an empty `blocks` list and `khat` 0 —
+//! those are blockwise acceptance concepts.
 //!
 //! **Error vocabulary** (the `error` field of a reply):
 //! - `"overloaded"` — the bounded request queue is full; the reply carries
@@ -28,6 +31,9 @@
 //!   before erroring; the pool supervisor separately respawns the shard
 //!   within its restart budget).
 //! - `"shutting down"` — the queue is closed; the server is draining.
+//! - `"mode <m> unsupported by this deployment"` — the request named a
+//!   decoder family no engine shard advertises (e.g. `"nat"` against a
+//!   blockwise/beam scoring manifest).
 //! - anything else — a request parse/validation error.
 //!
 //! Retry semantics: `"overloaded"` and `"shutting down"` are safe to
@@ -60,7 +66,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::batching::{response_channel, Push, RequestQueue, Response};
+use crate::batching::{response_channel, DecodeMode, Push, RequestQueue, Response};
 use crate::decoding::criteria::Criterion;
 use crate::metrics::Metrics;
 use crate::scheduler::Submitter;
@@ -104,6 +110,7 @@ fn mean_block(blocks: &[usize]) -> f64 {
 pub fn response_json(r: &Response) -> String {
     let mut obj = vec![
         ("id", Json::Num(r.id as f64)),
+        ("mode", Json::Str(r.mode.label().to_string())),
         ("tokens", Json::arr_i32(&r.tokens)),
         ("invocations", Json::Num(r.stats.invocations as f64)),
         (
@@ -334,6 +341,15 @@ fn serve_line(
         "src too long ({} tokens, cap {MAX_SRC_TOKENS})",
         src.len()
     );
+    let mode = match j.opt("mode") {
+        Some(m) => {
+            let s = m.as_str()?;
+            DecodeMode::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("bad mode {s:?} (want blockwise, beam, or nat)")
+            })?
+        }
+        None => DecodeMode::Blockwise,
+    };
     let criterion = match j.opt("criterion") {
         Some(c) => Some(
             parse_criterion(c.as_str()?)
@@ -352,7 +368,7 @@ fn serve_line(
     };
 
     let (tx, rx) = response_channel();
-    let (id, push, cancel) = submitter.submit_request(src, criterion, deadline, tx);
+    let (id, push, cancel) = submitter.submit_request(src, mode, criterion, deadline, tx);
     if let Push::Shed { depth } = push {
         // shed: reject fast with a backoff hint sized from the backlog
         return Ok(Some(overloaded_json(id, 50 + 2 * depth as u64)));
@@ -384,6 +400,9 @@ pub struct Client {
 /// Client-side view of a completed request.
 #[derive(Debug, Clone)]
 pub struct ClientResult {
+    /// decoder family echoed by the server (`"blockwise"` when talking to
+    /// a pre-mode server that omits the field)
+    pub mode: String,
     pub tokens: Vec<i32>,
     pub invocations: usize,
     pub blocks: Vec<usize>,
@@ -419,7 +438,7 @@ impl Client {
     }
 
     pub fn decode(&mut self, src: &[i32], criterion: Option<&str>) -> Result<ClientResult> {
-        match self.try_decode(src, criterion, None)? {
+        match self.try_decode(src, None, criterion, None)? {
             Decoded::Ok(r) => Ok(r),
             Decoded::Overloaded { retry_after_ms } => {
                 anyhow::bail!("server error: overloaded (retry after {retry_after_ms}ms)")
@@ -430,15 +449,20 @@ impl Client {
     /// One request/reply cycle. Shed replies come back as
     /// [`Decoded::Overloaded`] rather than an error so load generators can
     /// count and back off; every other `error` reply still fails. Pass
+    /// `mode` to pick the decoder family (`None` = blockwise) and
     /// `deadline_ms` to attach a per-request deadline (`Some(0)` opts out
     /// of the server default).
     pub fn try_decode(
         &mut self,
         src: &[i32],
+        mode: Option<&str>,
         criterion: Option<&str>,
         deadline_ms: Option<u64>,
     ) -> Result<Decoded> {
         let mut obj = vec![("src", Json::arr_i32(src))];
+        if let Some(m) = mode {
+            obj.push(("mode", Json::Str(m.to_string())));
+        }
         if let Some(c) = criterion {
             obj.push(("criterion", Json::Str(c.to_string())));
         }
@@ -486,7 +510,12 @@ impl Client {
             .opt("khat")
             .and_then(|v| v.as_f64().ok())
             .unwrap_or_else(|| mean_block(&blocks));
+        let mode = j
+            .opt("mode")
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| "blockwise".to_string());
         Ok(Decoded::Ok(ClientResult {
+            mode,
             tokens: j.get("tokens")?.as_ids()?,
             invocations: j.get("invocations")?.as_usize()?,
             blocks,
@@ -522,6 +551,7 @@ mod tests {
     fn response_roundtrip() {
         let r = Response {
             id: 3,
+            mode: DecodeMode::Blockwise,
             tokens: vec![5, 6, 2],
             stats: BlockStats { accepted_blocks: vec![2, 1], invocations: 3 },
             queued: std::time::Duration::from_millis(1),
@@ -531,6 +561,8 @@ mod tests {
         };
         let j = Json::parse(&response_json(&r)).unwrap();
         assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 3);
+        // the decoder family is always echoed so clients can demux mixes
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "blockwise");
         assert_eq!(j.get("tokens").unwrap().as_ids().unwrap(), vec![5, 6, 2]);
         assert_eq!(j.get("invocations").unwrap().as_usize().unwrap(), 3);
         // per-request k̂ = mean of the accepted blocks [2,1]
@@ -573,6 +605,8 @@ mod tests {
             "{\"src\":[1,\"x\",3]}".to_string(),
             "{\"src\":[1,2],\"criterion\":\"top0\"}".to_string(),
             "{\"src\":[1,2],\"criterion\":\"warp9\"}".to_string(),
+            "{\"src\":[1,2],\"mode\":\"greedy\"}".to_string(),
+            "{\"src\":[1,2],\"mode\":7}".to_string(),
             "{\"src\":[1,2],\"deadline_ms\":\"soon\"}".to_string(),
             huge_src,
             // unknown fields and a non-integer id are tolerated (the

@@ -134,6 +134,36 @@ impl SimModel {
         out
     }
 
+    /// One simulated NAT shot: token per canvas position plus a length
+    /// prediction, both pure hashes of (src, canvas). The canvas
+    /// participates in every hash, so feeding a pass's output back as the
+    /// next canvas (iterative refinement) deterministically shifts both
+    /// the tokens *and* the predicted length — which is exactly what the
+    /// refined-length regression test needs to distinguish "kept shot 1's
+    /// length" (the old bug) from "kept the final pass's".
+    pub fn nat_shot(&self, src: &[i32], canvas: &[i32]) -> (Vec<i32>, usize) {
+        let t_len = canvas.len();
+        let mut cond = src.to_vec();
+        cond.push(-11);
+        cond.extend_from_slice(canvas);
+        let toks = (0..t_len)
+            .map(|t| {
+                let h = self.hash(&cond, 1000 + t as u64);
+                if t >= 2 && h % self.mean_len as u64 == 0 {
+                    EOS
+                } else {
+                    3 + (h % (self.vocab as u64 - 3)) as i32
+                }
+            })
+            .collect();
+        let mut lcond = src.to_vec();
+        lcond.push(-13);
+        lcond.extend_from_slice(canvas);
+        let hl = self.hash(&lcond, 2000);
+        let len = 1 + (hl % (t_len as u64 - 1)) as usize;
+        (toks, len)
+    }
+
     /// Emit head `h`'s top-t candidate list at conditioning `prefix` via
     /// `set(rank, token, logit)` — rank 0 is the model argmax, the other
     /// ranks deterministic distinct fillers.
@@ -525,6 +555,40 @@ impl SimBackend {
         self.ks = ks.to_vec();
         self
     }
+
+    /// One model-invocation fault tick: every scoring call — blockwise
+    /// step, beam step, NAT pass — advances the same counter, so one
+    /// `FaultPlan` can crash a shard mid-decode in any family. Fires
+    /// before any state is touched; a panicking backend is discarded
+    /// whole by the supervisor, never stepped again.
+    fn tick_step_faults(faults: &FaultPlan, steps_seen: &mut usize) {
+        *steps_seen += 1;
+        if faults.panic_on_steps.contains(steps_seen) {
+            panic!("injected fault: step {} panicked by plan", steps_seen);
+        }
+        if let Some((every, dur)) = faults.slow_every {
+            if every > 0 && *steps_seen % every == 0 {
+                std::thread::sleep(dur);
+            }
+        }
+    }
+}
+
+/// [`BlockStepper`] adapter threading a [`SimBackend`]'s fault counter
+/// through a beam decode's scoring steps, so planned panics and slow
+/// steps land inside `decode_core` exactly like they land inside the
+/// blockwise engine loop.
+struct FaultStepper<'a> {
+    inner: SimSession<'a>,
+    faults: &'a FaultPlan,
+    steps_seen: &'a mut usize,
+}
+
+impl BlockStepper for FaultStepper<'_> {
+    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize]) -> Result<WindowScores> {
+        SimBackend::tick_step_faults(self.faults, self.steps_seen);
+        self.inner.step_at(tgt_in, frontiers)
+    }
 }
 
 impl EngineBackend for SimBackend {
@@ -565,18 +629,13 @@ impl EngineBackend for SimBackend {
         Ok(())
     }
 
-    fn step_at(&mut self, tgt_in: &TensorI32, frontiers: &[usize], k: usize) -> Result<WindowScores> {
-        // faults fire before any state is touched: a panicking backend is
-        // discarded whole by the supervisor, never stepped again
-        self.steps_seen += 1;
-        if self.faults.panic_on_steps.contains(&self.steps_seen) {
-            panic!("injected fault: step {} panicked by plan", self.steps_seen);
-        }
-        if let Some((every, dur)) = self.faults.slow_every {
-            if every > 0 && self.steps_seen % every == 0 {
-                std::thread::sleep(dur);
-            }
-        }
+    fn step_at(
+        &mut self,
+        tgt_in: &TensorI32,
+        frontiers: &[usize],
+        k: usize,
+    ) -> Result<WindowScores> {
+        Self::tick_step_faults(&self.faults, &mut self.steps_seen);
         // the windowed sim mode keeps no cross-step state, so a transient
         // session over the current slot sources is exactly the device
         // session's windowed step contract at the requested block size;
@@ -586,6 +645,51 @@ impl EngineBackend for SimBackend {
         let scores = session.step_at_k(tgt_in, frontiers, k);
         self.srcs = session.into_srcs();
         scores
+    }
+
+    fn modes(&self) -> Vec<crate::batching::DecodeMode> {
+        vec![
+            crate::batching::DecodeMode::Blockwise,
+            crate::batching::DecodeMode::Beam,
+            crate::batching::DecodeMode::Nat,
+        ]
+    }
+
+    fn decode_beam(
+        &mut self,
+        src: &[i32],
+        beam: usize,
+        alpha: f32,
+        max_len: usize,
+    ) -> Result<(Vec<i32>, usize)> {
+        // a transient bucket-replicated session over this one source, like
+        // the device path's begin_session_replicated — slot sources stay
+        // resident and untouched, so an interleaved blockwise decode on
+        // the same shard is unaffected
+        let bucket = self.srcs.len();
+        let mut stepper = FaultStepper {
+            inner: SimSession::new(&self.model, vec![src.to_vec(); bucket]),
+            faults: &self.faults,
+            steps_seen: &mut self.steps_seen,
+        };
+        crate::decoding::beam::decode_core(&mut stepper, bucket, self.t_len, beam, alpha, max_len)
+    }
+
+    fn decode_nat(&mut self, src: &[i32], i_dec: usize) -> Result<(Vec<i32>, usize)> {
+        use crate::decoding::nat::{finish_row, refine_canvas_row};
+        let t_len = self.t_len;
+        let mut prev = vec![PAD; t_len];
+        let (mut toks, mut len_pred) = (vec![PAD; t_len], 1usize);
+        for _ in 0..=i_dec {
+            Self::tick_step_faults(&self.faults, &mut self.steps_seen);
+            let mut canvas = vec![PAD; t_len];
+            refine_canvas_row(&prev, &mut canvas);
+            let (t2, l2) = self.model.nat_shot(src, &canvas);
+            toks = t2;
+            len_pred = l2;
+            prev.copy_from_slice(&toks);
+        }
+        Ok((finish_row(&toks, len_pred, t_len), i_dec + 1))
     }
 }
 
@@ -646,6 +750,42 @@ pub fn sim_blockwise(
         invocations += 1;
     }
     (st.accepted.clone(), invocations, st.stats.accepted_blocks)
+}
+
+/// Offline beam reference: the exact [`crate::decoding::beam::decode_core`]
+/// loop over a bucket-replicated sim session, decoded to the length cap
+/// `t_len - 1`. A pool-served sim beam request runs this same core over
+/// the same stepper contract, so byte-identity is structural.
+pub fn sim_beam(
+    model: &SimModel,
+    src: &[i32],
+    beam: usize,
+    alpha: f32,
+    bucket: usize,
+    t_len: usize,
+) -> Result<(Vec<i32>, usize)> {
+    let mut session = SimSession::new(model, vec![src.to_vec(); bucket]);
+    crate::decoding::beam::decode_core(&mut session, bucket, t_len, beam, alpha, t_len - 1)
+}
+
+/// Offline NAT reference: `i_dec + 1` simulated shots with the canvas fed
+/// back through `nat::refine_canvas_row` between passes, finished with
+/// `nat::finish_row` under the **final** pass's length prediction — the
+/// same helpers and ordering as the device `NatSession::decode` and the
+/// pool-served sim path. Returns (tokens, invocations).
+pub fn sim_nat(model: &SimModel, src: &[i32], i_dec: usize, t_len: usize) -> (Vec<i32>, usize) {
+    use crate::decoding::nat::{finish_row, refine_canvas_row};
+    let mut prev = vec![PAD; t_len];
+    let (mut toks, mut len_pred) = (vec![PAD; t_len], 1usize);
+    for _ in 0..=i_dec {
+        let mut canvas = vec![PAD; t_len];
+        refine_canvas_row(&prev, &mut canvas);
+        let (t2, l2) = model.nat_shot(src, &canvas);
+        toks = t2;
+        len_pred = l2;
+        prev.copy_from_slice(&toks);
+    }
+    (finish_row(&toks, len_pred, t_len), i_dec + 1)
 }
 
 /// What a [`sim_policy_run`] measured: the accounting the equality
@@ -1021,6 +1161,76 @@ mod tests {
         }
         assert_eq!(rep.steps, steps);
         assert_eq!(rep.k_invocations.keys().copied().collect::<Vec<_>>(), vec![6]);
+    }
+
+    #[test]
+    fn sim_beam_width_one_is_greedy() {
+        // beam 1 with topt-rank-0 = argmax must follow the greedy
+        // trajectory exactly, plus the terminal-EOS contract
+        let m = SimModel::new(60, 4, 0.6, 9, 31);
+        for s in 0..10 {
+            let src = vec![4 + s, 7, EOS];
+            let t_len = 16;
+            let (out, inv) = sim_beam(&m, &src, 1, 0.6, 4, t_len).unwrap();
+            let mut greedy = m.greedy(&src, t_len - 1);
+            if greedy.last() != Some(&EOS) {
+                greedy.push(EOS);
+            }
+            assert_eq!(out, greedy, "src {s}");
+            assert!(inv >= 1 && out.last() == Some(&EOS));
+        }
+    }
+
+    #[test]
+    fn nat_refinement_updates_length_prediction() {
+        // regression for the discarded-length bug: `let (t2, _)` kept shot
+        // 1's length prediction, so refinement could never change output
+        // length. Find a source where the refined prediction visibly
+        // shifts the finished row, then prove sim_nat keeps the final one.
+        use crate::decoding::nat::{finish_row, refine_canvas_row};
+        let m = SimModel::new(60, 4, 0.6, 9, 77);
+        let t_len = 12;
+        let passes = |src: &Vec<i32>| {
+            let shot1 = vec![BOS; t_len];
+            let (t1, l1) = m.nat_shot(src, &shot1);
+            let mut canvas = vec![PAD; t_len];
+            refine_canvas_row(&t1, &mut canvas);
+            let (t2, l2) = m.nat_shot(src, &canvas);
+            (t2, l1, l2)
+        };
+        let src = (0..200)
+            .map(|s| vec![3 + s, 11, EOS])
+            .find(|src| {
+                let (t2, l1, l2) = passes(src);
+                finish_row(&t2, l2, t_len) != finish_row(&t2, l1, t_len)
+            })
+            .expect("some source must shift its finished row under refinement");
+        let (t2, l1, l2) = passes(&src);
+        assert_ne!(l1, l2);
+        let (out, inv) = sim_nat(&m, &src, 1, t_len);
+        assert_eq!(inv, 2);
+        assert_eq!(out, finish_row(&t2, l2, t_len), "must keep the final pass's length");
+        assert_ne!(out, finish_row(&t2, l1, t_len), "the shot-1 length would be visible");
+    }
+
+    #[test]
+    fn backend_beam_and_nat_match_offline_references() {
+        // the pool-served entry points must be byte-identical to the
+        // offline sim references over the same bucket/t_len geometry —
+        // and must leave the resident blockwise slot sources untouched
+        let m = SimModel::new(64, 6, 0.6, 14, 0xBE7C);
+        let (bucket, t_len) = (4usize, 25usize);
+        let mut be = SimBackend::new(m.clone(), bucket, t_len);
+        let resident = vec![9, 11, EOS];
+        be.admit(&[2], &[resident.as_slice()]).unwrap();
+        for s in 0..6 {
+            let src = vec![3 + s, 7, EOS];
+            let got = be.decode_beam(&src, 4, 0.6, t_len - 1).unwrap();
+            assert_eq!(got, sim_beam(&m, &src, 4, 0.6, bucket, t_len).unwrap(), "beam src {s}");
+            let got = be.decode_nat(&src, 2).unwrap();
+            assert_eq!(got, sim_nat(&m, &src, 2, t_len), "nat src {s}");
+        }
+        assert_eq!(be.srcs[2], resident, "serving beam/NAT must not evict blockwise rows");
     }
 
     #[test]

@@ -39,7 +39,8 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return f64::NAN;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts last deterministically instead of panicking
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, q)
 }
 
@@ -59,7 +60,7 @@ pub fn percentile_sorted(s: &[f64], q: f64) -> f64 {
 
 pub fn summarize(xs: &[f64]) -> Summary {
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     Summary {
         n: xs.len(),
         mean: mean(xs),
@@ -86,7 +87,7 @@ pub fn bootstrap_ci(xs: &[f64], level: f64, iters: usize, seed: u64) -> (f64, f6
         }
         means.push(acc / xs.len() as f64);
     }
-    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    means.sort_by(f64::total_cmp);
     let alpha = (1.0 - level) / 2.0;
     (
         percentile_sorted(&means, alpha),
@@ -193,6 +194,19 @@ mod tests {
         let s = h.summary();
         assert_eq!(s.n, 4);
         assert_eq!(s.max, 1e6);
+    }
+
+    #[test]
+    fn nan_input_is_deterministic_not_a_panic() {
+        // a single poisoned sample used to panic the whole metrics render
+        // via partial_cmp().unwrap(); total_cmp sorts NaN after every
+        // finite value, so percentiles below the NaN tail stay meaningful
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        let s = summarize(&xs);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(summarize(&xs).p50, summarize(&xs).p50);
     }
 
     #[test]

@@ -19,13 +19,13 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use blockdecode::batching::{response_channel, Push, RequestQueue, ResponseReceiver};
+use blockdecode::batching::{response_channel, DecodeMode, Push, RequestQueue, ResponseReceiver};
 use blockdecode::decoding::Criterion;
 use blockdecode::metrics::Metrics;
 use blockdecode::scheduler::pool::{EnginePool, PoolReport};
 use blockdecode::scheduler::{EngineConfig, Submitter};
 use blockdecode::testing::check;
-use blockdecode::testing::sim::{sim_blockwise, FaultPlan, SimBackend, SimModel};
+use blockdecode::testing::sim::{sim_beam, sim_blockwise, sim_nat, FaultPlan, SimBackend, SimModel};
 use blockdecode::tokenizer::EOS;
 
 const SIM_BUCKET: usize = 4;
@@ -54,6 +54,27 @@ fn sim_criterion(i: usize) -> Option<Criterion> {
 fn offline(i: usize) -> Vec<i32> {
     let crit = sim_criterion(i).unwrap_or(Criterion::Exact);
     sim_blockwise(&sim_model(), &sim_src(i), crit, SIM_TLEN - 1).0
+}
+
+/// Deterministic per-request decoder family for the mixed-mode tests.
+fn sim_mode(i: usize) -> DecodeMode {
+    match i % 3 {
+        0 => DecodeMode::Blockwise,
+        1 => DecodeMode::Beam,
+        _ => DecodeMode::Nat,
+    }
+}
+
+/// Offline reference for request `i` under its family, with the engine's
+/// default knobs (beam width 4 / alpha 0.6, one NAT refinement pass —
+/// see [`EngineConfig::default`]).
+fn offline_mode(i: usize) -> Vec<i32> {
+    let m = sim_model();
+    match sim_mode(i) {
+        DecodeMode::Blockwise => offline(i),
+        DecodeMode::Beam => sim_beam(&m, &sim_src(i), 4, 0.6, SIM_BUCKET, SIM_TLEN).unwrap().0,
+        DecodeMode::Nat => sim_nat(&m, &sim_src(i), 1, SIM_TLEN).0,
+    }
 }
 
 /// Silence panic payloads from planned crashes (they carry the
@@ -109,8 +130,13 @@ fn chaos_pool_gives_every_request_exactly_one_terminal_reply() {
         for i in 0..cap + extra {
             let (tx, rx) = response_channel();
             let deadline = (i < e).then(Instant::now);
-            let (_, push, _) =
-                submitter.submit_request(sim_src(i), sim_criterion(i), deadline, tx);
+            let (_, push, _) = submitter.submit_request(
+                sim_src(i),
+                DecodeMode::Blockwise,
+                sim_criterion(i),
+                deadline,
+                tx,
+            );
             if i < cap {
                 assert!(push.accepted(), "request {i} should fit under capacity {cap}");
             } else {
@@ -157,7 +183,13 @@ fn chaos_pool_gives_every_request_exactly_one_terminal_reply() {
                         .map(|j| {
                             let i = base + lane * per_lane + j;
                             let (tx, rx) = response_channel();
-                            submitter.submit_request(sim_src(i), sim_criterion(i), None, tx);
+                            submitter.submit_request(
+                                sim_src(i),
+                                DecodeMode::Blockwise,
+                                sim_criterion(i),
+                                None,
+                                tx,
+                            );
                             (i, rx, false)
                         })
                         .collect()
@@ -251,7 +283,13 @@ fn abandoned_requests_are_retired_silently_and_counted() {
     let mut cancelled_rxs = Vec::new();
     for i in dropped..dropped + cancelled {
         let (tx, rx) = response_channel();
-        let (_, push, cancel) = submitter.submit_request(sim_src(i), sim_criterion(i), None, tx);
+        let (_, push, cancel) = submitter.submit_request(
+            sim_src(i),
+            DecodeMode::Blockwise,
+            sim_criterion(i),
+            None,
+            tx,
+        );
         assert!(push.accepted());
         cancel.store(true, Ordering::Release);
         cancelled_rxs.push((i, rx));
@@ -317,13 +355,20 @@ fn deadline_expires_mid_decode_with_partial_progress() {
     let (tx_a, rx_a) = response_channel();
     submitter.submit_request(
         sim_src(slow_i),
+        DecodeMode::Blockwise,
         Some(Criterion::Exact),
         Some(Instant::now() + Duration::from_millis(60)),
         tx_a,
     );
     let neighbour = slow_i + 1;
     let (tx_b, rx_b) = response_channel();
-    submitter.submit_request(sim_src(neighbour), sim_criterion(neighbour), None, tx_b);
+    submitter.submit_request(
+        sim_src(neighbour),
+        DecodeMode::Blockwise,
+        sim_criterion(neighbour),
+        None,
+        tx_b,
+    );
 
     let pool = EnginePool::spawn(
         1,
@@ -365,4 +410,177 @@ fn deadline_expires_mid_decode_with_partial_progress() {
     assert_eq!(f.expired, 1, "exactly one deadline expired");
     assert_eq!(f.completed, 1);
     assert_eq!((f.cancelled, f.requeued, f.restarts, f.failed), (0, 0, 0, 0));
+}
+
+/// The acceptance bar for first-class decoder families: a 2-shard sim
+/// pool fed an interleaved blockwise/beam/NAT workload through one queue
+/// serves every family byte-identically to its offline reference
+/// (`sim_blockwise` / `sim_beam` / `sim_nat`), echoes the family on every
+/// reply, and accounts completions per family in the merged report.
+#[test]
+fn mixed_mode_pool_serves_all_three_families_byte_identically() {
+    quiet_injected_panics();
+    let t0 = Instant::now();
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitter = Submitter::new(queue.clone());
+
+    let n = 24usize; // cycles i % 3 -> 8 requests per family
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let (tx, rx) = response_channel();
+            submitter.submit_request(sim_src(i), sim_mode(i), sim_criterion(i), None, tx);
+            (i, rx)
+        })
+        .collect();
+
+    let pool = EnginePool::spawn(
+        2,
+        |_| Ok(SimBackend::new(sim_model(), SIM_BUCKET, SIM_TLEN)),
+        EngineConfig::default(),
+        queue.clone(),
+        stop,
+    )
+    .unwrap();
+
+    for (i, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("request {i} never got a terminal reply"));
+        assert!(resp.error.is_none(), "request {i} failed: {:?}", resp.error);
+        assert_eq!(resp.mode, sim_mode(i), "request {i}: family echo is wrong");
+        assert_eq!(
+            resp.tokens,
+            offline_mode(i),
+            "request {i} ({}): pool-served tokens differ from the offline reference",
+            resp.mode.label()
+        );
+        assert!(resp.stats.invocations >= 1, "request {i}: zero invocations");
+        if sim_mode(i) != DecodeMode::Blockwise {
+            assert!(
+                resp.stats.accepted_blocks.is_empty(),
+                "request {i}: {} reply carries blockwise block accounting",
+                resp.mode.label()
+            );
+        }
+    }
+
+    let shard_metrics = pool.shard_metrics().to_vec();
+    pool.drain().unwrap();
+    let report = PoolReport::from_shards(&shard_metrics, t0);
+    let f = &report.fleet;
+    assert_eq!(f.completed as usize, n);
+    let per = |m: DecodeMode| f.modes.get(&m).map(|s| s.completed).unwrap_or(0);
+    assert_eq!(per(DecodeMode::Blockwise), 8, "blockwise completions miscounted");
+    assert_eq!(per(DecodeMode::Beam), 8, "beam completions miscounted");
+    assert_eq!(per(DecodeMode::Nat), 8, "NAT completions miscounted");
+    assert!(report.render().contains("by mode:"), "mixed fleet render lost the family line");
+}
+
+/// Mixed-mode chaos: every first-incarnation shard crashes on an early
+/// fault-counter tick — which lands mid-blockwise-step, mid-beam-step, or
+/// mid-NAT-pass depending on queue order, since all three families share
+/// the counter — and the pool must still give every request exactly one
+/// terminal reply, with every survivor byte-identical to its family's
+/// offline reference even when a crash moved it between shards.
+#[test]
+fn mixed_mode_pool_survives_planned_shard_crashes() {
+    quiet_injected_panics();
+    check("chaos/mixed_mode_survives_crashes", 2, |rng| {
+        let n_shards = 2usize;
+        let per_lane = rng.range(12, 24) as usize;
+
+        let t0 = Instant::now();
+        let queue = Arc::new(RequestQueue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let door = Arc::new(Metrics::new());
+        let submitter = Arc::new(Submitter::new(queue.clone()).with_door(door.clone()));
+
+        let spawns: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+        let spawns_f = spawns.clone();
+        let pool = EnginePool::spawn(
+            n_shards,
+            move |shard| {
+                let incarnation = spawns_f[shard].fetch_add(1, Ordering::SeqCst);
+                let faults = if incarnation == 0 {
+                    FaultPlan { panic_on_steps: vec![1 + shard], ..FaultPlan::default() }
+                } else {
+                    FaultPlan::default()
+                };
+                Ok(SimBackend::with_faults(sim_model(), SIM_BUCKET, SIM_TLEN, faults))
+            },
+            EngineConfig::default(),
+            queue.clone(),
+            stop,
+        )
+        .unwrap();
+
+        // concurrent producers racing the crashes, all three families mixed
+        let producers: Vec<_> = (0..3usize)
+            .map(|lane| {
+                let submitter = submitter.clone();
+                std::thread::spawn(move || -> Vec<(usize, ResponseReceiver)> {
+                    (0..per_lane)
+                        .map(|j| {
+                            let i = lane * per_lane + j;
+                            let (tx, rx) = response_channel();
+                            submitter.submit_request(
+                                sim_src(i),
+                                sim_mode(i),
+                                sim_criterion(i),
+                                None,
+                                tx,
+                            );
+                            (i, rx)
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        let mut entries = Vec::new();
+        for p in producers {
+            entries.extend(p.join().unwrap());
+        }
+        let total = entries.len();
+
+        let (mut ok, mut shard_errs) = (0usize, 0usize);
+        for (i, rx) in entries {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|_| panic!("request {i} never got a terminal reply"));
+            match resp.error.as_deref() {
+                None => {
+                    assert_eq!(resp.mode, sim_mode(i), "request {i}: family echo is wrong");
+                    assert_eq!(
+                        resp.tokens,
+                        offline_mode(i),
+                        "request {i} ({}): survivor diverged from the offline reference \
+                         (requeues={})",
+                        resp.mode.label(),
+                        resp.requeues
+                    );
+                    ok += 1;
+                }
+                Some(err) if err.contains("shard failed") => shard_errs += 1,
+                Some(err) => panic!("request {i}: unexpected terminal error {err:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "request {i} received a second terminal reply");
+        }
+        assert_eq!(ok + shard_errs, total, "terminal replies don't cover every submission");
+
+        let shard_metrics = pool.shard_metrics().to_vec();
+        pool.drain().unwrap();
+        let f = PoolReport::from_shards_with_door(&shard_metrics, Some(&door), t0).fleet;
+        assert_eq!(f.completed as usize, ok, "completed count != ok replies");
+        assert_eq!(f.failed as usize, shard_errs, "failed count != shard-error replies");
+        let spawned: usize = spawns.iter().map(|a| a.load(Ordering::SeqCst)).sum();
+        assert_eq!(f.restarts as usize, spawned - n_shards, "restarts != extra incarnations");
+        assert!(f.restarts >= 1, "at least one planned crash must have fired");
+        let mode_completed: u64 = f.modes.values().map(|s| s.completed).sum();
+        assert_eq!(
+            mode_completed as usize, ok,
+            "per-family completions must partition the completed total"
+        );
+    });
 }

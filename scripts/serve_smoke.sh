@@ -22,6 +22,13 @@
 #    than one distinct k — proof the policy actually dispatched different
 #    (B,k) entries end-to-end, not just tracked k̂.
 #
+# 4. Mixed-mode drill — reboot and drive `loadgen --mix-mode
+#    blockwise,beam,nat`: all three decoder families interleave through
+#    the one shared queue, the loadgen verifies every reply echoes its
+#    requested family (beam/NAT with empty block accounting), and the
+#    fleet report must segment completions per family — proof beam and
+#    NAT are served by the same pool, not a side channel.
+#
 # Used as a CI step after the tier-1 build (the release binary is already
 # present there); runs standalone too and builds the binary if missing.
 #
@@ -47,6 +54,8 @@ OVERLOAD_LOG="${LOG%.log}-overload.log"
 LOADGEN_LOG="${LOG%.log}-loadgen.log"
 ADAPTIVE_LOG="${LOG%.log}-adaptive.log"
 ADAPTIVE_LOADGEN_LOG="${LOG%.log}-adaptive-loadgen.log"
+MIXED_LOG="${LOG%.log}-mixed.log"
+MIXED_LOADGEN_LOG="${LOG%.log}-mixed-loadgen.log"
 
 SERVE_PID=""
 BG_PID=""
@@ -62,6 +71,8 @@ cleanup() {
     cat "$OVERLOAD_LOG" 2>/dev/null || true
     echo "---- adaptive serve log ----"
     cat "$ADAPTIVE_LOG" 2>/dev/null || true
+    echo "---- mixed-mode serve log ----"
+    cat "$MIXED_LOG" 2>/dev/null || true
 }
 trap cleanup EXIT
 
@@ -204,4 +215,40 @@ if [ "$DISTINCT" -lt 2 ]; then
     echo "serve-smoke: ewma policy dispatched only one distinct k: $PERK" >&2
     exit 1
 fi
-echo "serve-smoke: OK (drain + overload shed + ewma dispatched $DISTINCT distinct block sizes)"
+echo "serve-smoke: phase 3 OK (ewma dispatched $DISTINCT distinct block sizes)"
+
+# ---- phase 4: mixed decoder families through one queue ----
+# The loadgen cycles blockwise/beam/nat lane-locally and fails the run
+# itself if any reply comes back under the wrong family, a beam/NAT reply
+# carries blockwise block accounting, or a family is refused — so the
+# assertions here only need the server-side per-family segmentation.
+SERVE_PID=""
+boot_server "$MIXED_LOG" --engines 2
+echo "serve-smoke: mixed-mode drill on $ADDR (blockwise,beam,nat interleaved)"
+
+"$BIN" loadgen --addr "$ADDR" --n 240 --conns 4 --mix-mode blockwise,beam,nat \
+    | tee "$MIXED_LOADGEN_LOG"
+grep -q "loadgen: by mode: beam=80 blockwise=80 nat=80" "$MIXED_LOADGEN_LOG" || {
+    echo "serve-smoke: loadgen did not complete 80 requests per decoder family" >&2
+    exit 1
+}
+
+kill -INT "$SERVE_PID"
+RC=0
+wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [ "$RC" -ne 0 ]; then
+    echo "serve-smoke: mixed-mode serve exited rc=$RC after SIGINT (expected clean drain)" >&2
+    exit 1
+fi
+grep -q "drained 2 engine shards cleanly" "$MIXED_LOG" || {
+    echo "serve-smoke: missing clean-drain line after mixed-mode SIGINT" >&2
+    exit 1
+}
+# the fleet report must segment completions per family, all three present
+grep -Eq "by mode: blockwise completed=80 .* beam completed=80 .* nat completed=80" \
+    "$MIXED_LOG" || {
+    echo "serve-smoke: fleet report lacks per-family completion segmentation" >&2
+    exit 1
+}
+echo "serve-smoke: OK (drain + shed + ${DISTINCT} adaptive ks + 3 decoder families mixed)"
