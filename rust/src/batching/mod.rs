@@ -31,6 +31,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::decoding::criteria::Criterion;
+use crate::decoding::draft::DraftKind;
 use crate::decoding::state::BlockStats;
 
 /// Sender half of a response channel that also tracks whether the
@@ -131,6 +132,10 @@ pub struct Request {
     /// per-request criterion override (server protocol allows it;
     /// blockwise only — beam/NAT ignore it)
     pub criterion: Option<Criterion>,
+    /// who proposes each block before the verify step (wire field
+    /// `"draft"`; blockwise only — the server rejects a non-default
+    /// draft on beam/NAT requests before they reach the queue)
+    pub draft: DraftKind,
     pub arrived: Instant,
     /// absolute point after which the engine must reply `timeout` instead
     /// of admitting or continuing to decode this request
@@ -157,6 +162,7 @@ impl Request {
             src,
             mode: DecodeMode::default(),
             criterion,
+            draft: DraftKind::default(),
             arrived: Instant::now(),
             deadline: None,
             cancel: Arc::new(AtomicBool::new(false)),
@@ -172,6 +178,11 @@ impl Request {
 
     pub fn with_mode(mut self, mode: DecodeMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    pub fn with_draft(mut self, draft: DraftKind) -> Self {
+        self.draft = draft;
         self
     }
 
@@ -193,6 +204,10 @@ pub struct Response {
     pub id: u64,
     /// decoder family that served (or refused) the request
     pub mode: DecodeMode,
+    /// draft source that proposed the request's blocks (echoed so
+    /// per-source metrics and clients can segment; always
+    /// [`DraftKind::Heads`] for beam/NAT)
+    pub draft: DraftKind,
     pub tokens: Vec<i32>,
     pub stats: BlockStats,
     pub queued: Duration,
@@ -540,6 +555,20 @@ mod tests {
         let (r, _k) = req(1);
         assert_eq!(r.mode, DecodeMode::Blockwise);
         assert_eq!(r.with_mode(DecodeMode::Beam).mode, DecodeMode::Beam);
+    }
+
+    #[test]
+    fn draft_kind_wire_round_trip() {
+        for d in DraftKind::ALL {
+            assert_eq!(DraftKind::parse(d.label()), Some(d));
+        }
+        assert_eq!(DraftKind::parse("oracle"), None);
+        assert_eq!(DraftKind::default(), DraftKind::Heads);
+        // a fresh request drafts from the proposal heads (pre-draft wire
+        // lines keep their exact pre-PR behaviour)
+        let (r, _k) = req(1);
+        assert_eq!(r.draft, DraftKind::Heads);
+        assert_eq!(r.with_draft(DraftKind::InputCopy).draft, DraftKind::InputCopy);
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Pluggable draft sources for the blockwise verify loop.
+//!
+//! The paper's §3 loop predicts a block with the model's own proposal
+//! heads, but the verify machinery never cared *where* the draft came
+//! from: any token sequence can be checked against head-0 and accepted
+//! up to its longest verified prefix. [`DraftSource`] makes that seam
+//! explicit — each step the source proposes a **variable-length** draft
+//! for its row and `BlockState::absorb` verifies it through the same
+//! criterion, so every source is byte-identical to greedy under
+//! [`Criterion::Exact`](super::Criterion).
+//!
+//! Three implementations ship:
+//!
+//! * [`ProposalHeads`] — the paper's behaviour, bit-for-bit: head h's
+//!   top-1 at the new frontier becomes draft token h+1.
+//! * [`InputCopy`] — drafts the unconsumed remainder of the *source*
+//!   (Ge et al., *Lossless Acceleration with Aggressive Decoding*,
+//!   arXiv:2205.10350). On input-similar tasks (grammar correction,
+//!   post-editing) whole sentences verify in one step.
+//! * [`NGramDraft`] — greedy continuation from an n-gram table seeded
+//!   with the source and grown over the row's own committed prefix.
+//!
+//! [`DraftKind`] is the serializable selector threaded through the wire
+//! protocol (`"draft"` field), the engine, and the metrics breakdowns.
+
+use crate::model::WindowScores;
+use crate::tokenizer::EOS;
+
+use std::collections::BTreeMap;
+
+/// One row's draft generator. Implementations are stateful (alignment
+/// cursors, n-gram tables) and live inside the row's `BlockState`, so
+/// they must be cloneable through the box and `Send` across shard
+/// threads.
+pub trait DraftSource: Send + std::fmt::Debug {
+    /// Stable name used in metrics labels and logs.
+    fn label(&self) -> &'static str;
+
+    /// Append up to `budget` draft tokens for row `b` whose committed
+    /// hypothesis is `committed` (frontier = `pos`). `scores` is the
+    /// invocation that just landed — sources that ride the model's own
+    /// proposal heads read it; external sources may ignore it. `out`
+    /// arrives cleared.
+    fn propose(
+        &mut self,
+        scores: &WindowScores,
+        b: usize,
+        pos: usize,
+        committed: &[i32],
+        budget: usize,
+        out: &mut Vec<i32>,
+    );
+
+    /// True when draft token 1 is head-0's argmax at the frontier (the
+    /// proposal-heads invariant), so `absorb` may assert p₁ always
+    /// verifies. External sources can miss outright and return false.
+    fn head_aligned(&self) -> bool {
+        false
+    }
+
+    fn clone_box(&self) -> Box<dyn DraftSource>;
+}
+
+impl Clone for Box<dyn DraftSource> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// The paper's draft source: proposal head h's top-1 at the new
+/// frontier is draft token h+1 (§4 merge — the same invocation that
+/// verified the previous block already scored every head there).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProposalHeads;
+
+impl DraftSource for ProposalHeads {
+    fn label(&self) -> &'static str {
+        "heads"
+    }
+
+    fn propose(
+        &mut self,
+        scores: &WindowScores,
+        b: usize,
+        pos: usize,
+        _committed: &[i32],
+        budget: usize,
+        out: &mut Vec<i32>,
+    ) {
+        for h in 0..budget.min(scores.k) {
+            out.push(scores.top1(b, pos, h));
+        }
+    }
+
+    fn head_aligned(&self) -> bool {
+        true
+    }
+
+    fn clone_box(&self) -> Box<dyn DraftSource> {
+        Box::new(*self)
+    }
+}
+
+/// Aggressive input-copy drafting (Ge et al., arXiv:2205.10350): the
+/// draft is the not-yet-consumed remainder of the source sentence. A
+/// small alignment cursor tracks how much of the source the committed
+/// hypothesis has "used up", tolerating the local substitutions /
+/// deletions an edit-style output makes; misalignment only costs
+/// acceptance (the verify step rejects), never correctness.
+#[derive(Debug, Clone)]
+pub struct InputCopy {
+    src: Vec<i32>,
+    /// next source token to draft
+    cursor: usize,
+    /// committed tokens already folded into the cursor
+    seen: usize,
+}
+
+/// How far ahead of the cursor a committed token is searched for before
+/// the mismatch is treated as a substitution (cursor advances by one).
+const REALIGN_LOOKAHEAD: usize = 4;
+
+impl InputCopy {
+    pub fn new(src: &[i32]) -> Self {
+        InputCopy { src: src.to_vec(), cursor: 0, seen: 0 }
+    }
+
+    /// Fold newly committed tokens into the alignment cursor: lockstep
+    /// match consumes one source token, a nearby match skips the gap (a
+    /// deletion in the edit), anything else is a substitution.
+    fn realign(&mut self, committed: &[i32]) {
+        for &tok in &committed[self.seen..] {
+            if self.cursor < self.src.len() && self.src[self.cursor] == tok {
+                self.cursor += 1;
+            } else {
+                let end = (self.cursor + REALIGN_LOOKAHEAD).min(self.src.len());
+                match self.src[self.cursor..end].iter().position(|&s| s == tok) {
+                    Some(p) => self.cursor += p + 1,
+                    None => self.cursor = (self.cursor + 1).min(self.src.len()),
+                }
+            }
+        }
+        self.seen = committed.len();
+    }
+}
+
+impl DraftSource for InputCopy {
+    fn label(&self) -> &'static str {
+        "input_copy"
+    }
+
+    fn propose(
+        &mut self,
+        _scores: &WindowScores,
+        _b: usize,
+        _pos: usize,
+        committed: &[i32],
+        budget: usize,
+        out: &mut Vec<i32>,
+    ) {
+        self.realign(committed);
+        for &tok in self.src[self.cursor..].iter().take(budget) {
+            out.push(tok);
+            if tok == EOS {
+                break;
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn DraftSource> {
+        Box::new(self.clone())
+    }
+}
+
+/// Greedy continuation from an n-gram table: bigram context with a
+/// unigram fallback, seeded from the source sentence and grown over the
+/// row's own committed prefix (first-writer-wins keeps the table — and
+/// therefore the draft — deterministic for a given history).
+#[derive(Debug, Clone, Default)]
+pub struct NGramDraft {
+    bigram: BTreeMap<(i32, i32), i32>,
+    unigram: BTreeMap<i32, i32>,
+    /// committed tokens already ingested into the tables
+    seen: usize,
+}
+
+impl NGramDraft {
+    pub fn new(src: &[i32]) -> Self {
+        let mut d = NGramDraft::default();
+        d.ingest(src);
+        d.seen = 0;
+        d
+    }
+
+    fn ingest(&mut self, toks: &[i32]) {
+        for w in toks.windows(2) {
+            self.unigram.entry(w[0]).or_insert(w[1]);
+        }
+        for w in toks.windows(3) {
+            self.bigram.entry((w[0], w[1])).or_insert(w[2]);
+        }
+    }
+
+    fn next(&self, c2: Option<i32>, c1: i32) -> Option<i32> {
+        c2.and_then(|c2| self.bigram.get(&(c2, c1)))
+            .or_else(|| self.unigram.get(&c1))
+            .copied()
+    }
+}
+
+impl DraftSource for NGramDraft {
+    fn label(&self) -> &'static str {
+        "ngram"
+    }
+
+    fn propose(
+        &mut self,
+        _scores: &WindowScores,
+        _b: usize,
+        _pos: usize,
+        committed: &[i32],
+        budget: usize,
+        out: &mut Vec<i32>,
+    ) {
+        if committed.len() > self.seen {
+            // include the boundary pair/triple spanning old and new tokens
+            let from = self.seen.saturating_sub(2);
+            self.ingest(&committed[from..]);
+            self.seen = committed.len();
+        }
+        let (mut c2, mut c1) = match committed {
+            [] => return,
+            [a] => (None, *a),
+            [.., a, b] => (Some(*a), *b),
+        };
+        while out.len() < budget {
+            let Some(tok) = self.next(c2, c1) else { break };
+            out.push(tok);
+            if tok == EOS {
+                break;
+            }
+            c2 = Some(c1);
+            c1 = tok;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn DraftSource> {
+        Box::new(self.clone())
+    }
+}
+
+/// Wire-level draft-source selector (`"draft"` request field), mirroring
+/// [`DecodeMode`](crate::batching::DecodeMode)'s shape: a stable label
+/// set, a parser, and a factory binding the source to a request's input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum DraftKind {
+    /// the model's own proposal heads (the paper's behaviour; default)
+    #[default]
+    Heads,
+    /// copy the unconsumed source remainder (Ge et al. aggressive decoding)
+    InputCopy,
+    /// n-gram table over the source + the row's committed prefix
+    NGram,
+}
+
+impl DraftKind {
+    pub const ALL: [DraftKind; 3] = [DraftKind::Heads, DraftKind::InputCopy, DraftKind::NGram];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DraftKind::Heads => "heads",
+            DraftKind::InputCopy => "input_copy",
+            DraftKind::NGram => "ngram",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DraftKind> {
+        Self::ALL.into_iter().find(|m| m.label() == s)
+    }
+
+    /// Instantiate this kind's source for a request with input `src`.
+    pub fn source_for(&self, src: &[i32]) -> Box<dyn DraftSource> {
+        match self {
+            DraftKind::Heads => Box::new(ProposalHeads),
+            DraftKind::InputCopy => Box::new(InputCopy::new(src)),
+            DraftKind::NGram => Box::new(NGramDraft::new(src)),
+        }
+    }
+
+    /// Per-step draft-length cap when serving through a compiled entry
+    /// family whose largest block size is `k_max`: external sources may
+    /// draft past the slot's current k (the dispatcher picks the
+    /// smallest compiled k ≥ draft length), but never past the largest
+    /// compiled window. `None` = no cap beyond the slot's own k
+    /// (proposal heads can't draft past the trained head count anyway).
+    pub fn cap(&self, k_max: usize) -> Option<usize> {
+        match self {
+            DraftKind::Heads => None,
+            _ => Some(k_max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::{TensorF32, TensorI32};
+
+    fn empty_scores() -> WindowScores {
+        WindowScores::full(
+            TensorF32::zeros(&[1, 1, 1, 1]),
+            TensorI32::zeros(&[1, 1, 1, 1]),
+            1,
+            1,
+        )
+    }
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for kind in DraftKind::ALL {
+            assert_eq!(DraftKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(DraftKind::parse("bogus"), None);
+        assert_eq!(DraftKind::default(), DraftKind::Heads);
+    }
+
+    #[test]
+    fn input_copy_drafts_source_remainder() {
+        let sc = empty_scores();
+        let mut d = InputCopy::new(&[10, 11, 12, 13, EOS]);
+        let mut out = Vec::new();
+        d.propose(&sc, 0, 0, &[], 3, &mut out);
+        assert_eq!(out, vec![10, 11, 12]);
+        // committed matched the first two source tokens -> cursor advances
+        out.clear();
+        d.propose(&sc, 0, 2, &[10, 11], 8, &mut out);
+        assert_eq!(out, vec![12, 13, EOS]);
+    }
+
+    #[test]
+    fn input_copy_realigns_over_substitution_and_deletion() {
+        let sc = empty_scores();
+        // output substituted 11 -> 99, then deleted 12
+        let mut d = InputCopy::new(&[10, 11, 12, 13, 14, EOS]);
+        let mut out = Vec::new();
+        d.propose(&sc, 0, 3, &[10, 99, 13], 8, &mut out);
+        assert_eq!(out, vec![14, EOS], "cursor must skip the substituted/deleted span");
+    }
+
+    #[test]
+    fn ngram_draft_walks_seeded_table_and_learns_from_commits() {
+        let sc = empty_scores();
+        let mut d = NGramDraft::new(&[5, 6, 7, 5, 6]);
+        let mut out = Vec::new();
+        // committed ends ...5 6 -> bigram (5,6)->7, then (6,7)->5, cycling
+        d.propose(&sc, 0, 2, &[5, 6], 4, &mut out);
+        assert_eq!(out, vec![7, 5, 6, 7]);
+        // newly committed tokens extend the table (first-writer-wins)
+        out.clear();
+        d.propose(&sc, 0, 4, &[5, 6, 8, 9], 2, &mut out);
+        assert!(out.is_empty(), "unknown context drafts nothing, not garbage");
+        out.clear();
+        d.propose(&sc, 0, 6, &[5, 6, 8, 9, 8, 9], 1, &mut out);
+        assert_eq!(out, vec![8], "the committed (9,8)->9.. pairs joined the table");
+    }
+
+    #[test]
+    fn draft_boxes_clone_with_state() {
+        let sc = empty_scores();
+        let mut a: Box<dyn DraftSource> = Box::new(InputCopy::new(&[10, 11, 12]));
+        let mut out = Vec::new();
+        a.propose(&sc, 0, 1, &[10], 8, &mut out);
+        let mut b = a.clone();
+        let mut out_b = Vec::new();
+        b.propose(&sc, 0, 1, &[10], 8, &mut out_b);
+        out.clear();
+        a.propose(&sc, 0, 1, &[10], 8, &mut out);
+        assert_eq!(out, out_b, "cloned source must carry the alignment cursor");
+    }
+}

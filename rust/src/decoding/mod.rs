@@ -4,6 +4,8 @@
 //!   with the §4 combined-model merge (one invocation per iteration).
 //! * [`criteria`] — §5 acceptance criteria (exact, top-k, distance, plus
 //!   the §5.3 minimum-block floor in [`state::BlockState`]).
+//! * [`draft`] — pluggable draft sources (proposal heads / input-copy /
+//!   n-gram): who proposes each block before the verify step.
 //! * [`greedy`] — the baseline every speedup is measured against.
 //! * [`beam`] — beam-search reference (Table 4 rows).
 //! * [`nat`] — simplified NAT / iterative-refinement comparators.
@@ -13,6 +15,7 @@
 pub mod beam;
 pub mod blockwise;
 pub mod criteria;
+pub mod draft;
 pub mod greedy;
 pub mod nat;
 pub mod state;
@@ -22,5 +25,6 @@ pub use blockwise::{
     DecodeResult,
 };
 pub use criteria::Criterion;
+pub use draft::{DraftKind, DraftSource, InputCopy, NGramDraft, ProposalHeads};
 pub use greedy::decode_batch as greedy_decode;
 pub use state::{BlockState, BlockStats, DecodeTrace, TraceStep};

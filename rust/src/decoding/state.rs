@@ -17,6 +17,7 @@ use crate::model::WindowScores;
 use crate::tokenizer::{BOS, EOS, PAD};
 
 use super::criteria::Criterion;
+use super::draft::{DraftSource, ProposalHeads};
 
 /// Outcome counters for one sequence.
 #[derive(Debug, Clone, Default)]
@@ -66,6 +67,12 @@ pub struct BlockState {
     pub done: bool,
     pub stats: BlockStats,
     pub trace: Option<DecodeTrace>,
+    /// where the next block's draft comes from (proposal heads unless
+    /// [`with_draft`](Self::with_draft) installed another source)
+    pub draft: Box<dyn DraftSource>,
+    /// per-step draft-length cap for external sources (`None` = the
+    /// slot's own `k`, the proposal-heads window)
+    pub draft_cap: Option<usize>,
 }
 
 impl BlockState {
@@ -81,7 +88,18 @@ impl BlockState {
             done: false,
             stats: BlockStats::default(),
             trace: None,
+            draft: Box::new(ProposalHeads),
+            draft_cap: None,
         }
+    }
+
+    /// Replace the draft source (and optionally cap per-step draft
+    /// length, e.g. at the largest compiled window when serving through
+    /// an entry family).
+    pub fn with_draft(mut self, draft: Box<dyn DraftSource>, cap: Option<usize>) -> Self {
+        self.draft = draft;
+        self.draft_cap = cap;
+        self
     }
 
     pub fn with_min_block(mut self, l: usize) -> Self {
@@ -162,20 +180,38 @@ impl BlockState {
         let mut k_hat = 0;
         if !self.proposals.is_empty() {
             // --- verify (§3): longest prefix matching head-0 under the
-            // criterion; p_s's scorer row is decoder position j+s-1.
-            let w = self.proposals.len();
+            // criterion; p_s's scorer row is decoder position j+s-1. A
+            // variable-length draft may run past the scored window; the
+            // last window position is reserved for the re-predict below,
+            // so at most window-1 draft tokens can verify this step.
+            let avail = (scores.base[b] + scores.window()).saturating_sub(j + 1);
+            let w = self.proposals.len().min(avail);
+            let proposed = self.trace.is_some().then(|| self.proposals.clone());
             for s in 1..=w {
                 let pos = j + s - 1;
                 let tok = self.proposals[s - 1];
-                let forced = s <= self.min_block; // §5.3 floor
+                // §5.3 floor — head-aligned drafts only: forcing an
+                // *unverified* external token would break exactness (for
+                // heads, forcing s=1 equals the verification outcome)
+                let forced = self.draft.head_aligned() && s <= self.min_block;
                 if forced || self.criterion.accepts(scores, b, pos, tok) {
                     k_hat = s;
                 } else {
                     break;
                 }
             }
-            debug_assert!(k_hat >= 1, "p_1 must always be accepted");
-            k_hat = k_hat.max(1);
+            debug_assert!(
+                k_hat >= 1 || !self.draft.head_aligned(),
+                "p_1 must always be accepted for head-aligned drafts"
+            );
+            if k_hat == 0 {
+                // an external draft missed outright: fall back to head-0's
+                // argmax at the frontier so every step still commits one
+                // token (exactly the greedy token under the exact
+                // criterion — exactness is preserved for any source)
+                self.proposals[0] = scores.top1(b, j, 0);
+                k_hat = 1;
+            }
 
             // --- accept: extend hypothesis, truncating at EOS
             let mut block = Vec::with_capacity(k_hat);
@@ -188,7 +224,7 @@ impl BlockState {
             }
             if let Some(tr) = self.trace.as_mut() {
                 tr.steps.push(TraceStep {
-                    proposed: self.proposals.clone(),
+                    proposed: proposed.unwrap_or_default(),
                     accepted: block.clone(),
                 });
             }
@@ -202,13 +238,21 @@ impl BlockState {
             k_hat = block.len();
         }
 
-        // --- predict (§4 merge): the same invocation scored every head at
-        // the *new* frontier j', because position j' held an accepted token.
+        // --- predict (§4 merge): ask the draft source for the next block.
+        // The default (proposal heads) reads the same invocation's scores
+        // at the *new* frontier j', which it covered because position j'
+        // held an accepted token; external sources draft from their own
+        // state, up to `draft_cap` tokens.
         let j2 = self.frontier();
-        let w2 = self.k.min(self.max_len - j2);
-        self.proposals.clear();
-        for h in 0..w2.min(scores.k) {
-            self.proposals.push(scores.top1(b, j2, h));
+        let budget = self.draft_cap.unwrap_or(self.k).min(self.max_len - j2);
+        let BlockState { draft, accepted, proposals, k, .. } = self;
+        proposals.clear();
+        draft.propose(scores, b, j2, accepted, budget, proposals);
+        if proposals.is_empty() && budget > 0 {
+            // a drained external source (input fully copied, n-gram miss)
+            // falls back to the model's own heads so the loop always
+            // advances; under the exact criterion this is still greedy
+            ProposalHeads.propose(scores, b, j2, accepted, budget.min(*k), proposals);
         }
         k_hat
     }
@@ -439,6 +483,66 @@ mod tests {
         assert_eq!(st.window(), 2);
         st.accepted = vec![1, 2, 3, 4, 5];
         assert_eq!(st.window(), 0);
+    }
+
+    #[test]
+    fn external_draft_miss_falls_back_to_head0() {
+        use crate::decoding::draft::InputCopy;
+        let mut st = BlockState::new(2, Criterion::Exact, 8)
+            .with_draft(Box::new(InputCopy::new(&[50, 51, 52])), Some(4));
+        st.proposals = vec![40, 41]; // neither matches head-0
+        let pred = vec![vec![10, 0]; 9];
+        let sc = scores_from(&pred, 2);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 1);
+        assert_eq!(st.accepted, vec![10], "fallback must commit head-0's argmax");
+        // the next draft still comes from the input-copy source
+        assert_eq!(st.proposals, vec![51, 52]);
+    }
+
+    #[test]
+    fn variable_length_draft_accepts_past_k() {
+        use crate::decoding::draft::InputCopy;
+        let src = vec![10, 11, 12, 13, 14, 15];
+        let mut st = BlockState::new(2, Criterion::Exact, 8)
+            .with_draft(Box::new(InputCopy::new(&src)), Some(6));
+        st.proposals = src.clone();
+        // head-0 at position t wants 10+t, so the whole draft verifies
+        let pred: Vec<Vec<i32>> = (0..9).map(|t| vec![10 + t as i32, 11 + t as i32]).collect();
+        let sc = scores_from(&pred, 2);
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 6, "a verified draft longer than k must be accepted whole");
+        assert_eq!(st.accepted, src);
+        // source fully copied -> the heads fallback keeps the loop fed
+        assert_eq!(st.proposals, vec![16, 17]);
+    }
+
+    #[test]
+    fn draft_longer_than_window_verifies_up_to_the_window() {
+        use crate::decoding::draft::InputCopy;
+        let src: Vec<i32> = (10..30).collect();
+        let mut st = BlockState::new(2, Criterion::Exact, 24)
+            .with_draft(Box::new(InputCopy::new(&src)), Some(20));
+        st.proposals = src.clone();
+        // windowed scores covering positions 0..=4 only (base 0, W=5):
+        // head-0 at t wants 10+t, so everything *in window* verifies
+        let pred: Vec<Vec<i32>> = (0..5).map(|t| vec![10 + t as i32, 0]).collect();
+        let t = pred.len();
+        let topt = 2;
+        let mut topi = TensorI32::zeros(&[1, t, 2, topt]);
+        let mut topv = TensorF32::zeros(&[1, t, 2, topt]);
+        for (ti, row) in pred.iter().enumerate() {
+            for h in 0..2 {
+                topi.set(&[0, ti, h, 0], row[h]);
+                topi.set(&[0, ti, h, 1], 99);
+                topv.set(&[0, ti, h, 0], 1.0);
+                topv.set(&[0, ti, h, 1], 0.5);
+            }
+        }
+        let sc = WindowScores { topv, topi, base: vec![0], k: 2, topt };
+        let k_hat = st.absorb(&sc, 0);
+        assert_eq!(k_hat, 4, "only window-1 draft tokens may verify per step");
+        assert_eq!(st.accepted, vec![10, 11, 12, 13]);
     }
 
     #[test]

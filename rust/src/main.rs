@@ -26,14 +26,14 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use blockdecode::batching::RequestQueue;
-use blockdecode::decoding::{self, BlockwiseConfig};
+use blockdecode::decoding::{self, BlockwiseConfig, DraftKind};
 use blockdecode::harness::{self, Ctx};
 use blockdecode::model::ScoringModel;
 use blockdecode::runtime::{Manifest, Runtime};
 use blockdecode::scheduler::pool::{EnginePool, PoolReport};
 use blockdecode::scheduler::{EngineConfig, KPolicy, ModelBackend};
 use blockdecode::server::{parse_criterion, Client, Decoded, Server};
-use blockdecode::testing::sim::{SimBackend, SimModel, HARD_MARKER};
+use blockdecode::testing::sim::{SimBackend, SimModel, EDIT_MARKER, HARD_MARKER};
 use blockdecode::tokenizer::{Vocab, EOS};
 use blockdecode::util::argparse::{ArgError, ArgSpec};
 use blockdecode::util::logging;
@@ -147,6 +147,13 @@ fn serve(rest: &[String]) -> Result<()> {
              or 'ewma[:ALPHA]' (adapt each row's k to its acceptance EWMA)",
         )
         .opt(
+            "draft-source",
+            "heads",
+            "default draft source for blockwise requests that don't name \
+             one: 'heads' (the trained proposal heads), 'input_copy', or \
+             'ngram' — a request's own draft field overrides",
+        )
+        .opt(
             "sim-hard-agreement",
             "0.15",
             "sim backend only: proposal-agreement rate for sources carrying \
@@ -181,6 +188,9 @@ fn serve(rest: &[String]) -> Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms as u64)),
     };
+    let default_draft = DraftKind::parse(&a.str("draft-source")).ok_or_else(|| {
+        anyhow::anyhow!("bad --draft-source (want heads, input_copy, or ngram)")
+    })?;
 
     let queue = Arc::new(RequestQueue::with_capacity(a.usize("queue-cap")?));
     let stop = Arc::new(AtomicBool::new(false));
@@ -189,6 +199,7 @@ fn serve(rest: &[String]) -> Result<()> {
     let door = Arc::new(blockdecode::metrics::Metrics::new());
     let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?
         .with_default_deadline(deadline)
+        .with_default_draft(default_draft)
         .with_door(door.clone());
     let t0 = Instant::now();
 
@@ -319,6 +330,15 @@ fn loadgen(rest: &[String]) -> Result<()> {
              'blockwise,beam,nat' interleaves all three families through the \
              same queue (families the deployment lacks fail the run)",
         )
+        .opt(
+            "mix-draft",
+            "heads",
+            "draft-source mix: comma list cycled lane-locally, e.g. \
+             'heads,input_copy,ngram'; non-heads drafts apply to blockwise \
+             lanes only (beam/NAT requests always decode draft-less) and \
+             their sources carry the sim edit marker so input-copy has a \
+             remainder worth proposing",
+        )
         .flag(
             "allow-shed",
             "tolerate 'overloaded' replies: count them instead of failing \
@@ -357,6 +377,16 @@ fn loadgen(rest: &[String]) -> Result<()> {
             "bad --mix-mode entry '{m}' (want blockwise, beam, or nat)"
         );
     }
+    // --mix-draft heads,input_copy,ngram — validated here, cycled
+    // lane-locally like the mode mix; only blockwise lanes carry a draft
+    let draft_names: Vec<String> =
+        a.str("mix-draft").split(',').map(|s| s.trim().to_string()).collect();
+    for d in &draft_names {
+        anyhow::ensure!(
+            DraftKind::parse(d).is_some(),
+            "bad --mix-draft entry '{d}' (want heads, input_copy, or ngram)"
+        );
+    }
 
     // mixed criteria: the server default plus every wire-named criterion
     const CRITERIA: [Option<&str>; 4] = [None, Some("exact"), Some("top2"), Some("dist2")];
@@ -370,6 +400,7 @@ fn loadgen(rest: &[String]) -> Result<()> {
         queued: Vec<f64>,
         khats: Vec<f64>,
         by_mode: std::collections::BTreeMap<String, usize>,
+        by_draft: std::collections::BTreeMap<String, usize>,
     }
 
     let t0 = Instant::now();
@@ -377,6 +408,7 @@ fn loadgen(rest: &[String]) -> Result<()> {
     for lane in 0..conns {
         let addr = addr.clone();
         let mode_names = mode_names.clone();
+        let draft_names = draft_names.clone();
         lanes.push(std::thread::spawn(move || -> Result<LaneStats> {
             let mut client = Client::connect(&addr)?;
             client.set_read_timeout(timeout)?;
@@ -386,19 +418,29 @@ fn loadgen(rest: &[String]) -> Result<()> {
                 if i % conns != lane {
                     continue;
                 }
-                let mut src: Vec<i32> =
-                    (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
-                if i % (mix_easy + mix_hard) >= mix_easy {
-                    src.insert(0, HARD_MARKER);
-                }
-                src.push(EOS);
                 // lane-local alternation: with i % conns fixed per lane,
                 // indexing by i would pin one criterion per connection
                 // whenever conns divides CRITERIA.len()
                 let crit = CRITERIA[(i / conns) % CRITERIA.len()];
                 let mode = mode_names[(i / conns) % mode_names.len()].as_str();
+                let draft = if mode == "blockwise" {
+                    draft_names[(i / conns) % draft_names.len()].as_str()
+                } else {
+                    "heads"
+                };
+                let mut src: Vec<i32> =
+                    (0..src_len).map(|_| rng.range(3, vocab as i64) as i32).collect();
+                if draft != "heads" {
+                    // edit-marked sources decode to near-copies of their
+                    // body, giving copy/n-gram drafts a remainder to mine
+                    src.insert(0, EDIT_MARKER);
+                } else if i % (mix_easy + mix_hard) >= mix_easy {
+                    src.insert(0, HARD_MARKER);
+                }
+                src.push(EOS);
                 let sent = Instant::now();
-                match client.try_decode(&src, Some(mode), crit, None)? {
+                let want_draft = (draft != "heads").then_some(draft);
+                match client.try_decode(&src, Some(mode), want_draft, crit, None)? {
                     Decoded::Ok(r) => {
                         out.lat.push(sent.elapsed().as_secs_f64() * 1000.0);
                         out.queued.push(r.queued_ms);
@@ -431,7 +473,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
                                 r.mode
                             );
                         }
+                        anyhow::ensure!(
+                            r.draft == draft,
+                            "request {i}: asked for draft {draft}, reply says {}",
+                            r.draft
+                        );
                         *out.by_mode.entry(r.mode.clone()).or_default() += 1;
+                        *out.by_draft.entry(r.draft.clone()).or_default() += 1;
                         out.done += 1;
                     }
                     Decoded::Overloaded { .. } => {
@@ -453,6 +501,7 @@ fn loadgen(rest: &[String]) -> Result<()> {
     let mut queued = Vec::new();
     let mut khats = Vec::new();
     let mut by_mode = std::collections::BTreeMap::<String, usize>::new();
+    let mut by_draft = std::collections::BTreeMap::<String, usize>::new();
     for (lane, h) in lanes.into_iter().enumerate() {
         let s = h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
         done += s.done;
@@ -462,6 +511,9 @@ fn loadgen(rest: &[String]) -> Result<()> {
         khats.extend(s.khats);
         for (m, c) in s.by_mode {
             *by_mode.entry(m).or_default() += c;
+        }
+        for (d, c) in s.by_draft {
+            *by_draft.entry(d).or_default() += c;
         }
     }
     // every request resolved exactly once: decoded or (tolerated) shed
@@ -490,6 +542,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
         let mut line = String::from("loadgen: by mode:");
         for (m, c) in &by_mode {
             line.push_str(&format!(" {m}={c}"));
+        }
+        println!("{line}");
+    }
+    if by_draft.keys().any(|d| d != "heads") {
+        let mut line = String::from("loadgen: by draft:");
+        for (d, c) in &by_draft {
+            line.push_str(&format!(" {d}={c}"));
         }
         println!("{line}");
     }

@@ -12,6 +12,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::batching::DecodeMode;
+use crate::decoding::draft::DraftKind;
 use crate::util::stats::{summarize, Summary};
 
 /// Per-decoder-family serving totals. `invocations` counts the model
@@ -55,6 +56,8 @@ struct Inner {
     khat_by_k: BTreeMap<usize, (u64, u64)>,
     /// per-decoder-family completion totals
     modes: BTreeMap<DecodeMode, ModeStats>,
+    /// per-draft-source completion totals (blockwise requests only)
+    drafts: BTreeMap<DraftKind, ModeStats>,
     queue_us: Vec<f64>,
     e2e_us: Vec<f64>,
     batch_fill: Vec<f64>,
@@ -92,6 +95,9 @@ pub struct Report {
     pub khat_by_k: BTreeMap<usize, (u64, u64)>,
     /// per-decoder-family completion totals (blockwise/beam/nat)
     pub modes: BTreeMap<DecodeMode, ModeStats>,
+    /// per-draft-source completion totals (heads/input_copy/ngram);
+    /// blockwise requests only — beam/NAT never draft
+    pub drafts: BTreeMap<DraftKind, ModeStats>,
     pub queue_us: Summary,
     pub e2e_us: Summary,
     pub mean_batch_fill: f64,
@@ -150,6 +156,17 @@ impl Metrics {
     pub fn on_mode_complete(&self, mode: DecodeMode, invocations: usize, tokens: usize) {
         let mut m = self.inner.lock().unwrap();
         let e = m.modes.entry(mode).or_default();
+        e.completed += 1;
+        e.invocations += invocations as u64;
+        e.tokens_out += tokens as u64;
+    }
+
+    /// Attribute one completed blockwise request to the draft source that
+    /// proposed its blocks — the per-source segmentation mixed-draft
+    /// pools report (`serve --draft-source`, `loadgen --mix-draft`).
+    pub fn on_draft_complete(&self, draft: DraftKind, invocations: usize, tokens: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.drafts.entry(draft).or_default();
         e.completed += 1;
         e.invocations += invocations as u64;
         e.tokens_out += tokens as u64;
@@ -228,6 +245,12 @@ impl Metrics {
             e.invocations += s.invocations;
             e.tokens_out += s.tokens_out;
         }
+        for (draft, s) in o.drafts {
+            let e = m.drafts.entry(draft).or_default();
+            e.completed += s.completed;
+            e.invocations += s.invocations;
+            e.tokens_out += s.tokens_out;
+        }
         m.queue_us.extend(o.queue_us);
         m.e2e_us.extend(o.e2e_us);
         m.batch_fill.extend(o.batch_fill);
@@ -255,6 +278,7 @@ impl Metrics {
             k_invocations: m.k_invocations.clone(),
             khat_by_k: m.khat_by_k.clone(),
             modes: m.modes.clone(),
+            drafts: m.drafts.clone(),
             queue_us: summarize(&m.queue_us),
             e2e_us: summarize(&m.e2e_us),
             mean_batch_fill: if m.batch_fill.is_empty() {
@@ -315,6 +339,20 @@ impl Report {
                 out.push_str(&format!(
                     " {} completed={} invocations={} tokens={}",
                     mode.label(),
+                    s.completed,
+                    s.invocations,
+                    s.tokens_out
+                ));
+            }
+        }
+        // same byte-stability rule as modes: the draft line appears only
+        // once a non-default source actually served
+        if self.drafts.keys().any(|d| *d != DraftKind::Heads) {
+            out.push_str("\nby draft:");
+            for (draft, s) in &self.drafts {
+                out.push_str(&format!(
+                    " {} completed={} invocations={} tokens={}",
+                    draft.label(),
                     s.completed,
                     s.invocations,
                     s.tokens_out
@@ -441,6 +479,31 @@ mod tests {
         assert!(text.contains("by mode: blockwise completed=1 invocations=5 tokens=12"), "{text}");
         assert!(text.contains("beam completed=2 invocations=30 tokens=13"), "{text}");
         assert!(text.contains("nat completed=1 invocations=3 tokens=7"), "{text}");
+    }
+
+    #[test]
+    fn draft_stats_fold_and_render_only_when_mixed() {
+        let a = Metrics::new();
+        a.on_draft_complete(DraftKind::Heads, 9, 14);
+        // heads-only: render must stay byte-stable (no draft line)
+        assert!(!a.report(Instant::now()).render().contains("by draft:"));
+        let b = Metrics::new();
+        b.on_draft_complete(DraftKind::InputCopy, 3, 14);
+        b.on_draft_complete(DraftKind::NGram, 6, 11);
+        b.on_draft_complete(DraftKind::InputCopy, 2, 10);
+        let fleet = Metrics::new();
+        fleet.merge(&a);
+        fleet.merge(&b);
+        let r = fleet.report(Instant::now());
+        assert_eq!(
+            r.drafts.get(&DraftKind::InputCopy),
+            Some(&ModeStats { completed: 2, invocations: 5, tokens_out: 24 })
+        );
+        assert_eq!(r.drafts.get(&DraftKind::Heads).unwrap().completed, 1);
+        let text = r.render();
+        assert!(text.contains("by draft: heads completed=1 invocations=9 tokens=14"), "{text}");
+        assert!(text.contains("input_copy completed=2 invocations=5 tokens=24"), "{text}");
+        assert!(text.contains("ngram completed=1 invocations=6 tokens=11"), "{text}");
     }
 
     #[test]

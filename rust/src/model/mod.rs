@@ -563,7 +563,8 @@ impl ScoringModel {
 /// the continuous-batching engine admits new rows through the device-side
 /// scatter and the host keeps just the geometry + cache-validity
 /// metadata; without them the session carries host mirrors and re-pins
-/// both buffers per admission (see [`ResidentState`]). The session owns
+/// both buffers per admission (see the private `ResidentState`). The
+/// session owns
 /// `Rc` handles to the runtime, weights, and decode entry points, so it
 /// is self-contained — an engine can hold it alongside the
 /// `ScoringModel` it came from.

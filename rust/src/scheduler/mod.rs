@@ -67,6 +67,17 @@
 //! the k̂-by-chosen-k breakdown land in [`Metrics`] so the policy's
 //! behavior is visible in the fleet render.
 //!
+//! **Draft sources.** Blockwise slots draft their proposal blocks through
+//! the pluggable [`DraftSource`](crate::decoding::draft::DraftSource)
+//! seam: a request's wire-selected [`DraftKind`] is installed into its
+//! [`BlockState`] at admission, so heads-drafted, input-copy and n-gram
+//! requests coexist in one batch. External (non-head-aligned) drafts may
+//! be longer than the compiled k the slot's policy picked; the per-step
+//! dispatch already sizes the window to the largest in-flight proposal
+//! run, so variable-length drafts ride the same `(B,k)` entry family
+//! with no new entry shapes. Per-source completions land in
+//! [`Metrics::on_draft_complete`] for the fleet render.
+//!
 //! The loop is generic over [`EngineBackend`]: production shards wrap a
 //! `ScoringModel` + device-resident `DecodeSession` ([`ModelBackend`]);
 //! tests and the CI serve-smoke run the *same* loop over the simulated
@@ -87,6 +98,7 @@ use crate::batching::{
     ResponseSender,
 };
 use crate::decoding::criteria::Criterion;
+use crate::decoding::draft::DraftKind;
 use crate::decoding::state::{BlockState, BlockStats};
 use crate::metrics::Metrics;
 use crate::model::{DecodeSession, ScoringModel, WindowScores};
@@ -615,8 +627,15 @@ impl<B: EngineBackend> Engine<B> {
             // from the slot's seed estimate (the shard's running k̂)
             let ewma = self.shard_ewma;
             let k0 = self.cfg.k_policy.pick(&self.ks, k_max, ewma, 0).clamp(floor, k_max);
-            let state =
+            let mut state =
                 BlockState::new(k0, criterion, max_len).with_min_block(floor.min(k0));
+            if r.draft != DraftKind::Heads {
+                // external drafts are capped at the trained k so every
+                // proposal run fits a compiled step window (the per-step
+                // dispatch then never has to clamp the verify, keeping
+                // engine trajectories identical to the offline reference)
+                state = state.with_draft(r.draft.source_for(&r.src), r.draft.cap(k_max));
+            }
             self.metrics.on_request();
             // committed/written start at 0: the first patch_row does a
             // full rebuild of the (PAD-retired) row
@@ -647,6 +666,7 @@ impl<B: EngineBackend> Engine<B> {
             let _ = r.respond.send(Response {
                 id: r.id,
                 mode: r.mode,
+                draft: r.draft,
                 tokens: vec![],
                 stats: BlockStats::default(),
                 queued: e2e,
@@ -688,6 +708,7 @@ impl<B: EngineBackend> Engine<B> {
                 let _ = r.respond.send(Response {
                     id: r.id,
                     mode: r.mode,
+                    draft: r.draft,
                     tokens,
                     stats,
                     queued,
@@ -779,6 +800,7 @@ impl<B: EngineBackend> Engine<B> {
         let _ = r.respond.send(Response {
             id: r.id,
             mode: r.mode,
+            draft: r.draft,
             tokens: vec![],
             stats: BlockStats::default(),
             queued: e2e,
@@ -878,6 +900,7 @@ impl<B: EngineBackend> Engine<B> {
                 let resp = Response {
                     id: slot.request.id,
                     mode: DecodeMode::Blockwise,
+                    draft: slot.request.draft,
                     tokens: slot.state.accepted.clone(),
                     stats: slot.state.stats.clone(),
                     queued,
@@ -888,6 +911,11 @@ impl<B: EngineBackend> Engine<B> {
                 self.metrics.on_complete(queued, e2e, resp.tokens.len());
                 self.metrics.on_mode_complete(
                     DecodeMode::Blockwise,
+                    resp.stats.invocations,
+                    resp.tokens.len(),
+                );
+                self.metrics.on_draft_complete(
+                    slot.request.draft,
                     resp.stats.invocations,
                     resp.tokens.len(),
                 );
@@ -975,7 +1003,8 @@ impl Submitter {
     /// deadline, with the push outcome and the request's cancel handle
     /// returned — the server uses the outcome to shape its `overloaded`
     /// wire reply and raises the cancel flag when the client disconnects
-    /// mid-decode.
+    /// mid-decode. Drafts from the proposal heads; see
+    /// [`Submitter::submit_request_drafted`] for an explicit source.
     pub fn submit_request(
         &self,
         src: Vec<i32>,
@@ -984,9 +1013,25 @@ impl Submitter {
         deadline: Option<Instant>,
         respond: ResponseSender,
     ) -> (u64, Push, Arc<AtomicBool>) {
+        self.submit_request_drafted(src, mode, DraftKind::Heads, criterion, deadline, respond)
+    }
+
+    /// [`Submitter::submit_request`] with an explicit [`DraftKind`] — who
+    /// proposes each block before the verify step (blockwise only; the
+    /// server rejects non-default drafts on other modes before submission).
+    pub fn submit_request_drafted(
+        &self,
+        src: Vec<i32>,
+        mode: DecodeMode,
+        draft: DraftKind,
+        criterion: Option<Criterion>,
+        deadline: Option<Instant>,
+        respond: ResponseSender,
+    ) -> (u64, Push, Arc<AtomicBool>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let r = Request::new(id, src, criterion, respond.clone())
             .with_mode(mode)
+            .with_draft(draft)
             .with_deadline(deadline);
         let cancel = r.cancel.clone();
         let push = self.queue.push(r);
@@ -996,19 +1041,26 @@ impl Submitter {
                 if let Some(door) = &self.door {
                     door.on_shed();
                 }
-                send_rejection(id, mode, &respond, "overloaded");
+                send_rejection(id, mode, draft, &respond, "overloaded");
             }
-            Push::Closed => send_rejection(id, mode, &respond, "shutting down"),
+            Push::Closed => send_rejection(id, mode, draft, &respond, "shutting down"),
         }
         (id, push, cancel)
     }
 }
 
 /// Terminal reply for a request rejected at the front door (shed/closed).
-fn send_rejection(id: u64, mode: DecodeMode, respond: &ResponseSender, why: &str) {
+fn send_rejection(
+    id: u64,
+    mode: DecodeMode,
+    draft: DraftKind,
+    respond: &ResponseSender,
+    why: &str,
+) {
     let _ = respond.send(Response {
         id,
         mode,
+        draft,
         tokens: vec![],
         stats: BlockStats::default(),
         queued: Duration::ZERO,
@@ -1023,6 +1075,7 @@ fn send_timeout(r: &Request, tokens: Vec<i32>, stats: BlockStats, queued: Durati
     let _ = r.respond.send(Response {
         id: r.id,
         mode: r.mode,
+        draft: r.draft,
         tokens,
         stats,
         queued,

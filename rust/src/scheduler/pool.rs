@@ -253,6 +253,18 @@ impl PoolReport {
                 }
                 out.push(']');
             }
+            // per-draft-source completions, same stability rule: only for
+            // shards that served a non-default draft
+            if s.drafts.keys().any(|d| *d != crate::decoding::draft::DraftKind::Heads) {
+                out.push_str(" drafts=[");
+                for (j, (draft, st)) in s.drafts.iter().enumerate() {
+                    if j > 0 {
+                        out.push(' ');
+                    }
+                    out.push_str(&format!("{}={}", draft.label(), st.completed));
+                }
+                out.push(']');
+            }
         }
         out
     }

@@ -12,11 +12,20 @@
 //! Request fields: `src` (required, non-empty, bounded by
 //! [`MAX_SRC_TOKENS`]), `mode` (optional: `"blockwise"` (default),
 //! `"beam"`, `"nat"` — the decoder family; every reply echoes it),
+//! `draft` (optional: `"heads"` (default), `"input_copy"`, `"ngram"` —
+//! the [`DraftKind`] proposing each block; blockwise only, a non-default
+//! draft on beam/NAT is a validation error; non-default replies echo it),
 //! `criterion` (optional: `"exact"`, `"topK"`, `"distE"` with K,E ≥ 1;
 //! blockwise only), `deadline_ms` (optional: per-request deadline; `0`
 //! opts out of the server's `--deadline-ms` default). Unknown fields are
 //! ignored. Beam/NAT replies carry an empty `blocks` list and `khat` 0 —
-//! those are blockwise acceptance concepts.
+//! those are blockwise acceptance concepts. A draft-less line behaves
+//! byte-identically to the pre-draft protocol: the reply carries no
+//! `draft` field and the decode is heads-drafted (unless the server set
+//! `--draft-source`, which re-defaults blockwise lines only).
+//!
+//! See `docs/ARCHITECTURE.md` for the full wire-protocol field table and
+//! the request lifecycle these fields ride.
 //!
 //! **Error vocabulary** (the `error` field of a reply):
 //! - `"overloaded"` — the bounded request queue is full; the reply carries
@@ -68,6 +77,7 @@ use anyhow::{Context, Result};
 
 use crate::batching::{response_channel, DecodeMode, Push, RequestQueue, Response};
 use crate::decoding::criteria::Criterion;
+use crate::decoding::draft::DraftKind;
 use crate::metrics::Metrics;
 use crate::scheduler::Submitter;
 use crate::util::json::Json;
@@ -106,11 +116,17 @@ fn mean_block(blocks: &[usize]) -> f64 {
     }
 }
 
-/// Serialize a response line.
+/// Serialize a response line. The `draft` field appears only for
+/// non-default sources, so pre-draft clients see byte-identical replies.
 pub fn response_json(r: &Response) -> String {
     let mut obj = vec![
         ("id", Json::Num(r.id as f64)),
         ("mode", Json::Str(r.mode.label().to_string())),
+    ];
+    if r.draft != DraftKind::Heads {
+        obj.push(("draft", Json::Str(r.draft.label().to_string())));
+    }
+    obj.extend([
         ("tokens", Json::arr_i32(&r.tokens)),
         ("invocations", Json::Num(r.stats.invocations as f64)),
         (
@@ -120,7 +136,7 @@ pub fn response_json(r: &Response) -> String {
         ("khat", Json::Num(mean_block(&r.stats.accepted_blocks))),
         ("queued_ms", Json::Num(r.queued.as_secs_f64() * 1000.0)),
         ("ms", Json::Num(r.e2e.as_secs_f64() * 1000.0)),
-    ];
+    ]);
     if let Some(e) = &r.error {
         obj.push(("error", Json::Str(e.clone())));
     }
@@ -147,6 +163,9 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     /// applied when a request line carries no `deadline_ms` field
     default_deadline: Option<Duration>,
+    /// applied when a *blockwise* request line carries no `draft` field
+    /// (`--draft-source`; beam/NAT lines always default to heads)
+    default_draft: DraftKind,
 }
 
 impl Server {
@@ -159,6 +178,7 @@ impl Server {
             queue,
             stop,
             default_deadline: None,
+            default_draft: DraftKind::Heads,
         })
     }
 
@@ -166,6 +186,14 @@ impl Server {
     /// field (`--deadline-ms`; `None` = no deadline).
     pub fn with_default_deadline(mut self, d: Option<Duration>) -> Self {
         self.default_deadline = d;
+        self
+    }
+
+    /// Default draft source for blockwise lines without a `draft` field
+    /// (`--draft-source`). Beam/NAT lines are unaffected — they always
+    /// draft from the heads default, which they never consult.
+    pub fn with_default_draft(mut self, d: DraftKind) -> Self {
+        self.default_draft = d;
         self
     }
 
@@ -206,8 +234,9 @@ impl Server {
                     let submitter = self.submitter.clone();
                     let stop = self.stop.clone();
                     let deadline = self.default_deadline;
+                    let draft = self.default_draft;
                     handles.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, submitter, deadline, stop) {
+                        if let Err(e) = handle_conn(stream, submitter, deadline, draft, stop) {
                             log::debug!("connection ended: {e:#}");
                         }
                     }));
@@ -229,6 +258,7 @@ fn handle_conn(
     stream: TcpStream,
     submitter: Arc<Submitter>,
     default_deadline: Option<Duration>,
+    default_draft: DraftKind,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     // finite read timeout so this thread can notice shutdown: a reader
@@ -248,14 +278,14 @@ fn handle_conn(
                 // lines()-based loop this replaced delivered it too)
                 let msg = line.trim();
                 if !msg.is_empty() {
-                    reply_line(&mut writer, &submitter, default_deadline, msg)?;
+                    reply_line(&mut writer, &submitter, default_deadline, default_draft, msg)?;
                 }
                 break;
             }
             Ok(_) => {
                 let msg = line.trim();
                 if !msg.is_empty() {
-                    reply_line(&mut writer, &submitter, default_deadline, msg)?;
+                    reply_line(&mut writer, &submitter, default_deadline, default_draft, msg)?;
                 }
                 line.clear();
                 // shutdown: the queue is closed and every further request
@@ -305,11 +335,12 @@ fn reply_line(
     writer: &mut TcpStream,
     submitter: &Submitter,
     default_deadline: Option<Duration>,
+    default_draft: DraftKind,
     msg: &str,
 ) -> Result<()> {
     let reply = {
         let mut probe = || client_alive(writer);
-        match serve_line(msg, submitter, default_deadline, &mut probe) {
+        match serve_line(msg, submitter, default_deadline, default_draft, &mut probe) {
             Ok(Some(s)) => s,
             // client gone mid-decode: the request was cancelled and there
             // is no one to write to
@@ -331,6 +362,7 @@ fn serve_line(
     line: &str,
     submitter: &Submitter,
     default_deadline: Option<Duration>,
+    default_draft: DraftKind,
     probe: &mut dyn FnMut() -> bool,
 ) -> Result<Option<String>> {
     let j = Json::parse(line).context("request json")?;
@@ -350,6 +382,24 @@ fn serve_line(
         }
         None => DecodeMode::Blockwise,
     };
+    let draft = match j.opt("draft") {
+        Some(d) => {
+            let s = d.as_str()?;
+            DraftKind::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("bad draft {s:?} (want heads, input_copy, or ngram)")
+            })?
+        }
+        // the server default re-defaults blockwise lines only — a beam/NAT
+        // line without a draft field must keep working under --draft-source
+        None if mode == DecodeMode::Blockwise => default_draft,
+        None => DraftKind::Heads,
+    };
+    anyhow::ensure!(
+        draft == DraftKind::Heads || mode == DecodeMode::Blockwise,
+        "draft {} requires mode blockwise (got {})",
+        draft.label(),
+        mode.label()
+    );
     let criterion = match j.opt("criterion") {
         Some(c) => Some(
             parse_criterion(c.as_str()?)
@@ -368,7 +418,8 @@ fn serve_line(
     };
 
     let (tx, rx) = response_channel();
-    let (id, push, cancel) = submitter.submit_request(src, mode, criterion, deadline, tx);
+    let (id, push, cancel) =
+        submitter.submit_request_drafted(src, mode, draft, criterion, deadline, tx);
     if let Push::Shed { depth } = push {
         // shed: reject fast with a backoff hint sized from the backlog
         return Ok(Some(overloaded_json(id, 50 + 2 * depth as u64)));
@@ -403,6 +454,9 @@ pub struct ClientResult {
     /// decoder family echoed by the server (`"blockwise"` when talking to
     /// a pre-mode server that omits the field)
     pub mode: String,
+    /// draft source echoed by the server (`"heads"` when the reply omits
+    /// the field — the default-draft wire behaviour)
+    pub draft: String,
     pub tokens: Vec<i32>,
     pub invocations: usize,
     pub blocks: Vec<usize>,
@@ -438,7 +492,7 @@ impl Client {
     }
 
     pub fn decode(&mut self, src: &[i32], criterion: Option<&str>) -> Result<ClientResult> {
-        match self.try_decode(src, None, criterion, None)? {
+        match self.try_decode(src, None, None, criterion, None)? {
             Decoded::Ok(r) => Ok(r),
             Decoded::Overloaded { retry_after_ms } => {
                 anyhow::bail!("server error: overloaded (retry after {retry_after_ms}ms)")
@@ -449,19 +503,24 @@ impl Client {
     /// One request/reply cycle. Shed replies come back as
     /// [`Decoded::Overloaded`] rather than an error so load generators can
     /// count and back off; every other `error` reply still fails. Pass
-    /// `mode` to pick the decoder family (`None` = blockwise) and
+    /// `mode` to pick the decoder family (`None` = blockwise), `draft` to
+    /// pick the draft source (`None` = the server's default), and
     /// `deadline_ms` to attach a per-request deadline (`Some(0)` opts out
     /// of the server default).
     pub fn try_decode(
         &mut self,
         src: &[i32],
         mode: Option<&str>,
+        draft: Option<&str>,
         criterion: Option<&str>,
         deadline_ms: Option<u64>,
     ) -> Result<Decoded> {
         let mut obj = vec![("src", Json::arr_i32(src))];
         if let Some(m) = mode {
             obj.push(("mode", Json::Str(m.to_string())));
+        }
+        if let Some(d) = draft {
+            obj.push(("draft", Json::Str(d.to_string())));
         }
         if let Some(c) = criterion {
             obj.push(("criterion", Json::Str(c.to_string())));
@@ -514,8 +573,13 @@ impl Client {
             .opt("mode")
             .and_then(|v| v.as_str().ok().map(str::to_string))
             .unwrap_or_else(|| "blockwise".to_string());
+        let draft = j
+            .opt("draft")
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| "heads".to_string());
         Ok(Decoded::Ok(ClientResult {
             mode,
+            draft,
             tokens: j.get("tokens")?.as_ids()?,
             invocations: j.get("invocations")?.as_usize()?,
             blocks,
@@ -552,6 +616,7 @@ mod tests {
         let r = Response {
             id: 3,
             mode: DecodeMode::Blockwise,
+            draft: DraftKind::Heads,
             tokens: vec![5, 6, 2],
             stats: BlockStats { accepted_blocks: vec![2, 1], invocations: 3 },
             queued: std::time::Duration::from_millis(1),
@@ -571,6 +636,12 @@ mod tests {
         // queue wait is reported separately from decode wall time
         let queued_ms = j.get("queued_ms").unwrap().as_f64().unwrap();
         assert!((queued_ms - 1.0).abs() < 1e-6);
+        // heads-drafted replies omit the draft field (pre-draft wire
+        // byte-identity); non-default sources echo it
+        assert!(j.opt("draft").is_none(), "heads reply must not carry a draft field");
+        let drafted = Response { draft: DraftKind::NGram, ..r };
+        let j2 = Json::parse(&response_json(&drafted)).unwrap();
+        assert_eq!(j2.get("draft").unwrap().as_str().unwrap(), "ngram");
     }
 
     #[test]
@@ -607,6 +678,12 @@ mod tests {
             "{\"src\":[1,2],\"criterion\":\"warp9\"}".to_string(),
             "{\"src\":[1,2],\"mode\":\"greedy\"}".to_string(),
             "{\"src\":[1,2],\"mode\":7}".to_string(),
+            // unknown draft source, wrong type, and a draft on a
+            // non-blockwise family — all clean error replies, no panic
+            "{\"src\":[1,2],\"draft\":\"oracle\"}".to_string(),
+            "{\"src\":[1,2],\"draft\":3}".to_string(),
+            "{\"src\":[1,2],\"draft\":\"input_copy\",\"mode\":\"beam\"}".to_string(),
+            "{\"src\":[1,2],\"draft\":\"ngram\",\"mode\":\"nat\"}".to_string(),
             "{\"src\":[1,2],\"deadline_ms\":\"soon\"}".to_string(),
             huge_src,
             // unknown fields and a non-integer id are tolerated (the
@@ -615,7 +692,7 @@ mod tests {
             "{\"id\":\"abc\",\"src\":[1,2],\"unknown\":{\"nested\":[true,null]}}".to_string(),
         ];
         for line in &cases {
-            let reply = match serve_line(line, &submitter, None, &mut probe) {
+            let reply = match serve_line(line, &submitter, None, DraftKind::Heads, &mut probe) {
                 Ok(Some(s)) => s,
                 Ok(None) => unreachable!("probe never reports the client gone"),
                 // what reply_line writes for a parse/validation error
@@ -640,11 +717,48 @@ mod tests {
         let submitter = Submitter::new(queue);
         let mut probe = || true;
         for line in ["{\"src\":[1,2],\"deadline_ms\":0}", "{\"src\":[1,2],\"deadline_ms\":250}"] {
-            let reply = serve_line(line, &submitter, None, &mut probe)
+            let reply = serve_line(line, &submitter, None, DraftKind::Heads, &mut probe)
                 .expect("well-formed line")
                 .expect("probe alive");
             let j = Json::parse(&reply).unwrap();
             assert_eq!(j.get("error").unwrap().as_str().unwrap(), "shutting down");
         }
+    }
+
+    // Old-wire back-compat: a draft-less request line parses to a Heads
+    // draft regardless of mode, named drafts round-trip on blockwise
+    // lines, and the server default re-defaults blockwise lines only.
+    // The submitter runs over an open queue so the parsed Request itself
+    // can be inspected — exactly what a pre-PR-9 client sent is exactly
+    // what the engine still sees.
+    #[test]
+    fn draft_field_parses_and_defaults_like_the_old_wire() {
+        let queue = Arc::new(RequestQueue::new());
+        let submitter = Submitter::new(queue.clone());
+        let expect_queued = |line: &str, default_draft: DraftKind| {
+            // the probe reports the client gone at the first wait tick, so
+            // serve_line cancels instead of blocking on a decode forever
+            let mut probe = || false;
+            let got = serve_line(line, &submitter, None, default_draft, &mut probe)
+                .expect("well-formed line");
+            assert!(got.is_none(), "cancelled request has nothing to write");
+            queue.try_pop(1).pop().expect("request must have been queued")
+        };
+        // draft-less line: Heads, exactly the pre-draft request shape
+        let r = expect_queued("{\"src\":[1,2]}", DraftKind::Heads);
+        assert_eq!((r.mode, r.draft), (DecodeMode::Blockwise, DraftKind::Heads));
+        // named draft on a blockwise line round-trips
+        let r = expect_queued("{\"src\":[1,2],\"draft\":\"input_copy\"}", DraftKind::Heads);
+        assert_eq!(r.draft, DraftKind::InputCopy);
+        // --draft-source default applies to draft-less blockwise lines...
+        let r = expect_queued("{\"src\":[1,2]}", DraftKind::NGram);
+        assert_eq!(r.draft, DraftKind::NGram);
+        // ...but never to beam/NAT lines, which must keep working
+        let r = expect_queued("{\"src\":[1,2],\"mode\":\"beam\"}", DraftKind::NGram);
+        assert_eq!((r.mode, r.draft), (DecodeMode::Beam, DraftKind::Heads));
+        // an explicit heads draft is also fine on any mode
+        let line = "{\"src\":[1,2],\"mode\":\"nat\",\"draft\":\"heads\"}";
+        let r = expect_queued(line, DraftKind::Heads);
+        assert_eq!((r.mode, r.draft), (DecodeMode::Nat, DraftKind::Heads));
     }
 }

@@ -12,6 +12,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::decoding::draft::DraftKind;
 use crate::model::{BlockStepper, WindowScores};
 use crate::scheduler::{EngineBackend, KPolicy};
 use crate::tokenizer::{BOS, EOS, PAD};
@@ -24,6 +25,16 @@ use crate::util::tensor::{TensorF32, TensorI32};
 /// workload (the marker participates in the conditioning hash like any
 /// other token, so easy/hard trajectories stay deterministic).
 pub const HARD_MARKER: i32 = 9999;
+
+/// Source-side sentinel marking an *edit* request: any src containing
+/// this token decodes (under p1) to a near-copy of its own body — the
+/// source tokens with sparse hash-picked substitutions — ending in EOS.
+/// This is the grammar-correction-shaped workload where input-copy
+/// drafting (Ge et al., arXiv:2205.10350) shines: long stretches of the
+/// source remainder verify in one block. Proposal heads still corrupt
+/// at the usual (1 − agreement) rate on these sources, so draft-source
+/// comparisons stay apples-to-apples.
+pub const EDIT_MARKER: i32 = 9998;
 
 /// Simulated model configuration.
 #[derive(Debug, Clone)]
@@ -84,6 +95,9 @@ impl SimModel {
 
     /// p1's greedy token given conditioning prefix (src ⊕ generated r_<=j).
     pub fn p1_next(&self, src: &[i32], prefix: &[i32]) -> i32 {
+        if src.contains(&EDIT_MARKER) {
+            return self.edit_next(src, prefix.len());
+        }
         // EOS when the hash says so, rate tuned to mean_len
         let mut cond: Vec<i32> = src.to_vec();
         cond.push(-7);
@@ -93,6 +107,29 @@ impl SimModel {
             return EOS;
         }
         3 + (h % (self.vocab as u64 - 3)) as i32
+    }
+
+    /// p1 on an [`EDIT_MARKER`] source: target position `pos` is the
+    /// source body's token there, except at sparse hash-picked positions
+    /// (~1 in 8) where it is substituted — the "correction" — and EOS one
+    /// past the body. Depends only on (src, pos), which the conditioning
+    /// prefix determines, so it is still a valid deterministic LM for the
+    /// blockwise loop.
+    fn edit_next(&self, src: &[i32], pos: usize) -> i32 {
+        let body: Vec<i32> = src
+            .iter()
+            .copied()
+            .filter(|&t| t >= 3 && t != EDIT_MARKER && t != HARD_MARKER)
+            .collect();
+        if pos >= body.len() {
+            return EOS;
+        }
+        let h = self.hash(src, 3000 + pos as u64);
+        if h % 8 == 0 {
+            3 + ((h >> 16) % (self.vocab as u64 - 3)) as i32
+        } else {
+            body[pos]
+        }
     }
 
     /// Head-h prediction at frontier `prefix` for offset h (0 = p1's next).
@@ -732,14 +769,32 @@ pub fn sim_blockwise(
     criterion: crate::decoding::Criterion,
     max_len: usize,
 ) -> (Vec<i32>, usize, Vec<usize>) {
+    sim_blockwise_drafted(model, src, criterion, max_len, DraftKind::Heads, None)
+}
+
+/// [`sim_blockwise`] with an explicit [`DraftKind`] — the offline
+/// reference for engine-served drafted requests (the same `BlockState`
+/// loop over full-length scoring). `cap` mirrors `BlockState::with_draft`'s
+/// per-step draft cap: pass `Some(model.k)` to match an engine serving
+/// through a `(B,k)` entry family, or a larger cap to let variable-length
+/// drafts verify whole remainders in one step. Returns (output tokens,
+/// invocations, accepted blocks).
+pub fn sim_blockwise_drafted(
+    model: &SimModel,
+    src: &[i32],
+    criterion: crate::decoding::Criterion,
+    max_len: usize,
+    kind: DraftKind,
+    cap: Option<usize>,
+) -> (Vec<i32>, usize, Vec<usize>) {
     use crate::decoding::state::BlockState;
     let mut st = BlockState::new(model.k, criterion, max_len);
+    if kind != DraftKind::Heads {
+        st = st.with_draft(kind.source_for(src), cap);
+    }
     let t_len = max_len + 1;
     let mut invocations = 0usize;
-    loop {
-        if st.done {
-            break;
-        }
+    while !st.done {
         let mut row = vec![0i32; t_len];
         st.build_row(&mut row);
         // trim trailing PAD for the simulator's prefix views
@@ -1143,6 +1198,61 @@ mod tests {
             "easy k̂ {} should clearly beat hard k̂ {}",
             mean[0],
             mean[1]
+        );
+    }
+
+    #[test]
+    fn edit_marker_decodes_to_a_near_copy() {
+        // the grammar-correction workload: greedy output = source body
+        // with sparse substitutions, EOS-terminated at the body's end —
+        // and exact-criterion blockwise still equals greedy on it
+        let m = SimModel::new(64, 8, 0.95, 14, 0xADA9);
+        let body: Vec<i32> = (0..16).map(|i| 3 + (i * 5) % 61).collect();
+        let mut src = vec![EDIT_MARKER];
+        src.extend(&body);
+        src.push(EOS);
+        let out = m.greedy(&src, 40);
+        assert_eq!(out.len(), body.len() + 1);
+        assert_eq!(*out.last().unwrap(), EOS);
+        let same = out.iter().zip(&body).filter(|(a, b)| a == b).count();
+        assert!(
+            same * 2 > body.len(),
+            "most positions must copy the body ({same}/{})",
+            body.len()
+        );
+        assert!(same < body.len(), "some positions must be corrected");
+        let (block, _, _) = sim_blockwise(&m, &src, Criterion::Exact, 40);
+        assert_eq!(block, out);
+    }
+
+    #[test]
+    fn input_copy_outdrafts_heads_on_edit_sources() {
+        // the draft-source seam's payoff case: on an edit-shaped source
+        // the input-copy draft verifies whole spans per invocation, while
+        // the proposal heads re-propose at most k tokens a step — and
+        // both remain byte-identical to greedy under Exact
+        use crate::decoding::draft::DraftKind;
+        let m = SimModel::new(64, 4, 0.5, 14, 0xADA9);
+        let body: Vec<i32> = (0..18).map(|i| 3 + (i * 7) % 59).collect();
+        let mut src = vec![EDIT_MARKER];
+        src.extend(&body);
+        src.push(EOS);
+        let max_len = 30;
+        let greedy = m.greedy(&src, max_len);
+        let (heads, heads_inv, _) = sim_blockwise(&m, &src, Criterion::Exact, max_len);
+        let (copy, copy_inv, _) = sim_blockwise_drafted(
+            &m,
+            &src,
+            Criterion::Exact,
+            max_len,
+            DraftKind::InputCopy,
+            Some(max_len),
+        );
+        assert_eq!(heads, greedy);
+        assert_eq!(copy, greedy, "exactness must hold for external drafts");
+        assert!(
+            copy_inv < heads_inv,
+            "input copy should need fewer invocations ({copy_inv} vs {heads_inv})"
         );
     }
 

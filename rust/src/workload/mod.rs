@@ -1,12 +1,15 @@
 //! Workloads: evaluation datasets (emitted by the python build path — the
-//! single source of truth) and synthetic request streams with realistic
-//! arrival processes for the serving benchmarks.
+//! single source of truth), a synthetic grammar-correction *edit*
+//! workload for the draft-source benchmarks, and synthetic request
+//! streams with realistic arrival processes for the serving benchmarks.
 
 use std::path::Path;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::testing::sim::EDIT_MARKER;
+use crate::tokenizer::EOS;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -50,6 +53,32 @@ impl Dataset {
 
     pub fn refs(&self) -> Vec<Vec<i32>> {
         self.rows.iter().map(|r| r.reference.clone()).collect()
+    }
+
+    /// Synthetic grammar-correction workload: each row's source is an
+    /// [`EDIT_MARKER`]-tagged token body (the sim decodes such sources to
+    /// near-copies of that body, sparse corrections aside), reference =
+    /// the clean body. This is the input-similar workload the
+    /// draft-source sweep and the `--mix-draft` smoke drill decode —
+    /// where input-copy drafting pays.
+    pub fn synthetic_edit(n: usize, vocab: usize, seed: u64) -> Self {
+        assert!(n >= 1 && vocab >= 8);
+        let mut rng = Rng::new(seed);
+        let rows = (0..n)
+            .map(|_| {
+                let len = 24 + rng.below(12);
+                let body: Vec<i32> =
+                    (0..len).map(|_| rng.range(3, vocab as i64) as i32).collect();
+                let mut src = Vec::with_capacity(len + 2);
+                src.push(EDIT_MARKER);
+                src.extend_from_slice(&body);
+                src.push(EOS);
+                let mut reference = body;
+                reference.push(EOS);
+                Row { src, reference }
+            })
+            .collect();
+        Dataset { rows }
     }
 }
 
@@ -151,6 +180,22 @@ mod tests {
         let t0 = s.items[2].0;
         let t1 = s.items[3].0;
         assert!(t1 > t0);
+    }
+
+    #[test]
+    fn synthetic_edit_rows_are_marked_and_bounded() {
+        let d = Dataset::synthetic_edit(6, 64, 9);
+        assert_eq!(d.len(), 6);
+        for r in &d.rows {
+            assert_eq!(r.src[0], EDIT_MARKER);
+            assert_eq!(*r.src.last().unwrap(), EOS);
+            // reference = clean body + EOS, src = marker + body + EOS
+            assert_eq!(&r.src[1..r.src.len() - 1], &r.reference[..r.reference.len() - 1]);
+            assert_eq!(*r.reference.last().unwrap(), EOS);
+            assert!(r.src[1..r.src.len() - 1].iter().all(|&t| (3..64).contains(&t)));
+        }
+        let a = Dataset::synthetic_edit(6, 64, 9);
+        assert_eq!(a.rows[0].src, d.rows[0].src, "generation must be deterministic");
     }
 
     #[test]

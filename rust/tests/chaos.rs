@@ -20,12 +20,15 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use blockdecode::batching::{response_channel, DecodeMode, Push, RequestQueue, ResponseReceiver};
-use blockdecode::decoding::Criterion;
+use blockdecode::decoding::{Criterion, DraftKind};
 use blockdecode::metrics::Metrics;
 use blockdecode::scheduler::pool::{EnginePool, PoolReport};
 use blockdecode::scheduler::{EngineConfig, Submitter};
 use blockdecode::testing::check;
-use blockdecode::testing::sim::{sim_beam, sim_blockwise, sim_nat, FaultPlan, SimBackend, SimModel};
+use blockdecode::testing::sim::{
+    sim_beam, sim_blockwise, sim_blockwise_drafted, sim_nat, FaultPlan, SimBackend, SimModel,
+    EDIT_MARKER,
+};
 use blockdecode::tokenizer::EOS;
 
 const SIM_BUCKET: usize = 4;
@@ -75,6 +78,36 @@ fn offline_mode(i: usize) -> Vec<i32> {
         DecodeMode::Beam => sim_beam(&m, &sim_src(i), 4, 0.6, SIM_BUCKET, SIM_TLEN).unwrap().0,
         DecodeMode::Nat => sim_nat(&m, &sim_src(i), 1, SIM_TLEN).0,
     }
+}
+
+/// Deterministic per-request draft source for the mixed-draft tests.
+fn sim_draft(i: usize) -> DraftKind {
+    DraftKind::ALL[i % 3]
+}
+
+/// Per-request source for the mixed-draft tests: heads-drafted requests
+/// keep the short generic source; copy/n-gram requests carry an
+/// edit-marked body (the sim decodes those to near-copies, giving the
+/// external drafts a remainder worth proposing).
+fn sim_draft_src(i: usize) -> Vec<i32> {
+    if sim_draft(i) == DraftKind::Heads {
+        return sim_src(i);
+    }
+    let mut src = vec![EDIT_MARKER];
+    src.extend((0..10).map(|t| 3 + ((i * 11 + t * 5) % 40) as i32));
+    src.push(EOS);
+    src
+}
+
+/// Offline reference for drafted request `i`: same draft-length cap the
+/// engine installs (`DraftKind::cap` at the trained k), so the served
+/// decode must match byte-for-byte.
+fn offline_drafted(i: usize) -> (Vec<i32>, usize, Vec<usize>) {
+    let m = sim_model();
+    let crit = sim_criterion(i).unwrap_or(Criterion::Exact);
+    let kind = sim_draft(i);
+    let cap = kind.cap(m.k);
+    sim_blockwise_drafted(&m, &sim_draft_src(i), crit, SIM_TLEN - 1, kind, cap)
 }
 
 /// Silence panic payloads from planned crashes (they carry the
@@ -475,6 +508,83 @@ fn mixed_mode_pool_serves_all_three_families_byte_identically() {
     assert_eq!(per(DecodeMode::Beam), 8, "beam completions miscounted");
     assert_eq!(per(DecodeMode::Nat), 8, "NAT completions miscounted");
     assert!(report.render().contains("by mode:"), "mixed fleet render lost the family line");
+}
+
+/// The acceptance bar for pluggable draft sources: a 2-shard sim pool
+/// fed an interleaved heads/input-copy/n-gram blockwise workload through
+/// one queue serves every request byte-identically to the offline
+/// `sim_blockwise_drafted` reference (external drafts capped at the
+/// trained k, exactly as the engine installs them), echoes the draft on
+/// every reply, keeps the per-block accounting consistent, and accounts
+/// completions per draft source in the merged report.
+#[test]
+fn mixed_draft_pool_serves_all_three_sources_byte_identically() {
+    quiet_injected_panics();
+    let t0 = Instant::now();
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitter = Submitter::new(queue.clone());
+
+    let n = 24usize; // cycles i % 3 -> 8 requests per draft source
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let (tx, rx) = response_channel();
+            submitter.submit_request_drafted(
+                sim_draft_src(i),
+                DecodeMode::Blockwise,
+                sim_draft(i),
+                sim_criterion(i),
+                None,
+                tx,
+            );
+            (i, rx)
+        })
+        .collect();
+
+    let pool = EnginePool::spawn(
+        2,
+        |_| Ok(SimBackend::new(sim_model(), SIM_BUCKET, SIM_TLEN)),
+        EngineConfig::default(),
+        queue.clone(),
+        stop,
+    )
+    .unwrap();
+
+    for (i, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("request {i} never got a terminal reply"));
+        assert!(resp.error.is_none(), "request {i} failed: {:?}", resp.error);
+        assert_eq!(resp.draft, sim_draft(i), "request {i}: draft echo is wrong");
+        let (toks, _, blocks) = offline_drafted(i);
+        assert_eq!(
+            resp.tokens,
+            toks,
+            "request {i} ({}): pool-served tokens differ from the offline drafted reference",
+            resp.draft.label()
+        );
+        assert_eq!(
+            resp.stats.accepted_blocks, blocks,
+            "request {i} ({}): per-block acceptance trace diverged",
+            resp.draft.label()
+        );
+        assert_eq!(
+            resp.stats.accepted_blocks.iter().sum::<usize>(),
+            resp.tokens.len(),
+            "request {i}: accepted blocks don't sum to the emitted tokens"
+        );
+    }
+
+    let shard_metrics = pool.shard_metrics().to_vec();
+    pool.drain().unwrap();
+    let report = PoolReport::from_shards(&shard_metrics, t0);
+    let f = &report.fleet;
+    assert_eq!(f.completed as usize, n);
+    let per = |d: DraftKind| f.drafts.get(&d).map(|s| s.completed).unwrap_or(0);
+    assert_eq!(per(DraftKind::Heads), 8, "heads completions miscounted");
+    assert_eq!(per(DraftKind::InputCopy), 8, "input-copy completions miscounted");
+    assert_eq!(per(DraftKind::NGram), 8, "n-gram completions miscounted");
+    assert!(report.render().contains("by draft:"), "mixed fleet render lost the draft line");
 }
 
 /// Mixed-mode chaos: every first-incarnation shard crashes on an early

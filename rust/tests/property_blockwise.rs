@@ -3,9 +3,12 @@
 //! these sweep hundreds of cases quickly.
 
 use blockdecode::decoding::state::BlockState;
-use blockdecode::decoding::{decode_rows, Criterion};
+use blockdecode::decoding::{decode_rows, Criterion, DraftKind};
 use blockdecode::scheduler::KPolicy;
-use blockdecode::testing::sim::{sim_blockwise, sim_policy_run, SimModel, SimSession, HARD_MARKER};
+use blockdecode::testing::sim::{
+    sim_blockwise, sim_blockwise_drafted, sim_policy_run, SimModel, SimSession, EDIT_MARKER,
+    HARD_MARKER,
+};
 use blockdecode::testing::{check, gen_src};
 use blockdecode::tokenizer::EOS;
 
@@ -351,6 +354,44 @@ fn prop_stale_cache_bug_is_caught() {
         });
         assert!(diverged > 0, "stale-cache knob went undetected at agreement {agreement}");
     }
+}
+
+/// Tentpole invariant of the draft-source seam: under `Criterion::Exact`
+/// the decoded tokens are **draft-invariant** — input-copy and n-gram
+/// drafts produce byte-identical outputs to the proposal heads (all equal
+/// to greedy), across random models, draft caps, and both plain and
+/// edit-marked sources. Only acceptance (the invocation count) may
+/// differ; every drafted run still commits at least one token per
+/// invocation after bootstrap.
+#[test]
+fn prop_draft_source_exactness() {
+    check("draft==greedy", 60, |rng| {
+        let k = 2 + rng.below(7);
+        let agreement = rng.f64();
+        let vocab = 30 + rng.below(120);
+        let mean_len = 4 + rng.below(14);
+        let m = SimModel::new(vocab, k, agreement, mean_len, rng.next_u64());
+        let mut src = gen_src(rng, vocab, 10);
+        if rng.bool(0.5) {
+            // the edit-shaped workload external drafts are built for
+            src.insert(0, EDIT_MARKER);
+        }
+        let max_len = 8 + rng.below(20);
+        let greedy = m.greedy(&src, max_len);
+        for kind in DraftKind::ALL {
+            let cap = match rng.below(3) {
+                0 => None,
+                1 => Some(m.k),
+                _ => Some(max_len),
+            };
+            let (out, inv, blocks) =
+                sim_blockwise_drafted(&m, &src, Criterion::Exact, max_len, kind, cap);
+            assert_eq!(out, greedy, "{} drafted output != greedy", kind.label());
+            assert!(inv <= greedy.len() + 1, "{}: inv {inv} > len+1", kind.label());
+            let total: usize = blocks.iter().sum();
+            assert_eq!(total, out.len(), "{}: accepted blocks don't sum", kind.label());
+        }
+    });
 }
 
 /// EOS handling: the hypothesis never contains tokens after EOS.

@@ -29,6 +29,15 @@
 #    fleet report must segment completions per family — proof beam and
 #    NAT are served by the same pool, not a side channel.
 #
+# 5. Mixed-draft drill — reboot and drive `loadgen --mix-draft
+#    heads,input_copy,ngram`: blockwise requests cycle all three draft
+#    sources through one pool (non-heads lanes carry edit-marked sources
+#    so input-copy has a remainder worth proposing), the loadgen asserts
+#    every reply echoes its requested draft, and the fleet report must
+#    segment completions per draft source — proof the pluggable draft
+#    seam is wired end-to-end, wire field to per-slot proposer to
+#    metrics.
+#
 # Used as a CI step after the tier-1 build (the release binary is already
 # present there); runs standalone too and builds the binary if missing.
 #
@@ -56,6 +65,8 @@ ADAPTIVE_LOG="${LOG%.log}-adaptive.log"
 ADAPTIVE_LOADGEN_LOG="${LOG%.log}-adaptive-loadgen.log"
 MIXED_LOG="${LOG%.log}-mixed.log"
 MIXED_LOADGEN_LOG="${LOG%.log}-mixed-loadgen.log"
+DRAFT_LOG="${LOG%.log}-draft.log"
+DRAFT_LOADGEN_LOG="${LOG%.log}-draft-loadgen.log"
 
 SERVE_PID=""
 BG_PID=""
@@ -73,6 +84,8 @@ cleanup() {
     cat "$ADAPTIVE_LOG" 2>/dev/null || true
     echo "---- mixed-mode serve log ----"
     cat "$MIXED_LOG" 2>/dev/null || true
+    echo "---- mixed-draft serve log ----"
+    cat "$DRAFT_LOG" 2>/dev/null || true
 }
 trap cleanup EXIT
 
@@ -251,4 +264,40 @@ grep -Eq "by mode: blockwise completed=80 .* beam completed=80 .* nat completed=
     echo "serve-smoke: fleet report lacks per-family completion segmentation" >&2
     exit 1
 }
-echo "serve-smoke: OK (drain + shed + ${DISTINCT} adaptive ks + 3 decoder families mixed)"
+echo "serve-smoke: phase 4 OK (3 decoder families mixed through one queue)"
+
+# ---- phase 5: mixed draft sources through one pool ----
+# The loadgen cycles heads/input_copy/ngram lane-locally over blockwise
+# requests and fails the run itself if any reply comes back under the
+# wrong draft source — so the assertions here need the loadgen's
+# per-draft tally and the server-side per-draft segmentation.
+SERVE_PID=""
+boot_server "$DRAFT_LOG" --engines 2
+echo "serve-smoke: mixed-draft drill on $ADDR (heads,input_copy,ngram interleaved)"
+
+"$BIN" loadgen --addr "$ADDR" --n 240 --conns 4 --mix-draft heads,input_copy,ngram \
+    | tee "$DRAFT_LOADGEN_LOG"
+grep -q "loadgen: by draft: heads=80 input_copy=80 ngram=80" "$DRAFT_LOADGEN_LOG" || {
+    echo "serve-smoke: loadgen did not complete 80 requests per draft source" >&2
+    exit 1
+}
+
+kill -INT "$SERVE_PID"
+RC=0
+wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [ "$RC" -ne 0 ]; then
+    echo "serve-smoke: mixed-draft serve exited rc=$RC after SIGINT (expected clean drain)" >&2
+    exit 1
+fi
+grep -q "drained 2 engine shards cleanly" "$DRAFT_LOG" || {
+    echo "serve-smoke: missing clean-drain line after mixed-draft SIGINT" >&2
+    exit 1
+}
+# the fleet report must segment completions per draft source, all three
+grep -Eq "by draft: heads completed=80 .* input_copy completed=80 .* ngram completed=80" \
+    "$DRAFT_LOG" || {
+    echo "serve-smoke: fleet report lacks per-draft completion segmentation" >&2
+    exit 1
+}
+echo "serve-smoke: OK (drain + shed + ${DISTINCT} adaptive ks + 3 families + 3 draft sources)"

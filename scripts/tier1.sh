@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verification: build + tests, then the hygiene gates that keep
-# bench/example code from silently rotting (fmt, clippy -D warnings, and a
-# compile-only pass over every bench target), then the python-side tests
+# bench/example code from silently rotting (fmt, clippy -D warnings, a
+# warning-clean rustdoc build so module docs and intra-doc links stay
+# honest, and a compile-only pass over every bench target), then the
+# python-side tests
 # covering the aot.py <-> manifest.rs entry-point contract (skipped when
 # the python deps are not installed in this environment).
 #
@@ -22,7 +24,7 @@ cd "$(dirname "$0")/.."
 # __pycache__/*.pyc files once rode along with a PR because nothing
 # checked). Fails fast so they cannot come back.
 if command -v git >/dev/null 2>&1 && git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
-    tracked_junk=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$|^rust/target/' || true)
+    tracked_junk=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$|^rust/target/|(^|/)\.pytest_cache/' || true)
     if [ -n "$tracked_junk" ]; then
         echo "tier1: tracked build artifacts found (git rm them):" >&2
         echo "$tracked_junk" >&2
@@ -40,6 +42,7 @@ cargo test -q
 
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo bench --no-run
 
 cd ..
