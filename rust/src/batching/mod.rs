@@ -23,6 +23,23 @@
 //! - [`RequestQueue::requeue`] hands a crashed shard's in-flight requests
 //!   back to the front of the queue (capacity-exempt: they were already
 //!   admitted once) so another shard can finish them.
+//!
+//! **Streaming progress lane.** A response channel built with
+//! [`streaming_channel`] carries a second, in-order lane of [`Progress`]
+//! events next to the terminal [`Response`]: the engine emits
+//! [`Progress::Block`] every time it commits accepted tokens for the
+//! request (the server turns each into a `{"event":"block"}` wire frame)
+//! and [`Progress::Restart`] when a crashed shard hands the request back
+//! for a from-scratch replay. The contract the streaming tests pin down:
+//! every progress event is sent *before* the terminal reply, so a
+//! consumer that drains [`ResponseReceiver::try_progress`] after
+//! receiving the terminal response sees the complete, ordered frame
+//! sequence — and for a successful decode the concatenated
+//! [`Progress::Block`] tokens (after the last [`Progress::Restart`], if
+//! any) are byte-identical to the terminal response's tokens. Channels
+//! from [`response_channel`] have no progress lane; engines skip the
+//! per-block clone entirely ([`ResponseSender::wants_progress`]), so
+//! non-streaming requests pay nothing.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -34,14 +51,35 @@ use crate::decoding::criteria::Criterion;
 use crate::decoding::draft::DraftKind;
 use crate::decoding::state::BlockStats;
 
+/// An incremental progress event on a streaming response channel,
+/// emitted by the engine *before* the terminal [`Response`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Progress {
+    /// The engine committed `tokens` for this request (one accept
+    /// substep's newly-accepted suffix; a whole decode for beam/NAT
+    /// direct serving). `khat_milli` is the request's running mean
+    /// accepted block size ×1000 (integer so the event stays `Eq`;
+    /// 0 when no blocks have landed — beam/NAT frames always carry 0).
+    Block { tokens: Vec<i32>, khat_milli: u64 },
+    /// A crashed shard handed the request back to the queue: decoding
+    /// restarts from scratch (deterministically, so the replayed frames
+    /// re-derive the same tokens) and every previously streamed block
+    /// must be discarded by the consumer.
+    Restart,
+}
+
 /// Sender half of a response channel that also tracks whether the
 /// receiving side is still listening. Engines use
 /// [`ResponseSender::is_disconnected`] to retire slots whose client
 /// abandoned the request (dropped the receiver) instead of spending
-/// model invocations on a reply nobody will read.
+/// model invocations on a reply nobody will read. Channels built with
+/// [`streaming_channel`] additionally carry an in-order [`Progress`]
+/// lane the engine feeds as blocks are committed.
 #[derive(Debug, Clone)]
 pub struct ResponseSender {
     tx: mpsc::Sender<Response>,
+    /// streaming progress lane; `None` for [`response_channel`] pairs
+    progress: Option<mpsc::Sender<Progress>>,
     alive: Arc<AtomicBool>,
 }
 
@@ -49,14 +87,34 @@ pub struct ResponseSender {
 #[derive(Debug)]
 pub struct ResponseReceiver {
     rx: mpsc::Receiver<Response>,
+    /// streaming progress lane; `None` for [`response_channel`] pairs
+    progress: Option<mpsc::Receiver<Progress>>,
     alive: Arc<AtomicBool>,
 }
 
-/// A one-shot response channel with liveness tracking.
+/// A one-shot response channel with liveness tracking (no progress lane
+/// — the engine skips per-block emission entirely for these requests).
 pub fn response_channel() -> (ResponseSender, ResponseReceiver) {
     let (tx, rx) = mpsc::channel();
     let alive = Arc::new(AtomicBool::new(true));
-    (ResponseSender { tx, alive: alive.clone() }, ResponseReceiver { rx, alive })
+    (
+        ResponseSender { tx, progress: None, alive: alive.clone() },
+        ResponseReceiver { rx, progress: None, alive },
+    )
+}
+
+/// A [`response_channel`] that also carries the streaming [`Progress`]
+/// lane: the engine emits a [`Progress::Block`] per committed block and a
+/// [`Progress::Restart`] per crashed-shard replay, all strictly before
+/// the terminal [`Response`].
+pub fn streaming_channel() -> (ResponseSender, ResponseReceiver) {
+    let (tx, rx) = mpsc::channel();
+    let (ptx, prx) = mpsc::channel();
+    let alive = Arc::new(AtomicBool::new(true));
+    (
+        ResponseSender { tx, progress: Some(ptx), alive: alive.clone() },
+        ResponseReceiver { rx, progress: Some(prx), alive },
+    )
 }
 
 impl ResponseSender {
@@ -68,6 +126,33 @@ impl ResponseSender {
     /// Has the client dropped its [`ResponseReceiver`]?
     pub fn is_disconnected(&self) -> bool {
         !self.alive.load(Ordering::Acquire)
+    }
+
+    /// Does this channel carry a progress lane? Engines consult this
+    /// before cloning committed tokens for a frame — non-streaming
+    /// requests never pay for emission.
+    pub fn wants_progress(&self) -> bool {
+        self.progress.is_some()
+    }
+
+    /// Emit a committed block on the progress lane (no-op without one).
+    /// `khat` is the request's running mean accepted block size; delivery
+    /// is best-effort — a dropped receiver is noticed via the abandonment
+    /// flag, not here.
+    pub fn send_block(&self, tokens: &[i32], khat: f64) {
+        if let Some(p) = &self.progress {
+            let khat_milli = (khat.max(0.0) * 1000.0).round() as u64;
+            let _ = p.send(Progress::Block { tokens: tokens.to_vec(), khat_milli });
+        }
+    }
+
+    /// Emit a replay marker on the progress lane (no-op without one):
+    /// the request went back to the queue and its streamed blocks so far
+    /// are void.
+    pub fn send_restart(&self) {
+        if let Some(p) = &self.progress {
+            let _ = p.send(Progress::Restart);
+        }
     }
 }
 
@@ -82,6 +167,19 @@ impl ResponseReceiver {
 
     pub fn try_recv(&self) -> Result<Response, TryRecvError> {
         self.rx.try_recv()
+    }
+
+    /// Was this receiver built by [`streaming_channel`]?
+    pub fn streaming(&self) -> bool {
+        self.progress.is_some()
+    }
+
+    /// Drain one pending progress event (non-blocking); `None` when the
+    /// lane is empty or this is not a streaming channel. Events arrive
+    /// strictly before the terminal reply, so draining after
+    /// [`ResponseReceiver::try_recv`] succeeds yields the full sequence.
+    pub fn try_progress(&self) -> Option<Progress> {
+        self.progress.as_ref().and_then(|p| p.try_recv().ok())
     }
 }
 
@@ -577,6 +675,67 @@ mod tests {
         assert!(!tx.is_disconnected());
         drop(rx);
         assert!(tx.is_disconnected());
+    }
+
+    #[test]
+    fn plain_channel_has_no_progress_lane() {
+        let (tx, rx) = response_channel();
+        assert!(!tx.wants_progress());
+        assert!(!rx.streaming());
+        // emission is a no-op, not a panic — engines may call it blindly
+        tx.send_block(&[1, 2], 2.0);
+        tx.send_restart();
+        assert_eq!(rx.try_progress(), None);
+    }
+
+    #[test]
+    fn progress_lane_orders_blocks_before_terminal() {
+        let (tx, rx) = streaming_channel();
+        assert!(tx.wants_progress());
+        assert!(rx.streaming());
+        tx.send_block(&[5, 6], 2.0);
+        tx.send_restart();
+        tx.send_block(&[5, 6, 7], 1.5);
+        let resp = Response {
+            id: 1,
+            mode: DecodeMode::Blockwise,
+            draft: DraftKind::Heads,
+            tokens: vec![5, 6, 7],
+            stats: BlockStats::default(),
+            queued: Duration::ZERO,
+            e2e: Duration::ZERO,
+            requeues: 1,
+            error: None,
+        };
+        assert!(tx.send(resp));
+        // the consumer pattern the server relies on: receive the terminal,
+        // then drain the lane — every frame emitted before it is there, in
+        // order, with khat carried as milli-units
+        let got = rx.recv().unwrap();
+        assert_eq!(got.tokens, vec![5, 6, 7]);
+        let frames: Vec<Progress> = std::iter::from_fn(|| rx.try_progress()).collect();
+        assert_eq!(
+            frames,
+            vec![
+                Progress::Block { tokens: vec![5, 6], khat_milli: 2000 },
+                Progress::Restart,
+                Progress::Block { tokens: vec![5, 6, 7], khat_milli: 1500 },
+            ]
+        );
+        // drained: the lane is empty, not wedged
+        assert_eq!(rx.try_progress(), None);
+    }
+
+    #[test]
+    fn streaming_receiver_drop_still_flips_disconnected() {
+        let (tx, rx) = streaming_channel();
+        assert!(!tx.is_disconnected());
+        drop(rx);
+        assert!(tx.is_disconnected());
+        // emission into the void stays a silent no-op (abandonment is
+        // noticed via the flag, never via a send error)
+        tx.send_block(&[9], 1.0);
+        tx.send_restart();
     }
 
     #[test]

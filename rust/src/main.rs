@@ -32,7 +32,7 @@ use blockdecode::model::ScoringModel;
 use blockdecode::runtime::{Manifest, Runtime};
 use blockdecode::scheduler::pool::{EnginePool, PoolReport};
 use blockdecode::scheduler::{EngineConfig, KPolicy, ModelBackend};
-use blockdecode::server::{parse_criterion, Client, Decoded, Server};
+use blockdecode::server::{parse_criterion, Client, Decoded, Server, StreamFrame};
 use blockdecode::testing::sim::{SimBackend, SimModel, EDIT_MARKER, HARD_MARKER};
 use blockdecode::tokenizer::{Vocab, EOS};
 use blockdecode::util::argparse::{ArgError, ArgSpec};
@@ -169,6 +169,19 @@ fn serve(rest: &[String]) -> Result<()> {
             "nat-passes",
             "1",
             "refinement passes after the initial shot for mode=nat requests",
+        )
+        .opt(
+            "rate-limit",
+            "0",
+            "per-client token-bucket rate in requests/second (0 = unlimited); \
+             a peer over budget gets the same overloaded + retry_after_ms \
+             reply a queue shed produces",
+        )
+        .opt(
+            "max-conns",
+            "1024",
+            "concurrent connection cap; accepts beyond it are answered \
+             overloaded and closed immediately",
         );
     let a = spec.parse(rest)?;
 
@@ -197,10 +210,11 @@ fn serve(rest: &[String]) -> Result<()> {
     // front-door registry: load sheds are counted here (a shed request
     // never reaches any shard) and folded into the fleet report
     let door = Arc::new(blockdecode::metrics::Metrics::new());
-    let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?
-        .with_default_deadline(deadline)
-        .with_default_draft(default_draft)
-        .with_door(door.clone());
+    let rate_limit = a.str("rate-limit").parse::<f64>().ok();
+    anyhow::ensure!(
+        rate_limit.is_some_and(|r| r >= 0.0),
+        "--rate-limit must be a nonnegative rate in requests/second"
+    );
     let t0 = Instant::now();
 
     // each shard constructs its backend on its own thread (the PJRT
@@ -246,6 +260,15 @@ fn serve(rest: &[String]) -> Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}' (expected 'device' or 'sim')"),
     };
+    // bind after the pool exists so live `GET /metrics` scrapes can merge
+    // the shard registries while the fleet serves
+    let server = Server::bind(&a.str("addr"), queue.clone(), stop.clone())?
+        .with_default_deadline(deadline)
+        .with_default_draft(default_draft)
+        .with_door(door.clone())
+        .with_metrics(pool.shard_metrics().to_vec(), t0)
+        .with_rate_limit(rate_limit.unwrap())
+        .with_max_conns(a.usize("max-conns")?);
     println!(
         "serving {} ({} engine shard{}) on {}",
         label,
@@ -343,6 +366,13 @@ fn loadgen(rest: &[String]) -> Result<()> {
             "allow-shed",
             "tolerate 'overloaded' replies: count them instead of failing \
              (overload drills against a capacity-bounded queue)",
+        )
+        .flag(
+            "stream",
+            "send every request with stream=true and assert the frame \
+             contract: block frames after the last restart concatenate to \
+             exactly the terminal tokens, the final frame's running k-hat \
+             matches the reply, and beam/NAT stream exactly one frame",
         );
     let a = spec.parse(rest)?;
     let addr = a.str("addr");
@@ -356,6 +386,7 @@ fn loadgen(rest: &[String]) -> Result<()> {
         ms => Some(Duration::from_millis(ms as u64)),
     };
     let allow_shed = a.flag("allow-shed");
+    let stream = a.flag("stream");
     // --mix easy:hard — request i is hard when its residue mod (easy+hard)
     // falls in the hard band, a deterministic interleave every lane agrees
     // on (lanes partition requests by i % conns)
@@ -396,6 +427,8 @@ fn loadgen(rest: &[String]) -> Result<()> {
     struct LaneStats {
         done: usize,
         shed: usize,
+        frames: usize,
+        restarts: usize,
         lat: Vec<f64>,
         queued: Vec<f64>,
         khats: Vec<f64>,
@@ -440,7 +473,14 @@ fn loadgen(rest: &[String]) -> Result<()> {
                 src.push(EOS);
                 let sent = Instant::now();
                 let want_draft = (draft != "heads").then_some(draft);
-                match client.try_decode(&src, Some(mode), want_draft, crit, None)? {
+                let (reply, frames) = if stream {
+                    let (reply, frames) =
+                        client.try_decode_stream(&src, Some(mode), want_draft, crit, None)?;
+                    (reply, Some(frames))
+                } else {
+                    (client.try_decode(&src, Some(mode), want_draft, crit, None)?, None)
+                };
+                match reply {
                     Decoded::Ok(r) => {
                         out.lat.push(sent.elapsed().as_secs_f64() * 1000.0);
                         out.queued.push(r.queued_ms);
@@ -478,6 +518,52 @@ fn loadgen(rest: &[String]) -> Result<()> {
                             "request {i}: asked for draft {draft}, reply says {}",
                             r.draft
                         );
+                        if let Some(frames) = &frames {
+                            // streamed frame contract: the block frames after
+                            // the last restart concatenate to exactly the
+                            // terminal tokens (the byte-identity invariant)
+                            let cut = frames
+                                .iter()
+                                .rposition(|f| matches!(f, StreamFrame::Restart))
+                                .map(|p| p + 1)
+                                .unwrap_or(0);
+                            let mut cat = Vec::new();
+                            let mut last_khat = 0.0;
+                            for f in &frames[cut..] {
+                                if let StreamFrame::Block { tokens, khat } = f {
+                                    cat.extend_from_slice(tokens);
+                                    last_khat = *khat;
+                                }
+                            }
+                            anyhow::ensure!(
+                                cat == r.tokens,
+                                "request {i}: streamed blocks do not \
+                                 concatenate to the terminal tokens"
+                            );
+                            if r.mode == "blockwise" {
+                                // frames carry k̂ quantised to 1/1000
+                                anyhow::ensure!(
+                                    (last_khat - r.khat).abs() < 1e-3,
+                                    "request {i}: final frame khat {last_khat} \
+                                     disagrees with terminal khat {}",
+                                    r.khat
+                                );
+                            } else {
+                                anyhow::ensure!(
+                                    frames.len() == 1,
+                                    "request {i}: {} must stream exactly one \
+                                     frame, got {}",
+                                    r.mode,
+                                    frames.len()
+                                );
+                            }
+                            out.frames += frames.len();
+                            for f in frames {
+                                if matches!(f, StreamFrame::Restart) {
+                                    out.restarts += 1;
+                                }
+                            }
+                        }
                         *out.by_mode.entry(r.mode.clone()).or_default() += 1;
                         *out.by_draft.entry(r.draft.clone()).or_default() += 1;
                         out.done += 1;
@@ -497,6 +583,8 @@ fn loadgen(rest: &[String]) -> Result<()> {
     }
     let mut done = 0usize;
     let mut shed = 0usize;
+    let mut frames = 0usize;
+    let mut restarts = 0usize;
     let mut lat = Vec::new();
     let mut queued = Vec::new();
     let mut khats = Vec::new();
@@ -506,6 +594,8 @@ fn loadgen(rest: &[String]) -> Result<()> {
         let s = h.join().map_err(|_| anyhow::anyhow!("client lane {lane} panicked"))??;
         done += s.done;
         shed += s.shed;
+        frames += s.frames;
+        restarts += s.restarts;
         lat.extend(s.lat);
         queued.extend(s.queued);
         khats.extend(s.khats);
@@ -551,6 +641,9 @@ fn loadgen(rest: &[String]) -> Result<()> {
             line.push_str(&format!(" {d}={c}"));
         }
         println!("{line}");
+    }
+    if stream {
+        println!("loadgen: streamed: frames={frames} restarts={restarts}");
     }
     if shed > 0 {
         println!("loadgen: shed replies: {shed}");

@@ -380,6 +380,66 @@ impl Report {
         }
         out
     }
+
+    /// Machine-readable twin of [`Report::render`]: one `name value` pair
+    /// per line, stable snake_case names, counters as bare integers and
+    /// derived values with fixed decimals — the `GET /metrics` body a
+    /// scraper polls while the server runs (docs/OPERATIONS.md documents
+    /// every field). Scalar lines always appear, in a fixed order;
+    /// segmented lines (`mode_*`, `draft_*`, `accept_block_*`,
+    /// `k_invocations_*`, `khat_k_*`) appear once their segment has data,
+    /// and then only for keys actually observed.
+    pub fn render_flat(&self) -> String {
+        let secs = self.wall.as_secs_f64().max(1e-9);
+        let mut out = String::new();
+        for (name, v) in [
+            ("requests", self.requests),
+            ("completed", self.completed),
+            ("failed", self.failed),
+            ("shed", self.shed),
+            ("expired", self.expired),
+            ("cancelled", self.cancelled),
+            ("requeued", self.requeued),
+            ("restarts", self.restarts),
+            ("tokens_out", self.tokens_out),
+            ("invocations", self.invocations),
+        ] {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        out.push_str(&format!("req_per_s {:.2}\n", self.completed as f64 / secs));
+        out.push_str(&format!("tok_per_s {:.1}\n", self.tokens_out as f64 / secs));
+        out.push_str(&format!("mean_batch_fill {:.2}\n", self.mean_batch_fill));
+        out.push_str(&format!("khat {:.4}\n", self.mean_accepted_block));
+        out.push_str(&format!("queue_p50_ms {:.3}\n", self.queue_us.p50 / 1000.0));
+        out.push_str(&format!("queue_p90_ms {:.3}\n", self.queue_us.p90 / 1000.0));
+        out.push_str(&format!("queue_p99_ms {:.3}\n", self.queue_us.p99 / 1000.0));
+        out.push_str(&format!("e2e_p50_ms {:.3}\n", self.e2e_us.p50 / 1000.0));
+        out.push_str(&format!("e2e_p90_ms {:.3}\n", self.e2e_us.p90 / 1000.0));
+        out.push_str(&format!("e2e_p99_ms {:.3}\n", self.e2e_us.p99 / 1000.0));
+        out.push_str(&format!("uptime_s {:.1}\n", self.wall.as_secs_f64()));
+        for (mode, s) in &self.modes {
+            let m = mode.label();
+            out.push_str(&format!("mode_{m}_completed {}\n", s.completed));
+            out.push_str(&format!("mode_{m}_invocations {}\n", s.invocations));
+            out.push_str(&format!("mode_{m}_tokens_out {}\n", s.tokens_out));
+        }
+        for (draft, s) in &self.drafts {
+            let d = draft.label();
+            out.push_str(&format!("draft_{d}_completed {}\n", s.completed));
+            out.push_str(&format!("draft_{d}_invocations {}\n", s.invocations));
+            out.push_str(&format!("draft_{d}_tokens_out {}\n", s.tokens_out));
+        }
+        for (k, n) in &self.accept_hist {
+            out.push_str(&format!("accept_block_{k} {n}\n"));
+        }
+        for (k, n) in &self.k_invocations {
+            out.push_str(&format!("k_invocations_{k} {n}\n"));
+        }
+        for k in self.khat_by_k.keys() {
+            out.push_str(&format!("khat_k_{k} {:.4}\n", self.khat_at(*k)));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -513,6 +573,47 @@ mod tests {
         assert_eq!(r.mean_accepted_block, 0.0);
         assert!(r.accept_hist.is_empty() && r.k_invocations.is_empty());
         r.render();
+        r.render_flat();
+    }
+
+    // The flat render is the scrape body: every line must be exactly
+    // `name value`, counters must match the report, and segment lines
+    // must appear once their segment has data.
+    #[test]
+    fn flat_render_is_name_value_lines() {
+        let m = Metrics::new();
+        let t0 = Instant::now();
+        m.on_request();
+        m.on_shed();
+        m.on_invocation_k(4, 4, 8);
+        m.on_accept_at(3, 8);
+        m.on_complete(Duration::from_millis(2), Duration::from_millis(9), 3);
+        m.on_mode_complete(DecodeMode::Blockwise, 1, 3);
+        m.on_draft_complete(DraftKind::NGram, 1, 3);
+        let flat = m.report(t0).render_flat();
+        let mut seen = BTreeMap::new();
+        for line in flat.lines() {
+            let mut parts = line.split_whitespace();
+            let name = parts.next().expect("metric name");
+            let value = parts.next().expect("metric value");
+            assert_eq!(parts.next(), None, "exactly two fields: {line}");
+            assert!(value.parse::<f64>().is_ok(), "numeric value: {line}");
+            seen.insert(name.to_string(), value.to_string());
+        }
+        assert_eq!(seen.get("requests").map(String::as_str), Some("1"));
+        assert_eq!(seen.get("completed").map(String::as_str), Some("1"));
+        assert_eq!(seen.get("shed").map(String::as_str), Some("1"));
+        assert_eq!(seen.get("tokens_out").map(String::as_str), Some("3"));
+        assert_eq!(seen.get("khat").map(String::as_str), Some("3.0000"));
+        assert_eq!(seen.get("mode_blockwise_completed").map(String::as_str), Some("1"));
+        assert_eq!(seen.get("draft_ngram_tokens_out").map(String::as_str), Some("3"));
+        assert_eq!(seen.get("accept_block_3").map(String::as_str), Some("1"));
+        assert_eq!(seen.get("k_invocations_8").map(String::as_str), Some("1"));
+        assert_eq!(seen.get("khat_k_8").map(String::as_str), Some("3.0000"));
+        assert!(seen.contains_key("queue_p50_ms") && seen.contains_key("uptime_s"));
+        // scalar fields always render, even before any traffic
+        let empty = Metrics::new().report(Instant::now()).render_flat();
+        assert!(empty.contains("completed 0\n") && empty.contains("khat 0.0000\n"));
     }
 
     #[test]

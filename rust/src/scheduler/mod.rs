@@ -52,6 +52,20 @@
 //! pool supervisor, which respawns the shard within a bounded restart
 //! budget ([`EngineConfig::restart_budget`]).
 //!
+//! **Streaming.** A request submitted over a
+//! [`streaming_channel`](crate::batching::streaming_channel) receives
+//! incremental progress beside its terminal reply: every `absorb` that
+//! commits tokens pushes the newly accepted slice as one
+//! [`Progress::Block`](crate::batching::Progress) frame (tagged with the
+//! running k̂), direct-served beam/NAT requests push exactly one
+//! whole-answer frame, and a crashed-shard handback pushes
+//! [`Progress::Restart`](crate::batching::Progress) before requeueing so
+//! the client discards the replayed prefix. The concatenation of block
+//! frames after the last restart is byte-identical to the terminal
+//! reply's tokens — the engine emits every frame *before* the terminal
+//! send, so a reader that drains progress after receiving the terminal
+//! sees the complete ordered sequence.
+//!
 //! **Adaptive block size.** On multi-k manifests (see the model module's
 //! `(B,k)` entry grammar) the block size itself is a per-step decision: a
 //! [`KPolicy`] picks each slot's proposal width from the compiled set
@@ -704,6 +718,12 @@ impl<B: EngineBackend> Engine<B> {
                 let queued = admitted.duration_since(r.arrived);
                 self.metrics.on_complete(queued, e2e, tokens.len());
                 self.metrics.on_mode_complete(r.mode, invocations, tokens.len());
+                // direct-served families commit the whole answer at once:
+                // a streaming client sees exactly one frame, then the
+                // terminal line (k̂ is 0 — no blockwise accept steps ran)
+                if r.respond.wants_progress() {
+                    r.respond.send_block(&tokens, 0.0);
+                }
                 let stats = BlockStats { invocations, ..Default::default() };
                 let _ = r.respond.send(Response {
                     id: r.id,
@@ -784,6 +804,11 @@ impl<B: EngineBackend> Engine<B> {
         for mut r in reqs {
             if r.requeues == 0 {
                 r.requeues = 1;
+                // streaming clients must discard everything streamed so far:
+                // the replay restarts the decode from scratch. (If the queue
+                // refuses the handback the terminal error that follows voids
+                // the frames anyway.)
+                r.respond.send_restart();
                 match self.queue.requeue(r) {
                     Ok(()) => self.metrics.on_requeue(),
                     Err(back) => self.send_shard_error(back, why),
@@ -881,6 +906,7 @@ impl<B: EngineBackend> Engine<B> {
                 s.picks += 1;
                 s.state.k = pick;
                 s.k_gen = pick;
+                let before = s.state.accepted.len();
                 let k_hat = s.state.absorb(&scores, i);
                 if had_proposals {
                     self.metrics.on_accept_at(k_hat, k_gen);
@@ -888,6 +914,15 @@ impl<B: EngineBackend> Engine<B> {
                     s.ewma = alpha * k_hat as f64 + (1.0 - alpha) * s.ewma;
                     self.shard_ewma =
                         alpha * k_hat as f64 + (1.0 - alpha) * self.shard_ewma;
+                }
+                // streaming lane: push the tokens this absorb committed as
+                // one frame, tagged with the running k̂ so far. The terminal
+                // reply's tokens are exactly `accepted`, so the concatenation
+                // of these deltas is byte-identical to the final answer.
+                if s.state.accepted.len() > before && s.request.respond.wants_progress() {
+                    s.request
+                        .respond
+                        .send_block(&s.state.accepted[before..], s.state.stats.mean_block());
                 }
                 s.state.done
             };

@@ -212,6 +212,21 @@ impl PoolReport {
         }
     }
 
+    /// Scrape body for `GET /metrics`: the fleet's flat `name value`
+    /// lines ([`Report::render_flat`]), a `shards N` line, then the
+    /// human [`PoolReport::render`] as `# `-prefixed comments so one
+    /// response serves both parsers and people.
+    pub fn metrics_text(&self) -> String {
+        let mut out = self.fleet.render_flat();
+        out.push_str(&format!("shards {}\n", self.shards.len()));
+        for line in self.render().lines() {
+            out.push_str("# ");
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "fleet ({} engine shard{}):\n{}",
@@ -267,5 +282,59 @@ impl PoolReport {
             }
         }
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn metrics_text_is_flat_lines_then_commented_render() {
+        let a = Arc::new(Metrics::new());
+        let b = Arc::new(Metrics::new());
+        a.on_request();
+        a.on_complete(Duration::from_millis(2), Duration::from_millis(9), 4);
+        b.on_request();
+        b.on_shed();
+        let since = Instant::now() - Duration::from_secs(1);
+        let report = PoolReport::from_shards(&[a, b], since);
+        let text = report.metrics_text();
+        // machine half: flat fleet totals plus the shard count
+        assert!(text.contains("requests 2\n"), "{text}");
+        assert!(text.contains("completed 1\n"), "{text}");
+        assert!(text.contains("shed 1\n"), "{text}");
+        assert!(text.contains("tokens_out 4\n"), "{text}");
+        assert!(text.contains("shards 2\n"), "{text}");
+        // human half: every render() line rides along as a comment
+        assert!(text.contains("# fleet (2 engine shards):"), "{text}");
+        assert!(text.contains("# shard 0: completed=1"), "{text}");
+        assert!(text.contains("# shard 1: completed=0"), "{text}");
+        for line in text.lines() {
+            assert!(!line.is_empty(), "no blank scrape lines:\n{text}");
+            if !line.starts_with("# ") {
+                let mut parts = line.split_whitespace();
+                let (name, value) = (parts.next(), parts.next());
+                assert!(name.is_some() && value.is_some(), "bad line {line:?}");
+                assert_eq!(parts.next(), None, "bad line {line:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn door_sheds_fold_into_the_fleet_line() {
+        let shard = Arc::new(Metrics::new());
+        shard.on_request();
+        let door = Metrics::new();
+        door.on_request();
+        door.on_shed();
+        let since = Instant::now() - Duration::from_secs(1);
+        let report = PoolReport::from_shards_with_door(&[shard], Some(&door), since);
+        assert_eq!(report.fleet.requests, 2);
+        assert_eq!(report.fleet.shed, 1);
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].shed, 0, "door sheds never reach a shard");
+        assert!(report.metrics_text().contains("shed 1\n"));
     }
 }

@@ -1,0 +1,359 @@
+//! The front door's readiness core: a `poll(2)` wrapper declared
+//! directly against libc (the same no-new-crates route `main.rs` takes
+//! for `signal(2)`) plus the per-connection state the event loop in
+//! [`super`] multiplexes — nonblocking read/write buffers, the line
+//! splitter, and the FIFO of in-flight requests awaiting engine replies.
+//!
+//! Everything here is mechanism; policy (what a line means, what gets
+//! written back, when a connection is over its limits) lives in the
+//! server module. The split keeps the buffer/readiness plumbing unit-
+//! testable without a running engine.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::batching::ResponseReceiver;
+
+/// Readiness flags — the subset of `poll(2)` event bits the loop uses.
+/// Values are fixed by the Linux ABI.
+pub(crate) const POLLIN: i16 = 0x001;
+pub(crate) const POLLOUT: i16 = 0x004;
+pub(crate) const POLLERR: i16 = 0x008;
+pub(crate) const POLLHUP: i16 = 0x010;
+
+/// `struct pollfd` — layout fixed by the C ABI (`#[repr(C)]`).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    // int poll(struct pollfd *fds, nfds_t nfds, int timeout);
+    // nfds_t is unsigned long — 64-bit on the targets this serves from.
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
+
+/// Block until a registered fd is ready, `timeout` passes, or a signal
+/// lands; `revents` is filled in place. `EINTR` (SIGINT lands here
+/// first) is not an error — the caller's next iteration reads the stop
+/// flag. On non-Linux hosts there is no libc `poll` declaration to lean
+/// on, so the fallback sleeps a short slice and reports every requested
+/// interest as ready: correct (all sockets are nonblocking, a spurious
+/// wakeup costs one `WouldBlock`), just less efficient.
+pub(crate) fn wait_ready(fds: &mut [PollFd], timeout: Duration) {
+    for f in fds.iter_mut() {
+        f.revents = 0;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let ms = timeout.as_millis().clamp(1, i32::MAX as u128) as i32;
+        let _ = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, ms) };
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        std::thread::sleep(timeout.min(Duration::from_millis(5)));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+    }
+}
+
+/// The raw fd `poll(2)` registers.
+#[cfg(unix)]
+pub(crate) fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+/// Non-unix placeholder — the [`wait_ready`] fallback never reads fds.
+#[cfg(not(unix))]
+pub(crate) fn raw_fd<T>(_t: &T) -> i32 {
+    -1
+}
+
+/// Read-side line cap: a single request line larger than this is a
+/// protocol error ([`super::MAX_SRC_TOKENS`] multi-digit ids fit with
+/// room to spare), answered and hung up on instead of buffered forever.
+pub(crate) const MAX_LINE_BYTES: usize = 256 * 1024;
+
+/// Per-connection backpressure: stop reading new request lines while
+/// this many are already in flight on the connection…
+pub(crate) const MAX_PENDING: usize = 32;
+
+/// …or while this many reply bytes are waiting for the socket. Also the
+/// pump's high-water mark: reply production pauses (frames stay queued
+/// in their channels) until the client drains the socket.
+pub(crate) const WBUF_HIGH: usize = 1 << 20;
+
+/// One in-flight request on a connection. Replies flow back strictly in
+/// submission order — stream frames carry no request id, so interleaving
+/// two streams on one socket would be unparseable; FIFO per connection
+/// preserves the blocking server's observable ordering while the engine
+/// still decodes the whole pipeline concurrently.
+pub(crate) struct Pending {
+    pub rx: ResponseReceiver,
+    pub cancel: Arc<AtomicBool>,
+    /// the request line opted into streaming (`"stream": true`)
+    pub stream: bool,
+}
+
+/// Per-connection state for the event loop: one of these per accepted
+/// socket, owned by the single server thread — no locks, no per-
+/// connection OS thread.
+pub(crate) struct Conn {
+    pub stream: TcpStream,
+    pub peer: Option<SocketAddr>,
+    /// bytes read but not yet split into complete lines
+    pub rbuf: Vec<u8>,
+    /// reply bytes not yet accepted by the socket
+    pub wbuf: Vec<u8>,
+    /// requests submitted from this connection, awaiting replies (FIFO)
+    pub pending: VecDeque<Pending>,
+    /// EOF seen: no more reads, and when it happened — in-flight
+    /// requests get a grace window to finish before they are treated as
+    /// abandoned (the old per-connection prober's disconnect semantics)
+    pub eof_at: Option<Instant>,
+    /// finish flushing `wbuf`, then drop the connection (HTTP exchanges
+    /// and fatal protocol errors); also stops all further reads
+    pub close_when_flushed: bool,
+    /// fully dead: culled at the end of the iteration
+    pub gone: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        let peer = stream.peer_addr().ok();
+        Ok(Conn {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            pending: VecDeque::new(),
+            eof_at: None,
+            close_when_flushed: false,
+            gone: false,
+        })
+    }
+
+    /// This connection's `poll(2)` interest right now. Registering with
+    /// no interest bits still reports `POLLERR`/`POLLHUP`, which is how
+    /// a vanished peer is noticed without reading or writing.
+    pub fn interest(&self) -> i16 {
+        let mut ev = 0;
+        let backpressured = self.pending.len() >= MAX_PENDING || self.wbuf.len() >= WBUF_HIGH;
+        if self.eof_at.is_none() && !self.close_when_flushed && !backpressured {
+            ev |= POLLIN;
+        }
+        if !self.wbuf.is_empty() {
+            ev |= POLLOUT;
+        }
+        ev
+    }
+
+    /// Drain the socket into `rbuf` until it would block, then return
+    /// the complete lines received. EOF also yields a final unterminated
+    /// line — the blocking server served those, so the event loop does
+    /// too. After this returns, a non-empty `rbuf` is one partial line
+    /// still waiting for its newline (the caller checks it against
+    /// [`MAX_LINE_BYTES`]).
+    pub fn read_ready(&mut self) -> Vec<String> {
+        let mut buf = [0u8; 4096];
+        while self.eof_at.is_none() && !self.gone {
+            match self.stream.read(&mut buf) {
+                Ok(0) => self.eof_at = Some(Instant::now()),
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => self.gone = true,
+            }
+        }
+        let mut lines = split_lines(&mut self.rbuf);
+        if self.eof_at.is_some() && !self.rbuf.is_empty() {
+            let tail = String::from_utf8_lossy(&self.rbuf).trim().to_string();
+            self.rbuf.clear();
+            if !tail.is_empty() {
+                lines.push(tail);
+            }
+        }
+        lines
+    }
+
+    /// Queue one newline-terminated reply line.
+    pub fn push_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Write `wbuf` out until the socket would block. Write errors mark
+    /// the connection gone — `EPIPE` is how a vanished peer surfaces
+    /// mid-stream.
+    pub fn flush_ready(&mut self) {
+        let mut written = 0;
+        while written < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[written..]) {
+                Ok(0) => {
+                    self.gone = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.gone = true;
+                    break;
+                }
+            }
+        }
+        self.wbuf.drain(..written);
+        if self.close_when_flushed && self.wbuf.is_empty() {
+            self.gone = true;
+        }
+    }
+
+    /// Raise every in-flight request's cancel flag and drop the
+    /// receivers (the drop marks them abandoned, so the engine retires
+    /// their slots) — the connection is dead and nobody is listening.
+    pub fn cancel_in_flight(&mut self) {
+        for p in &self.pending {
+            p.cancel.store(true, Ordering::Release);
+        }
+        self.pending.clear();
+    }
+}
+
+/// Split complete `\n`-terminated lines off the front of `buf`, leaving
+/// any trailing partial line in place. Lossy UTF-8; surrounding
+/// whitespace — including HTTP's `\r` — is trimmed; blank lines are
+/// dropped (they separate HTTP headers, they are not requests).
+pub(crate) fn split_lines(buf: &mut Vec<u8>) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut start = 0;
+    while let Some(off) = buf[start..].iter().position(|&b| b == b'\n') {
+        let line = String::from_utf8_lossy(&buf[start..start + off]).trim().to_string();
+        if !line.is_empty() {
+            lines.push(line);
+        }
+        start += off + 1;
+    }
+    buf.drain(..start);
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn split_lines_handles_partials_across_boundaries() {
+        let mut buf = Vec::new();
+        // a line arriving in three reads: no output until its newline
+        buf.extend_from_slice(b"{\"src\":");
+        assert!(split_lines(&mut buf).is_empty());
+        buf.extend_from_slice(b"[1,2");
+        assert!(split_lines(&mut buf).is_empty());
+        assert_eq!(buf, b"{\"src\":[1,2");
+        buf.extend_from_slice(b"]}\n{\"nex");
+        assert_eq!(split_lines(&mut buf), vec!["{\"src\":[1,2]}".to_string()]);
+        // the partial second line stays buffered
+        assert_eq!(buf, b"{\"nex");
+        buf.extend_from_slice(b"t\":1}\n");
+        assert_eq!(split_lines(&mut buf), vec!["{\"next\":1}".to_string()]);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn split_lines_trims_crlf_and_drops_blanks() {
+        let mut buf = b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n".to_vec();
+        let lines = split_lines(&mut buf);
+        assert_eq!(lines, vec!["GET /metrics HTTP/1.0".to_string(), "Host: x".to_string()]);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn split_lines_many_lines_in_one_read() {
+        let mut buf = b"a\nb\nc\nd".to_vec();
+        assert_eq!(split_lines(&mut buf), vec!["a", "b", "c"]);
+        assert_eq!(buf, b"d");
+    }
+
+    // The poll wrapper against a real loopback socket: no readiness
+    // before a write (real `poll(2)` only — the non-Linux sleep fallback
+    // deliberately reports all requested interest), POLLIN after a
+    // write, POLLOUT essentially always (empty send buffer).
+    #[test]
+    fn poll_reports_loopback_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+
+        let mut fds = [PollFd { fd: raw_fd(&server_side), events: POLLIN | POLLOUT, revents: 0 }];
+        wait_ready(&mut fds, Duration::from_millis(50));
+        #[cfg(target_os = "linux")]
+        assert_eq!(fds[0].revents & POLLIN, 0, "no bytes yet, POLLIN must be clear");
+        assert_ne!(fds[0].revents & POLLOUT, 0, "an idle socket is writable");
+
+        client.write_all(b"ping\n").unwrap();
+        client.flush().unwrap();
+        // readiness is level-triggered: poll until the bytes land (one
+        // loopback write is fast, but not instantaneous)
+        let t0 = Instant::now();
+        loop {
+            wait_ready(&mut fds, Duration::from_millis(20));
+            if fds[0].revents & POLLIN != 0 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "POLLIN never arrived");
+        }
+    }
+
+    #[test]
+    fn conn_reads_lines_and_flushes_replies() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(server_side).unwrap();
+
+        client.write_all(b"hello\nwor").unwrap();
+        client.flush().unwrap();
+        let t0 = Instant::now();
+        let mut lines = Vec::new();
+        while lines.is_empty() {
+            lines = conn.read_ready();
+            assert!(t0.elapsed() < Duration::from_secs(5), "line never arrived");
+        }
+        assert_eq!(lines, vec!["hello"]);
+        assert_eq!(conn.rbuf, b"wor", "partial line stays buffered");
+
+        conn.push_line("ok");
+        assert_ne!(conn.interest() & POLLOUT, 0);
+        conn.flush_ready();
+        assert!(conn.wbuf.is_empty() && !conn.gone);
+        let mut got = [0u8; 3];
+        client.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"ok\n");
+
+        // peer EOF: eof_at set, reads stop, the final partial line is
+        // delivered like the blocking server delivered it
+        drop(client);
+        let t0 = Instant::now();
+        let mut tail = Vec::new();
+        while conn.eof_at.is_none() {
+            tail = conn.read_ready();
+            assert!(t0.elapsed() < Duration::from_secs(5), "EOF never arrived");
+        }
+        assert_eq!(tail, vec!["wor"]);
+        assert_eq!(conn.interest() & POLLIN, 0, "no read interest after EOF");
+    }
+}

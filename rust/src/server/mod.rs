@@ -1,5 +1,22 @@
-//! Request router: a threaded TCP server speaking a JSON-line protocol,
-//! feeding the engine's dynamic-batching queue, plus a matching client.
+//! The event-driven front door: a single-threaded `poll(2)` event loop
+//! speaking a JSON-line protocol over nonblocking TCP, feeding the
+//! engine's dynamic-batching queue — plus a matching client and a live
+//! `GET /metrics` endpoint.
+//!
+//! **Transport.** One server thread multiplexes every connection: a
+//! nonblocking listener and all accepted sockets register interest with
+//! `poll(2)` (declared straight against libc — the same no-new-crates
+//! route `main.rs` takes for `signal(2)`; the `server::event` submodule
+//! holds the mechanism), and each iteration does a bounded accept (at
+//! most a fixed batch of new connections), drains readable sockets into
+//! per-connection buffers, pumps finished engine replies into write
+//! buffers, and flushes writable sockets. There is no per-connection OS
+//! thread and no blocking read with a timeout tick; backpressure is
+//! per-connection (reads pause while too many requests are in flight or
+//! too many reply bytes are unflushed) so one slow consumer cannot
+//! balloon memory. Client-class rate limiting (one token bucket per
+//! peer IP, `serve --rate-limit`) sits in front of admission and speaks
+//! the same `overloaded` wire shape as a queue shed; see `server::rate`.
 //!
 //! Wire format (one JSON object per line):
 //!
@@ -17,32 +34,61 @@
 //! draft on beam/NAT is a validation error; non-default replies echo it),
 //! `criterion` (optional: `"exact"`, `"topK"`, `"distE"` with K,E ≥ 1;
 //! blockwise only), `deadline_ms` (optional: per-request deadline; `0`
-//! opts out of the server's `--deadline-ms` default). Unknown fields are
-//! ignored. Beam/NAT replies carry an empty `blocks` list and `khat` 0 —
-//! those are blockwise acceptance concepts. A draft-less line behaves
-//! byte-identically to the pre-draft protocol: the reply carries no
-//! `draft` field and the decode is heads-drafted (unless the server set
-//! `--draft-source`, which re-defaults blockwise lines only).
+//! opts out of the server's `--deadline-ms` default), `stream`
+//! (optional bool: opt into incremental progress frames, below). Unknown
+//! fields are ignored. Beam/NAT replies carry an empty `blocks` list and
+//! `khat` 0 — those are blockwise acceptance concepts. A draft-less line
+//! behaves byte-identically to the pre-draft protocol, and a line
+//! without `"stream": true` gets exactly one reply line, byte-identical
+//! to the pre-streaming protocol.
 //!
-//! See `docs/ARCHITECTURE.md` for the full wire-protocol field table and
-//! the request lifecycle these fields ride.
+//! **Streaming.** A request with `"stream": true` receives zero or more
+//! progress frames before its terminal reply, each on its own line:
+//!
+//! ```text
+//! <- {"event":"block","khat":2,"tokens":[77,61]}
+//! <- {"event":"block","khat":1.5,"tokens":[2]}
+//! <- {"id":1,"mode":"blockwise","tokens":[77,61,2], ...}
+//! ```
+//!
+//! A `block` frame carries the tokens one engine accept substep
+//! committed (a whole answer for direct-served beam/NAT — exactly one
+//! frame) and the request's running mean accepted block size `khat`. A
+//! `{"event":"restart"}` frame means a crashed shard handed the request
+//! back and the decode restarts from scratch: the client discards every
+//! frame received so far. The terminal line is the same object a
+//! non-streamed request gets, and the concatenation of `block` frames
+//! after the last `restart` is byte-identical to its `tokens` — frames
+//! are a prefix view, never a different answer. Frames are demuxed from
+//! terminals by the presence of the `"event"` key; they carry no `id`,
+//! which is why replies on one connection are strictly FIFO.
+//!
+//! **Live metrics.** A line starting with `GET ` is answered as minimal
+//! HTTP and the connection closed after the response: `GET /metrics`
+//! returns the merged fleet counters as `name value` text lines (plus
+//! the human fleet render as `#`-comments) *while the server runs* —
+//! `curl http://addr/metrics` mid-load works. See
+//! `PoolReport::metrics_text` and docs/OPERATIONS.md for the field
+//! meanings.
 //!
 //! **Error vocabulary** (the `error` field of a reply):
-//! - `"overloaded"` — the bounded request queue is full; the reply carries
-//!   a `retry_after_ms` backoff hint sized from the observed queue depth.
-//!   Sent immediately (load shedding): 10x overload degrades to fast
-//!   rejections, not unbounded queueing.
+//! - `"overloaded"` — the bounded request queue was full, the peer is
+//!   over its `--rate-limit` budget, or the server is at `--max-conns`;
+//!   the reply carries a `retry_after_ms` backoff hint. Sent immediately
+//!   (load shedding): 10x overload degrades to fast rejections, not
+//!   unbounded queueing. Rate-limit and connection-cap rejections carry
+//!   id 0 — the request was never admitted, so no id was allocated.
 //! - `"timeout"` — the deadline passed while queued or mid-decode; the
-//!   reply still carries whatever token prefix was accepted before expiry.
+//!   reply still carries whatever token prefix was accepted before
+//!   expiry.
 //! - `"shard failed during admit"` / `"shard failed mid-decode"` — a
 //!   crashed engine shard held this request and it had *already* been
-//!   requeued once (each request is handed back to the queue at most once
-//!   before erroring; the pool supervisor separately respawns the shard
-//!   within its restart budget).
+//!   requeued once (each request is handed back to the queue at most
+//!   once before erroring; the pool supervisor separately respawns the
+//!   shard within its restart budget).
 //! - `"shutting down"` — the queue is closed; the server is draining.
 //! - `"mode <m> unsupported by this deployment"` — the request named a
-//!   decoder family no engine shard advertises (e.g. `"nat"` against a
-//!   blockwise/beam scoring manifest).
+//!   decoder family no engine shard advertises.
 //! - anything else — a request parse/validation error.
 //!
 //! Retry semantics: `"overloaded"` and `"shutting down"` are safe to
@@ -50,45 +96,65 @@
 //! the client's latency-budget call; shard-failure errors mean the
 //! request already consumed its one automatic requeue.
 //!
-//! Each connection gets a reader thread; responses are delivered through
-//! the per-request channel and written back in completion order. While a
-//! request is in flight the handler probes the connection between waits —
-//! a client that disconnects mid-decode gets its request cancelled (the
-//! engine retires the slot instead of decoding into the void). Finished
-//! connection threads are reaped every accept iteration, and the
-//! remainder are joined at shutdown — readers poll with a finite socket
-//! timeout so an idle open connection cannot wedge that join when the
-//! stop flag asks them to wind down.
+//! **Disconnects.** `poll(2)` reports a torn connection (`POLLERR`/
+//! `POLLHUP`) and EOF surfaces on read; a peer that hangs up with
+//! requests still in flight gets a short grace (`PROBE_INTERVAL`) for
+//! replies to land, after which every in-flight request's cancel flag is
+//! raised and its receiver dropped — the engine retires the slot instead
+//! of decoding into the void. A write error mid-stream (the peer closed
+//! between frames) cancels the same way.
 //!
 //! The server is topology-agnostic: it only pushes into the shared
 //! [`RequestQueue`], so it feeds one engine or an N-shard
-//! `scheduler::pool::EnginePool` identically — requests submitted here
-//! are picked up by whichever shard next has a free slot.
+//! `scheduler::pool::EnginePool` identically. See `docs/ARCHITECTURE.md`
+//! for the full wire tables and lifecycle, `docs/OPERATIONS.md` for
+//! running it.
+
+mod event;
+mod rate;
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::RecvTimeoutError;
+use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::batching::{response_channel, DecodeMode, Push, RequestQueue, Response};
+use crate::batching::{
+    response_channel, streaming_channel, DecodeMode, Progress, Push, RequestQueue, Response,
+};
 use crate::decoding::criteria::Criterion;
 use crate::decoding::draft::DraftKind;
 use crate::metrics::Metrics;
+use crate::scheduler::pool::PoolReport;
 use crate::scheduler::Submitter;
 use crate::util::json::Json;
+
+use event::{raw_fd, wait_ready, Conn, Pending, PollFd};
+use rate::RateLimiter;
 
 /// Admission cap on `src` length: an absurdly long source is rejected at
 /// the front door instead of being silently truncated by the backend.
 pub const MAX_SRC_TOKENS: usize = 4096;
 
-/// How often an in-flight request's handler re-probes its client (and how
-/// long a response wait can lag a disconnect before the slot is retired).
+/// Disconnect grace: how long a peer that hung up (EOF) keeps its
+/// in-flight requests alive before they are cancelled, and how often
+/// [`serve_line`]'s synchronous path re-probes its caller. Replies that
+/// land inside the window are still written (half-open clients get their
+/// fast decodes); slower ones are treated as abandoned.
 const PROBE_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Bounded accept: at most this many new connections per event-loop
+/// iteration, so an accept storm cannot starve in-flight reads/writes.
+const ACCEPT_BATCH: usize = 64;
+
+/// Drain bound: once the stop flag is set, how long the loop waits for
+/// in-flight replies to flush before abandoning them. In-flight decodes
+/// normally finish well inside this (the queue is closed first, so
+/// shards are only emptying their slots).
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(10);
 
 /// Parse the wire name of a criterion ("exact", "topK", "distE").
 /// Degenerate parameters are rejected: `top0` could never accept a token
@@ -143,9 +209,9 @@ pub fn response_json(r: &Response) -> String {
     Json::obj(obj).to_string()
 }
 
-/// Fast-rejection reply for a shed request: the queue was full, nothing
-/// was enqueued, and `retry_after_ms` hints a client backoff sized from
-/// the queue depth observed at rejection time.
+/// Fast-rejection reply for a shed request: the queue was full (or the
+/// peer was over its rate budget — then `id` is 0, no id was allocated),
+/// nothing was enqueued, and `retry_after_ms` hints a client backoff.
 pub fn overloaded_json(id: u64, retry_after_ms: u64) -> String {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
@@ -155,216 +221,40 @@ pub fn overloaded_json(id: u64, retry_after_ms: u64) -> String {
     .to_string()
 }
 
-/// The TCP front end. Binds immediately; `serve` loops on accept.
-pub struct Server {
-    listener: TcpListener,
-    queue: Arc<RequestQueue>,
-    submitter: Arc<Submitter>,
-    stop: Arc<AtomicBool>,
-    /// applied when a request line carries no `deadline_ms` field
-    default_deadline: Option<Duration>,
-    /// applied when a *blockwise* request line carries no `draft` field
-    /// (`--draft-source`; beam/NAT lines always default to heads)
-    default_draft: DraftKind,
-}
-
-impl Server {
-    pub fn bind(addr: &str, queue: Arc<RequestQueue>, stop: Arc<AtomicBool>) -> Result<Self> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        listener.set_nonblocking(true)?;
-        Ok(Server {
-            listener,
-            submitter: Arc::new(Submitter::new(queue.clone())),
-            queue,
-            stop,
-            default_deadline: None,
-            default_draft: DraftKind::Heads,
-        })
-    }
-
-    /// Default per-request deadline for lines without a `deadline_ms`
-    /// field (`--deadline-ms`; `None` = no deadline).
-    pub fn with_default_deadline(mut self, d: Option<Duration>) -> Self {
-        self.default_deadline = d;
-        self
-    }
-
-    /// Default draft source for blockwise lines without a `draft` field
-    /// (`--draft-source`). Beam/NAT lines are unaffected — they always
-    /// draft from the heads default, which they never consult.
-    pub fn with_default_draft(mut self, d: DraftKind) -> Self {
-        self.default_draft = d;
-        self
-    }
-
-    /// Attach a front-door metrics registry: load sheds happen at
-    /// admission, before any engine shard sees the request, so they are
-    /// counted here and folded into the fleet view by
-    /// `PoolReport::from_shards_with_door`.
-    pub fn with_door(mut self, door: Arc<Metrics>) -> Self {
-        self.submitter = Arc::new(Submitter::new(self.queue.clone()).with_door(door));
-        self
-    }
-
-    pub fn local_addr(&self) -> String {
-        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
-    }
-
-    /// Accept loop; returns when `stop` is set.
-    pub fn serve(&self) -> Result<()> {
-        log::info!("server listening on {}", self.local_addr());
-        let mut handles: Vec<JoinHandle<()>> = vec![];
-        loop {
-            if self.stop.load(Ordering::Relaxed) {
-                break;
-            }
-            // reap finished connection threads so `handles` tracks only
-            // live connections instead of growing for the process lifetime
-            let mut i = 0;
-            while i < handles.len() {
-                if handles[i].is_finished() {
-                    let _ = handles.swap_remove(i).join();
-                } else {
-                    i += 1;
-                }
-            }
-            match self.listener.accept() {
-                Ok((stream, peer)) => {
-                    log::debug!("connection from {peer}");
-                    let submitter = self.submitter.clone();
-                    let stop = self.stop.clone();
-                    let deadline = self.default_deadline;
-                    let draft = self.default_draft;
-                    handles.push(std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, submitter, deadline, draft, stop) {
-                            log::debug!("connection ended: {e:#}");
-                        }
-                    }));
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        for h in handles {
-            let _ = h.join();
-        }
-        Ok(())
-    }
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    submitter: Arc<Submitter>,
-    default_deadline: Option<Duration>,
-    default_draft: DraftKind,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
-    // finite read timeout so this thread can notice shutdown: a reader
-    // parked forever on an idle connection used to wedge `serve`'s handle
-    // join at drain time. Clear nonblocking first — on some platforms the
-    // accepted socket inherits the listener's nonblocking flag, which
-    // would turn the timeout into an instant-WouldBlock busy loop.
-    stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => {
-                // EOF — answer a final unterminated line first (the
-                // lines()-based loop this replaced delivered it too)
-                let msg = line.trim();
-                if !msg.is_empty() {
-                    reply_line(&mut writer, &submitter, default_deadline, default_draft, msg)?;
-                }
-                break;
-            }
-            Ok(_) => {
-                let msg = line.trim();
-                if !msg.is_empty() {
-                    reply_line(&mut writer, &submitter, default_deadline, default_draft, msg)?;
-                }
-                line.clear();
-                // shutdown: the queue is closed and every further request
-                // would get an error reply — stop reading here too, or a
-                // chatty client could hold the drain's handle join open
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-            }
-            Err(e) => {
-                // timeout tick: bytes read so far stay buffered in `line`
-                // (read_line appends before erroring), so nothing is lost
-                // by retrying — unless the server is winding down
-                use std::io::ErrorKind;
-                if !matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
-                    return Err(e.into());
-                }
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-            }
+/// Serialize one streaming progress frame (`{"event":"block",...}` /
+/// `{"event":"restart"}`) — the incremental lines a `"stream": true`
+/// request receives before its terminal reply.
+pub fn progress_json(p: &Progress) -> String {
+    match p {
+        Progress::Block { tokens, khat_milli } => Json::obj(vec![
+            ("event", Json::Str("block".to_string())),
+            ("khat", Json::Num(*khat_milli as f64 / 1000.0)),
+            ("tokens", Json::arr_i32(tokens)),
+        ])
+        .to_string(),
+        Progress::Restart => {
+            Json::obj(vec![("event", Json::Str("restart".to_string()))]).to_string()
         }
     }
-    Ok(())
 }
 
-/// Liveness probe between response waits: a nonblocking one-byte peek.
-/// `Ok(0)` is EOF (the peer closed); buffered bytes or `WouldBlock` both
-/// mean the peer is still there. Probe errors count as gone.
-fn client_alive(stream: &TcpStream) -> bool {
-    let mut b = [0u8; 1];
-    if stream.set_nonblocking(true).is_err() {
-        return false;
-    }
-    let alive = match stream.peek(&mut b) {
-        Ok(0) => false,
-        Ok(_) => true,
-        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => true,
-        Err(_) => false,
-    };
-    let _ = stream.set_nonblocking(false);
-    alive
+/// A validated request line, parsed but not yet submitted.
+struct WireRequest {
+    src: Vec<i32>,
+    mode: DecodeMode,
+    draft: DraftKind,
+    criterion: Option<Criterion>,
+    deadline: Option<Instant>,
+    stream: bool,
 }
 
-/// Serve one request line and write the JSON reply (or an error object).
-fn reply_line(
-    writer: &mut TcpStream,
-    submitter: &Submitter,
-    default_deadline: Option<Duration>,
-    default_draft: DraftKind,
-    msg: &str,
-) -> Result<()> {
-    let reply = {
-        let mut probe = || client_alive(writer);
-        match serve_line(msg, submitter, default_deadline, default_draft, &mut probe) {
-            Ok(Some(s)) => s,
-            // client gone mid-decode: the request was cancelled and there
-            // is no one to write to
-            Ok(None) => return Ok(()),
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
-        }
-    };
-    writer.write_all(reply.as_bytes())?;
-    writer.write_all(b"\n")?;
-    writer.flush()?;
-    Ok(())
-}
-
-/// Handle one request line synchronously (submit + await). `probe` is
-/// polled between response waits; when it reports the client gone, the
-/// request's cancel flag is raised, the receiver dropped (the engine
-/// retires the slot), and `Ok(None)` says there is nothing to write.
-fn serve_line(
+/// Parse and validate one request line (shared by the event loop and the
+/// synchronous [`serve_line`] path, so both reject identically).
+fn parse_line(
     line: &str,
-    submitter: &Submitter,
     default_deadline: Option<Duration>,
     default_draft: DraftKind,
-    probe: &mut dyn FnMut() -> bool,
-) -> Result<Option<String>> {
+) -> Result<WireRequest> {
     let j = Json::parse(line).context("request json")?;
     let src = j.get("src")?.as_ids()?;
     anyhow::ensure!(!src.is_empty(), "empty src");
@@ -376,9 +266,8 @@ fn serve_line(
     let mode = match j.opt("mode") {
         Some(m) => {
             let s = m.as_str()?;
-            DecodeMode::parse(s).ok_or_else(|| {
-                anyhow::anyhow!("bad mode {s:?} (want blockwise, beam, or nat)")
-            })?
+            DecodeMode::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("bad mode {s:?} (want blockwise, beam, or nat)"))?
         }
         None => DecodeMode::Blockwise,
     };
@@ -402,8 +291,7 @@ fn serve_line(
     );
     let criterion = match j.opt("criterion") {
         Some(c) => Some(
-            parse_criterion(c.as_str()?)
-                .ok_or_else(|| anyhow::anyhow!("bad criterion {:?}", c))?,
+            parse_criterion(c.as_str()?).ok_or_else(|| anyhow::anyhow!("bad criterion {:?}", c))?,
         ),
         None => None,
     };
@@ -416,10 +304,382 @@ fn serve_line(
         },
         None => default_deadline.map(|d| Instant::now() + d),
     };
+    // stream must be a JSON bool: a typo like "stream":"yes" is a
+    // validation error, not a silently non-streamed decode
+    let stream = match j.opt("stream") {
+        Some(v) => v.as_bool().context("stream")?,
+        None => false,
+    };
+    Ok(WireRequest { src, mode, draft, criterion, deadline, stream })
+}
 
+/// Live `/metrics` state: the shard registries to merge on each scrape.
+struct MetricsHandle {
+    shards: Vec<Arc<Metrics>>,
+    since: Instant,
+}
+
+/// The TCP front end. Binds immediately; [`Server::serve`] runs the
+/// event loop until the stop flag is set.
+pub struct Server {
+    listener: TcpListener,
+    queue: Arc<RequestQueue>,
+    submitter: Arc<Submitter>,
+    stop: Arc<AtomicBool>,
+    /// applied when a request line carries no `deadline_ms` field
+    default_deadline: Option<Duration>,
+    /// applied when a *blockwise* request line carries no `draft` field
+    /// (`--draft-source`; beam/NAT lines always default to heads)
+    default_draft: DraftKind,
+    /// front-door registry: rate-limit and connection-cap refusals are
+    /// counted here (queue sheds are counted by the submitter itself)
+    door: Option<Arc<Metrics>>,
+    /// live `GET /metrics` state; unset scrapes answer 503
+    metrics: Option<MetricsHandle>,
+    /// per-peer request budget in requests/sec (0 disables)
+    rate_limit: f64,
+    /// connection-count cap: accepts beyond it get an `overloaded` reply
+    max_conns: usize,
+}
+
+impl Server {
+    pub fn bind(addr: &str, queue: Arc<RequestQueue>, stop: Arc<AtomicBool>) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            listener,
+            submitter: Arc::new(Submitter::new(queue.clone())),
+            queue,
+            stop,
+            default_deadline: None,
+            default_draft: DraftKind::Heads,
+            door: None,
+            metrics: None,
+            rate_limit: 0.0,
+            max_conns: 1024,
+        })
+    }
+
+    /// Default per-request deadline for lines without a `deadline_ms`
+    /// field (`--deadline-ms`; `None` = no deadline).
+    pub fn with_default_deadline(mut self, d: Option<Duration>) -> Self {
+        self.default_deadline = d;
+        self
+    }
+
+    /// Default draft source for blockwise lines without a `draft` field
+    /// (`--draft-source`). Beam/NAT lines are unaffected — they always
+    /// draft from the heads default, which they never consult.
+    pub fn with_default_draft(mut self, d: DraftKind) -> Self {
+        self.default_draft = d;
+        self
+    }
+
+    /// Attach a front-door metrics registry: load sheds, rate-limit and
+    /// connection-cap refusals happen at admission, before any engine
+    /// shard sees the request, so they are counted here and folded into
+    /// the fleet view by `PoolReport::from_shards_with_door`.
+    pub fn with_door(mut self, door: Arc<Metrics>) -> Self {
+        self.submitter = Arc::new(Submitter::new(self.queue.clone()).with_door(door.clone()));
+        self.door = Some(door);
+        self
+    }
+
+    /// Wire up the live `GET /metrics` endpoint: each scrape merges these
+    /// shard registries (plus the door registry, if attached) into one
+    /// fleet view without stopping the server. `since` anchors the
+    /// throughput rates — pass the serve start instant.
+    pub fn with_metrics(mut self, shards: Vec<Arc<Metrics>>, since: Instant) -> Self {
+        self.metrics = Some(MetricsHandle { shards, since });
+        self
+    }
+
+    /// Per-peer token-bucket rate limit in requests/sec (`--rate-limit`;
+    /// 0 disables). Refused requests get the `overloaded` wire reply.
+    pub fn with_rate_limit(mut self, rps: f64) -> Self {
+        self.rate_limit = rps;
+        self
+    }
+
+    /// Connection-count cap (`--max-conns`): accepts beyond it are
+    /// answered `overloaded` and closed instead of multiplexed.
+    pub fn with_max_conns(mut self, n: usize) -> Self {
+        self.max_conns = n.max(1);
+        self
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// The event loop; returns when `stop` is set and in-flight replies
+    /// have flushed (bounded by `SHUTDOWN_GRACE`, 10s).
+    pub fn serve(&self) -> Result<()> {
+        log::info!("server listening on {} (single-threaded event loop)", self.local_addr());
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut limiter = RateLimiter::new(self.rate_limit);
+        let mut shutdown_at: Option<Instant> = None;
+        loop {
+            let stopping = self.stop.load(Ordering::Relaxed);
+            if stopping && shutdown_at.is_none() {
+                shutdown_at = Some(Instant::now());
+            }
+
+            // Readiness. The engine's reply channels are not fds, so
+            // while replies are in flight the poll timeout doubles as
+            // the pump cadence; idle, it only bounds how fast the stop
+            // flag is noticed.
+            let busy = conns.iter().any(|c| !c.pending.is_empty() || !c.wbuf.is_empty());
+            let timeout = if busy { Duration::from_millis(2) } else { Duration::from_millis(25) };
+            let mut pfds = Vec::with_capacity(conns.len() + 1);
+            pfds.push(PollFd {
+                fd: raw_fd(&self.listener),
+                events: if stopping { 0 } else { event::POLLIN },
+                revents: 0,
+            });
+            for c in &conns {
+                pfds.push(PollFd { fd: raw_fd(&c.stream), events: c.interest(), revents: 0 });
+            }
+            wait_ready(&mut pfds, timeout);
+
+            // Bounded accept, then reads: connections poll reported
+            // ready, plus the just-accepted ones (their first bytes are
+            // often already in the kernel buffer). During shutdown
+            // nothing new is accepted or read — the queue is closed and
+            // every submission would only get a "shutting down" reply.
+            let polled = conns.len();
+            if !stopping && pfds[0].revents & event::POLLIN != 0 {
+                self.accept_batch(&mut conns);
+            }
+            for i in 0..conns.len() {
+                let revents = if i < polled { pfds[i + 1].revents } else { event::POLLIN };
+                if revents & (event::POLLERR | event::POLLHUP) != 0 {
+                    conns[i].gone = true;
+                    continue;
+                }
+                if stopping || conns[i].close_when_flushed || revents & event::POLLIN == 0 {
+                    continue;
+                }
+                for line in conns[i].read_ready() {
+                    self.handle_line(&mut conns[i], &line, &mut limiter);
+                }
+                if conns[i].rbuf.len() > event::MAX_LINE_BYTES {
+                    // a single line bigger than any valid request:
+                    // answer and hang up instead of buffering forever
+                    let e = format!("request line exceeds {} bytes", event::MAX_LINE_BYTES);
+                    conns[i].rbuf.clear();
+                    conns[i].push_line(&Json::obj(vec![("error", Json::Str(e))]).to_string());
+                    conns[i].close_when_flushed = true;
+                }
+            }
+
+            // Pump engine replies into write buffers, flush, and apply
+            // the EOF grace: a peer that hung up gets PROBE_INTERVAL for
+            // in-flight replies to land before they count as abandoned.
+            let now = Instant::now();
+            conns.retain_mut(|c| {
+                if !c.gone {
+                    pump_conn(c);
+                    c.flush_ready();
+                }
+                if let Some(at) = c.eof_at {
+                    if c.pending.is_empty() && c.wbuf.is_empty() {
+                        c.gone = true; // clean close
+                    } else if !c.pending.is_empty()
+                        && now.saturating_duration_since(at) >= PROBE_INTERVAL
+                    {
+                        c.gone = true; // disconnected mid-decode
+                    }
+                }
+                if c.gone {
+                    c.cancel_in_flight();
+                    false
+                } else {
+                    true
+                }
+            });
+
+            if stopping {
+                let drained = conns.iter().all(|c| c.pending.is_empty() && c.wbuf.is_empty());
+                let grace_over = shutdown_at.is_some_and(|t| t.elapsed() >= SHUTDOWN_GRACE);
+                if drained || grace_over {
+                    for c in &mut conns {
+                        c.cancel_in_flight();
+                    }
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Accept up to [`ACCEPT_BATCH`] connections. Beyond `max_conns` the
+    /// newcomer gets an immediate `overloaded` reply (same wire shape as
+    /// a queue shed, id 0) and is closed once it flushes.
+    fn accept_batch(&self, conns: &mut Vec<Conn>) {
+        for _ in 0..ACCEPT_BATCH {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    log::debug!("connection from {peer}");
+                    let Ok(mut conn) = Conn::new(stream) else { continue };
+                    if conns.len() >= self.max_conns {
+                        if let Some(door) = &self.door {
+                            door.on_shed();
+                        }
+                        conn.push_line(&overloaded_json(0, 100));
+                        conn.close_when_flushed = true;
+                    }
+                    conns.push(conn);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Route one received line: HTTP scrape, rate-limit check, then
+    /// parse + submit. Replies (and rejections) land in the connection's
+    /// write buffer; accepted requests join its FIFO of pendings.
+    fn handle_line(&self, conn: &mut Conn, line: &str, limiter: &mut RateLimiter) {
+        if conn.close_when_flushed {
+            return; // HTTP header tail (or post-error chatter): discard
+        }
+        if line.starts_with("GET ") {
+            self.handle_http(conn, line);
+            return;
+        }
+        if limiter.enabled() {
+            let peer = match conn.peer {
+                Some(a) => a.ip(),
+                None => IpAddr::V4(Ipv4Addr::UNSPECIFIED),
+            };
+            if !limiter.admit(peer, Instant::now()) {
+                // this peer is over its budget: same overloaded shape as
+                // a queue shed; id 0 because no id was ever allocated
+                if let Some(door) = &self.door {
+                    door.on_shed();
+                }
+                conn.push_line(&overloaded_json(0, limiter.retry_hint_ms()));
+                return;
+            }
+        }
+        match parse_line(line, self.default_deadline, self.default_draft) {
+            Err(e) => {
+                conn.push_line(&Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string())
+            }
+            Ok(w) => {
+                let (tx, rx) = if w.stream { streaming_channel() } else { response_channel() };
+                let (id, push, cancel) = self.submitter.submit_request_drafted(
+                    w.src,
+                    w.mode,
+                    w.draft,
+                    w.criterion,
+                    w.deadline,
+                    tx,
+                );
+                if let Push::Shed { depth } = push {
+                    // queue shed: reject fast with a backlog-sized hint
+                    // (the submitter counted it; dropping rx discards
+                    // its plainer synthesized terminal)
+                    conn.push_line(&overloaded_json(id, 50 + 2 * depth as u64));
+                    return;
+                }
+                // Push::Closed pends too: the channel already holds the
+                // synthesized "shutting down" terminal for the pump
+                conn.pending.push_back(Pending { rx, cancel, stream: w.stream });
+            }
+        }
+    }
+
+    /// Answer a `GET` line as minimal HTTP/1.0 and close when flushed.
+    /// `/metrics` is the live fleet scrape; anything else 404s.
+    fn handle_http(&self, conn: &mut Conn, request: &str) {
+        let path = request.split_whitespace().nth(1).unwrap_or("/");
+        let (status, body) = if path == "/metrics" {
+            match &self.metrics {
+                Some(h) => ("200 OK", self.metrics_body(h)),
+                None => {
+                    let hint = "metrics not wired: pass shard registries via \
+                                Server::with_metrics\n";
+                    ("503 Service Unavailable", hint.to_string())
+                }
+            }
+        } else {
+            ("404 Not Found", format!("no route {path}; try GET /metrics\n"))
+        };
+        let head = format!(
+            "HTTP/1.0 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        conn.wbuf.extend_from_slice(head.as_bytes());
+        conn.wbuf.extend_from_slice(body.as_bytes());
+        conn.close_when_flushed = true;
+    }
+
+    fn metrics_body(&self, h: &MetricsHandle) -> String {
+        PoolReport::from_shards_with_door(&h.shards, self.door.as_deref(), h.since).metrics_text()
+    }
+}
+
+/// Move one connection's finished engine replies into its write buffer:
+/// stream frames as they arrive, terminals in FIFO submission order
+/// (frames carry no id, so only the head request may stream). Pauses at
+/// the write-buffer high-water mark — unpumped frames stay queued in
+/// their channels until the client drains the socket.
+fn pump_conn(c: &mut Conn) {
+    while c.wbuf.len() < event::WBUF_HIGH {
+        let Some(p) = c.pending.pop_front() else { return };
+        if p.stream {
+            while let Some(ev) = p.rx.try_progress() {
+                c.push_line(&progress_json(&ev));
+            }
+        }
+        match p.rx.try_recv() {
+            Ok(resp) => {
+                if p.stream {
+                    // every frame is sent before the terminal, so one
+                    // more drain after try_recv succeeds yields the rest
+                    while let Some(ev) = p.rx.try_progress() {
+                        c.push_line(&progress_json(&ev));
+                    }
+                }
+                c.push_line(&response_json(&resp));
+            }
+            Err(TryRecvError::Empty) => {
+                c.pending.push_front(p);
+                return;
+            }
+            Err(TryRecvError::Disconnected) => {
+                let e = Json::obj(vec![("error", Json::Str("engine dropped the request".into()))]);
+                c.push_line(&e.to_string());
+            }
+        }
+    }
+}
+
+/// Handle one request line synchronously (submit + await) — the
+/// single-line path tests and embedders drive without a socket; the
+/// event loop's validation is identical (same `parse_line`), but the
+/// `stream` field is ignored here (there is no frame transport — use a
+/// real connection for streaming). `probe` is polled between response
+/// waits; when it reports the client gone, the request's cancel flag is
+/// raised, the receiver dropped (the engine retires the slot), and
+/// `Ok(None)` says there is nothing to write.
+pub fn serve_line(
+    line: &str,
+    submitter: &Submitter,
+    default_deadline: Option<Duration>,
+    default_draft: DraftKind,
+    probe: &mut dyn FnMut() -> bool,
+) -> Result<Option<String>> {
+    let w = parse_line(line, default_deadline, default_draft)?;
     let (tx, rx) = response_channel();
     let (id, push, cancel) =
-        submitter.submit_request_drafted(src, mode, draft, criterion, deadline, tx);
+        submitter.submit_request_drafted(w.src, w.mode, w.draft, w.criterion, w.deadline, tx);
     if let Push::Shed { depth } = push {
         // shed: reject fast with a backoff hint sized from the backlog
         return Ok(Some(overloaded_json(id, 50 + 2 * depth as u64)));
@@ -475,6 +735,18 @@ pub enum Decoded {
     Overloaded { retry_after_ms: u64 },
 }
 
+/// One progress frame from a streamed decode, as surfaced by
+/// [`Client::try_decode_stream`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamFrame {
+    /// an incremental accepted block; `khat` is the request's running
+    /// mean accepted block size as of this frame
+    Block { tokens: Vec<i32>, khat: f64 },
+    /// the server restarted the decode (crashed shard hand-back):
+    /// discard every frame received before this one
+    Restart,
+}
+
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
@@ -515,6 +787,53 @@ impl Client {
         criterion: Option<&str>,
         deadline_ms: Option<u64>,
     ) -> Result<Decoded> {
+        self.send_request(src, mode, draft, criterion, deadline_ms, false)?;
+        let j = self.read_reply_json()?;
+        parse_reply(&j)
+    }
+
+    /// A streamed request/reply cycle (`"stream": true` on the wire):
+    /// collects every progress frame in arrival order, then the terminal
+    /// reply. The frames are returned raw — including any
+    /// [`StreamFrame::Restart`] markers — so callers can verify ordering;
+    /// concatenating the `Block` tokens *after the last `Restart`* yields
+    /// exactly the terminal's `tokens`. A shed request returns
+    /// [`Decoded::Overloaded`] with no frames.
+    pub fn try_decode_stream(
+        &mut self,
+        src: &[i32],
+        mode: Option<&str>,
+        draft: Option<&str>,
+        criterion: Option<&str>,
+        deadline_ms: Option<u64>,
+    ) -> Result<(Decoded, Vec<StreamFrame>)> {
+        self.send_request(src, mode, draft, criterion, deadline_ms, true)?;
+        let mut frames = Vec::new();
+        loop {
+            let j = self.read_reply_json()?;
+            let Some(ev) = j.opt("event") else {
+                return Ok((parse_reply(&j)?, frames));
+            };
+            match ev.as_str()? {
+                "block" => frames.push(StreamFrame::Block {
+                    tokens: j.get("tokens")?.as_ids()?,
+                    khat: j.opt("khat").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                }),
+                "restart" => frames.push(StreamFrame::Restart),
+                other => anyhow::bail!("unknown stream event {other:?}"),
+            }
+        }
+    }
+
+    fn send_request(
+        &mut self,
+        src: &[i32],
+        mode: Option<&str>,
+        draft: Option<&str>,
+        criterion: Option<&str>,
+        deadline_ms: Option<u64>,
+        stream: bool,
+    ) -> Result<()> {
         let mut obj = vec![("src", Json::arr_i32(src))];
         if let Some(m) = mode {
             obj.push(("mode", Json::Str(m.to_string())));
@@ -528,10 +847,17 @@ impl Client {
         if let Some(ms) = deadline_ms {
             obj.push(("deadline_ms", Json::Num(ms as f64)));
         }
+        if stream {
+            obj.push(("stream", Json::Bool(true)));
+        }
         let line = Json::obj(obj).to_string();
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_reply_json(&mut self) -> Result<Json> {
         let mut reply = String::new();
         match self.reader.read_line(&mut reply) {
             Ok(0) => anyhow::bail!("server closed the connection"),
@@ -546,48 +872,53 @@ impl Client {
             }
             Err(e) => return Err(e.into()),
         }
-        let j = Json::parse(reply.trim()).context("response json")?;
-        if let Some(e) = j.opt("error") {
-            let e = e.as_str().unwrap_or("?");
-            if e == "overloaded" {
-                let retry_after_ms = j
-                    .opt("retry_after_ms")
-                    .and_then(|v| v.as_usize().ok())
-                    .unwrap_or(0) as u64;
-                return Ok(Decoded::Overloaded { retry_after_ms });
-            }
-            anyhow::bail!("server error: {e}");
-        }
-        let blocks: Vec<usize> = j
-            .get("blocks")?
-            .as_arr()?
-            .iter()
-            .map(|b| Ok::<usize, anyhow::Error>(b.as_usize()?))
-            .collect::<Result<_>>()?;
-        // pre-khat servers omit the field; derive it from blocks
-        let khat = j
-            .opt("khat")
-            .and_then(|v| v.as_f64().ok())
-            .unwrap_or_else(|| mean_block(&blocks));
-        let mode = j
-            .opt("mode")
-            .and_then(|v| v.as_str().ok().map(str::to_string))
-            .unwrap_or_else(|| "blockwise".to_string());
-        let draft = j
-            .opt("draft")
-            .and_then(|v| v.as_str().ok().map(str::to_string))
-            .unwrap_or_else(|| "heads".to_string());
-        Ok(Decoded::Ok(ClientResult {
-            mode,
-            draft,
-            tokens: j.get("tokens")?.as_ids()?,
-            invocations: j.get("invocations")?.as_usize()?,
-            blocks,
-            khat,
-            queued_ms: j.opt("queued_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
-            ms: j.get("ms")?.as_f64()?,
-        }))
+        Json::parse(reply.trim()).context("response json")
     }
+}
+
+/// Parse one terminal reply object into [`Decoded`] (shared by the plain
+/// and streamed client paths).
+fn parse_reply(j: &Json) -> Result<Decoded> {
+    if let Some(e) = j.opt("error") {
+        let e = e.as_str().unwrap_or("?");
+        if e == "overloaded" {
+            let retry_after_ms = j
+                .opt("retry_after_ms")
+                .and_then(|v| v.as_usize().ok())
+                .unwrap_or(0) as u64;
+            return Ok(Decoded::Overloaded { retry_after_ms });
+        }
+        anyhow::bail!("server error: {e}");
+    }
+    let blocks: Vec<usize> = j
+        .get("blocks")?
+        .as_arr()?
+        .iter()
+        .map(|b| Ok::<usize, anyhow::Error>(b.as_usize()?))
+        .collect::<Result<_>>()?;
+    // pre-khat servers omit the field; derive it from blocks
+    let khat = j
+        .opt("khat")
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or_else(|| mean_block(&blocks));
+    let mode = j
+        .opt("mode")
+        .and_then(|v| v.as_str().ok().map(str::to_string))
+        .unwrap_or_else(|| "blockwise".to_string());
+    let draft = j
+        .opt("draft")
+        .and_then(|v| v.as_str().ok().map(str::to_string))
+        .unwrap_or_else(|| "heads".to_string());
+    Ok(Decoded::Ok(ClientResult {
+        mode,
+        draft,
+        tokens: j.get("tokens")?.as_ids()?,
+        invocations: j.get("invocations")?.as_usize()?,
+        blocks,
+        khat,
+        queued_ms: j.opt("queued_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+        ms: j.get("ms")?.as_f64()?,
+    }))
 }
 
 #[cfg(test)]
@@ -652,6 +983,37 @@ mod tests {
         assert_eq!(j.get("retry_after_ms").unwrap().as_usize().unwrap(), 70);
     }
 
+    // Frame serialization is deterministic (sorted keys, integers
+    // un-suffixed) so the wire grammar in the module docs is testable
+    // byte-for-byte.
+    #[test]
+    fn progress_frames_serialize_deterministically() {
+        let block = Progress::Block { tokens: vec![7, 61], khat_milli: 1500 };
+        assert_eq!(progress_json(&block), r#"{"event":"block","khat":1.5,"tokens":[7,61]}"#);
+        let whole = Progress::Block { tokens: vec![2], khat_milli: 2000 };
+        assert_eq!(progress_json(&whole), r#"{"event":"block","khat":2,"tokens":[2]}"#);
+        assert_eq!(progress_json(&Progress::Restart), r#"{"event":"restart"}"#);
+        // frames and terminals demux on the "event" key
+        let j = Json::parse(&progress_json(&block)).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "block");
+    }
+
+    // The stream flag parses strictly: bool or absent. A typo must be a
+    // validation error, never a silently non-streamed decode.
+    #[test]
+    fn stream_field_parses_and_rejects_bad_types() {
+        let ok = |line: &str| parse_line(line, None, DraftKind::Heads).unwrap();
+        assert!(ok("{\"src\":[1,2],\"stream\":true}").stream);
+        assert!(!ok("{\"src\":[1,2],\"stream\":false}").stream);
+        assert!(!ok("{\"src\":[1,2]}").stream);
+        // streaming composes with every other field
+        let w = ok("{\"src\":[1,2],\"mode\":\"beam\",\"stream\":true,\"deadline_ms\":0}");
+        assert!(w.stream && w.mode == DecodeMode::Beam && w.deadline.is_none());
+        for bad in ["{\"src\":[1,2],\"stream\":\"yes\"}", "{\"src\":[1,2],\"stream\":1}"] {
+            assert!(parse_line(bad, None, DraftKind::Heads).is_err(), "{bad} must be rejected");
+        }
+    }
+
     // Fuzz-style front-door coverage: garbage JSON, degenerate src, bad
     // field types — every line must produce an error *reply* (never a
     // panic, never a hang). The submitter runs over a closed queue so
@@ -685,6 +1047,9 @@ mod tests {
             "{\"src\":[1,2],\"draft\":\"input_copy\",\"mode\":\"beam\"}".to_string(),
             "{\"src\":[1,2],\"draft\":\"ngram\",\"mode\":\"nat\"}".to_string(),
             "{\"src\":[1,2],\"deadline_ms\":\"soon\"}".to_string(),
+            // stream must be a bool — strings and numbers are rejected
+            "{\"src\":[1,2],\"stream\":\"yes\"}".to_string(),
+            "{\"src\":[1,2],\"stream\":0}".to_string(),
             huge_src,
             // unknown fields and a non-integer id are tolerated (the
             // server assigns ids) — still an error reply here only
@@ -695,7 +1060,7 @@ mod tests {
             let reply = match serve_line(line, &submitter, None, DraftKind::Heads, &mut probe) {
                 Ok(Some(s)) => s,
                 Ok(None) => unreachable!("probe never reports the client gone"),
-                // what reply_line writes for a parse/validation error
+                // what the event loop writes for a parse/validation error
                 Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
             };
             let j = Json::parse(&reply)
@@ -709,14 +1074,20 @@ mod tests {
 
     // A line with deadline_ms=0 must parse as "no deadline" and a positive
     // value as a real deadline; both reach the submitter (closed queue ->
-    // synthesized reply), proving the field is accepted on the wire.
+    // synthesized reply), proving the field is accepted on the wire. A
+    // "stream":true line rides the same path — serve_line ignores the
+    // flag (no frame transport) but must not reject it.
     #[test]
     fn deadline_field_accepted_on_the_wire() {
         let queue = Arc::new(RequestQueue::new());
         queue.close();
         let submitter = Submitter::new(queue);
         let mut probe = || true;
-        for line in ["{\"src\":[1,2],\"deadline_ms\":0}", "{\"src\":[1,2],\"deadline_ms\":250}"] {
+        for line in [
+            "{\"src\":[1,2],\"deadline_ms\":0}",
+            "{\"src\":[1,2],\"deadline_ms\":250}",
+            "{\"src\":[1,2],\"stream\":true}",
+        ] {
             let reply = serve_line(line, &submitter, None, DraftKind::Heads, &mut probe)
                 .expect("well-formed line")
                 .expect("probe alive");
@@ -760,5 +1131,54 @@ mod tests {
         let line = "{\"src\":[1,2],\"mode\":\"nat\",\"draft\":\"heads\"}";
         let r = expect_queued(line, DraftKind::Heads);
         assert_eq!((r.mode, r.draft), (DecodeMode::Nat, DraftKind::Heads));
+    }
+
+    // The pump writes a streamed pending's frames strictly before its
+    // terminal, in channel order, and FIFO across pendings — driven
+    // directly against a Conn pair so no engine is needed.
+    #[test]
+    fn pump_orders_frames_before_terminal_and_fifo_across_requests() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(server_side).unwrap();
+
+        let terminal = |id: u64, tokens: Vec<i32>| Response {
+            id,
+            mode: DecodeMode::Blockwise,
+            draft: DraftKind::Heads,
+            tokens,
+            stats: BlockStats::default(),
+            queued: Duration::from_millis(1),
+            e2e: Duration::from_millis(2),
+            requeues: 0,
+            error: None,
+        };
+
+        // head request: streamed, two frames + terminal already queued
+        let (tx1, rx1) = streaming_channel();
+        tx1.send_block(&[5, 6], 2.0);
+        tx1.send_block(&[2], 1.5);
+        assert!(tx1.send(terminal(1, vec![5, 6, 2])));
+        // second request: plain, terminal queued — must not interleave
+        let (tx2, rx2) = response_channel();
+        assert!(tx2.send(terminal(2, vec![9])));
+        let cancel = Arc::new(AtomicBool::new(false));
+        conn.pending.push_back(Pending { rx: rx1, cancel: cancel.clone(), stream: true });
+        conn.pending.push_back(Pending { rx: rx2, cancel, stream: false });
+
+        pump_conn(&mut conn);
+        assert!(conn.pending.is_empty(), "both replies fully pumped");
+        let out = String::from_utf8(conn.wbuf.clone()).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4, "2 frames + 2 terminals: {out}");
+        assert_eq!(lines[0], r#"{"event":"block","khat":2,"tokens":[5,6]}"#);
+        assert_eq!(lines[1], r#"{"event":"block","khat":1.5,"tokens":[2]}"#);
+        let t1 = Json::parse(lines[2]).unwrap();
+        assert_eq!(t1.get("id").unwrap().as_usize().unwrap(), 1);
+        let t2 = Json::parse(lines[3]).unwrap();
+        assert_eq!(t2.get("id").unwrap().as_usize().unwrap(), 2);
+        // an incomplete head blocks the queue without dropping anything
+        drop(client);
     }
 }

@@ -1,0 +1,145 @@
+//! Client-class rate limiting: one token bucket per peer IP, layered in
+//! front of the queue's `Push::Shed` machinery. The queue cap protects
+//! the *fleet* from aggregate overload; this protects *everyone else*
+//! from one chatty client — a peer above its budget gets the same
+//! `overloaded` + `retry_after_ms` wire reply a queue shed produces, so
+//! client backoff logic needs no second code path.
+//!
+//! Deliberately minimal: fixed rate and burst for every peer (a "class"
+//! is an IP here; a deployment fronted by a load balancer would key on
+//! a client header instead), time injected by the caller so refill math
+//! is deterministic under test, and refusals counted by the caller into
+//! the front-door [`crate::metrics::Metrics`] registry.
+
+use std::collections::HashMap;
+use std::net::IpAddr;
+use std::time::Instant;
+
+/// How many idle buckets to tolerate before garbage-collecting peers
+/// whose buckets have refilled (a full bucket holds no debt worth
+/// remembering — dropping it recreates it full on the next request).
+const GC_THRESHOLD: usize = 4096;
+
+struct Bucket {
+    tokens: f64,
+    refreshed: Instant,
+}
+
+/// Token-bucket limiter keyed by peer IP. `rate` is requests/second
+/// sustained; the burst allowance is `max(rate, 1)` so a well-behaved
+/// peer never sees a refusal on its first request. `rate <= 0` disables
+/// limiting entirely (the `--rate-limit 0` default).
+pub(crate) struct RateLimiter {
+    rate: f64,
+    burst: f64,
+    buckets: HashMap<IpAddr, Bucket>,
+}
+
+impl RateLimiter {
+    pub fn new(rate: f64) -> Self {
+        RateLimiter { rate, burst: rate.max(1.0), buckets: HashMap::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Spend one token from `peer`'s bucket at time `now`. `true` admits
+    /// the request; `false` means the peer is over budget and should get
+    /// an `overloaded` reply. `now` is injected so tests drive the
+    /// refill clock explicitly.
+    pub fn admit(&mut self, peer: IpAddr, now: Instant) -> bool {
+        if !self.enabled() {
+            return true;
+        }
+        if self.buckets.len() > GC_THRESHOLD {
+            let (rate, burst) = (self.rate, self.burst);
+            self.buckets.retain(|_, b| {
+                now.saturating_duration_since(b.refreshed).as_secs_f64() * rate < burst
+            });
+        }
+        let b = self
+            .buckets
+            .entry(peer)
+            .or_insert(Bucket { tokens: self.burst, refreshed: now });
+        let dt = now.saturating_duration_since(b.refreshed).as_secs_f64();
+        b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+        b.refreshed = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Backoff hint for a refused request: one token's worth of wall
+    /// time, the soonest a retry could possibly be admitted.
+    pub fn retry_hint_ms(&self) -> u64 {
+        if self.enabled() {
+            (1000.0 / self.rate).ceil() as u64
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Ipv4Addr;
+    use std::time::Duration;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::V4(Ipv4Addr::new(10, 0, 0, last))
+    }
+
+    #[test]
+    fn burst_then_refuse_then_refill() {
+        let mut rl = RateLimiter::new(10.0); // 10 rps, burst 10
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            assert!(rl.admit(ip(1), t0), "burst allowance must admit");
+        }
+        assert!(!rl.admit(ip(1), t0), "11th instant request is over budget");
+        assert_eq!(rl.retry_hint_ms(), 100);
+        // 100ms refills exactly one token
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(rl.admit(ip(1), t1));
+        assert!(!rl.admit(ip(1), t1));
+    }
+
+    #[test]
+    fn peers_have_independent_buckets() {
+        let mut rl = RateLimiter::new(1.0); // burst 1
+        let t0 = Instant::now();
+        assert!(rl.admit(ip(1), t0));
+        assert!(!rl.admit(ip(1), t0), "peer 1 spent its burst");
+        assert!(rl.admit(ip(2), t0), "peer 2 is unaffected");
+    }
+
+    #[test]
+    fn zero_rate_disables_limiting() {
+        let mut rl = RateLimiter::new(0.0);
+        assert!(!rl.enabled());
+        assert_eq!(rl.retry_hint_ms(), 0);
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            assert!(rl.admit(ip(3), t0));
+        }
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let mut rl = RateLimiter::new(2.0); // burst 2
+        let t0 = Instant::now();
+        assert!(rl.admit(ip(4), t0));
+        assert!(rl.admit(ip(4), t0));
+        assert!(!rl.admit(ip(4), t0));
+        // an hour idle refills to the burst cap, not an hour of tokens
+        let t1 = t0 + Duration::from_secs(3600);
+        assert!(rl.admit(ip(4), t1));
+        assert!(rl.admit(ip(4), t1));
+        assert!(!rl.admit(ip(4), t1));
+    }
+}

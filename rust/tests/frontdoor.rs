@@ -1,0 +1,305 @@
+//! Wire-level acceptance for the event-driven front door: a sim pool
+//! behind a real TCP [`Server`], exercised with raw sockets and the
+//! [`Client`] helper.
+//!
+//! What the event loop must survive without a thread per connection:
+//! live `GET /metrics` scrapes whose counters move while decode traffic
+//! keeps flowing, streamed replies that concatenate byte-identically to
+//! their unstreamed twins, request lines dribbled across many TCP
+//! writes, a peer that vanishes mid-stream (the cooperative cancel flag
+//! must flip — no further frames, no leaked slot), and oversized lines
+//! refused with an error reply instead of unbounded buffering.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blockdecode::batching::RequestQueue;
+use blockdecode::decoding::Criterion;
+use blockdecode::metrics::Metrics;
+use blockdecode::scheduler::pool::EnginePool;
+use blockdecode::scheduler::EngineConfig;
+use blockdecode::server::{Client, Decoded, Server, StreamFrame};
+use blockdecode::testing::sim::{sim_blockwise, FaultPlan, SimBackend, SimModel};
+use blockdecode::tokenizer::EOS;
+
+const SIM_BUCKET: usize = 4;
+const SIM_TLEN: usize = 21;
+
+fn sim_model() -> SimModel {
+    SimModel::new(60, 6, 0.7, 9, 0x5EED)
+}
+
+fn sim_src(i: usize) -> Vec<i32> {
+    vec![3 + (i % 40) as i32, 4 + ((i * 7) % 40) as i32, 5 + ((i * 13) % 40) as i32, EOS]
+}
+
+fn offline_exact(i: usize) -> Vec<i32> {
+    sim_blockwise(&sim_model(), &sim_src(i), Criterion::Exact, SIM_TLEN - 1).0
+}
+
+/// A running sim fleet behind a TCP server, torn down explicitly so a
+/// passing test proves the drain path too.
+struct Stack {
+    addr: String,
+    t0: Instant,
+    queue: Arc<RequestQueue>,
+    stop: Arc<AtomicBool>,
+    shards: Vec<Arc<Metrics>>,
+    pool: EnginePool,
+    srv: std::thread::JoinHandle<()>,
+}
+
+fn start(n_shards: usize, faults: FaultPlan) -> Stack {
+    let t0 = Instant::now();
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let door = Arc::new(Metrics::new());
+    let pool = EnginePool::spawn(
+        n_shards,
+        move |_| Ok(SimBackend::with_faults(sim_model(), SIM_BUCKET, SIM_TLEN, faults.clone())),
+        EngineConfig::default(),
+        queue.clone(),
+        stop.clone(),
+    )
+    .unwrap();
+    let shards = pool.shard_metrics().to_vec();
+    let server = Server::bind("127.0.0.1:0", queue.clone(), stop.clone())
+        .unwrap()
+        .with_door(door)
+        .with_metrics(shards.clone(), t0);
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+    Stack { addr, t0, queue, stop, shards, pool, srv }
+}
+
+impl Stack {
+    fn shutdown(self) {
+        self.queue.close();
+        self.stop.store(true, Ordering::Relaxed);
+        self.pool.drain().unwrap();
+        self.srv.join().unwrap();
+    }
+}
+
+/// One `GET /metrics` scrape over a raw socket; returns the HTTP status
+/// line and the body.
+fn scrape(addr: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("scrape reply lost the header split");
+    (head.lines().next().unwrap_or_default().to_string(), body.to_string())
+}
+
+/// Pull one flat `name value` counter out of a scrape body (`# `-prefixed
+/// human lines are skipped by construction — they never start with the
+/// bare counter name).
+fn counter(body: &str, name: &str) -> u64 {
+    body.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")).and_then(|v| v.parse().ok()))
+        .unwrap_or_else(|| panic!("no `{name}` counter in scrape body:\n{body}"))
+}
+
+/// Scrape until `name` reaches `at_least` (the engine increments its
+/// registry a beat before the client sees the reply, so the first scrape
+/// can race it) — bounded, so a stuck counter fails the test.
+fn scrape_until(addr: &str, name: &str, at_least: u64) -> (u64, String) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = scrape(addr);
+        assert!(status.contains("200"), "scrape status: {status}");
+        let v = counter(&body, name);
+        if v >= at_least || Instant::now() >= deadline {
+            return (v, body);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn live_metrics_scrape_moves_without_stopping_the_server() {
+    let stack = start(2, FaultPlan::default());
+    let mut c = Client::connect(&stack.addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    for i in 0..4 {
+        let r = c.decode(&sim_src(i), Some("exact")).unwrap();
+        assert_eq!(r.tokens, offline_exact(i), "request {i} decoded wrong");
+    }
+
+    let (c1, body) = scrape_until(&stack.addr, "completed", 4);
+    assert!(c1 >= 4, "first scrape shows {c1} completed, want >= 4:\n{body}");
+    assert_eq!(counter(&body, "shards"), 2, "{body}");
+    assert!(counter(&body, "invocations") >= 1, "{body}");
+    assert!(body.contains("# fleet (2 engine shards):"), "human render missing:\n{body}");
+    assert!(body.contains("# shard 1:"), "per-shard lines missing:\n{body}");
+
+    // more load, then the counters must have moved — monotonically, and
+    // without the server ever stopping
+    for i in 4..8 {
+        c.decode(&sim_src(i), Some("exact")).unwrap();
+    }
+    let (c2, body2) = scrape_until(&stack.addr, "completed", c1 + 4);
+    assert!(c2 >= c1 + 4, "counters did not move under load: {c1} -> {c2}\n{body2}");
+
+    // the scrape path never wedged the decode path
+    let r = c.decode(&sim_src(9), Some("exact")).unwrap();
+    assert_eq!(r.tokens, offline_exact(9), "decode after scrapes diverged");
+    stack.shutdown();
+}
+
+#[test]
+fn streamed_client_matches_plain_decode_over_tcp() {
+    let stack = start(2, FaultPlan::default());
+    let mut c = Client::connect(&stack.addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    for i in 0..6 {
+        let plain = c.decode(&sim_src(i), Some("exact")).unwrap();
+        let (reply, frames) =
+            c.try_decode_stream(&sim_src(i), None, None, Some("exact"), None).unwrap();
+        let Decoded::Ok(s) = reply else { panic!("request {i} unexpectedly shed") };
+        assert_eq!(s.tokens, plain.tokens, "request {i}: streaming changed the decode");
+        assert_eq!(s.tokens, offline_exact(i), "request {i}: decode differs from offline");
+
+        // the byte-identity invariant, over the real wire
+        let mut cat = Vec::new();
+        let mut last_khat = 0.0;
+        for f in &frames {
+            match f {
+                StreamFrame::Block { tokens, khat } => {
+                    cat.extend_from_slice(tokens);
+                    last_khat = *khat;
+                }
+                StreamFrame::Restart => panic!("request {i}: restart without a crash"),
+            }
+        }
+        assert_eq!(cat, s.tokens, "request {i}: frames don't concatenate to the terminal");
+        // frames carry k̂ quantised to 1/1000
+        assert!(
+            (last_khat - s.khat).abs() < 1e-3,
+            "request {i}: final frame k̂ {last_khat} disagrees with terminal {}",
+            s.khat
+        );
+    }
+
+    // direct-served families stream exactly one frame: the whole answer
+    for mode in ["beam", "nat"] {
+        let (reply, frames) =
+            c.try_decode_stream(&sim_src(0), Some(mode), None, None, None).unwrap();
+        let Decoded::Ok(r) = reply else { panic!("{mode} request unexpectedly shed") };
+        assert_eq!(r.mode, mode, "family echo is wrong");
+        assert_eq!(
+            frames,
+            vec![StreamFrame::Block { tokens: r.tokens.clone(), khat: 0.0 }],
+            "{mode} must stream exactly one whole-answer frame"
+        );
+    }
+    stack.shutdown();
+}
+
+#[test]
+fn request_split_across_tcp_writes_still_parses() {
+    let stack = start(1, FaultPlan::default());
+    let ids: Vec<String> = sim_src(0).iter().map(|t| t.to_string()).collect();
+    let line = format!("{{\"criterion\":\"exact\",\"src\":[{}]}}\n", ids.join(","));
+
+    // dribble the request a few bytes per write: the event loop must
+    // buffer partial lines across poll wakeups, not assume one read per
+    // request
+    let mut s = TcpStream::connect(&stack.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    for chunk in line.as_bytes().chunks(7) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply).unwrap();
+    assert!(reply.contains("\"tokens\":["), "chunked request got no decode reply: {reply}");
+    assert!(!reply.contains("\"error\""), "chunked request errored: {reply}");
+    stack.shutdown();
+}
+
+#[test]
+fn disconnect_mid_stream_cancels_the_request() {
+    // a slowed shard (150ms per step) guarantees the decode is still in
+    // flight when the peer vanishes ~130ms in (hangup + EOF grace)
+    let slow = FaultPlan {
+        slow_every: Some((1, Duration::from_millis(150))),
+        ..FaultPlan::default()
+    };
+    let stack = start(1, slow);
+    {
+        let ids: Vec<String> = sim_src(0).iter().map(|t| t.to_string()).collect();
+        let mut s = TcpStream::connect(&stack.addr).unwrap();
+        s.write_all(format!("{{\"src\":[{}],\"stream\":true}}\n", ids.join(",")).as_bytes())
+            .unwrap();
+        s.flush().unwrap();
+    } // drop: the client disconnects mid-stream
+
+    // the event loop must notice the hangup and flip the cooperative
+    // cancel flag; the engine then retires the row mid-decode and counts
+    // it — no reply is owed, no slot may leak
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let cancelled: u64 = stack.shards.iter().map(|m| m.report(stack.t0).cancelled).sum();
+        if cancelled >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect mid-stream never cancelled the in-flight request"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    stack.shutdown();
+}
+
+#[test]
+fn oversized_request_line_is_refused_with_an_error_reply() {
+    let stack = start(1, FaultPlan::default());
+    let mut s = TcpStream::connect(&stack.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    // a single unterminated line past the 256 KiB cap must get a bounded
+    // error reply, not unbounded buffering
+    s.write_all(&vec![b'x'; 300 * 1024]).unwrap();
+    s.flush().unwrap();
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply).unwrap();
+    assert!(reply.contains("exceeds"), "oversized line not refused: {reply}");
+    stack.shutdown();
+}
+
+#[test]
+fn metrics_scrape_without_registry_is_503_and_unknown_paths_404() {
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = Server::bind("127.0.0.1:0", queue.clone(), stop.clone()).unwrap();
+    let addr = server.local_addr();
+    let srv = std::thread::spawn(move || {
+        let _ = server.serve();
+    });
+
+    let (status, body) = scrape(&addr);
+    assert!(status.contains("503"), "unwired /metrics must 503, got {status}");
+    assert!(body.contains("metrics not wired"), "{body}");
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(b"GET /nope HTTP/1.0\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    assert!(buf.starts_with("HTTP/1.0 404"), "unknown path must 404: {buf}");
+
+    queue.close();
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap();
+}

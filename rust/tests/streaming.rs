@@ -1,0 +1,347 @@
+//! Streaming progress-lane acceptance: the byte-identity invariant for
+//! streamed decodes, at the engine level (no TCP — the wire-level checks
+//! live in `frontdoor.rs`).
+//!
+//! A streamed request's progress lane must satisfy, for every terminal
+//! reply: concatenating the block frames emitted after the last restart
+//! marker reproduces the terminal tokens byte-for-byte, the final
+//! frame's running k̂ equals the terminal mean accepted block size, and
+//! direct-served families (beam/NAT) emit exactly one frame covering the
+//! whole answer. The chaos tier proves the restart half of the contract:
+//! a shard crash mid-stream hands the request back, a `Restart` marker
+//! voids every earlier frame, and the replay re-derives the same bytes —
+//! still with exactly one terminal reply.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use blockdecode::batching::{
+    response_channel, streaming_channel, DecodeMode, Progress, RequestQueue, ResponseReceiver,
+};
+use blockdecode::decoding::Criterion;
+use blockdecode::metrics::Metrics;
+use blockdecode::scheduler::pool::{EnginePool, PoolReport};
+use blockdecode::scheduler::{EngineConfig, Submitter};
+use blockdecode::testing::check;
+use blockdecode::testing::sim::{sim_blockwise, FaultPlan, SimBackend, SimModel};
+use blockdecode::tokenizer::EOS;
+
+const SIM_BUCKET: usize = 4;
+const SIM_TLEN: usize = 21;
+
+fn sim_model() -> SimModel {
+    SimModel::new(60, 6, 0.7, 9, 0x5EED)
+}
+
+/// Deterministic per-request source, so the offline reference is
+/// reproducible per index.
+fn sim_src(i: usize) -> Vec<i32> {
+    vec![3 + (i % 40) as i32, 4 + ((i * 7) % 40) as i32, 5 + ((i * 13) % 40) as i32, EOS]
+}
+
+/// Mixed per-request criteria across every criterion family.
+fn sim_criterion(i: usize) -> Option<Criterion> {
+    match i % 4 {
+        0 => None,
+        1 => Some(Criterion::Exact),
+        2 => Some(Criterion::TopK(2)),
+        _ => Some(Criterion::Distance(2)),
+    }
+}
+
+fn offline(i: usize) -> Vec<i32> {
+    let crit = sim_criterion(i).unwrap_or(Criterion::Exact);
+    sim_blockwise(&sim_model(), &sim_src(i), crit, SIM_TLEN - 1).0
+}
+
+/// Silence panic payloads from planned crashes (the `"injected fault"`
+/// marker) while delegating every other panic to the previous hook.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Drain a streamed request's progress lane after its terminal reply:
+/// events arrive strictly before the terminal, so this yields the full
+/// frame sequence.
+fn drain_frames(rx: &ResponseReceiver) -> Vec<Progress> {
+    let mut frames = Vec::new();
+    while let Some(p) = rx.try_progress() {
+        frames.push(p);
+    }
+    frames
+}
+
+/// Fold a frame sequence into what a client would keep: the
+/// concatenation of block tokens after the last restart marker, the
+/// restart count, and the last frame's running k̂ (×1000).
+fn fold_frames(frames: &[Progress]) -> (Vec<i32>, usize, Option<u64>) {
+    let mut cat = Vec::new();
+    let mut restarts = 0usize;
+    let mut last_khat = None;
+    for f in frames {
+        match f {
+            Progress::Restart => {
+                restarts += 1;
+                cat.clear();
+                last_khat = None;
+            }
+            Progress::Block { tokens, khat_milli } => {
+                cat.extend_from_slice(tokens);
+                last_khat = Some(*khat_milli);
+            }
+        }
+    }
+    (cat, restarts, last_khat)
+}
+
+/// The parity property: every request is submitted twice through a
+/// 2-shard pool — once streamed, once plain — and the streamed copy's
+/// concatenated frames must be byte-identical to both terminal replies
+/// and to the offline reference, frame-by-frame equal to the accepted-
+/// block trace, with the final frame's k̂ matching the terminal mean.
+#[test]
+fn streamed_blocks_concatenate_to_the_unstreamed_reply() {
+    check("streaming/parity_with_unstreamed", 2, |rng| {
+        let n = rng.range(8, 20) as usize;
+        let queue = Arc::new(RequestQueue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let submitter = Submitter::new(queue.clone());
+
+        let mut streamed = Vec::new();
+        let mut plain = Vec::new();
+        for i in 0..n {
+            let (tx, rx) = streaming_channel();
+            submitter.submit_request(sim_src(i), DecodeMode::Blockwise, sim_criterion(i), None, tx);
+            streamed.push((i, rx));
+            let (tx, rx) = response_channel();
+            submitter.submit_request(sim_src(i), DecodeMode::Blockwise, sim_criterion(i), None, tx);
+            plain.push((i, rx));
+        }
+        let pool = EnginePool::spawn(
+            2,
+            |_| Ok(SimBackend::new(sim_model(), SIM_BUCKET, SIM_TLEN)),
+            EngineConfig::default(),
+            queue.clone(),
+            stop,
+        )
+        .unwrap();
+
+        for ((i, srx), (_, prx)) in streamed.into_iter().zip(plain) {
+            let s = srx
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|_| panic!("streamed request {i} starved"));
+            let p = prx
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|_| panic!("plain request {i} starved"));
+            assert!(s.error.is_none(), "streamed request {i}: {:?}", s.error);
+            assert!(p.error.is_none(), "plain request {i}: {:?}", p.error);
+            assert_eq!(s.tokens, p.tokens, "request {i}: streaming changed the decode");
+            assert_eq!(s.tokens, offline(i), "request {i}: decode differs from offline");
+
+            let frames = drain_frames(&srx);
+            let (cat, restarts, last_khat) = fold_frames(&frames);
+            assert_eq!(restarts, 0, "request {i}: restart marker without a crash");
+            assert_eq!(cat, s.tokens, "request {i}: frames don't concatenate to the reply");
+            // each frame is one accept substep's newly-committed suffix,
+            // so the frame lengths ARE the accepted-block trace
+            let lens: Vec<usize> = frames
+                .iter()
+                .filter_map(|f| match f {
+                    Progress::Block { tokens, .. } => Some(tokens.len()),
+                    Progress::Restart => None,
+                })
+                .collect();
+            assert_eq!(
+                lens, s.stats.accepted_blocks,
+                "request {i}: per-frame deltas diverge from the accepted-block trace"
+            );
+            let want = (s.stats.mean_block() * 1000.0).round() as u64;
+            assert_eq!(
+                last_khat,
+                Some(want),
+                "request {i}: final frame k̂ disagrees with the terminal mean block"
+            );
+            // no frame may arrive after the terminal reply
+            assert!(srx.try_progress().is_none(), "request {i}: frame after the terminal");
+        }
+        pool.drain().unwrap();
+    });
+}
+
+/// Direct-served families commit the whole answer at once: a streamed
+/// beam or NAT request gets exactly one block frame (k̂ 0 — no blockwise
+/// accept steps ran) whose tokens equal the terminal reply.
+#[test]
+fn beam_and_nat_stream_exactly_one_frame() {
+    let queue = Arc::new(RequestQueue::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let submitter = Submitter::new(queue.clone());
+
+    let n = 12usize; // alternates beam / NAT
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let mode = if i % 2 == 0 { DecodeMode::Beam } else { DecodeMode::Nat };
+            let (tx, rx) = streaming_channel();
+            submitter.submit_request(sim_src(i), mode, sim_criterion(i), None, tx);
+            (i, mode, rx)
+        })
+        .collect();
+    let pool = EnginePool::spawn(
+        2,
+        |_| Ok(SimBackend::new(sim_model(), SIM_BUCKET, SIM_TLEN)),
+        EngineConfig::default(),
+        queue.clone(),
+        stop,
+    )
+    .unwrap();
+
+    for (i, mode, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("request {i} starved"));
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+        assert_eq!(resp.mode, mode, "request {i}: family echo is wrong");
+        let frames = drain_frames(&rx);
+        assert_eq!(frames.len(), 1, "request {i}: {} frames for a direct serve", frames.len());
+        match &frames[0] {
+            Progress::Block { tokens, khat_milli } => {
+                assert_eq!(tokens, &resp.tokens, "request {i}: frame != terminal tokens");
+                assert_eq!(*khat_milli, 0, "request {i}: direct serve must carry k̂ 0");
+            }
+            Progress::Restart => panic!("request {i}: restart marker without a crash"),
+        }
+    }
+    pool.drain().unwrap();
+}
+
+/// The chaos half of the streaming contract: every first-incarnation
+/// shard panics on an early step, so requests in flight mid-stream are
+/// handed back to the queue. Each survivor must show exactly as many
+/// `Restart` markers as its reply reports requeues, the frames after the
+/// last marker must still concatenate to the (deterministic) terminal
+/// tokens, and every submission still gets exactly one terminal reply.
+#[test]
+fn crash_mid_stream_replays_from_scratch_with_a_restart_marker() {
+    quiet_injected_panics();
+    check("streaming/crash_replays_with_restart_marker", 2, |rng| {
+        let n_shards = 2usize;
+        let per_lane = rng.range(12, 24) as usize;
+
+        let t0 = Instant::now();
+        let queue = Arc::new(RequestQueue::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let door = Arc::new(Metrics::new());
+        let submitter = Arc::new(Submitter::new(queue.clone()).with_door(door.clone()));
+
+        let spawns: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+        let spawns_f = spawns.clone();
+        let pool = EnginePool::spawn(
+            n_shards,
+            move |shard| {
+                let incarnation = spawns_f[shard].fetch_add(1, Ordering::SeqCst);
+                let faults = if incarnation == 0 {
+                    FaultPlan { panic_on_steps: vec![1 + shard], ..FaultPlan::default() }
+                } else {
+                    FaultPlan::default()
+                };
+                Ok(SimBackend::with_faults(sim_model(), SIM_BUCKET, SIM_TLEN, faults))
+            },
+            EngineConfig::default(),
+            queue.clone(),
+            stop,
+        )
+        .unwrap();
+
+        // concurrent producers racing the crashes, every request streamed
+        let producers: Vec<_> = (0..3usize)
+            .map(|lane| {
+                let submitter = submitter.clone();
+                std::thread::spawn(move || -> Vec<(usize, ResponseReceiver)> {
+                    (0..per_lane)
+                        .map(|j| {
+                            let i = lane * per_lane + j;
+                            let (tx, rx) = streaming_channel();
+                            submitter.submit_request(
+                                sim_src(i),
+                                DecodeMode::Blockwise,
+                                sim_criterion(i),
+                                None,
+                                tx,
+                            );
+                            (i, rx)
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        let mut entries = Vec::new();
+        for p in producers {
+            entries.extend(p.join().unwrap());
+        }
+        let total = entries.len();
+
+        let (mut ok, mut shard_errs, mut replayed) = (0usize, 0usize, 0usize);
+        for (i, rx) in entries {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|_| panic!("request {i} never got a terminal reply"));
+            match resp.error.as_deref() {
+                None => {
+                    let frames = drain_frames(&rx);
+                    let (cat, restarts, _) = fold_frames(&frames);
+                    assert_eq!(
+                        cat, resp.tokens,
+                        "request {i}: post-restart frames don't rebuild the reply \
+                         (requeues={})",
+                        resp.requeues
+                    );
+                    assert_eq!(
+                        resp.tokens,
+                        offline(i),
+                        "request {i}: survivor diverged from the offline reference"
+                    );
+                    assert_eq!(
+                        restarts,
+                        resp.requeues as usize,
+                        "request {i}: restart markers != reported requeues"
+                    );
+                    if restarts > 0 {
+                        replayed += 1;
+                    }
+                    ok += 1;
+                }
+                Some(err) if err.contains("shard failed") => shard_errs += 1,
+                Some(err) => panic!("request {i}: unexpected terminal error {err:?}"),
+            }
+            assert!(rx.try_recv().is_err(), "request {i} received a second terminal reply");
+        }
+        assert_eq!(ok + shard_errs, total, "terminal replies don't cover every submission");
+        assert!(replayed >= 1, "no survivor replayed mid-stream — the crash never bit");
+
+        let shard_metrics = pool.shard_metrics().to_vec();
+        pool.drain().unwrap();
+        let f = PoolReport::from_shards_with_door(&shard_metrics, Some(&door), t0).fleet;
+        assert!(f.requeued >= 1, "a crashing shard must hand its in-flight work back");
+        let spawned: usize = spawns.iter().map(|a| a.load(Ordering::SeqCst)).sum();
+        assert_eq!(f.restarts as usize, spawned - n_shards, "restarts != extra incarnations");
+        assert!(f.restarts >= 1, "at least one planned crash must have fired");
+    });
+}

@@ -38,6 +38,15 @@
 #    seam is wired end-to-end, wire field to per-slot proposer to
 #    metrics.
 #
+# 6. Live-metrics + streaming drill (phase 1b, runs right after the happy
+#    path) — reboot, keep the fleet busy with a background *streamed*
+#    loadgen, and scrape `GET /metrics` over plain HTTP while it runs:
+#    the flat `completed` counter must be nonzero and move between two
+#    scrapes without the server ever stopping; then a bounded
+#    `loadgen --stream` run must pass its own frame-contract assertions
+#    (streamed blocks concatenate byte-identically to every terminal
+#    reply) and report its frame tally.
+#
 # Used as a CI step after the tier-1 build (the release binary is already
 # present there); runs standalone too and builds the binary if missing.
 #
@@ -67,6 +76,8 @@ MIXED_LOG="${LOG%.log}-mixed.log"
 MIXED_LOADGEN_LOG="${LOG%.log}-mixed-loadgen.log"
 DRAFT_LOG="${LOG%.log}-draft.log"
 DRAFT_LOADGEN_LOG="${LOG%.log}-draft-loadgen.log"
+METRICS_LOG="${LOG%.log}-metrics.log"
+STREAM_LOADGEN_LOG="${LOG%.log}-stream-loadgen.log"
 
 SERVE_PID=""
 BG_PID=""
@@ -86,6 +97,8 @@ cleanup() {
     cat "$MIXED_LOG" 2>/dev/null || true
     echo "---- mixed-draft serve log ----"
     cat "$DRAFT_LOG" 2>/dev/null || true
+    echo "---- metrics serve log ----"
+    cat "$METRICS_LOG" 2>/dev/null || true
 }
 trap cleanup EXIT
 
@@ -149,6 +162,80 @@ grep -q "completed=$REQUESTS " "$LOG" || {
     exit 1
 }
 echo "serve-smoke: phase 1 OK ($ENGINES shards, $REQUESTS requests, clean SIGINT drain)"
+
+# ---- phase 1b: live /metrics under streamed load ----
+# One scrape of the HTTP endpoint while a background streamed loadgen
+# keeps the fleet busy: the flat counters must be present, nonzero, and
+# move between two scrapes — all without stopping the server.
+fetch_metrics() { # <addr> -> scrape on stdout
+    if command -v curl >/dev/null 2>&1; then
+        curl -sf "http://$1/metrics"
+    else
+        # no curl in minimal CI images: speak HTTP/1.0 over /dev/tcp
+        exec 3<>"/dev/tcp/${1%:*}/${1##*:}"
+        printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+        cat <&3
+        exec 3<&- 3>&-
+    fi
+}
+
+SERVE_PID=""
+boot_server "$METRICS_LOG" --engines 2
+echo "serve-smoke: live-metrics drill on $ADDR (scrape under streamed load)"
+
+"$BIN" loadgen --addr "$ADDR" --n 100000 --conns 4 --stream >/dev/null 2>&1 &
+BG_PID=$!
+
+C1=""
+for _ in $(seq 1 100); do
+    C1=$(fetch_metrics "$ADDR" 2>/dev/null | awk '/^completed /{print $2; exit}' || true)
+    [ -n "$C1" ] && [ "$C1" -gt 0 ] && break
+    sleep 0.1
+done
+if [ -z "$C1" ] || [ "$C1" -le 0 ]; then
+    echo "serve-smoke: live /metrics never showed a nonzero completed counter" >&2
+    exit 1
+fi
+C2="$C1"
+for _ in $(seq 1 100); do
+    C2=$(fetch_metrics "$ADDR" 2>/dev/null | awk '/^completed /{print $2; exit}' || true)
+    [ -n "$C2" ] && [ "$C2" -gt "$C1" ] && break
+    sleep 0.1
+done
+if [ -z "$C2" ] || [ "$C2" -le "$C1" ]; then
+    echo "serve-smoke: completed counter never moved between scrapes ($C1 -> ${C2:-?})" >&2
+    exit 1
+fi
+# the scrape carries the shard count and the human render as comments
+fetch_metrics "$ADDR" 2>/dev/null | grep -q "^shards 2" || {
+    echo "serve-smoke: scrape is missing the shards line" >&2
+    exit 1
+}
+kill "$BG_PID" 2>/dev/null || true
+wait "$BG_PID" 2>/dev/null || true
+BG_PID=""
+
+# a bounded streamed run must pass its own frame-contract assertions
+# (concatenated block frames == terminal tokens, beam/NAT one frame)
+"$BIN" loadgen --addr "$ADDR" --n 120 --conns 4 --stream | tee "$STREAM_LOADGEN_LOG"
+grep -q "loadgen: streamed: frames=" "$STREAM_LOADGEN_LOG" || {
+    echo "serve-smoke: streamed loadgen did not report its frame tally" >&2
+    exit 1
+}
+
+kill -INT "$SERVE_PID"
+RC=0
+wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [ "$RC" -ne 0 ]; then
+    echo "serve-smoke: metrics serve exited rc=$RC after SIGINT (expected clean drain)" >&2
+    exit 1
+fi
+grep -q "drained 2 engine shards cleanly" "$METRICS_LOG" || {
+    echo "serve-smoke: missing clean-drain line after live-metrics drill" >&2
+    exit 1
+}
+echo "serve-smoke: phase 1b OK (live /metrics moved $C1 -> $C2 under streamed load)"
 
 # ---- phase 2: overload + chaos drill ----
 # A queue capacity of 1 against 32 synchronous connections (~10x what the
@@ -300,4 +387,5 @@ grep -Eq "by draft: heads completed=80 .* input_copy completed=80 .* ngram compl
     echo "serve-smoke: fleet report lacks per-draft completion segmentation" >&2
     exit 1
 }
-echo "serve-smoke: OK (drain + shed + ${DISTINCT} adaptive ks + 3 families + 3 draft sources)"
+echo "serve-smoke: OK (drain + live metrics + streaming + shed + ${DISTINCT} adaptive ks \
++ 3 families + 3 draft sources)"

@@ -2,7 +2,8 @@
 # Tier-1 verification: build + tests, then the hygiene gates that keep
 # bench/example code from silently rotting (fmt, clippy -D warnings, a
 # warning-clean rustdoc build so module docs and intra-doc links stay
-# honest, and a compile-only pass over every bench target), then the
+# honest, a docs link check so the runbook's paths cannot rot, and a
+# compile-only pass over every bench target), then the
 # python-side tests
 # covering the aot.py <-> manifest.rs entry-point contract (skipped when
 # the python deps are not installed in this environment).
@@ -30,6 +31,43 @@ if command -v git >/dev/null 2>&1 && git rev-parse --is-inside-work-tree >/dev/n
         echo "$tracked_junk" >&2
         exit 1
     fi
+fi
+
+# Docs link check: every relative markdown link in the top-level docs and
+# docs/ must resolve, and every rust/src path the operations handbook
+# names must exist — runbooks rot first, and a stale path in
+# docs/OPERATIONS.md is a 3am operator chasing a file that moved.
+docs_ok=1
+for f in README.md ARCHITECTURE.md ROADMAP.md docs/*.md; do
+    [ -f "$f" ] || continue
+    dir=$(dirname "$f")
+    for link in $(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/#[^)]*//; s/\)$//'); do
+        case "$link" in
+            http://* | https://* | mailto:*) continue ;;
+            # GitHub badge links are site-relative (resolved against
+            # github.com/<org>/<repo>), not files in the tree
+            ../../actions/*) continue ;;
+        esac
+        [ -z "$link" ] && continue
+        if [ ! -e "$dir/$link" ]; then
+            echo "tier1: $f links to missing file $link" >&2
+            docs_ok=0
+        fi
+    done
+done
+if [ -f docs/OPERATIONS.md ]; then
+    for p in $(grep -oE 'rust/src/[A-Za-z0-9_./-]+' docs/OPERATIONS.md | sed 's/\.$//' | sort -u); do
+        if [ ! -e "$p" ]; then
+            echo "tier1: docs/OPERATIONS.md names missing path $p" >&2
+            docs_ok=0
+        fi
+    done
+else
+    echo "tier1: docs/OPERATIONS.md is missing (the operations runbook is tier-1)" >&2
+    docs_ok=0
+fi
+if [ "$docs_ok" -ne 1 ]; then
+    exit 1
 fi
 
 cd rust
